@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing, corpus cache, CSV emission."""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@lru_cache(maxsize=8)
+def corpus(n_docs: int, seed: int = 0, mean_length: int = 2000):
+    from repro.data import make_corpus
+    return make_corpus(n_docs, k=15, mean_length=mean_length, sigma=1.0,
+                       seed=seed)
+
+
+@lru_cache(maxsize=4)
+def built_indexes(n_docs: int):
+    from repro.core import IndexParams, build_classic, build_compact
+    c = corpus(n_docs)
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+    classic = build_classic(c.doc_terms, params)
+    compact = build_compact(c.doc_terms, params, block_docs=64, row_align=64)
+    return c, classic, compact

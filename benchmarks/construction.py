@@ -1,0 +1,37 @@
+"""Paper Table 2: construction wall-clock time, memory, and index size,
+ClaBS (classic) vs COBS (compact), plus the parallel/block-checkpointed
+builder. Times scale with corpus size; the paper's qualitative claims to
+reproduce are (i) compact builds are not slower than classic, and (ii) the
+compact index is substantially smaller on size-skewed corpora."""
+from __future__ import annotations
+
+from repro.core import IndexParams, build_classic, build_compact
+from repro.index import build_compact_parallel
+
+from .common import corpus, emit, timeit
+
+
+def run(n_docs: int = 512) -> dict:
+    c = corpus(n_docs)
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+
+    t_classic = timeit(lambda: build_classic(c.doc_terms, params), repeats=2)
+    t_compact = timeit(lambda: build_compact(c.doc_terms, params,
+                                             block_docs=64), repeats=2)
+    t_parallel = timeit(lambda: build_compact_parallel(
+        c.doc_terms, params, block_docs=64, workers=4), repeats=2)
+
+    classic = build_classic(c.doc_terms, params)
+    compact = build_compact(c.doc_terms, params, block_docs=64)
+
+    emit("construction/classic_build", t_classic * 1e6,
+         f"n_docs={n_docs};index_MiB={classic.size_bytes()/2**20:.1f}")
+    emit("construction/compact_build", t_compact * 1e6,
+         f"n_docs={n_docs};index_MiB={compact.size_bytes()/2**20:.1f}")
+    emit("construction/compact_parallel_build", t_parallel * 1e6,
+         f"n_docs={n_docs};workers=4")
+    ratio = classic.size_bytes() / compact.size_bytes()
+    emit("construction/size_ratio_classic_over_compact", ratio,
+         "paper_fig4_expect>1.5")
+    return {"t_classic": t_classic, "t_compact": t_compact,
+            "size_ratio": ratio}

@@ -1,0 +1,50 @@
+"""Paper Table 3 (bottom): document false-positive rate for single-k-mer
+queries vs the prescribed 0.3, and the Theorem 1 zero-FP prediction for
+long queries — the paper's core accuracy claims."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import QueryEngine, dna, theory
+from repro.data import make_queries
+
+from .common import built_indexes, emit
+
+
+def run(n_docs: int = 512, n_probes: int = 300) -> dict:
+    c, classic, compact = built_indexes(n_docs)
+    rng = np.random.default_rng(9)
+    universe = set()
+    for t in c.doc_terms:
+        u = t[:, 0].astype(np.uint64) | (t[:, 1].astype(np.uint64) << np.uint64(32))
+        universe |= set(u.tolist())
+
+    out = {}
+    for name, idx in (("classic", classic), ("compact", compact)):
+        eng = QueryEngine(idx)
+        hits = total = 0
+        probes = 0
+        while probes < n_probes:
+            kmer = rng.integers(0, 4, c.k, dtype=np.uint8)
+            t = dna.pack_kmers(kmer, c.k)
+            if (int(t[0, 0]) | (int(t[0, 1]) << 32)) in universe:
+                continue
+            probes += 1
+            scores = eng.score_terms(t)
+            hits += int((scores >= 1).sum())
+            total += idx.n_docs
+        measured = hits / total
+        predicted = float(idx.expected_fpr().mean())
+        emit(f"fpr/{name}/single_kmer_measured", measured * 1e6,
+             f"predicted={predicted:.4f};prescribed=0.3")
+        out[name] = (measured, predicted)
+
+    # long queries: zero false positives at K=0.8 (paper: ell >= 100)
+    queries, origin = make_queries(c, n_pos=0, n_neg=30, length=100, seed=77)
+    eng = QueryEngine(compact)
+    fps = sum(len(r.doc_ids) for r in eng.search_batch(queries, threshold=0.8))
+    thm = theory.query_fpr(100 - c.k + 1, 0.3, 0.8) * compact.n_docs * len(queries)
+    emit("fpr/compact/long_query_false_positives", float(fps),
+         f"theorem1_expected={thm:.2e}")
+    out["long_fp"] = fps
+    return out

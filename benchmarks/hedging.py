@@ -1,0 +1,32 @@
+"""Tail-latency benchmark for the straggler-mitigation policy (DESIGN.md
+§4): p50/p99 with and without hedged execution under 10% stragglers."""
+from __future__ import annotations
+
+import random
+
+from repro.index import HedgedExecutor, ShardSim
+
+from .common import emit
+
+
+def _run(hedge_after: float, max_hedges: int, n=2000) -> tuple[float, float]:
+    rng = random.Random(0)
+    shards = {f"s{i}": ShardSim(f"s{i}", base_latency=1.0) for i in range(8)}
+    ex = HedgedExecutor(shards=shards, hedge_after=hedge_after,
+                        max_hedges=max_hedges)
+    for q in range(n):
+        for s in ex.shards.values():
+            s.straggle_until = -1.0
+        if rng.random() < 0.10:
+            ex.shards["s0"].straggle_until = ex.clock.now + 1e9
+        ex.run_query(q, ["s0", "s1", "s2"])
+    return ex.percentile(0.5), ex.percentile(0.99)
+
+
+def run() -> dict:
+    p50_off, p99_off = _run(hedge_after=1e9, max_hedges=0)
+    p50_on, p99_on = _run(hedge_after=2.0, max_hedges=1)
+    emit("hedge/off/p99_latency", p99_off * 1e6, f"p50={p50_off}")
+    emit("hedge/on/p99_latency", p99_on * 1e6,
+         f"p50={p50_on};p99_improvement={p99_off / p99_on:.1f}x")
+    return {"off": (p50_off, p99_off), "on": (p50_on, p99_on)}

@@ -1,0 +1,31 @@
+"""Kernel microbenchmarks: scoring methods across (terms x doc-words)
+tiles. On CPU the Pallas kernels execute in interpret mode (correctness
+path); the jnp oracle ('ref') is the XLA-compiled CPU path, so it is the
+meaningful CPU wall-clock datum, while the interpret numbers track kernel-
+body overhead. On TPU the same harness times compiled Mosaic kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import emit, timeit
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    for L, W in ((64, 128), (256, 512), (1024, 1024)):
+        rows = jnp.asarray(rng.integers(0, 2 ** 32, size=(L, W),
+                                        dtype=np.uint32))
+        for method in ("ref", "unpack", "vertical"):
+            fn = jax.jit(lambda r, m=method: ops.bitslice_score(r, method=m))
+            fn(rows).block_until_ready()
+            t = timeit(lambda: fn(rows).block_until_ready(), repeats=3)
+            docs_per_s = (W * 32 * L) / t
+            emit(f"kernel/{method}/L{L}xW{W}", t * 1e6,
+                 f"term_doc_pairs_per_s={docs_per_s:.2e}")
+            out[(method, L, W)] = t
+    return out

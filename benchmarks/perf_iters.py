@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (device count must be locked before any jax import — same as dryrun.py)
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro import configs
+from repro.launch import analysis, sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, make_cell
+from repro.models.partition import partitioning
+
+"""§Perf hillclimb driver: lowers VARIANT configurations of the three chosen
+cells and reports the roofline-term deltas vs the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iters --cell moe|granite|cobs|all
+
+Each iteration is a (hypothesis, change) pair; results append to
+results/perf_iters.jsonl and are written up in EXPERIMENTS.md §Perf.
+"""
+
+
+def lower_cell(arch, shape_name, cfg_override=None, mesh=None):
+    mesh = mesh or make_production_mesh()
+    cell = make_cell(arch, shape_name, mesh)
+    if cfg_override is not None:
+        new_cfg = cfg_override(cell.cfg)
+        from repro.launch import specs as specs_mod
+        import repro.configs as cfgs
+        orig_get = cfgs.get
+        try:
+            cfgs.get = lambda a, smoke=False: new_cfg
+            cell = make_cell(arch, shape_name, mesh)
+        finally:
+            cfgs.get = orig_get
+    t0 = time.time()
+    with mesh, partitioning(mesh, shd.act_rules_for(mesh)):
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        compiled = jitted.lower(*cell.args).compile()
+    roof = analysis.analyze(compiled, cell.cfg, cell.shape,
+                            chips=mesh.devices.size)
+    mem = analysis.memory_analysis_dict(compiled)
+    return {"roofline": roof.as_dict(), "memory": mem,
+            "compile_s": round(time.time() - t0, 1)}
+
+
+def report(tag, rec):
+    rf = rec["roofline"]
+    print(f"{tag:40s} t_comp={rf['t_compute_s']:.3f}s "
+          f"t_mem={rf['t_memory_s']:.4f}s t_coll={rf['t_collective_s']:.3f}s "
+          f"temp={rec['memory'].get('temp_size_in_bytes', 0)/2**30:.1f}GiB "
+          f"[{rf['bottleneck']}]")
+    with open("results/perf_iters.jsonl", "a") as f:
+        f.write(json.dumps({"tag": tag, **rec}) + "\n")
+
+
+def cell_moe():
+    from repro.launch.mesh import make_mesh
+    print("== Cell A: qwen3-moe-30b-a3b x train_4k ==")
+    local = lambda c: dataclasses.replace(
+        c, moe=dataclasses.replace(c.moe, dispatch="local"))
+    report("A0 baseline einsum-dispatch", lower_cell(
+        "qwen3-moe-30b-a3b", "train_4k"))
+    report("A1 local shard_map dispatch", lower_cell(
+        "qwen3-moe-30b-a3b", "train_4k", local))
+    # A2: same 256 chips, refactored logical mesh (data=32, model=8):
+    # TP activation all-reduces halve; experts still divide (128/8=16).
+    report("A2 local dispatch + mesh(32,8)", lower_cell(
+        "qwen3-moe-30b-a3b", "train_4k", local,
+        mesh=make_mesh((32, 8), ("data", "model"))))
+    report("A3 local dispatch + mesh(64,4)", lower_cell(
+        "qwen3-moe-30b-a3b", "train_4k", local,
+        mesh=make_mesh((64, 4), ("data", "model"))))
+
+
+def cell_granite():
+    from repro.launch.mesh import make_mesh
+    print("== Cell B: granite-3-8b x prefill_32k ==")
+    report("B1 flat-head + pinned kv-block layout", lower_cell(
+        "granite-3-8b", "prefill_32k"))
+    # B2: logical mesh refactor (data=32, model=8): kv=8 now DIVIDES the
+    # model axis -> cache shards on kv (not head_dim), TP AR bytes halve.
+    report("B2 + mesh(32,8)", lower_cell(
+        "granite-3-8b", "prefill_32k",
+        mesh=make_mesh((32, 8), ("data", "model"))))
+    report("B3 + mesh(64,4)", lower_cell(
+        "granite-3-8b", "prefill_32k",
+        mesh=make_mesh((64, 4), ("data", "model"))))
+
+
+def cell_cobs():
+    print("== Cell C: cobs-index distributed query ==")
+    import jax.numpy as jnp
+    from repro.launch.dryrun import run_cobs_cell
+    mesh = make_production_mesh()
+    variants = [
+        ("C0 baseline gather+vertical/int32", dict()),
+        ("C1 fused lookup kernel", dict(score_method="lookup")),
+        ("C2 fused lookup + int16 psum", dict(score_method="lookup",
+                                              score_dtype=jnp.int16)),
+    ]
+    for tag, kw in variants:
+        rec = run_cobs_cell(mesh, "single-pod-16x16", **kw)
+        if rec["status"] != "ok":
+            print(tag, "ERROR", rec.get("error"))
+            continue
+        print(f"{tag:40s} flops/chip={rec['flops_per_chip']:.3e} "
+              f"bytes/chip={rec['bytes_per_chip']:.3e} "
+              f"coll/chip={rec['coll_bytes_per_chip']:.3e} "
+              f"t_mem={rec['bytes_per_chip']/819e9*1e3:.3f}ms "
+              f"t_coll={rec['coll_bytes_per_chip']/50e9*1e6:.1f}us")
+        with open("results/perf_iters.jsonl", "a") as f:
+            f.write(json.dumps({"tag": tag, **rec}) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    choices=["moe", "granite", "cobs", "all"])
+    args = ap.parse_args()
+    os.makedirs("results", exist_ok=True)
+    if args.cell in ("moe", "all"):
+        cell_moe()
+    if args.cell in ("granite", "all"):
+        cell_granite()
+    if args.cell in ("cobs", "all"):
+        cell_cobs()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Table 3: query wall-clock time by query length, cold (r0) vs warm
+(r2) jit caches, across scoring methods (ref oracle, paper-faithful unpack
+kernel, beyond-paper vertical kernel, fused lookup kernel)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import QueryEngine
+from repro.data import make_queries
+
+from .common import built_indexes, emit, timeit
+
+
+def run(n_docs: int = 512) -> dict:
+    c, classic, compact = built_indexes(n_docs)
+    out = {}
+    for ell in (15, 100, 1000):
+        n_q = 64 if ell <= 100 else 16
+        queries, _ = make_queries(c, n_pos=n_q // 2, n_neg=n_q // 2,
+                                  length=max(ell, c.k), seed=ell)
+        for idx_name, idx in (("classic", classic), ("compact", compact)):
+            for method in ("ref", "unpack", "vertical"):
+                eng = QueryEngine(idx, method=method)
+                # r0: cold (includes jit compile); r2: warm
+                import time
+                t0 = time.perf_counter()
+                eng.search_batch(queries, threshold=0.8)
+                r0 = time.perf_counter() - t0
+                r2 = timeit(lambda: eng.search_batch(queries, threshold=0.8),
+                            repeats=2, warmup=0)
+                per_q = r2 / len(queries)
+                emit(f"query/{idx_name}/{method}/len{ell}", per_q * 1e6,
+                     f"r0_s={r0:.2f};r2_s={r2:.3f};n_q={len(queries)}")
+                out[(idx_name, method, ell)] = per_q
+    return out

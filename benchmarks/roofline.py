@@ -1,0 +1,138 @@
+"""Roofline report (deliverable g): reads results/dryrun.jsonl and renders
+the per-(arch x shape x mesh) three-term table + bottleneck + MODEL_FLOPS
+ratio as markdown (for EXPERIMENTS.md §Roofline) and CSV.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--jsonl results/dryrun.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load(path: str):
+    recs = [json.loads(l) for l in open(path)]
+    # keep the newest record per cell
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(seen.values())
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x:.1e}"
+    return f"{x:.4f}"
+
+
+def render(recs, mesh_filter: str | None = "single-pod-16x16") -> str:
+    lines = []
+    lines.append("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
+                 "t_collective (s) | bound | useful/computed | "
+                 "roofline frac |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3, "query_b64": 4}
+    recs = sorted(recs, key=lambda r: (r["mesh"], r["arch"],
+                                       order.get(r["shape"], 9)))
+    for r in recs:
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | skipped: {r['reason']} | — | — |")
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            continue
+        f = r["roofline"]
+        tc, tm, tl = f["t_compute_s"], f["t_memory_s"], f["t_collective_s"]
+        bound = max(tc, tm, tl)
+        # roofline fraction: useful-compute time / achievable step time
+        useful_t = (f["model_flops"] / f["chips"]) / 197e12
+        frac = useful_t / bound if bound else 0.0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(tc)} | "
+            f"{fmt_s(tm)} | {fmt_s(tl)} | {f['bottleneck']} | "
+            f"{f['useful_flops_ratio']:.2f} | {frac:.2f} |")
+    return "\n".join(lines)
+
+
+def advice(r) -> str:
+    """One sentence per cell: what would move the dominant term down."""
+    f = r["roofline"]
+    b = f["bottleneck"]
+    mode = ("decode" if "decode" in r["shape"] or "long" in r["shape"]
+            else ("prefill" if "prefill" in r["shape"] else "train"))
+    coll = f.get("coll_breakdown", {})
+    big = max(coll, key=coll.get) if coll else ""
+    if b == "collective":
+        if mode == "decode":
+            return ("latency-regime: batch more requests per chip or "
+                    "co-locate decode replicas per pod to amortize the "
+                    f"per-token {big} of the FSDP/TP weights.")
+        if "moe" in r["arch"]:
+            return ("switch MoE dispatch to shard_map local capacity and "
+                    "re-factor the mesh toward more data/less model "
+                    "parallelism (§Perf cell A: 97.4→3.5 s).")
+        return ("lower the TP degree (mesh data x model refactor) and/or "
+                "overlap the Megatron all-reduce with the next layer's "
+                f"matmuls; dominant op: {big} (§Perf cell B pattern).")
+    if b == "memory":
+        if r["arch"] == "cobs-index":
+            return ("bandwidth floor of the signature scan — next step is "
+                    "row compression (paper's future work) or larger "
+                    "query batches to amortize row reads.")
+        return ("increase arithmetic intensity: larger per-chip batch, "
+                "bf16 optimizer state, or fuse the attention cache "
+                "update with the projection.")
+    return ("compute-bound at the stated batch: raise MFU via remat-policy "
+            "tuning (drop the +1 forward) and causal-block skipping in the "
+            "blockwise attention.")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default="single-pod-16x16",
+                    help="mesh filter or 'all'")
+    args = ap.parse_args()
+    recs = load(args.jsonl)
+    mf = None if args.mesh == "all" else args.mesh
+    print(render(recs, mf))
+    Path("results").mkdir(exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write(render(recs, None))
+        f.write("\n\n## Per-cell notes (dominant-term reduction)\n\n")
+        for r in sorted(recs, key=lambda x: (x["mesh"], x["arch"])):
+            if r.get("status") != "ok":
+                continue
+            if "roofline" not in r and "bytes_per_chip" in r:
+                # COBS index cell: terms recorded flat
+                t = {"compute": r["flops_per_chip"] / 197e12,
+                     "memory": r["bytes_per_chip"] / 819e9,
+                     "collective": r["coll_bytes_per_chip"] / 50e9}
+                b = max(t, key=t.get)
+                r = {**r, "roofline": {"bottleneck": b,
+                                       "coll_breakdown": r.get(
+                                           "coll_breakdown", {})}}
+            if "roofline" in r:
+                f.write(f"* **{r['arch']} × {r['shape']} ({r['mesh']})** — "
+                        f"{r['roofline']['bottleneck']}-bound: {advice(r)}\n")
+    with open("results/roofline.csv", "w") as f:
+        f.write("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+                "bottleneck,useful_ratio\n")
+        for r in recs:
+            if r["status"] != "ok" or "roofline" not in r:
+                continue
+            rf = r["roofline"]
+            f.write(f"{r['arch']},{r['shape']},{r['mesh']},"
+                    f"{rf['t_compute_s']},{rf['t_memory_s']},"
+                    f"{rf['t_collective_s']},{rf['bottleneck']},"
+                    f"{rf['useful_flops_ratio']}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name] [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows (also written to
+results/benchmarks.csv). Paper analogues:
+    construction -> Table 2       query  -> Table 3 (times)
+    fpr          -> Table 3 (FPR) scaling -> Fig. 6/7
+    compaction   -> Fig. 4        kernel -> engineering section 2.3 (SIMD)
+    hedging      -> DESIGN.md straggler mitigation
+Roofline terms (deliverable g) come from the dry-run artifacts:
+    PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.jsonl
+    PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpora (CI)")
+    args = ap.parse_args()
+
+    from . import common
+    from . import (compaction, construction, fpr, hedging, kernel_micro,
+                   query, scaling)
+
+    n = 128 if args.quick else 512
+    suites = {
+        "construction": lambda: construction.run(n),
+        "query": lambda: query.run(n),
+        "fpr": lambda: fpr.run(n, n_probes=100 if args.quick else 300),
+        "scaling": lambda: scaling.run((64, 128) if args.quick
+                                       else (64, 128, 256, 512)),
+        "compaction": lambda: compaction.run(64 if args.quick else 256),
+        "kernel": kernel_micro.run,
+        "hedging": hedging.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        fn()
+
+    out = Path("results")
+    out.mkdir(exist_ok=True)
+    with (out / "benchmarks.csv").open("w") as f:
+        f.write("name,us_per_call,derived\n")
+        for row in common.ROWS:
+            f.write(f"{row[0]},{row[1]:.1f},{row[2]}\n")
+    print(f"# wrote results/benchmarks.csv ({len(common.ROWS)} rows)",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 6/7: construction time, index size, and query time as |D|
+grows — the scalability claims. Fig. 7's key observation to reproduce:
+COBS' per-document index size DECREASES with |D| (better block packing)
+while classic grows with the maximum document."""
+from __future__ import annotations
+
+from repro.core import IndexParams, QueryEngine, build_classic, build_compact
+from repro.data import make_queries
+
+from .common import corpus, emit, timeit
+
+
+def run(sizes=(64, 128, 256, 512)) -> dict:
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+    out = {}
+    for n in sizes:
+        c = corpus(n)
+        t_build = timeit(lambda: build_compact(c.doc_terms, params,
+                                               block_docs=64), repeats=1)
+        compact = build_compact(c.doc_terms, params, block_docs=64)
+        classic = build_classic(c.doc_terms, params)
+        queries, _ = make_queries(c, n_pos=16, n_neg=16, length=100,
+                                  seed=n)
+        eng = QueryEngine(compact)
+        t_query = timeit(lambda: eng.search_batch(queries, threshold=0.8),
+                         repeats=2)
+        emit(f"scaling/build_per_doc/n{n}", t_build / n * 1e6,
+             f"total_s={t_build:.2f}")
+        emit(f"scaling/compact_bytes_per_doc/n{n}",
+             compact.size_bytes() / n,
+             f"classic_bytes_per_doc={classic.size_bytes() / n:.0f}")
+        emit(f"scaling/query_per_batch32/n{n}",
+             t_query / len(queries) * 32 * 1e6, "")
+        out[n] = {"build": t_build, "query": t_query,
+                  "compact_bytes": compact.size_bytes(),
+                  "classic_bytes": classic.size_bytes()}
+    return out

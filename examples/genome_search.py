@@ -1,0 +1,82 @@
+"""End-to-end reproduction of the paper's experimental loop at laptop scale:
+
+  1. synthesize a size-skewed microbial-like corpus (log-normal sizes),
+  2. build BOTH indexes: ClaBS (classic, uniform width) and COBS (compact),
+  3. compare sizes (Fig. 4), construction times (Table 2),
+  4. run labeled query batches (Table 3) and verify: zero false negatives,
+     single-k-mer FPR ~ prescribed, long-query FPR ~ Theorem 1.
+
+    PYTHONPATH=src python examples/genome_search.py [n_docs]
+"""
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (IndexParams, QueryEngine, build_classic,
+                        build_compact, theory)
+from repro.data import make_corpus, make_queries
+
+n_docs = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+
+print(f"== corpus: {n_docs} documents, log-normal sizes ==")
+corpus = make_corpus(n_docs, k=15, mean_length=2000, sigma=1.0, seed=0)
+counts = corpus.term_counts()
+print(f"   k-mers/doc: min {counts.min()}, mean {counts.mean():.0f}, "
+      f"max {counts.max()} (skew {counts.max() / counts.mean():.1f}x)")
+
+params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+
+t0 = time.time()
+classic = build_classic(corpus.doc_terms, params)
+t_classic = time.time() - t0
+t0 = time.time()
+compact = build_compact(corpus.doc_terms, params, block_docs=64)
+t_compact = time.time() - t0
+print(f"== build: classic {t_classic:.2f}s -> {classic.size_bytes()/2**20:.2f} MiB | "
+      f"compact {t_compact:.2f}s -> {compact.size_bytes()/2**20:.2f} MiB "
+      f"({classic.size_bytes()/compact.size_bytes():.2f}x smaller)")
+
+for ell in (15, 100, 1000):
+    queries, origin = make_queries(corpus, n_pos=20, n_neg=20,
+                                   length=max(ell, 15), seed=ell)
+    eng = QueryEngine(compact)
+    t0 = time.time()
+    results = eng.search_batch(queries, threshold=0.8)
+    dt = time.time() - t0
+    tp = fn = fp = 0
+    for r, o in zip(results, origin):
+        ids = set(r.doc_ids.tolist())
+        if o >= 0:
+            tp += o in ids
+            fn += o not in ids
+            fp += len(ids - {o})
+        else:
+            fp += len(ids)
+    n_terms = max(ell, 15) - 15 + 1
+    expect_fp = theory.query_fpr(n_terms, 0.3, 0.8) * n_docs * len(queries)
+    print(f"   ell={ell:5d}: {len(queries)} queries in {dt:.2f}s | "
+          f"TP {tp}/20, FN {fn} (must be 0), FP {fp} "
+          f"(Theorem-1 expectation {expect_fp:.3g})")
+    assert fn == 0, "false negatives are impossible by construction"
+
+print("== single k-mer FPR check (paper Table 3 bottom) ==")
+rng = np.random.default_rng(5)
+universe = set()
+for t in corpus.doc_terms:
+    u = t[:, 0].astype(np.uint64) | (t[:, 1].astype(np.uint64) << np.uint64(32))
+    universe |= set(u.tolist())
+from repro.core import dna
+eng = QueryEngine(compact)
+hits = total = probes = 0
+while probes < 200:
+    kmer = rng.integers(0, 4, 15, dtype=np.uint8)
+    t = dna.pack_kmers(kmer, 15)
+    if (int(t[0, 0]) | (int(t[0, 1]) << 32)) in universe:
+        continue
+    probes += 1
+    hits += int((eng.score_terms(t) >= 1).sum())
+    total += n_docs
+print(f"   measured FPR {hits/total:.3f} | analytic "
+      f"{compact.expected_fpr().mean():.3f} | prescribed {params.fpr}")
+print("OK")

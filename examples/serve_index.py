@@ -1,0 +1,16 @@
+"""End-to-end serving driver (the paper's kind of system = an index, so the
+served artifact is the index): build a compact index over a few hundred
+documents, then serve batched approximate-matching queries and report
+latency percentiles + ground-truth accuracy.
+
+    PYTHONPATH=src python examples/serve_index.py
+(thin wrapper over `python -m repro.launch.serve` with example defaults)
+"""
+import sys
+
+from repro.launch import serve
+
+sys.argv = [sys.argv[0], "--n-docs", "256", "--batches", "8",
+            "--batch-size", "32", "--query-len", "100",
+            "--method", "vertical"] + sys.argv[1:]
+serve.main()

@@ -1,0 +1,19 @@
+"""Train a reduced-config LM for a few hundred steps on CPU with the full
+production path: sharding rule engine (degenerate 1-device mesh), jit'd
+train_step, async checkpointing, crash-safe resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen3-4b] [--steps 200]
+(thin wrapper over `python -m repro.launch.train`)
+"""
+import sys
+
+from repro.launch import train
+
+args = sys.argv[1:]
+if not any(a.startswith("--arch") for a in args):
+    args = ["--arch", "qwen3-4b"] + args
+if not any(a.startswith("--steps") for a in args):
+    args += ["--steps", "200"]
+sys.argv = [sys.argv[0], "--smoke", "--batch", "8", "--seq", "64",
+            "--ckpt-dir", "/tmp/repro_train_lm"] + args
+train.main()

@@ -1,0 +1,3 @@
+"""repro: COBS (compact bit-sliced signature index) as a multi-pod JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from .store import (CheckpointManager, save_pytree, load_pytree,
+                    latest_step, AsyncCheckpointer)
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree", "latest_step",
+           "AsyncCheckpointer"]

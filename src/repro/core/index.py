@@ -1,0 +1,268 @@
+"""The COBS data structure: classic (ClaBS) and compact bit-sliced indexes.
+
+Unified *arena* representation (TPU adaptation of the paper's concatenated
+sub-index files): all sub-index blocks share the same document-word width
+(block_docs // 32) and are stacked along the row axis into one uint32 arena
+
+    arena : uint32 [total_rows, block_docs // 32]
+
+with per-block row offsets and filter widths. A classic index is the special
+case of a single block whose width covers the largest document — exactly the
+ClaBS/BIGSI layout. Query row addressing for term t in block b is
+
+    row(t, b) = row_offset[b] + hash(t) % w_b[b]
+
+i.e. the paper's 'one hash function with a larger output range + modulo'.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bloom, theory
+
+DEFAULT_FPR = 0.3      # paper section 2.1: high FPR is optimal for this workload
+DEFAULT_HASHES = 1     # paper: k = 1 minimizes cache faults / IOs
+DEFAULT_KMER = 31      # microbial genomics standard
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexParams:
+    n_hashes: int = DEFAULT_HASHES
+    fpr: float = DEFAULT_FPR
+    kmer: int = DEFAULT_KMER
+    canonical: bool = False
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "IndexParams":
+        return IndexParams(**d)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitSlicedIndex:
+    """Arena-layout bit-sliced signature index (classic or compact)."""
+
+    arena: jnp.ndarray       # uint32 [total_rows, block_docs // 32]
+    row_offset: jnp.ndarray  # int32  [n_blocks]
+    block_width: jnp.ndarray # int32  [n_blocks]  (w_b, filter width per block)
+    doc_slot: jnp.ndarray    # int32  [n_docs]    slot of original doc i
+    doc_n_terms: jnp.ndarray # int32  [n_docs]
+    block_docs: int          # docs per block (multiple of 32)
+    n_docs: int
+    params: IndexParams
+
+    # -- pytree protocol (arrays are leaves; the rest is static aux) --------
+    def tree_flatten(self):
+        leaves = (self.arena, self.row_offset, self.block_width,
+                  self.doc_slot, self.doc_n_terms)
+        aux = (self.block_docs, self.n_docs, self.params)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    # -- derived properties -------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return int(self.row_offset.shape[0])
+
+    @property
+    def doc_words(self) -> int:
+        return int(self.arena.shape[1])
+
+    @property
+    def total_rows(self) -> int:
+        return int(self.arena.shape[0])
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_blocks * self.block_docs
+
+    def size_bytes(self) -> int:
+        return int(self.arena.size) * 4
+
+    def expected_fpr(self) -> np.ndarray:
+        """Per-document analytic FPR given actual block widths (tests compare
+        this to measured rates)."""
+        w_b = np.asarray(self.block_width)
+        slots = np.asarray(self.doc_slot)
+        widths = w_b[slots // self.block_docs]
+        v = np.asarray(self.doc_n_terms)
+        return np.array(
+            [theory.bloom_fpr(int(w), self.params.n_hashes, int(n))
+             for w, n in zip(widths, v)]
+        )
+
+
+def _pad32(n: int) -> int:
+    return ((n + 31) // 32) * 32
+
+
+def build_compact(
+    doc_terms: list[np.ndarray],
+    params: IndexParams = IndexParams(),
+    block_docs: int = 1024,
+    row_align: int = bloom.ROW_ALIGN,
+) -> BitSlicedIndex:
+    """COBS compact build: sort documents by size, block into groups of
+    ``block_docs``, size each block's filter for its largest member."""
+    n_docs = len(doc_terms)
+    if n_docs == 0:
+        raise ValueError("empty document set")
+    block_docs = _pad32(block_docs)
+    counts = np.array([t.shape[0] for t in doc_terms], dtype=np.int64)
+    order = np.argsort(counts, kind="stable")          # ascending by size
+    doc_slot = np.empty(n_docs, dtype=np.int32)
+    doc_slot[order] = np.arange(n_docs, dtype=np.int32)
+
+    n_blocks = (n_docs + block_docs - 1) // block_docs
+    blocks, widths, offsets = [], [], []
+    off = 0
+    for b in range(n_blocks):
+        ids = order[b * block_docs:(b + 1) * block_docs]
+        v_max = int(counts[ids].max()) if ids.size else 0
+        w = bloom.aligned_width(
+            theory.bloom_size(max(v_max, 1), params.fpr, params.n_hashes), row_align)
+        blocks.append(bloom.build_block_matrix(
+            [doc_terms[i] for i in ids], w, params.n_hashes, block_docs))
+        widths.append(w)
+        offsets.append(off)
+        off += w
+
+    return BitSlicedIndex(
+        arena=jnp.asarray(np.concatenate(blocks, axis=0)),
+        row_offset=jnp.asarray(np.array(offsets, dtype=np.int32)),
+        block_width=jnp.asarray(np.array(widths, dtype=np.int32)),
+        doc_slot=jnp.asarray(doc_slot),
+        doc_n_terms=jnp.asarray(counts.astype(np.int32)),
+        block_docs=block_docs,
+        n_docs=n_docs,
+        params=params,
+    )
+
+
+def build_classic(
+    doc_terms: list[np.ndarray],
+    params: IndexParams = IndexParams(),
+    row_align: int = bloom.ROW_ALIGN,
+) -> BitSlicedIndex:
+    """ClaBS/BIGSI build: one uniform filter width sized for the LARGEST
+    document (the layout whose waste motivates compaction, Fig. 4)."""
+    n_docs = len(doc_terms)
+    if n_docs == 0:
+        raise ValueError("empty document set")
+    counts = np.array([t.shape[0] for t in doc_terms], dtype=np.int64)
+    v_max = int(counts.max())
+    w = bloom.aligned_width(
+        theory.bloom_size(max(v_max, 1), params.fpr, params.n_hashes), row_align)
+    block_docs = _pad32(n_docs)
+    matrix = bloom.build_block_matrix(list(doc_terms), w, params.n_hashes, block_docs)
+    return BitSlicedIndex(
+        arena=jnp.asarray(matrix),
+        row_offset=jnp.zeros((1,), dtype=jnp.int32),
+        block_width=jnp.full((1,), w, dtype=jnp.int32),
+        doc_slot=jnp.arange(n_docs, dtype=jnp.int32),
+        doc_n_terms=jnp.asarray(counts.astype(np.int32)),
+        block_docs=block_docs,
+        n_docs=n_docs,
+        params=params,
+    )
+
+
+def merge_classic(a: BitSlicedIndex, b: BitSlicedIndex) -> BitSlicedIndex:
+    """Merge two classic indexes built with identical parameters and widths
+    (paper section 2.3: 'classic indexes with the same parameters can be
+    concatenated straightforwardly')."""
+    if a.n_blocks != 1 or b.n_blocks != 1:
+        raise ValueError("merge_classic only merges classic (single-block) indexes")
+    if int(a.block_width[0]) != int(b.block_width[0]) or a.params != b.params:
+        raise ValueError("parameter mismatch")
+    arena = jnp.concatenate([a.arena, b.arena], axis=1)
+    return BitSlicedIndex(
+        arena=arena,
+        row_offset=a.row_offset,
+        block_width=a.block_width,
+        doc_slot=jnp.concatenate([a.doc_slot, b.doc_slot + a.block_docs]),
+        doc_n_terms=jnp.concatenate([a.doc_n_terms, b.doc_n_terms]),
+        block_docs=a.block_docs + b.block_docs,
+        n_docs=a.n_docs + b.n_docs,
+        params=a.params,
+    )
+
+
+def merge_compact(a: BitSlicedIndex, b: BitSlicedIndex) -> BitSlicedIndex:
+    """Merge two COMPACT indexes without rebuilding (the paper's future-work
+    item, section 2.3/4): sub-index blocks are independent, so the merged
+    index is simply the concatenation of both block lists along the row
+    axis — b's documents keep their own blocks, slots shift by a's slot
+    capacity. Requires identical params and block_docs. Size optimality of
+    the global staircase is not re-established (documents are only sorted
+    within each source index); queries are exact either way."""
+    if a.params != b.params:
+        raise ValueError("parameter mismatch")
+    if a.block_docs != b.block_docs:
+        raise ValueError("block_docs mismatch")
+    return BitSlicedIndex(
+        arena=jnp.concatenate([a.arena, b.arena], axis=0),
+        row_offset=jnp.concatenate(
+            [a.row_offset, b.row_offset + a.total_rows]),
+        block_width=jnp.concatenate([a.block_width, b.block_width]),
+        doc_slot=jnp.concatenate([a.doc_slot, b.doc_slot + a.n_slots]),
+        doc_n_terms=jnp.concatenate([a.doc_n_terms, b.doc_n_terms]),
+        block_docs=a.block_docs,
+        n_docs=a.n_docs + b.n_docs,
+        params=a.params,
+    )
+
+
+# --------------------------------------------------------------------------
+# Persistence: a directory with a JSON manifest + npz payload. This is the
+# single-host flavour; sharded checkpointing lives in repro.checkpoint.
+# --------------------------------------------------------------------------
+
+def save_index(index: BitSlicedIndex, path: str | Path) -> None:
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(
+        path / "index.npz",
+        arena=np.asarray(index.arena),
+        row_offset=np.asarray(index.row_offset),
+        block_width=np.asarray(index.block_width),
+        doc_slot=np.asarray(index.doc_slot),
+        doc_n_terms=np.asarray(index.doc_n_terms),
+    )
+    manifest = {
+        "format": "cobs-jax-v1",
+        "block_docs": index.block_docs,
+        "n_docs": index.n_docs,
+        "params": index.params.to_json(),
+    }
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=2))
+
+
+def load_index(path: str | Path) -> BitSlicedIndex:
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    if manifest.get("format") != "cobs-jax-v1":
+        raise ValueError(f"unknown index format in {path}")
+    with np.load(path / "index.npz") as z:
+        return BitSlicedIndex(
+            arena=jnp.asarray(z["arena"]),
+            row_offset=jnp.asarray(z["row_offset"]),
+            block_width=jnp.asarray(z["block_width"]),
+            doc_slot=jnp.asarray(z["doc_slot"]),
+            doc_n_terms=jnp.asarray(z["doc_n_terms"]),
+            block_docs=int(manifest["block_docs"]),
+            n_docs=int(manifest["n_docs"]),
+            params=IndexParams.from_json(manifest["params"]),
+        )

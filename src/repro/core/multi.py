@@ -1,0 +1,58 @@
+"""Multi-index query frontend (paper section 4: 'our current COBS
+implementation also already supports querying of multiple index files, such
+that a frontend may select different datasets or categories').
+
+Each sub-index keeps its own parameters and engine; results merge into a
+single ranked list over a global document namespace (dataset, local_id).
+This is also the unit for dataset-granular elasticity: attaching/detaching
+a dataset never touches the other indexes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .index import BitSlicedIndex
+from .query import QueryEngine
+
+
+@dataclass
+class MultiHit:
+    dataset: str
+    doc_id: int
+    score: int
+    n_terms: int
+
+
+class MultiIndexEngine:
+    def __init__(self, method: str = "vertical"):
+        self._engines: dict[str, QueryEngine] = {}
+        self.method = method
+
+    def attach(self, name: str, index: BitSlicedIndex) -> None:
+        if name in self._engines:
+            raise KeyError(f"dataset {name!r} already attached")
+        self._engines[name] = QueryEngine(index, method=self.method)
+
+    def detach(self, name: str) -> None:
+        del self._engines[name]
+
+    @property
+    def datasets(self) -> tuple[str, ...]:
+        return tuple(self._engines)
+
+    def search(self, pattern, threshold: float = 0.8,
+               datasets: tuple[str, ...] | None = None) -> list[MultiHit]:
+        """Query selected (default: all) datasets, merged and ranked by
+        score, ties broken by (dataset, doc_id) for determinism. k-mer
+        lengths may differ per dataset (each engine packs its own terms)."""
+        hits: list[MultiHit] = []
+        for name in (datasets if datasets is not None else self.datasets):
+            eng = self._engines[name]
+            r = eng.search(pattern, threshold=threshold)
+            hits.extend(MultiHit(name, int(d), int(s), r.n_terms)
+                        for d, s in zip(r.doc_ids, r.scores))
+        hits.sort(key=lambda h: (-h.score / max(h.n_terms, 1),
+                                 h.dataset, h.doc_id))
+        return hits

@@ -1,0 +1,191 @@
+"""Query processing (paper Fig. 3): HASH -> GATHER rows -> AND -> ADD -> select.
+
+The engine consumes packed terms (uint32 [L, 2]) with a validity count,
+produces per-document scores, and applies the coverage threshold K — the
+fraction of the query's distinct q-grams that must hit a document for it to
+be reported. Single queries and padded batches are supported; scoring runs
+through the Pallas kernels (repro.kernels.ops) with a pure-jnp method for
+oracle comparisons.
+
+Distribution (mesh-sharded arenas, psum'd partial scores, distributed top-k)
+lives in repro.index.distributed and reuses the same planning functions.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dna, hashing
+from .index import BitSlicedIndex
+from ..kernels import ops
+
+
+def plan_rows(
+    hashes: jnp.ndarray, row_offset: jnp.ndarray, block_width: jnp.ndarray
+) -> jnp.ndarray:
+    """Map term hashes to arena rows, per block.
+
+    hashes: uint32 [..., k]; returns int32 [..., k, n_blocks] — the paper's
+    'large output range then modulo per sub-index' addressing."""
+    w = block_width.astype(jnp.uint32)
+    rows = hashes[..., None] % w
+    return (rows + row_offset.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def gather_rows(arena: jnp.ndarray, rows: jnp.ndarray, valid: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Gather + AND + mask: (arena [R, Wb], rows int32 [L, k, nb],
+    valid bool [L]) -> uint32 [L, nb * Wb]."""
+    L, k, nb = rows.shape
+    g = arena[rows]                               # [L, k, nb, Wb]
+    anded = g[:, 0]
+    for i in range(1, k):
+        anded = anded & g[:, i]
+    anded = jnp.where(valid[:, None, None], anded, jnp.uint32(0))
+    return anded.reshape(L, nb * arena.shape[1])
+
+
+# The scoring function is built per-index (static n_hashes / method) to keep
+# the jit cache tidy.
+def make_score_fn(n_hashes: int, method: str = "vertical"):
+    """Returns score(arena, row_offset, block_width, terms [L,2], n_valid)
+    -> int32 [n_slots] scores in slot order."""
+
+    @jax.jit
+    def score(arena, row_offset, block_width, terms, n_valid):
+        L = terms.shape[0]
+        h = hashing.hash_terms(terms, n_hashes)            # [L, k]
+        rows = plan_rows(h, row_offset, block_width)       # [L, k, nb]
+        valid = jnp.arange(L, dtype=jnp.int32) < n_valid
+        if method == "lookup" and n_hashes == 1 and row_offset.shape[0] == 1:
+            # fused path: single block, k=1 — gather happens inside the kernel
+            return ops.bitslice_lookup_score(
+                arena, rows[:, 0, 0], valid.astype(jnp.int32))
+        flat = gather_rows(arena, rows, valid)             # [L, nb*Wb]
+        return ops.bitslice_score(flat, method=method if method != "lookup"
+                                  else "vertical")
+
+    return score
+
+
+@dataclass
+class SearchResult:
+    doc_ids: np.ndarray    # int32, descending score
+    scores: np.ndarray     # int32, aligned with doc_ids
+    n_terms: int           # distinct query terms ell
+    threshold: int         # score cut-off applied
+
+
+class QueryEngine:
+    """High-level search over a BitSlicedIndex.
+
+    method: 'vertical' (default, Harley–Seal kernel), 'unpack'
+    (paper-faithful kernel), 'lookup' (fused gather kernel, classic/k=1
+    indexes), or 'ref' (pure jnp oracle).
+    """
+
+    def __init__(self, index: BitSlicedIndex, method: str = "vertical",
+                 term_pad: int = 64):
+        self.index = index
+        self.method = method
+        self.term_pad = term_pad
+        self._score = make_score_fn(index.params.n_hashes, method)
+        batch_inner = make_score_fn(
+            index.params.n_hashes, "ref" if method == "lookup" else method)
+        self._score_batch = jax.jit(
+            jax.vmap(batch_inner, in_axes=(None, None, None, 0, 0)))
+
+    # -- scoring -------------------------------------------------------------
+    def _pad_terms(self, terms: np.ndarray) -> tuple[np.ndarray, int]:
+        L = terms.shape[0]
+        pad = max(self.term_pad,
+                  ((L + self.term_pad - 1) // self.term_pad) * self.term_pad)
+        out = np.zeros((pad, 2), dtype=np.uint32)
+        out[:L] = terms
+        return out, L
+
+    def score_terms(self, terms: np.ndarray) -> np.ndarray:
+        """Distinct packed terms [L, 2] -> int32 scores [n_docs] (original
+        document order)."""
+        padded, L = self._pad_terms(terms)
+        slots = self._score(self.index.arena, self.index.row_offset,
+                            self.index.block_width, jnp.asarray(padded),
+                            jnp.int32(L))
+        return np.asarray(slots)[np.asarray(self.index.doc_slot)]
+
+    def score_terms_batch(self, terms: np.ndarray, n_valid: np.ndarray
+                          ) -> np.ndarray:
+        """terms [Q, L, 2], n_valid [Q] -> scores [Q, n_docs]."""
+        slots = self._score_batch(self.index.arena, self.index.row_offset,
+                                  self.index.block_width, jnp.asarray(terms),
+                                  jnp.asarray(n_valid, dtype=jnp.int32))
+        return np.asarray(slots)[:, np.asarray(self.index.doc_slot)]
+
+    # -- search --------------------------------------------------------------
+    def search(self, pattern, threshold: float = 0.8) -> SearchResult:
+        """pattern: DNA string or uint8 code array. Reports every document
+        whose q-gram score is >= ceil(threshold * ell), best first."""
+        codes = dna.encode_dna(pattern) if isinstance(pattern, str) else pattern
+        terms = dna.unique_terms(
+            dna.pack_kmers(codes, self.index.params.kmer,
+                           self.index.params.canonical))
+        ell = terms.shape[0]
+        if ell == 0:
+            return SearchResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
+        scores = self.score_terms(terms)
+        cut = max(1, math.ceil(threshold * ell))
+        hits = np.nonzero(scores >= cut)[0]
+        order = np.argsort(-scores[hits], kind="stable")
+        return SearchResult(hits[order].astype(np.int32),
+                            scores[hits][order].astype(np.int32), ell, cut)
+
+    def search_batch(self, patterns: list, threshold: float = 0.8
+                     ) -> list[SearchResult]:
+        """Batched search with shared padding (the paper's bulk queries)."""
+        term_sets = []
+        for p in patterns:
+            codes = dna.encode_dna(p) if isinstance(p, str) else p
+            term_sets.append(dna.unique_terms(
+                dna.pack_kmers(codes, self.index.params.kmer,
+                               self.index.params.canonical)))
+        ells = np.array([t.shape[0] for t in term_sets], dtype=np.int32)
+        pad = max(self.term_pad,
+                  ((int(ells.max(initial=1)) + self.term_pad - 1)
+                   // self.term_pad) * self.term_pad)
+        buf = np.zeros((len(patterns), pad, 2), dtype=np.uint32)
+        for i, t in enumerate(term_sets):
+            buf[i, : t.shape[0]] = t
+        scores = self.score_terms_batch(buf, ells)
+        results = []
+        for i, ell in enumerate(ells):
+            if ell == 0:
+                results.append(SearchResult(np.zeros(0, np.int32),
+                                            np.zeros(0, np.int32), 0, 0))
+                continue
+            cut = max(1, math.ceil(threshold * int(ell)))
+            hits = np.nonzero(scores[i] >= cut)[0]
+            order = np.argsort(-scores[i][hits], kind="stable")
+            results.append(SearchResult(hits[order].astype(np.int32),
+                                        scores[i][hits][order].astype(np.int32),
+                                        int(ell), cut))
+        return results
+
+    def top_k(self, pattern, k: int = 10) -> SearchResult:
+        """Rank documents by q-gram score, return the top k (paper's partial
+        sort selection)."""
+        codes = dna.encode_dna(pattern) if isinstance(pattern, str) else pattern
+        terms = dna.unique_terms(
+            dna.pack_kmers(codes, self.index.params.kmer,
+                           self.index.params.canonical))
+        scores = self.score_terms(terms)
+        k = min(k, scores.shape[0])
+        part = np.argpartition(-scores, k - 1)[:k]
+        order = part[np.argsort(-scores[part], kind="stable")]
+        return SearchResult(order.astype(np.int32),
+                            scores[order].astype(np.int32),
+                            terms.shape[0], 0)

@@ -1,0 +1,35 @@
+"""Minimal FASTA reader/writer (the paper's document input format).
+
+Each FASTA record becomes one read; a multi-record file is one document
+whose reads are k-merized independently, matching COBS' DNA input mode.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from ..core import dna
+
+
+def read_fasta(path: str | Path) -> list[np.ndarray]:
+    """Returns the reads of one FASTA document as 2-bit code arrays."""
+    reads: list[np.ndarray] = []
+    cur: list[str] = []
+    for line in Path(path).read_text().splitlines():
+        if line.startswith(">"):
+            if cur:
+                reads.append(dna.encode_dna("".join(cur)))
+                cur = []
+        else:
+            cur.append(line.strip())
+    if cur:
+        reads.append(dna.encode_dna("".join(cur)))
+    return reads
+
+
+def write_fasta(path: str | Path, reads: list[np.ndarray],
+                name_prefix: str = "read") -> None:
+    with open(path, "w") as f:
+        for i, r in enumerate(reads):
+            f.write(f">{name_prefix}{i}\n{dna.decode_dna(r)}\n")

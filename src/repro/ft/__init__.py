@@ -1,0 +1,4 @@
+from .failures import FailureInjector, run_with_restarts
+from .elastic import ElasticBatchPlan
+
+__all__ = ["FailureInjector", "run_with_restarts", "ElasticBatchPlan"]

@@ -1,0 +1,10 @@
+"""Distributed index runtime: mesh-sharded COBS, placement, straggler
+mitigation, elastic scaling — the paper's 'future work: distributed index
+construction and query processing', built on shard_map + lax collectives."""
+from .distributed import DistributedIndex
+from .placement import BlockPlacement
+from .hedge import HedgedExecutor, SimClock, ShardSim
+from .build_parallel import build_compact_parallel
+
+__all__ = ["DistributedIndex", "BlockPlacement", "HedgedExecutor", "SimClock",
+           "ShardSim", "build_compact_parallel"]

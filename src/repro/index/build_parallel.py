@@ -1,0 +1,96 @@
+"""Parallel / fault-tolerant compact-index construction.
+
+The paper parallelizes compact construction over sub-indexes ('for compact
+index construction we parallelized construction of the subindices'). Blocks
+are independent, so we (1) build them in a worker pool, (2) checkpoint each
+finished block to disk, and (3) on restart resume from the completed-block
+manifest — a node loss during a 100k-document build costs only the blocks
+in flight, not hours of work.
+"""
+from __future__ import annotations
+
+import json
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bloom, theory
+from ..core.index import BitSlicedIndex, IndexParams, _pad32
+
+
+def build_compact_parallel(
+    doc_terms: list[np.ndarray],
+    params: IndexParams = IndexParams(),
+    block_docs: int = 1024,
+    row_align: int = bloom.ROW_ALIGN,
+    workers: int = 4,
+    checkpoint_dir: str | Path | None = None,
+) -> BitSlicedIndex:
+    """Semantically identical to core.build_compact (bit-exact output —
+    asserted in tests), built block-parallel with optional per-block
+    checkpoint/restart."""
+    n_docs = len(doc_terms)
+    if n_docs == 0:
+        raise ValueError("empty document set")
+    block_docs = _pad32(block_docs)
+    counts = np.array([t.shape[0] for t in doc_terms], dtype=np.int64)
+    order = np.argsort(counts, kind="stable")
+    doc_slot = np.empty(n_docs, dtype=np.int32)
+    doc_slot[order] = np.arange(n_docs, dtype=np.int32)
+    n_blocks = (n_docs + block_docs - 1) // block_docs
+
+    widths = []
+    for b in range(n_blocks):
+        ids = order[b * block_docs:(b + 1) * block_docs]
+        v_max = int(counts[ids].max()) if ids.size else 0
+        widths.append(bloom.aligned_width(
+            theory.bloom_size(max(v_max, 1), params.fpr, params.n_hashes),
+            row_align))
+
+    ckpt = Path(checkpoint_dir) if checkpoint_dir else None
+    done: dict[int, np.ndarray] = {}
+    if ckpt is not None:
+        ckpt.mkdir(parents=True, exist_ok=True)
+        manifest = ckpt / "blocks.json"
+        if manifest.exists():
+            for b in json.loads(manifest.read_text()).get("done", []):
+                f = ckpt / f"block{b:06d}.npy"
+                if f.exists():
+                    done[int(b)] = np.load(f)
+
+    def build_one(b: int) -> tuple[int, np.ndarray]:
+        if b in done:
+            return b, done[b]
+        ids = order[b * block_docs:(b + 1) * block_docs]
+        m = bloom.build_block_matrix([doc_terms[i] for i in ids], widths[b],
+                                     params.n_hashes, block_docs)
+        if ckpt is not None:
+            np.save(ckpt / f"block{b:06d}.npy", m)
+        return b, m
+
+    results: dict[int, np.ndarray] = {}
+    if workers <= 1:
+        for b in range(n_blocks):
+            results.update([build_one(b)])
+    else:
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            for b, m in pool.map(build_one, range(n_blocks)):
+                results[b] = m
+                if ckpt is not None:
+                    (ckpt / "blocks.json").write_text(
+                        json.dumps({"done": sorted(results.keys())}))
+
+    offsets = np.concatenate([[0], np.cumsum(widths)[:-1]]).astype(np.int32)
+    return BitSlicedIndex(
+        arena=jnp.asarray(np.concatenate([results[b] for b in range(n_blocks)],
+                                         axis=0)),
+        row_offset=jnp.asarray(offsets),
+        block_width=jnp.asarray(np.array(widths, dtype=np.int32)),
+        doc_slot=jnp.asarray(doc_slot),
+        doc_n_terms=jnp.asarray(counts.astype(np.int32)),
+        block_docs=block_docs,
+        n_docs=n_docs,
+        params=params,
+    )

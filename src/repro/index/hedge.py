@@ -1,0 +1,125 @@
+"""Straggler mitigation: hedged query execution over replicated shards.
+
+Queries against a sharded signature index are stateless scans, which makes
+the classic 'hedged request' policy (Dean & Barroso, 'The Tail at Scale')
+directly applicable: issue to the primary replica; if no completion within
+the hedge deadline (e.g. p95 latency), issue a backup request to the next
+replica and take whichever finishes first.
+
+The executor is written against an injected clock + shard-latency model so
+the policy is unit-testable and deterministic on one host; on a real
+deployment the same class drives per-pod RPCs. Tail-latency statistics are
+recorded so benchmarks can show the p99 win.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+
+class SimClock:
+    """Deterministic event clock for tests/benchmarks."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def advance(self, dt: float):
+        self.now += dt
+
+
+@dataclass
+class ShardSim:
+    """Latency model of one shard/node: base latency plus optional
+    per-window straggle injected by tests."""
+    name: str
+    base_latency: float = 1.0
+    straggle_until: float = -1.0
+    straggle_factor: float = 10.0
+    failed: bool = False
+
+    def latency(self, now: float) -> float | None:
+        if self.failed:
+            return None
+        if now < self.straggle_until:
+            return self.base_latency * self.straggle_factor
+        return self.base_latency
+
+
+@dataclass
+class _Attempt:
+    done_at: float
+    shard: str
+    query_id: int
+    hedged: bool
+
+
+@dataclass
+class HedgedExecutor:
+    """Executes (simulated) shard requests with hedging + failover.
+
+    shards: name -> ShardSim
+    replicas_of: query placement, e.g. BlockPlacement.replicas
+    hedge_after: backup request deadline (same unit as ShardSim latency)
+    """
+    shards: dict[str, ShardSim]
+    hedge_after: float = 2.0
+    max_hedges: int = 1
+    clock: SimClock = field(default_factory=SimClock)
+    completions: list[tuple[int, str, float, bool]] = field(default_factory=list)
+
+    def run_query(self, query_id: int, replicas: list[str]) -> tuple[str, float]:
+        """Returns (serving_shard, completion_latency). Raises if every
+        replica is failed."""
+        start = self.clock.now
+        events: list[tuple[float, _Attempt]] = []
+
+        def issue(shard_name: str, at: float, hedged: bool) -> bool:
+            lat = self.shards[shard_name].latency(at)
+            if lat is None:
+                return False
+            a = _Attempt(at + lat, shard_name, query_id, hedged)
+            heapq.heappush(events, (a.done_at, a))
+            return True
+
+        live = [r for r in replicas if not self.shards[r].failed]
+        if not live:
+            raise RuntimeError(f"query {query_id}: all replicas failed")
+        issue(live[0], start, hedged=False)
+
+        hedges_issued = 0
+        next_hedge_at = start + self.hedge_after
+        while events:
+            done_at, attempt = events[0]
+            # hedge fires before the fastest outstanding attempt completes?
+            while (hedges_issued < self.max_hedges
+                   and next_hedge_at < done_at
+                   and hedges_issued + 1 < len(live) + 1):
+                backup = live[(hedges_issued + 1) % len(live)]
+                if backup != attempt.shard or len(live) == 1:
+                    issue(backup, next_hedge_at, hedged=True)
+                hedges_issued += 1
+                next_hedge_at += self.hedge_after
+                done_at, attempt = events[0]
+            heapq.heappop(events)
+            self.clock.now = max(self.clock.now, attempt.done_at)
+            latency = attempt.done_at - start
+            self.completions.append((query_id, attempt.shard, latency,
+                                     attempt.hedged))
+            return attempt.shard, latency
+        raise RuntimeError("no attempt completed")
+
+    # -- statistics ----------------------------------------------------------
+    def latencies(self) -> list[float]:
+        return [c[2] for c in self.completions]
+
+    def hedged_fraction(self) -> float:
+        if not self.completions:
+            return 0.0
+        return sum(1 for c in self.completions if c[3]) / len(self.completions)
+
+    def percentile(self, q: float) -> float:
+        ls = sorted(self.latencies())
+        if not ls:
+            return 0.0
+        i = min(len(ls) - 1, int(q * len(ls)))
+        return ls[i]

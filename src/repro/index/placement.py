@@ -1,0 +1,110 @@
+"""Block -> node placement for fault tolerance and elastic scaling.
+
+COBS' compact index is a concatenation of INDEPENDENT sub-indexes (paper
+section 2.3) — the unit of distribution, recovery, and elasticity here is
+therefore the block:
+
+* placement uses rendezvous (highest-random-weight) hashing, so adding or
+  removing a node moves only ~1/n of the blocks (elastic scaling);
+* each block is placed on ``replication`` distinct nodes; node failure
+  flips queries to the next-highest replica with zero data movement, and
+  recovery rebuilds only the lost node's blocks (not the whole index).
+
+This is host-side control-plane logic (pure python, deterministic), used by
+the launcher to assign sub-indexes to pods/hosts; the data plane is
+DistributedIndex.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+
+
+def _weight(block_id: int, node: str) -> int:
+    h = hashlib.blake2b(f"{block_id}:{node}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big")
+
+
+@dataclass
+class BlockPlacement:
+    nodes: list[str]
+    n_blocks: int
+    replication: int = 2
+    _down: set[str] = field(default_factory=set)
+
+    def __post_init__(self):
+        if not self.nodes:
+            raise ValueError("need at least one node")
+        if self.replication < 1:
+            raise ValueError("replication >= 1")
+        self.nodes = list(dict.fromkeys(self.nodes))  # dedupe, keep order
+
+    # -- placement ----------------------------------------------------------
+    def replicas(self, block_id: int) -> list[str]:
+        """All replica nodes for a block, preference order (HRW ranking)."""
+        ranked = sorted(self.nodes, key=lambda n: _weight(block_id, n),
+                        reverse=True)
+        return ranked[: min(self.replication, len(ranked))]
+
+    def owner(self, block_id: int) -> str:
+        """Preferred LIVE node for a block (failover-aware)."""
+        for n in self.replicas(block_id):
+            if n not in self._down:
+                return n
+        raise RuntimeError(f"block {block_id}: all replicas down")
+
+    def assignment(self) -> dict[str, list[int]]:
+        """node -> blocks currently served (live owners only)."""
+        out: dict[str, list[int]] = {n: [] for n in self.nodes
+                                     if n not in self._down}
+        for b in range(self.n_blocks):
+            out[self.owner(b)].append(b)
+        return out
+
+    def is_covered(self) -> bool:
+        """Every block has at least one live replica."""
+        try:
+            for b in range(self.n_blocks):
+                self.owner(b)
+            return True
+        except RuntimeError:
+            return False
+
+    # -- failures -----------------------------------------------------------
+    def fail(self, node: str) -> list[int]:
+        """Mark node down; returns blocks whose PRIMARY moved (these flip to
+        a replica — no rebuild needed while replication holds)."""
+        if node not in self.nodes:
+            raise KeyError(node)
+        moved = [b for b in range(self.n_blocks) if self.owner(b) == node]
+        self._down.add(node)
+        return moved
+
+    def recover(self, node: str) -> list[int]:
+        """Node back up; returns blocks to restore onto it (rebuild/copy set
+        = exactly its replica set, nothing else)."""
+        self._down.discard(node)
+        return [b for b in range(self.n_blocks) if node in self.replicas(b)]
+
+    @property
+    def live_nodes(self) -> list[str]:
+        return [n for n in self.nodes if n not in self._down]
+
+    # -- elasticity ---------------------------------------------------------
+    def add_node(self, node: str) -> list[int]:
+        """Scale up; returns blocks that must MOVE to the new node (HRW
+        guarantees expected n_blocks * replication / (n+1))."""
+        before = {b: set(self.replicas(b)) for b in range(self.n_blocks)}
+        self.nodes.append(node)
+        return [b for b in range(self.n_blocks)
+                if set(self.replicas(b)) != before[b]]
+
+    def remove_node(self, node: str) -> list[int]:
+        """Scale down; returns blocks that must be re-homed."""
+        if node not in self.nodes:
+            raise KeyError(node)
+        before = {b: set(self.replicas(b)) for b in range(self.n_blocks)}
+        self.nodes.remove(node)
+        self._down.discard(node)
+        return [b for b in range(self.n_blocks)
+                if set(self.replicas(b)) != before[b]]

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the query hot loop (ops.py = jit wrappers,
+ref.py = pure-jnp oracles, bitslice_score.py = the kernels)."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,280 @@
+"""Pallas TPU kernels for the COBS query hot loop.
+
+The query's per-term work is: fetch the term's bit-sliced row (W uint32
+words = 32W documents), and accumulate each document's bit into its int32
+score. On the paper's CPU this is the SSE LUT expansion; on TPU we target
+the VPU with three designs:
+
+1. ``unpack`` — paper-faithful analogue: every row word is expanded to 32
+   int32 lanes via shift-and-mask and summed. O(32) vector ops per word.
+   BlockSpec tiles (term_block x word_block) keep the working set in VMEM.
+
+2. ``vertical`` — beyond-paper: Harley–Seal style bit-sliced counters.
+   Per word column we keep ceil(log2(L+1)) uint32 counter *planes*; adding a
+   row is a ripple-carry (AND/XOR chain) across planes — O(2 log2 L) vector
+   ops per word instead of O(32); the expensive 32-way expansion happens
+   once at the end instead of once per term. For ell >= ~100 terms this cuts
+   VPU work by 3-6x and is the preferred production path.
+
+3. ``lookup`` (fused) — gathers rows straight from the arena in HBM using
+   scalar-prefetched row indices, so the [L, W] gathered matrix never
+   materializes in HBM. This is the TPU analogue of the paper's streaming
+   row scan from NVMe: row -> VMEM tile -> accumulate.
+
+All kernels share the oracle semantics of ref.bitslice_score_ref. Tile sizes
+default to (8 terms x 128 words) = (sublane x lane) alignment; uint32 words
+* 128 lanes = 4096 documents per tile column.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TERM_BLOCK = 8     # sublane-aligned
+DEFAULT_WORD_BLOCK = 128   # lane-aligned
+
+
+def _num_planes(n_terms: int) -> int:
+    return max(1, (int(n_terms)).bit_length())
+
+
+# --------------------------------------------------------------------------
+# 1. unpack kernel (paper-faithful ADD step)
+# --------------------------------------------------------------------------
+
+def _unpack_kernel(rows_ref, out_ref):
+    i_l = pl.program_id(1)
+    block = rows_ref[...]                                   # uint32 [bl, bw]
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = ((block[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    partial = bits.sum(axis=0)                              # int32 [bw, 32]
+
+    @pl.when(i_l == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(i_l > 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+def unpack_score(
+    rows: jnp.ndarray,
+    *,
+    term_block: int = DEFAULT_TERM_BLOCK,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """uint32 [L, W] -> int32 [W, 32]; L % term_block == W % word_block == 0."""
+    L, W = rows.shape
+    grid = (W // word_block, L // term_block)
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((term_block, word_block), lambda iw, il: (il, iw))],
+        out_specs=pl.BlockSpec((word_block, 32), lambda iw, il: (iw, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, 32), jnp.int32),
+        interpret=interpret,
+    )(rows)
+
+
+# --------------------------------------------------------------------------
+# 2. vertical (Harley–Seal bit-sliced counter) kernel
+# --------------------------------------------------------------------------
+
+def _vertical_kernel(rows_ref, out_ref, planes_ref, *, n_planes: int,
+                     term_block: int):
+    i_l = pl.program_id(1)
+    n_l = pl.num_programs(1)
+
+    @pl.when(i_l == 0)
+    def _init():
+        planes_ref[...] = jnp.zeros_like(planes_ref)
+
+    block = rows_ref[...]                                   # uint32 [bl, bw]
+
+    # Ripple-carry each of the bl rows into the counter planes. The loop over
+    # rows is unrolled (bl is small/static); each row costs 2*n_planes vector
+    # bit-ops on [bw] lanes — this is the entire per-term inner loop.
+    planes = [planes_ref[j, :] for j in range(n_planes)]
+    for r in range(term_block):
+        carry = block[r, :]
+        for j in range(n_planes):
+            new_carry = planes[j] & carry
+            planes[j] = planes[j] ^ carry
+            carry = new_carry
+        # counts < 2^n_planes by construction; carry out of the top plane
+        # cannot happen (n_planes = ceil(log2(L+1))).
+    for j in range(n_planes):
+        planes_ref[j, :] = planes[j]
+
+    @pl.when(i_l == n_l - 1)
+    def _expand():
+        # one-time expansion: count[d] = sum_j bit_j(plane_j) << j
+        shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+        acc = jnp.zeros(out_ref.shape, jnp.int32)
+        for j in range(n_planes):
+            bits = ((planes_ref[j, :][:, None] >> shifts) & jnp.uint32(1))
+            acc += bits.astype(jnp.int32) << j
+        out_ref[...] = acc
+
+
+def vertical_score(
+    rows: jnp.ndarray,
+    *,
+    term_block: int = DEFAULT_TERM_BLOCK,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """uint32 [L, W] -> int32 [W, 32] via bit-sliced vertical counters."""
+    L, W = rows.shape
+    n_planes = _num_planes(L)
+    grid = (W // word_block, L // term_block)
+    kernel = functools.partial(
+        _vertical_kernel, n_planes=n_planes, term_block=term_block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((term_block, word_block), lambda iw, il: (il, iw))],
+        out_specs=pl.BlockSpec((word_block, 32), lambda iw, il: (iw, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, 32), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((n_planes, word_block), jnp.uint32)],
+        interpret=interpret,
+    )(rows)
+
+
+# --------------------------------------------------------------------------
+# 3. fused lookup+score kernel (scalar-prefetched row gather from the arena)
+# --------------------------------------------------------------------------
+
+def _lookup_kernel(idx_ref, mask_ref, arena_ref, out_ref, planes_ref, *,
+                   n_planes: int):
+    i_l = pl.program_id(1)
+    n_l = pl.num_programs(1)
+
+    @pl.when(i_l == 0)
+    def _init():
+        planes_ref[...] = jnp.zeros_like(planes_ref)
+
+    row = arena_ref[0, :]                                   # uint32 [bw]
+    row = row * mask_ref[i_l].astype(jnp.uint32)            # mask invalid term
+    carry = row
+    for j in range(n_planes):
+        new_carry = planes_ref[j, :] & carry
+        planes_ref[j, :] = planes_ref[j, :] ^ carry
+        carry = new_carry
+
+    @pl.when(i_l == n_l - 1)
+    def _expand():
+        shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+        acc = jnp.zeros(out_ref.shape, jnp.int32)
+        for j in range(n_planes):
+            bits = ((planes_ref[j, :][:, None] >> shifts) & jnp.uint32(1))
+            acc += bits.astype(jnp.int32) << j
+        out_ref[...] = acc
+
+
+def _lookup_blocks_kernel(idx_ref, mask_ref, arena_ref, out_ref, planes_ref,
+                          *, n_planes: int):
+    il = pl.program_id(2)
+    n_l = pl.num_programs(2)
+
+    @pl.when(il == 0)
+    def _init():
+        planes_ref[...] = jnp.zeros_like(planes_ref)
+
+    ib = pl.program_id(1)
+    row = arena_ref[0, :] * mask_ref[ib, il].astype(jnp.uint32)
+    carry = row
+    for j in range(n_planes):
+        new_carry = planes_ref[j, :] & carry
+        planes_ref[j, :] = planes_ref[j, :] ^ carry
+        carry = new_carry
+
+    @pl.when(il == n_l - 1)
+    def _expand():
+        shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+        acc = jnp.zeros(out_ref.shape[1:], jnp.int32)
+        for j in range(n_planes):
+            bits = ((planes_ref[j, :][:, None] >> shifts) & jnp.uint32(1))
+            acc += bits.astype(jnp.int32) << j
+        out_ref[0] = acc
+
+
+def lookup_score_blocks(
+    arena: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Multi-block fused gather+score (the compact-index hot loop).
+
+    arena uint32 [R, W]; rows_idx int32 [nb, L] (term row per sub-index
+    block); mask int32 [nb, L] -> int32 [nb, W, 32]. Each (word-tile, block)
+    cell streams its L rows HBM->VMEM via scalar-prefetched indices and
+    accumulates vertical (Harley-Seal) counters — the [L, nb, W] gathered
+    intermediate of the unfused path never exists.
+    """
+    R, W = arena.shape
+    nb, L = rows_idx.shape
+    n_planes = _num_planes(L)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W // word_block, nb, L),
+        in_specs=[
+            pl.BlockSpec((1, word_block),
+                         lambda iw, ib, il, idx, msk: (idx[ib, il], iw)),
+        ],
+        out_specs=pl.BlockSpec((1, word_block, 32),
+                               lambda iw, ib, il, idx, msk: (ib, iw, 0)),
+        scratch_shapes=[pltpu.VMEM((n_planes, word_block), jnp.uint32)],
+    )
+    kernel = functools.partial(_lookup_blocks_kernel, n_planes=n_planes)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, W, 32), jnp.int32),
+        interpret=interpret,
+    )(rows_idx, mask, arena)
+
+
+def lookup_score(
+    arena: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused gather+score: (arena uint32 [R, W], rows_idx int32 [L],
+    mask int32 [L]) -> int32 [W, 32]. W % word_block == 0.
+
+    The row index per grid step comes from scalar prefetch, so each [1, bw]
+    arena tile is DMA'd HBM->VMEM exactly when needed and the gathered [L, W]
+    intermediate never exists.
+    """
+    R, W = arena.shape
+    L = rows_idx.shape[0]
+    n_planes = _num_planes(L)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W // word_block, L),
+        in_specs=[
+            pl.BlockSpec((1, word_block), lambda iw, il, idx, msk: (idx[il], iw)),
+        ],
+        out_specs=pl.BlockSpec((word_block, 32), lambda iw, il, idx, msk: (iw, 0)),
+        scratch_shapes=[pltpu.VMEM((n_planes, word_block), jnp.uint32)],
+    )
+    kernel = functools.partial(_lookup_kernel, n_planes=n_planes)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((W, 32), jnp.int32),
+        interpret=interpret,
+    )(rows_idx, mask, arena)

@@ -1,0 +1,105 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile boundaries, method selection, and CPU fallback:
+on a CPU backend the kernels run under ``interpret=True`` (bit-exact
+execution of the kernel body); on TPU they compile to Mosaic. ``method=
+'ref'`` bypasses Pallas entirely (pure jnp oracle) — useful under vmap-heavy
+query batching and as the ground truth in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import bitslice_score as _k
+from . import ref as _ref
+
+METHODS = ("ref", "unpack", "vertical", "lookup")
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "interpret"))
+def bitslice_score(
+    rows: jnp.ndarray, method: str = "vertical", interpret: bool | None = None
+) -> jnp.ndarray:
+    """Score ADD step: uint32 [L, W] (masked rows) -> int32 [W * 32].
+
+    Invalid/padded terms must already be zeroed; zero rows contribute zero.
+    """
+    if interpret is None:
+        interpret = _use_interpret()
+    L, W = rows.shape
+    if method == "ref":
+        return _ref.bitslice_score_ref(rows)
+    tb, wb = _k.DEFAULT_TERM_BLOCK, _k.DEFAULT_WORD_BLOCK
+    wb = min(wb, max(8, W))  # small-index friendliness
+    padded = _pad_axis(_pad_axis(rows, 0, tb), 1, wb)
+    if method == "unpack":
+        out = _k.unpack_score(padded, term_block=tb, word_block=wb,
+                              interpret=interpret)
+    elif method == "vertical":
+        out = _k.vertical_score(padded, term_block=tb, word_block=wb,
+                                interpret=interpret)
+    else:
+        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+    return out[:W].reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitslice_lookup_score(
+    arena: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused gather+score from the arena: -> int32 [W * 32]."""
+    if interpret is None:
+        interpret = _use_interpret()
+    R, W = arena.shape
+    wb = min(_k.DEFAULT_WORD_BLOCK, max(8, W))
+    arena_p = _pad_axis(arena, 1, wb)
+    out = _k.lookup_score(
+        arena_p, rows_idx.astype(jnp.int32), mask.astype(jnp.int32),
+        word_block=wb, interpret=interpret)
+    return out[:W].reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitslice_lookup_score_blocks(
+    arena: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Multi-block fused gather+score: (arena [R, W], rows_idx [nb, L],
+    mask [nb, L]) -> int32 [nb * W * 32] in (block, word, bit) slot order."""
+    if interpret is None:
+        interpret = _use_interpret()
+    R, W = arena.shape
+    wb = min(_k.DEFAULT_WORD_BLOCK, max(8, W))
+    arena_p = _pad_axis(arena, 1, wb)
+    out = _k.lookup_score_blocks(
+        arena_p, rows_idx.astype(jnp.int32), mask.astype(jnp.int32),
+        word_block=wb, interpret=interpret)
+    return out[:, :W].reshape(-1)
+
+
+def and_rows(rows: jnp.ndarray) -> jnp.ndarray:
+    """AND over the k hash rows: uint32 [L, k, W] -> [L, W] (jnp; XLA fuses
+    this into the surrounding gather — measured no win from a kernel)."""
+    return _ref.and_rows_ref(rows)

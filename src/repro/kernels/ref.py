@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics defined HERE; tests sweep
+shapes/dtypes and assert the kernels match these references exactly
+(integer outputs -> exact equality, not just allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitslice_score_ref(rows: jnp.ndarray) -> jnp.ndarray:
+    """Score ADD step of the query (paper Fig. 3, right).
+
+    rows: uint32 [L, W] — one packed, already-ANDed/masked row per query term
+          (bit d%32 of word d//32 == term present in document d).
+    returns: int32 [W * 32] — per-document score = number of terms whose row
+          has the document's bit set. Document order is word-major, LSB-first.
+    """
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = ((rows[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    return bits.sum(axis=0).reshape(-1)
+
+
+def bitslice_lookup_score_ref(
+    arena: jnp.ndarray, rows_idx: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused GATHER + ADD: score directly from the arena.
+
+    arena:    uint32 [R, W] bit-sliced matrix
+    rows_idx: int32  [L]    row of each term (invalid terms may point anywhere)
+    mask:     int32  [L]    1 = count this term, 0 = ignore
+    returns:  int32  [W * 32]
+    """
+    gathered = arena[rows_idx]                      # [L, W]
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = ((gathered[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    return (bits * mask[:, None, None]).sum(axis=0).reshape(-1)
+
+
+def bitslice_lookup_score_blocks_ref(
+    arena: jnp.ndarray, rows_idx: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Multi-block fused GATHER + ADD oracle.
+
+    arena uint32 [R, W]; rows_idx int32 [nb, L]; mask int32 [nb, L]
+    -> int32 [nb * W * 32] in (block, word, bit) order.
+    """
+    gathered = arena[rows_idx]                        # [nb, L, W]
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, None, :]
+    bits = ((gathered[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    bits = bits * mask[:, :, None, None]
+    return bits.sum(axis=1).reshape(-1)               # sum over L
+
+
+def and_rows_ref(rows: jnp.ndarray) -> jnp.ndarray:
+    """AND step over the k hash functions: uint32 [L, k, W] -> [L, W]."""
+    out = rows[:, 0]
+    for i in range(1, rows.shape[1]):
+        out = out & rows[:, i]
+    return out

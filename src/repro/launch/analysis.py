@@ -1,0 +1,281 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+FLOPs/bytes come from compiled.cost_analysis() of the SPMD-partitioned
+module (per-device program -> per-chip numbers). Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO (compiled.as_text()) and sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, applying ring-transfer factors
+(all-reduce 2x; others 1x — the (N-1)/N factor is folded to 1 for N >= 8).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(\([^)]*\)|"
+                        r"[a-z]+[0-9]*\[[0-9,]*\]\S*)\s+([\w\-]+)")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)[\s(].*\{")
+_BODY_RE = re.compile(r"body=(%[\w\.\-]+)")
+_CALL_RE = re.compile(r"to_apply=(%[\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_OPERAND_RE = re.compile(r"\((%[\w\.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            if not line.startswith(" "):
+                m = _COMP_START.match(line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+        else:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind transferred bytes (per-chip) from optimized HLO.
+
+    Trip-count-aware: collectives inside while bodies (lax.scan'd layer
+    stacks, FSDP gathers) are weighted by the loop's known_trip_count.
+    Byte semantics per op (ring algorithms, (N-1)/N ~ 1):
+      all-gather: result size | reduce-scatter: operand size |
+      all-reduce: 2 x size    | all-to-all / permute: result size.
+    """
+    comps = _split_computations(hlo_text)
+
+    # first pass: instruction result shapes per computation
+    shapes: dict[str, dict[str, str]] = {}
+    for cname, lines in comps.items():
+        d = {}
+        for line in lines:
+            m = _ASSIGN_RE.match(line)
+            if m:
+                d[m.group(1)] = m.group(2)
+        shapes[cname] = d
+
+    memo: dict[str, dict[str, float]] = {}
+
+    def walk(cname: str) -> dict[str, float]:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = {}                       # break recursion cycles
+        out: dict[str, float] = {}
+        local_shapes = shapes.get(cname, {})
+        for line in comps.get(cname, []):
+            m = _ASSIGN_RE.match(line)
+            if not m:
+                continue
+            _, result_shape, op = m.groups()
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                if op.endswith("-start") and result_shape.startswith("("):
+                    # async tuple (operand, result): use the LARGER element
+                    parts = [_shape_bytes(p) for p in
+                             result_shape.strip("()").split("), (")]
+                    b = max(_shape_bytes(result_shape) // 2,
+                            max(parts) if parts else 0)
+                else:
+                    b = _shape_bytes(result_shape)
+                if base == "all-reduce":
+                    b *= 2
+                    # XLA-CPU promotes bf16 all-reduces to f32 (the operand
+                    # is a convert fusion / 'promoted' reducer). TPU reduces
+                    # bf16 natively -> count promoted ARs at source width.
+                    om = _OPERAND_RE.search(line[line.index(op):])
+                    promoted = "promoted" in line
+                    if om and "convert" in om.group(1):
+                        promoted = True
+                    if promoted and result_shape.startswith("f32"):
+                        b //= 2
+                elif base == "reduce-scatter":
+                    om = _OPERAND_RE.search(line[line.index(op):])
+                    if om and om.group(1) in local_shapes:
+                        b = _shape_bytes(local_shapes[om.group(1)])
+                out[base] = out.get(base, 0) + b
+            elif op == "while":
+                bm = _BODY_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                if bm:
+                    for k, v in walk(bm.group(1)).items():
+                        out[k] = out.get(k, 0) + trip * v
+            elif op in ("call", "custom-call", "reduce", "sort", "map",
+                        "scatter", "select-and-scatter", "fusion"):
+                cm = _CALL_RE.search(line)
+                if cm and op == "call":
+                    for k, v in walk(cm.group(1)).items():
+                        out[k] = out.get(k, 0) + v
+            elif op == "conditional":
+                bm = _BRANCH_RE.search(line)
+                if bm:
+                    branches = [b.strip() for b in bm.group(1).split(",")]
+                    best: dict[str, float] = {}
+                    for b in branches:
+                        w = walk(b)
+                        if sum(w.values()) > sum(best.values() or [0]):
+                            best = w
+                    for k, v in best.items():
+                        out[k] = out.get(k, 0) + v
+        memo[cname] = out
+        return out
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_START.match(line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        return {}
+    return {k: int(v) for k, v in walk(entry).items()}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float             # analytic computed FLOPs / chips
+    bytes_per_chip: float             # analytic HBM traffic / chips
+    coll_bytes_per_chip: float        # trip-corrected HLO collectives
+    coll_breakdown: dict
+    model_flops: float = 0.0          # 6*N*D (or 2*N_active*D) global
+    chips: int = 1
+    hlo_flops_raw: float = 0.0        # cost_analysis (scan bodies once!)
+    hlo_bytes_raw: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops): remat/redundancy waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "chips": self.chips,
+            "hlo_flops_raw": self.hlo_flops_raw,
+            "hlo_bytes_raw": self.hlo_bytes_raw,
+        }
+
+
+def model_flops_for(cfg, shape, n_tokens: int) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference (forward only);
+    MoE uses active params."""
+    n = cfg.active_param_count()
+    factor = 6.0 if shape.mode == "train" else 2.0
+    return factor * n * n_tokens
+
+
+def analyze(compiled, cfg, shape, chips: int) -> Roofline:
+    from . import analytic
+
+    cost = {}
+    try:
+        cost = compiled.cost_analysis() or {}
+        if isinstance(cost, list):            # some backends return [dict]
+            cost = cost[0] if cost else {}
+    except Exception:
+        pass
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    fb = analytic.flops_model(cfg, shape.mode, shape.seq_len,
+                              shape.global_batch)
+    return Roofline(
+        flops_per_chip=fb.computed_flops / chips,
+        bytes_per_chip=fb.hbm_bytes / chips,
+        coll_bytes_per_chip=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=fb.useful_flops,
+        chips=chips,
+        hlo_flops_raw=float(cost.get("flops", 0.0)),
+        hlo_bytes_raw=float(cost.get("bytes accessed", 0.0)),
+    )
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:                       # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(m)
+    return out

@@ -1,0 +1,143 @@
+"""Divisibility-aware sharding rule engine.
+
+Ten heterogeneous architectures cannot share one hard-coded PartitionSpec
+table: 10/24/40 query heads, 1–20 KV heads, 16–128 experts and 49k–256k
+vocabularies all divide a 16-way model axis differently. Instead every
+parameter/cache dimension carries a LOGICAL name (assigned at init in
+models/*) and this engine resolves names -> mesh axes per tensor:
+
+  * candidates are tried in order (e.g. attention: "heads" first, then the
+    "head_dim" fallback — that is how recurrentgemma's 10 heads still get
+    tensor-parallel attention);
+  * a candidate is accepted only if the dim size divides the mesh axes'
+    product and no mesh axis is reused within the tensor;
+  * "embed" -> "data" gives ZeRO-3/FSDP parameter sharding on top of TP,
+    which is what makes 17B-a16e (1TB of fp32 param+Adam state) fit
+    16 GB/chip.
+
+The same engine produces activation-hint rules for models.partition.hint.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# logical axis -> ordered candidate mesh-axis tuples.
+#
+# NOTE on head_dim: sharding q/k/v over head_dim looks tempting as a TP
+# fallback when the head counts don't divide the model axis, but head_dim is
+# the CONTRACTING dim of the score einsum — XLA then all-reduces the S x T
+# score matrix every layer (measured 43 s/step of collective time on
+# phi4 x train_4k in the dry-run). Training/prefill therefore REPLICATES
+# attention over "model" when heads don't divide (visible as compute-term
+# inflation, attacked in §Perf); decode CACHES keep the head_dim fallback —
+# there the psum is tiny ([B,1,T] scores) and the 16x cache-memory saving is
+# what makes decode_32k fit 16 GB/chip.
+PARAM_RULES: dict[str, list[tuple[str, ...]]] = {
+    "vocab": [("model",)],
+    "ff": [("model",)],
+    "experts": [("model",)],
+    "heads": [("model",)],
+    "kv": [("model",)],
+    "rec": [("model",)],
+    "embed": [("data",)],           # FSDP / ZeRO-3
+    "batch": [("pod", "data")],
+    "head_dim": [],
+    "kv_seq": [],
+    "seq": [],
+    "layers": [],
+    "enc_seq": [],
+}
+
+CACHE_RULES: dict[str, list[tuple[str, ...]]] = {
+    **PARAM_RULES,
+    "kv": [("model",)],
+    "head_dim": [("model",)],       # fallback: shard cache over head_dim
+}
+
+# activation constraint rules (models.partition.hint): single candidate each
+ACT_RULES: dict[str, tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),
+    "experts": ("model",),
+    "ff": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "rec": ("model",),
+    "embed": None,
+    "seq": None,
+}
+
+
+def _filter_axes(cand: tuple[str, ...], mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in cand if a in mesh.axis_names)
+
+
+def spec_for(axes: tuple[str | None, ...], shape: tuple[int, ...],
+             mesh: Mesh, rules: dict | None = None) -> PartitionSpec:
+    """Resolve one tensor's logical axes to a PartitionSpec."""
+    rules = rules if rules is not None else PARAM_RULES
+    used: set[str] = set()
+    parts: list = []
+    for i, name in enumerate(axes):
+        assigned = None
+        for cand in rules.get(name, []) if name else []:
+            cand = _filter_axes(cand, mesh)
+            if not cand or any(a in used for a in cand):
+                continue
+            size = 1
+            for a in cand:
+                size *= mesh.shape[a]
+            if size > 1 and shape[i] % size == 0:
+                assigned = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        parts.append(assigned)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PartitionSpec(*parts)
+
+
+def tree_specs(axes_tree, shape_tree, mesh: Mesh, rules: dict | None = None):
+    """Parallel (axes, shapes) pytrees -> PartitionSpec pytree."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    return jax.tree.map(
+        lambda a, s: spec_for(a, tuple(s.shape), mesh, rules),
+        axes_tree, shape_tree, is_leaf=is_axes)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh,
+                   rules: dict | None = None):
+    specs = tree_specs(axes_tree, shape_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def act_rules_for(mesh: Mesh) -> dict:
+    """hint() rules filtered to this mesh's axes."""
+    out = {}
+    for name, cand in ACT_RULES.items():
+        if cand is None:
+            out[name] = None
+        else:
+            f = _filter_axes(cand, mesh)
+            out[name] = f if f else None
+    return out
+
+
+def batch_sharding(mesh: Mesh, batch_size: int) -> NamedSharding:
+    """Sharding for [B, ...] data tensors; falls back to replication when
+    the batch doesn't divide (e.g. long_500k's B=1)."""
+    cand = _filter_axes(("pod", "data"), mesh)
+    size = 1
+    for a in cand:
+        size *= mesh.shape[a]
+    if cand and batch_size % size == 0:
+        return NamedSharding(mesh, PartitionSpec(cand if len(cand) > 1
+                                                 else cand[0]))
+    return replicated(mesh)

@@ -1,0 +1,145 @@
+"""Input specifications for every (architecture x shape) dry-run cell.
+
+ShapeDtypeStruct stand-ins only — weak-type-correct, shardable, zero device
+allocation. Each cell bundles: the step function to lower (train_step /
+prefill_step / decode_step), its abstract arguments, and in_shardings
+resolved by the rule engine for the given mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .. import configs
+from ..models import build_model
+from ..models.config import ModelConfig
+from ..models.transformer import Model
+from ..serve import make_decode_step, make_prefill_step
+from ..train import AdamWConfig, make_init_state, make_train_step
+from . import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                     # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(supported, reason-if-not). long_500k needs sub-quadratic attention;
+    decode shapes need a decoder."""
+    s = SHAPES[shape_name]
+    if s.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: long_500k skipped (DESIGN.md)"
+    if s.mode == "decode" and not cfg.has_decoder:
+        return False, "encoder-only arch: no decode step"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _smoke_scale(s: ShapeSpec) -> ShapeSpec:
+    """Reduced copy of a shape for CPU smoke compiles."""
+    return ShapeSpec(s.name, min(s.seq_len, 64), min(s.global_batch, 8),
+                     s.mode)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    model: Model
+    step_fn: Callable
+    args: tuple                    # abstract args (ShapeDtypeStructs)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def _batch_specs(cfg: ModelConfig, mesh: Mesh, B: int, S: int):
+    bsh = shd.batch_sharding(mesh, B)
+    batch = {"tokens": _sds((B, S), jnp.int32),
+             "labels": _sds((B, S), jnp.int32)}
+    shard = {"tokens": bsh, "labels": bsh}
+    if cfg.n_enc_layers:
+        batch["enc_feats"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+        shard["enc_feats"] = bsh
+    return batch, shard
+
+
+def make_cell(arch: str, shape_name: str, mesh: Mesh,
+              smoke: bool = False) -> Cell:
+    cfg = configs.get(arch, smoke=smoke)
+    s = SHAPES[shape_name]
+    if smoke:
+        s = _smoke_scale(s)
+    ok, why = cell_supported(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name}: {why}")
+    model = build_model(cfg)
+    _, param_axes = model.abstract_params()
+    param_shapes, _ = model.abstract_params()
+    param_sh = shd.tree_shardings(param_axes, param_shapes, mesh)
+    rep = shd.replicated(mesh)
+
+    B, S = s.global_batch, s.seq_len
+
+    if s.mode == "train":
+        opt = AdamWConfig()
+        state_shape = jax.eval_shape(make_init_state(model, opt),
+                                     _sds((2,), jnp.uint32))
+        state_sh = state_shape._replace(
+            step=rep, params=param_sh,
+            opt_state={"mu": param_sh, "nu": param_sh, "count": rep},
+            rng=rep)
+        batch, batch_sh = _batch_specs(cfg, mesh, B, S)
+        step = make_train_step(model, opt)
+        return Cell(arch, s, cfg, model, step,
+                    (state_shape, batch), (state_sh, batch_sh),
+                    (state_sh, None), donate_argnums=(0,))
+
+    if s.mode == "prefill":
+        batch, batch_sh = _batch_specs(cfg, mesh, B, S)
+        batch.pop("labels")
+        batch_sh.pop("labels")
+        step = make_prefill_step(model, cache_len=S)
+        cache_sh = _cache_shardings(model, mesh, B, S)
+        return Cell(arch, s, cfg, model, step,
+                    (param_shapes, batch), (param_sh, batch_sh),
+                    (None, cache_sh))
+
+    # decode: one new token against a seq_len cache
+    cache_shape = jax.eval_shape(lambda: model.init_cache(B, S))
+    cache_sh = _cache_shardings(model, mesh, B, S)
+    tokens = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    bsh = shd.batch_sharding(mesh, B)
+    step = make_decode_step(model)
+    return Cell(arch, s, cfg, model, step,
+                (param_shapes, cache_shape, tokens, pos),
+                (param_sh, cache_sh, bsh, rep),
+                (None, cache_sh), donate_argnums=(1,))
+
+
+def _cache_shardings(model: Model, mesh: Mesh, B: int, S: int):
+    cache_shape = jax.eval_shape(lambda: model.init_cache(B, S))
+    cache_axes = model.cache_axes()
+    return shd.tree_shardings(cache_axes, cache_shape, mesh,
+                              rules=shd.CACHE_RULES)

@@ -1,0 +1,7 @@
+from .config import ModelConfig, MoEConfig, LAYERS_PER_KIND
+from .transformer import Model, build_model, block_init, block_apply
+from .partition import partitioning, hint, split_meta, resolve_spec
+
+__all__ = ["ModelConfig", "MoEConfig", "LAYERS_PER_KIND", "Model",
+           "build_model", "block_init", "block_apply", "partitioning",
+           "hint", "split_meta", "resolve_spec"]

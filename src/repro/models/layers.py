@@ -1,0 +1,473 @@
+"""Foundational layers: norms, RoPE, GQA attention (global/local/cross),
+gated MLPs, embeddings. Pure-functional: ``*_init`` builds ParamMeta pytrees
+(value + logical axes), ``*_apply`` consumes plain value pytrees.
+
+Dtype policy: params in cfg.param_dtype (fp32 by default), activations and
+matmuls in cfg.compute_dtype (bf16), softmax/norm statistics in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .partition import ParamMeta, hint
+
+NEG_INF = -2.0 ** 30  # large-negative that stays finite in bf16
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(rng, d_in: int, d_out: int, axes, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None):
+    k1, _ = jax.random.split(rng)
+    std = scale if scale is not None else d_in ** -0.5
+    p = {"w": ParamMeta(jax.random.normal(k1, (d_in, d_out), dtype) * std,
+                        axes)}
+    if bias:
+        p["b"] = ParamMeta(jnp.zeros((d_out,), dtype), (axes[-1],))
+    return p
+
+
+def dense(p, x, compute_dtype=jnp.bfloat16):
+    out = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        out = out + p["b"].astype(compute_dtype)
+    return out
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": ParamMeta(jnp.ones((d,), dtype), ("embed",))}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [B, S, H, hd], positions int32 [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None, None] * freqs[None, None,
+                                                                  None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; causal / bidirectional / sliding window / cross)
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, cfg: ModelConfig, *, cross: bool = False):
+    ks = jax.random.split(rng, 6)
+    d, hd = cfg.d_model, cfg.head_dim
+    dt = _dtype(cfg)
+    p = {
+        "wq": ParamMeta(jax.random.normal(ks[0], (d, cfg.n_heads, hd), dt)
+                        * d ** -0.5, ("embed", "heads", "head_dim")),
+        "wk": ParamMeta(jax.random.normal(ks[1], (d, cfg.n_kv_heads, hd), dt)
+                        * d ** -0.5, ("embed", "kv", "head_dim")),
+        "wv": ParamMeta(jax.random.normal(ks[2], (d, cfg.n_kv_heads, hd), dt)
+                        * d ** -0.5, ("embed", "kv", "head_dim")),
+        "wo": ParamMeta(jax.random.normal(ks[3], (cfg.n_heads, hd, d), dt)
+                        * (cfg.n_heads * hd) ** -0.5,
+                        ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamMeta(jnp.zeros((cfg.n_heads, hd), dt),
+                            ("heads", "head_dim"))
+        p["bk"] = ParamMeta(jnp.zeros((cfg.n_kv_heads, hd), dt),
+                            ("kv", "head_dim"))
+        p["bv"] = ParamMeta(jnp.zeros((cfg.n_kv_heads, hd), dt),
+                            ("kv", "head_dim"))
+    if cfg.qk_norm:
+        p["q_norm"] = ParamMeta(jnp.ones((hd,), dt), ("head_dim",))
+        p["k_norm"] = ParamMeta(jnp.ones((hd,), dt), ("head_dim",))
+    return p
+
+
+def _qk_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def project_qkv(p, cfg: ModelConfig, x, positions, *, use_rope: bool = True):
+    """x [B, S, D] -> q [B,S,H,hd], k/v [B,S,Hkv,hd] (RoPE'd, normed)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    xq = x.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", xq, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", xq, p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if "q_norm" in p:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and not cfg.learned_pos:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = hint(q, "batch", "seq", "heads", None)
+    k = hint(k, "batch", "seq", "kv", None)
+    return q, k, v
+
+
+def attention(q, k, v, cfg: ModelConfig, *, mask: jnp.ndarray | None):
+    """Grouped-query attention core (direct form).
+
+    q [B,S,H,hd]; k/v [B,T,Hkv,hd]; mask broadcastable to [B,1,1,S,T]
+    (True = attend). Softmax in fp32. For large S*T use chunked_attention.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    g = H // k.shape[2]
+    qg = q.reshape(B, S, k.shape[2], g, hd)
+    scores = jnp.einsum("bsngh,btnh->bnsgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    # scores [B, Hkv, S, g, T]
+    if mask is not None:
+        scores = jnp.where(mask[:, None, :, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnsgt,btnh->bsngh", w.astype(k.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+# Above this many score elements per head, route through the blockwise path.
+# (1024^2: whisper's 1500-frame encoder at batch 256 already costs 268 GiB
+# of temp via the direct path — see EXPERIMENTS.md §Perf notes.)
+CHUNKED_THRESHOLD = 1024 * 1024
+CHUNK_Q = 256
+CHUNK_K = 1024
+
+
+def chunked_attention(q, k, v, cfg: ModelConfig, *, positions_q, positions_kv,
+                      causal: bool, window: int | None,
+                      bq: int = CHUNK_Q, bk: int = CHUNK_K):
+    """Blockwise online-softmax (flash-style) attention in pure JAX.
+
+    Never materializes the [S, T] score matrix: an outer lax.map over query
+    blocks runs an inner lax.scan over key/value blocks carrying the running
+    (max, denominator, accumulator). Each query block is jax.checkpoint'ed so
+    the backward pass re-computes blocks instead of saving per-step
+    residuals — O(bq*bk) live memory at 32k x 32k sequture lengths.
+
+    positions_*: int32 [B, S] / [B, T]; padded kv positions must be < 0.
+    """
+    B, S, H, hd = q.shape
+    T, n_kv = k.shape[1], k.shape[2]
+    g = H // n_kv
+    scale = hd ** -0.5
+
+    pad_s = (-S) % bq
+    pad_t = (-T) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    pq = jnp.pad(positions_q, ((0, 0), (0, pad_s)), constant_values=0)
+    kp = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    pkv = jnp.pad(positions_kv, ((0, 0), (0, pad_t)), constant_values=-1)
+    Sp, Tp = S + pad_s, T + pad_t
+    nq, nk = Sp // bq, Tp // bk
+
+    # The head dim stays FLAT (H) throughout: reshaping H -> (n_kv, g) here
+    # breaks "heads"-sharding when n_kv doesn't divide the model axis and
+    # XLA re-gathers q per block (measured 1.2 TB/chip of all-gather on
+    # granite-3-8b x prefill_32k — EXPERIMENTS.md §Perf B1). K/V are instead
+    # group-expanded per kv-block inside the scan, which is bandwidth-cheap
+    # ([bk, H, hd] per step) and keeps every einsum sharding-invariant.
+    qb = qp.reshape(B, nq, bq, H, hd).transpose(1, 0, 2, 3, 4)
+    pqb = pq.reshape(B, nq, bq).transpose(1, 0, 2)
+    kb = kp.reshape(B, nk, bk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, bk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    pkb = pkv.reshape(B, nk, bk).transpose(1, 0, 2)
+    # Pin the scan-operand layouts: without these constraints XLA propagates
+    # a downstream consumer's sharding (e.g. the head_dim-sharded KV cache
+    # write) back into kb/vb and re-gathers an 8 MiB block on EVERY
+    # (q-block, kv-block) step — measured 1.28 TB/chip on granite-3-8b x
+    # prefill_32k (EXPERIMENTS.md §Perf B1).
+    qb = hint(qb, None, "batch", None, "heads", None)
+    kb = hint(kb, None, "batch", None, "kv", None)
+    vb = hint(vb, None, "batch", None, "kv", None)
+
+    # Sliding-window block skipping: with a window, q-block i only needs kv
+    # blocks covering [i*bq - window + 1, (i+1)*bq) — a CONSTANT number
+    # nw = ceil((bq + window)/bk) + 1, selected per q-block by
+    # dynamic_slice. At 32k prefill with window 2048 (recurrentgemma) this
+    # is 4 of 32 kv blocks = 8x less attention compute; masks stay exact.
+    nw = min(nk, (bq + (window or 0) + bk - 1) // bk + 1) if window else nk
+    skip = window is not None and causal and nw < nk
+
+    def one_q_block(args):
+        qi, pqi, iq = args                              # [B,bq,H,hd], [B,bq]
+        m0 = jnp.full((B, H, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        a0 = jnp.zeros((B, H, bq, hd), jnp.float32)
+        if skip:
+            s = jnp.clip((iq * bq - window + 1) // bk, 0, nk - nw)
+            kb_s = jax.lax.dynamic_slice_in_dim(kb, s, nw, axis=0)
+            vb_s = jax.lax.dynamic_slice_in_dim(vb, s, nw, axis=0)
+            pkb_s = jax.lax.dynamic_slice_in_dim(pkb, s, nw, axis=0)
+        else:
+            kb_s, vb_s, pkb_s = kb, vb, pkb
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kj, vj, pkj = kv
+            if g > 1:                                   # GQA group expansion
+                kj = jnp.repeat(kj, g, axis=2)
+                vj = jnp.repeat(vj, g, axis=2)
+            s = jnp.einsum("bqhd,bthd->bhqt", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            valid = pkj[:, None, :] >= 0
+            if causal:
+                valid &= pkj[:, None, :] <= pqi[:, :, None]
+            if window is not None:
+                valid &= pkj[:, None, :] > pqi[:, :, None] - window
+            s = jnp.where(valid[:, None], s, -jnp.inf)   # [B,1,bq,bk] mask
+            m_new = jnp.maximum(m, s.max(-1))
+            # guard fully-masked rows (padded queries): keep m finite
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqt,bthd->bhqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kb_s, vb_s, pkb_s))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,H,bq,hd]
+        return out.transpose(0, 2, 1, 3)                 # [B,bq,H,hd]
+
+    blocks = jax.lax.map(jax.checkpoint(one_q_block),
+                         (qb, pqb, jnp.arange(nq, dtype=jnp.int32)))
+    out = blocks.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, hd)
+    return out[:, :S].astype(v.dtype)
+
+
+def attn_out(p, cfg: ModelConfig, ctx):
+    cd = jnp.dtype(cfg.compute_dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx.astype(cd), p["wo"].astype(cd))
+    return hint(out, "batch", "seq", "embed")
+
+
+def causal_mask(positions_q, positions_kv, window: int | None = None,
+                kv_valid=None):
+    """True where q may attend kv. positions_* int32 [B, S]/[B, T]."""
+    m = positions_kv[:, None, :] <= positions_q[:, :, None]
+    if window is not None:
+        m &= positions_kv[:, None, :] > positions_q[:, :, None] - window
+    if kv_valid is not None:
+        m &= kv_valid[:, None, :]
+    return m
+
+
+def attn_apply(p, cfg: ModelConfig, x, positions, *, kind: str = "attn",
+               cache=None, cross_kv=None):
+    """One attention sub-layer (pre-norm residual handled by caller).
+
+    kind: attn|local|enc. cache: optional dict with k/v [B, T, Hkv, hd] and
+    scalar int32 ``pos`` — decode path updates in place at ``pos``.
+    Returns (out [B,S,D], new_cache).
+    """
+    if cross_kv is not None:
+        q, _, _ = project_qkv(p, cfg, x, positions, use_rope=False)
+        k, v = cross_kv
+        if q.shape[1] * k.shape[1] > CHUNKED_THRESHOLD:
+            T = k.shape[1]
+            pos_kv = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                      (x.shape[0], T))
+            out = chunked_attention(q, k, v, cfg, positions_q=positions,
+                                    positions_kv=pos_kv, causal=False,
+                                    window=None)
+        else:
+            out = attention(q, k, v, cfg, mask=None)
+        return attn_out(p, cfg, out), cache
+
+    q, k, v = project_qkv(p, cfg, x, positions,
+                          use_rope=not cfg.learned_pos)
+    window = cfg.window if kind == "local" else None
+    if cache is None:
+        S = q.shape[1]
+        if S * S > CHUNKED_THRESHOLD:
+            out = chunked_attention(q, k, v, cfg, positions_q=positions,
+                                    positions_kv=positions,
+                                    causal=kind != "enc", window=window)
+        elif kind == "enc":
+            out = attention(q, k, v, cfg, mask=None)
+        else:
+            out = attention(q, k, v, cfg,
+                            mask=causal_mask(positions, positions, window))
+        return attn_out(p, cfg, out), None
+
+    # cache path: S == 1 -> decode step at cache["pos"]; S > 1 -> prefill.
+    # Two cache layouts:
+    #  * linear (global attention): k/v [B, T, ...] indexed by position;
+    #  * ring   (local attention, cache has "kpos"): fixed window-sized
+    #    buffer, slot = pos % W — this is what keeps RecurrentGemma-style
+    #    models O(window) memory at 500k-token contexts.
+    T = cache["k"].shape[1]
+    S = q.shape[1]
+    B = x.shape[0]
+    ring = "kpos" in cache
+    if S == 1:
+        pos = cache["pos"]                   # int32 scalar
+        if ring:
+            slot = pos % T
+            k_all = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            kpos = jax.lax.dynamic_update_slice(
+                cache["kpos"],
+                jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32), (0, slot))
+            valid = (kpos <= pos) & (kpos >= 0)
+            if window is not None:
+                valid &= kpos > pos - window
+            new_cache = {"k": k_all, "v": v_all, "kpos": kpos, "pos": pos + 1}
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            kv_pos = jnp.arange(T, dtype=jnp.int32)
+            valid = kv_pos[None, :] <= pos
+            if window is not None:
+                valid &= kv_pos[None, :] > pos - window
+            valid = jnp.broadcast_to(valid, (B, T))
+            new_cache = {"k": k_all, "v": v_all, "pos": pos + 1}
+        mask = valid[:, None, :]
+        out = attention(q, k_all, v_all, cfg, mask=mask)
+        return attn_out(p, cfg, out), new_cache
+
+    # prefill: attend over the fresh keys directly (cache starts empty),
+    # then write the prefix (ring: its last `window` entries) into the cache.
+    if S * S > CHUNKED_THRESHOLD:
+        out = chunked_attention(q, k, v, cfg, positions_q=positions,
+                                positions_kv=positions, causal=True,
+                                window=window)
+    else:
+        out = attention(q, k, v, cfg,
+                        mask=causal_mask(positions, positions, window))
+    if ring:
+        weff = min(S, T)
+        tail = jnp.arange(S - weff, S, dtype=jnp.int32)
+        slots = tail % T
+        k_all = cache["k"].at[:, slots].set(k[:, -weff:].astype(cache["k"].dtype))
+        v_all = cache["v"].at[:, slots].set(v[:, -weff:].astype(cache["v"].dtype))
+        kpos = cache["kpos"].at[:, slots].set(
+            jnp.broadcast_to(tail, (B, weff)))
+        new_cache = {"k": k_all, "v": v_all, "kpos": kpos,
+                     "pos": jnp.asarray(S, jnp.int32)}
+    else:
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        new_cache = {"k": k_all, "v": v_all, "pos": jnp.asarray(S, jnp.int32)}
+    return attn_out(p, cfg, out), new_cache
+
+
+def cross_kv_project(p, cfg: ModelConfig, enc_out):
+    """Precompute a decoder layer's cross-attention K/V from encoder output
+    (done once per sequence; cached across decode steps)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    k = jnp.einsum("btd,dhk->bthk", enc_out.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", enc_out.astype(cd), p["wv"].astype(cd))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, cfg: ModelConfig, d_ff: int | None = None,
+             gated: bool = True):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    d = cfg.d_model
+    dt = _dtype(cfg)
+    p = {
+        "wi": ParamMeta(jax.random.normal(ks[0], (d, d_ff), dt) * d ** -0.5,
+                        ("embed", "ff")),
+        "wo": ParamMeta(jax.random.normal(ks[1], (d_ff, d), dt) * d_ff ** -0.5,
+                        ("ff", "embed")),
+    }
+    if gated:
+        p["wg"] = ParamMeta(jax.random.normal(ks[2], (d, d_ff), dt) * d ** -0.5,
+                            ("embed", "ff"))
+    return p
+
+
+def mlp_apply(p, cfg: ModelConfig, x):
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    h = xc @ p["wi"].astype(cd)
+    if "wg" in p:
+        h = jax.nn.silu(xc @ p["wg"].astype(cd)) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = hint(h, "batch", "seq", "ff")
+    return hint(h @ p["wo"].astype(cd), "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embed_init(rng, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    p = {"tok": ParamMeta(
+        jax.random.normal(rng, (cfg.vocab, cfg.d_model), dt) * 0.02,
+        ("vocab", "embed"))}
+    if cfg.learned_pos:
+        p["pos"] = ParamMeta(
+            jax.random.normal(jax.random.fold_in(rng, 1),
+                              (max(cfg.enc_seq, 8192), cfg.d_model), dt) * 0.02,
+            (None, "embed"))
+    return p
+
+
+def embed_apply(p, cfg: ModelConfig, tokens, positions=None):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cd)
+    if cfg.learned_pos and positions is not None:
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(cd)
+    return hint(x, "batch", "seq", "embed")
+
+
+def logits_init(rng, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    dt = _dtype(cfg)
+    return {"w": ParamMeta(
+        jax.random.normal(rng, (cfg.d_model, cfg.vocab), dt)
+        * cfg.d_model ** -0.5, ("embed", "vocab"))}
+
+
+def logits_apply(p, embed_params, cfg: ModelConfig, x):
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        w = embed_params["tok"].astype(cd).T
+    else:
+        w = p["w"].astype(cd)
+    out = (x.astype(cd) @ w).astype(jnp.float32)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        out = jnp.tanh(out / c) * c
+    return hint(out, "batch", "seq", "vocab")

@@ -1,0 +1,103 @@
+"""Logical-axis partitioning context.
+
+Model code annotates parameters and activations with LOGICAL axis names
+("embed", "ff", "heads", "experts", "batch", "seq", ...). The launcher
+installs a (mesh, rules) context; ``hint`` then applies
+with_sharding_constraint with the resolved PartitionSpec. Outside a context
+(unit tests, single-device smoke runs) everything is a no-op.
+
+Params are built as ParamMeta leaves carrying their logical axes; split_meta
+separates values from specs so the same init code serves real runs,
+eval_shape dry-runs, and the sharding rule engine.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+_CTX: contextvars.ContextVar[tuple[Any, dict] | None] = \
+    contextvars.ContextVar("partitioning", default=None)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ParamMeta:
+    value: Any                      # jnp array (or ShapeDtypeStruct)
+    axes: tuple[str | None, ...]    # logical name per dim
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def split_meta(tree):
+    """pytree of ParamMeta -> (values pytree, axes pytree)."""
+    values = jax.tree.map(lambda m: m.value, tree, is_leaf=is_meta)
+    axes = jax.tree.map(lambda m: m.axes, tree, is_leaf=is_meta)
+    return values, axes
+
+
+@contextlib.contextmanager
+def partitioning(mesh, rules: dict[str, tuple[str, ...] | str | None]):
+    """rules: logical axis name -> mesh axes (or None = replicate)."""
+    token = _CTX.set((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current() -> tuple[Any, dict] | None:
+    return _CTX.get()
+
+
+def resolve_spec(axes: tuple[str | None, ...], shape: tuple[int, ...] | None,
+                 mesh, rules) -> PartitionSpec:
+    """Logical axes -> PartitionSpec under divisibility + no-reuse checks.
+
+    shape=None skips divisibility checks (activation hints where XLA pads).
+    """
+    used: set[str] = set()
+    parts = []
+    if shape is not None and len(axes) != len(shape):   # rank-mismatch hint:
+        return PartitionSpec()                          # no constraint
+    for i, name in enumerate(axes):
+        assigned = None
+        if name is not None:
+            cand = rules.get(name)
+            if cand is not None:
+                mesh_axes = (cand,) if isinstance(cand, str) else tuple(cand)
+                if not any(a in used for a in mesh_axes):
+                    size = 1
+                    for a in mesh_axes:
+                        size *= mesh.shape[a]
+                    if shape is None or shape[i] % size == 0:
+                        assigned = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+                        used.update(mesh_axes)
+        parts.append(assigned)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PartitionSpec(*parts)
+
+
+def hint(x: jnp.ndarray, *axes: str | None) -> jnp.ndarray:
+    """Annotate an activation with logical axes (no-op outside a context)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(tuple(axes), tuple(x.shape), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

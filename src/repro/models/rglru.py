@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (per the paper):
+  x -> [linear gate branch: GeLU(W_g x)] ⊙ [conv1d(width 4) -> RG-LRU] -> W_out
+
+RG-LRU recurrence (diagonal, per channel):
+  r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)          input gate
+  a_t = exp(c * softplus(Λ) * (-r_t))   in (0,1), c = 8
+  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses jax.lax.associative_scan over the affine maps
+(a_t, b_t) — O(log S) depth, sequence-shardable; decode is the O(1) state
+update. This is the sub-quadratic path that makes long_500k lowerable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense, dense_init
+from .partition import ParamMeta, hint
+
+_C = 8.0
+CONV_W = 4
+
+
+def rglru_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    dr = d  # recurrence width == d_model (RecurrentGemma uses d_rnn ~ d)
+    ks = jax.random.split(rng, 7)
+    dt = jnp.dtype(cfg.param_dtype)
+    # Λ init so that a^c spans ~(0.9, 0.999) as in the paper
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, dr, dtype=jnp.float32)) / _C))
+    return {
+        "w_in": dense_init(ks[0], d, dr, ("embed", "rec"), dtype=dt),
+        "w_gate": dense_init(ks[1], d, dr, ("embed", "rec"), dtype=dt),
+        "conv": ParamMeta(jax.random.normal(ks[2], (CONV_W, dr), dt) * 0.1,
+                          (None, "rec")),
+        "w_a": dense_init(ks[3], dr, dr, ("rec", "rec"), bias=True, dtype=dt,
+                          scale=dr ** -0.5),
+        "w_x": dense_init(ks[4], dr, dr, ("rec", "rec"), bias=True, dtype=dt,
+                          scale=dr ** -0.5),
+        "lam": ParamMeta(lam.astype(dt), ("rec",)),
+        "w_out": dense_init(ks[5], dr, d, ("rec", "embed"), dtype=dt),
+    }
+
+
+def _gates(p, u):
+    """u [B, S, dr] (post-conv) -> (log_a, b) of the affine recurrence."""
+    r = jax.nn.sigmoid(dense(p["w_a"], u, jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_x"], u, jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * i * u.astype(jnp.float32)
+    return a, b
+
+
+def _causal_conv(p, u, state=None):
+    """Width-4 causal depthwise conv. state [B, CONV_W-1, dr] for decode."""
+    w = p["conv"].astype(jnp.float32)
+    if state is None:
+        pads = jnp.pad(u, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    else:
+        pads = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(pads[:, i:i + u.shape[1], :] * w[i] for i in range(CONV_W))
+    new_state = pads[:, -(CONV_W - 1):, :]
+    return out, new_state
+
+
+def rglru_apply(p, cfg: ModelConfig, x, *, state=None):
+    """x [B, S, D]; state (decode) = {"h": [B, dr], "conv": [B, 3, dr]}.
+
+    Returns (out [B, S, D], new_state or None).
+    """
+    u = dense(p["w_in"], x, jnp.float32)                   # [B, S, dr]
+    gate = jax.nn.gelu(dense(p["w_gate"], x, jnp.float32))
+
+    if state is None:
+        u_raw = u
+        u, conv_tail = _causal_conv(p, u)
+        a, b = _gates(p, u)
+        # associative scan over affine maps (a, b): compose((a1,b1),(a2,b2))
+        #   = (a2*a1, a2*b1 + b2), scanned along time.
+        def compose(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(compose, (a, b), axis=1)
+        h = hint(h, "batch", "seq", "rec")
+        # final state (exact): enables parallel prefill -> O(1) decode
+        new_state = {"h": h[:, -1, :], "conv": conv_tail}
+    else:
+        u, conv_state = _causal_conv(p, u, state["conv"])
+        a, b = _gates(p, u)
+        h_prev = state["h"].astype(jnp.float32)[:, None, :]
+        h = a * h_prev + b                                  # S == 1
+        new_state = {"h": h[:, -1, :], "conv": conv_state}
+
+    out = dense(p["w_out"], (h * gate).astype(x.dtype), cfg.compute_dtype)
+    return hint(out, "batch", "seq", "embed"), new_state
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    dr = cfg.d_model
+    return {"h": jnp.zeros((batch, dr), dtype),
+            "conv": jnp.zeros((batch, CONV_W - 1, dr), dtype)}

@@ -1,0 +1,395 @@
+"""Model assembly: block dispatch, lax.scan'd layer segments, and the
+functional Model API (init / forward_train / prefill / decode_step).
+
+Layer stacks are grouped into (kind, count) segments (cfg.block_pattern);
+each segment's parameters are stacked along a leading "layers" axis and the
+segment is executed with lax.scan — the lowered HLO contains ONE instance of
+each block kind regardless of depth, which keeps 48-layer x 512-device
+dry-run compiles tractable and is how production JAX LM frameworks ship.
+
+Caches are pytrees stacked the same way; decode scans (params, cache)
+together. Training applies jax.checkpoint around each block when
+cfg.remat == "full".
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, moe as moe_mod, rglru, xlstm
+from .config import ModelConfig
+from .partition import ParamMeta, hint, is_meta, split_meta
+
+ATTN_KINDS = ("attn", "local", "enc", "moe", "xdec")
+
+
+def _stack_meta(metas: list):
+    """Stack per-layer ParamMeta pytrees along a leading 'layers' axis."""
+    return jax.tree.map(
+        lambda *ms: ParamMeta(jnp.stack([m.value for m in ms]),
+                              ("layers",) + tuple(ms[0].axes)),
+        *metas, is_leaf=is_meta)
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def block_init(rng, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(rng, 8)
+    d = cfg.d_model
+    if kind == "griffin":     # composite: rglru, rglru, local attention
+        return {"b1": block_init(ks[0], cfg, "rglru"),
+                "b2": block_init(ks[1], cfg, "rglru"),
+                "b3": block_init(ks[2], cfg, "local")}
+    if kind == "xunit":       # composite: mlstm, slstm
+        return {"b1": block_init(ks[0], cfg, "mlstm"),
+                "b2": block_init(ks[1], cfg, "slstm")}
+    p = {"ln1": layers.rmsnorm_init(d)}
+    if kind in ("attn", "local", "enc", "moe"):
+        p["attn"] = layers.attn_init(ks[0], cfg)
+        p["ln2"] = layers.rmsnorm_init(d)
+        if kind == "moe":
+            p["moe"] = moe_mod.moe_init(ks[1], cfg)
+        elif cfg.d_ff:
+            p["mlp"] = layers.mlp_init(ks[1], cfg, gated=cfg.gated_mlp)
+    elif kind == "xdec":
+        p["attn"] = layers.attn_init(ks[0], cfg)
+        p["lnx"] = layers.rmsnorm_init(d)
+        p["xattn"] = layers.attn_init(ks[1], cfg, cross=True)
+        p["ln2"] = layers.rmsnorm_init(d)
+        if cfg.d_ff:
+            p["mlp"] = layers.mlp_init(ks[2], cfg, gated=cfg.gated_mlp)
+    elif kind == "rglru":
+        p["rec"] = rglru.rglru_init(ks[0], cfg)
+        p["ln2"] = layers.rmsnorm_init(d)
+        if cfg.d_ff:
+            p["mlp"] = layers.mlp_init(ks[1], cfg)
+    elif kind == "mlstm":
+        p["core"] = xlstm.mlstm_init(ks[0], cfg)
+    elif kind == "slstm":
+        p["core"] = xlstm.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+_COMPOSITE = {"griffin": ("rglru", "rglru", "local"),
+              "xunit": ("mlstm", "slstm")}
+
+
+def block_apply(p, cfg: ModelConfig, kind: str, x, positions, *,
+                cache=None, enc_out=None):
+    """Returns (x, new_cache, aux) — aux is a dict of scalar extra losses."""
+    aux = {}
+    if kind in _COMPOSITE:
+        new_cache = {} if cache is not None else None
+        for i, sub in enumerate(_COMPOSITE[kind]):
+            key = f"b{i + 1}"
+            sub_c = None if cache is None else cache[key]
+            x, c2, a = block_apply(p[key], cfg, sub, x, positions,
+                                   cache=sub_c, enc_out=enc_out)
+            for k, v in a.items():
+                aux[k] = aux.get(k, 0.0) + v
+            if new_cache is not None:
+                new_cache[key] = c2
+        return x, new_cache, aux
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("attn", "local", "enc", "moe"):
+        attn_cache = None if cache is None else cache.get("attn")
+        a, new_attn = layers.attn_apply(p["attn"], cfg, h, positions,
+                                        kind=kind, cache=attn_cache)
+        x = x + a
+        h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind == "moe":
+            mo, aux = moe_mod.moe_apply(p["moe"], cfg, h2)
+            x = x + mo
+        elif "mlp" in p:
+            x = x + layers.mlp_apply(p["mlp"], cfg, h2)
+        new_cache = None if new_attn is None else {"attn": new_attn}
+    elif kind == "xdec":
+        attn_cache = None if cache is None else cache.get("attn")
+        a, new_attn = layers.attn_apply(p["attn"], cfg, h, positions,
+                                        kind="attn", cache=attn_cache)
+        x = x + a
+        hx = layers.rmsnorm(p["lnx"], x, cfg.norm_eps)
+        if cache is not None and "ck" in cache and x.shape[1] == 1:
+            ckv = (cache["ck"], cache["cv"])      # decode: cached cross-K/V
+        else:
+            ckv = layers.cross_kv_project(p["xattn"], cfg, enc_out)
+        xa, _ = layers.attn_apply(p["xattn"], cfg, hx, positions,
+                                  cross_kv=ckv)
+        x = x + xa
+        h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "mlp" in p:
+            x = x + layers.mlp_apply(p["mlp"], cfg, h2)
+        new_cache = None if new_attn is None else \
+            {"attn": new_attn, "ck": ckv[0], "cv": ckv[1]}
+    elif kind in ("rglru", "mlstm", "slstm"):
+        # recurrent kinds: S > 1 runs the parallel form (which also yields
+        # the exact final state for prefill); S == 1 is the O(1) decode step.
+        prefill = x.shape[1] > 1
+        key = "rec" if kind == "rglru" else "core"
+        st = None if (cache is None or prefill) else cache[key]
+        apply = {"rglru": rglru.rglru_apply, "mlstm": xlstm.mlstm_apply,
+                 "slstm": xlstm.slstm_apply}[kind]
+        r, new_st = apply(p[key], cfg, h, state=st)
+        x = x + r
+        if kind == "rglru":
+            h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if "mlp" in p:
+                x = x + layers.mlp_apply(p["mlp"], cfg, h2)
+        new_cache = None if cache is None else {key: new_st}
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     enc_len: int = 0):
+    """Zero cache pytree for one block of the given kind."""
+    if kind in _COMPOSITE:
+        return {f"b{i + 1}": block_cache_init(cfg, sub, batch, cache_len,
+                                              enc_len)
+                for i, sub in enumerate(_COMPOSITE[kind])}
+    hd, hkv = cfg.head_dim, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.compute_dtype)
+    if kind == "local":
+        wc = min(cache_len, cfg.window)      # ring buffer: O(window) memory
+        return {"attn": {
+            "k": jnp.zeros((batch, wc, hkv, hd), dt),
+            "v": jnp.zeros((batch, wc, hkv, hd), dt),
+            "kpos": jnp.full((batch, wc), -1, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32)}}
+    if kind in ("attn", "moe"):
+        return {"attn": {
+            "k": jnp.zeros((batch, cache_len, hkv, hd), dt),
+            "v": jnp.zeros((batch, cache_len, hkv, hd), dt),
+            "pos": jnp.zeros((), jnp.int32)}}
+    if kind == "xdec":
+        return {"attn": {
+            "k": jnp.zeros((batch, cache_len, hkv, hd), dt),
+            "v": jnp.zeros((batch, cache_len, hkv, hd), dt),
+            "pos": jnp.zeros((), jnp.int32)},
+            "ck": jnp.zeros((batch, enc_len, hkv, hd), dt),
+            "cv": jnp.zeros((batch, enc_len, hkv, hd), dt)}
+    if kind == "rglru":
+        return {"rec": rglru.rglru_state_init(cfg, batch)}
+    if kind == "mlstm":
+        return {"core": xlstm.mlstm_state_init(cfg, batch)}
+    if kind == "slstm":
+        return {"core": xlstm.slstm_state_init(cfg, batch)}
+    raise ValueError(kind)
+
+
+def block_cache_axes(cfg: ModelConfig, kind: str):
+    """Logical-axes pytree mirroring block_cache_init (for the sharding
+    rule engine)."""
+    if kind in _COMPOSITE:
+        return {f"b{i + 1}": block_cache_axes(cfg, sub)
+                for i, sub in enumerate(_COMPOSITE[kind])}
+    kv4 = ("batch", "kv_seq", "kv", "head_dim")
+    if kind == "local":
+        return {"attn": {"k": kv4, "v": kv4, "kpos": ("batch", "kv_seq"),
+                         "pos": ()}}
+    if kind in ("attn", "moe"):
+        return {"attn": {"k": kv4, "v": kv4, "pos": ()}}
+    if kind == "xdec":
+        return {"attn": {"k": kv4, "v": kv4, "pos": ()},
+                "ck": ("batch", "enc_seq", "kv", "head_dim"),
+                "cv": ("batch", "enc_seq", "kv", "head_dim")}
+    if kind == "rglru":
+        return {"rec": {"h": ("batch", "rec"), "conv": ("batch", None, "rec")}}
+    if kind == "mlstm":
+        return {"core": {"C": ("batch", "heads", None, None),
+                         "n": ("batch", "heads", None),
+                         "m": ("batch", "heads")}}
+    if kind == "slstm":
+        return {"core": {k: ("batch", "heads", None)
+                         for k in ("h", "c", "n", "m")}}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters ---------------------------------------------------------
+    def init_meta(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 4 + len(cfg.block_pattern))
+        p = {"embed": layers.embed_init(ks[0], cfg),
+             "final_norm": layers.rmsnorm_init(cfg.d_model),
+             "lm_head": layers.logits_init(ks[1], cfg)}
+        if cfg.n_enc_layers:
+            enc = [block_init(jax.random.fold_in(ks[2], i), cfg, "enc")
+                   for i in range(cfg.n_enc_layers)]
+            p["encoder"] = _stack_meta(enc)
+            p["enc_norm"] = layers.rmsnorm_init(cfg.d_model)
+        segs = {}
+        for si, (kind, count) in enumerate(cfg.block_pattern):
+            ms = [block_init(jax.random.fold_in(ks[3 + si], i), cfg, kind)
+                  for i in range(count)]
+            segs[f"seg{si}_{kind}"] = _stack_meta(ms)
+        p["segments"] = segs
+        return p
+
+    def init(self, rng):
+        """-> (params values, logical axes pytree)."""
+        return split_meta(self.init_meta(rng))
+
+    def abstract_params(self, rng=None):
+        """Shape/spec-only init (never allocates) for dry-runs."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        meta_shape = jax.eval_shape(self.init_meta, rng)
+        values = jax.tree.map(lambda m: m.value, meta_shape, is_leaf=is_meta)
+        concrete_meta = None
+        # axes come from a cheap non-abstract trace of the SAME structure:
+        axes = jax.tree.map(lambda m: m.axes, meta_shape, is_leaf=is_meta)
+        return values, axes
+
+    # -- forward (training / scoring) ----------------------------------------
+    def forward_train(self, params, tokens, *, enc_feats=None,
+                      vis_embeds=None):
+        """tokens int32 [B, S] -> (logits fp32 [B, S, V], aux dict)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x = layers.embed_apply(params["embed"], cfg, tokens, positions)
+        if vis_embeds is not None:  # vision stub: patch embeds replace prefix
+            P = vis_embeds.shape[1]
+            x = jax.lax.dynamic_update_slice(
+                x, vis_embeds.astype(x.dtype), (0, 0, 0))
+        enc_out = None
+        if cfg.n_enc_layers:
+            enc_out = self._encode(params, enc_feats)
+        aux_total = {}
+        x = self._run_segments(params, x, positions, enc_out=enc_out,
+                               aux_out=aux_total, remat=cfg.remat == "full")
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = layers.logits_apply(params["lm_head"], params["embed"], cfg, x)
+        return logits, aux_total
+
+    def _encode(self, params, enc_feats):
+        cfg = self.cfg
+        B, T, _ = enc_feats.shape
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        x = enc_feats.astype(jnp.dtype(cfg.compute_dtype))
+        if cfg.learned_pos:
+            x = x + jnp.take(params["embed"]["pos"], pos, axis=0).astype(x.dtype)
+
+        def enc_step(xc, p):
+            out, _, _ = block_apply(p, cfg, "enc", xc, pos)
+            return out, None
+
+        x, _ = jax.lax.scan(enc_step, x, params["encoder"])
+        return layers.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    def _run_segments(self, params, x, positions, *, enc_out=None,
+                      caches=None, aux_out=None, remat=False):
+        cfg = self.cfg
+        new_caches = {}
+        for si, (kind, count) in enumerate(cfg.block_pattern):
+            name = f"seg{si}_{kind}"
+            seg_p = params["segments"][name]
+
+            if caches is None:
+                def step(xc, p, _kind=kind):
+                    out, _, aux = block_apply(p, cfg, _kind, xc, positions,
+                                              enc_out=enc_out)
+                    return out, aux
+                if remat:
+                    step = jax.checkpoint(
+                        step, policy=jax.checkpoint_policies.nothing_saveable)
+                x, auxs = jax.lax.scan(lambda c, p: step(c, p), x, seg_p)
+                if aux_out is not None:
+                    for k, v in auxs.items():
+                        aux_out[k] = aux_out.get(k, 0.0) + v.sum()
+            else:
+                def step_c(xc, pc, _kind=kind):
+                    p, c = pc
+                    out, c2, _ = block_apply(p, cfg, _kind, xc, positions,
+                                             cache=c, enc_out=enc_out)
+                    return out, c2
+                x, c2 = jax.lax.scan(step_c, x, (seg_p, caches[name]))
+                new_caches[name] = c2
+        if caches is not None:
+            return x, new_caches
+        return x
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, enc_len: int | None = None):
+        cfg = self.cfg
+        enc_len = enc_len if enc_len is not None else cfg.enc_seq
+        caches = {}
+        for si, (kind, count) in enumerate(cfg.block_pattern):
+            name = f"seg{si}_{kind}"
+            one = block_cache_init(cfg, kind, batch, cache_len, enc_len)
+            caches[name] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), one)
+        return caches
+
+    def cache_axes(self):
+        """Logical axes for init_cache's pytree (leading 'layers' dim)."""
+        axes = {}
+        for si, (kind, count) in enumerate(self.cfg.block_pattern):
+            one = block_cache_axes(self.cfg, kind)
+            axes[f"seg{si}_{kind}"] = jax.tree.map(
+                lambda a: ("layers",) + a, one,
+                is_leaf=lambda x: isinstance(x, tuple))
+        return axes
+
+    def decode_step(self, params, caches, tokens, pos):
+        """One token: tokens [B, 1], pos int32 [] (same position across the
+        batch; per-request offsets live in the serving layer).
+        Returns (logits [B, 1, V], new caches)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x = layers.embed_apply(params["embed"], cfg, tokens, positions)
+        # keep every layer's attn cache pos in sync with the global pos
+        caches = jax.tree.map(lambda a: a, caches)
+        caches = self._set_cache_pos(caches, pos)
+        x, new_caches = self._run_segments(params, x, positions, caches=caches)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = layers.logits_apply(params["lm_head"], params["embed"], cfg, x)
+        return logits, new_caches
+
+    def _set_cache_pos(self, caches, pos):
+        def set_pos(path_cache):
+            if isinstance(path_cache, dict) and "attn" in path_cache:
+                path_cache = dict(path_cache)
+                a = dict(path_cache["attn"])
+                a["pos"] = jnp.broadcast_to(pos, a["pos"].shape).astype(jnp.int32)
+                path_cache["attn"] = a
+            return path_cache
+        return {k: set_pos(v) for k, v in caches.items()}
+
+    def prefill(self, params, tokens, cache_len: int, *, enc_feats=None):
+        """Parallel prefill: one forward pass that both produces logits and
+        fills every block's cache/state exactly (attention K/V written in
+        parallel; recurrent blocks return their closed-form final state).
+        Returns (logits [B, S, V], caches positioned at S)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        caches = self.init_cache(B, cache_len)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        x = layers.embed_apply(params["embed"], cfg, tokens, positions)
+        enc_out = self._encode(params, enc_feats) if cfg.n_enc_layers else None
+        x, new_caches = self._run_segments(params, x, positions,
+                                           enc_out=enc_out, caches=caches)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = layers.logits_apply(params["lm_head"], params["embed"], cfg, x)
+        return logits, new_caches
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

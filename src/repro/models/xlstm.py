@@ -1,0 +1,196 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with recurrent gate connections).
+
+mLSTM trains in its parallel form (stabilized exponential-gate attention
+analogue) and decodes with the O(1) recurrent matrix-memory update
+C_t = f C_{t-1} + i v k^T — the sub-quadratic property that lets the
+xlstm-125m config lower the 500k-token decode shape.
+
+sLSTM has true recurrent connections (h_{t-1} enters the gates), so its
+training path is a lax.scan over time; heads use block-diagonal recurrent
+matrices as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense, dense_init
+from .partition import ParamMeta, hint
+
+_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di = 2 * d                       # inner width (paper's proj factor 2)
+    ks = jax.random.split(rng, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "up": dense_init(ks[0], d, 2 * di, ("embed", "ff"), dtype=dt),
+        "wq": dense_init(ks[1], di, di, ("ff", "ff"), dtype=dt),
+        "wk": dense_init(ks[2], di, di, ("ff", "ff"), dtype=dt),
+        "wv": dense_init(ks[3], di, di, ("ff", "ff"), dtype=dt),
+        "wi": dense_init(ks[4], di, cfg.n_heads, ("ff", "heads"), bias=True,
+                         dtype=dt),
+        "wf": dense_init(ks[5], di, cfg.n_heads, ("ff", "heads"), bias=True,
+                         dtype=dt),
+        "norm": ParamMeta(jnp.ones((di,), dt), ("ff",)),
+        "down": dense_init(ks[6], di, d, ("ff", "embed"), dtype=dt),
+    }
+
+
+def _heads(x, h):
+    B, S, D = x.shape
+    return x.reshape(B, S, h, D // h).transpose(0, 2, 1, 3)  # [B,H,S,dh]
+
+
+def mlstm_apply(p, cfg: ModelConfig, x, *, state=None):
+    """x [B, S, D]. state (decode): {"C": [B,H,dh,dh], "n": [B,H,dh],
+    "m": [B,H]}. Returns (out, new_state or None)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    u, g = jnp.split(dense(p["up"], x, jnp.float32), 2, axis=-1)  # [B,S,di]
+    di = u.shape[-1]
+    dh = di // H
+    q = _heads(dense(p["wq"], u, jnp.float32), H)
+    k = _heads(dense(p["wk"], u, jnp.float32), H) * dh ** -0.5
+    v = _heads(dense(p["wv"], u, jnp.float32), H)
+    logi = dense(p["wi"], u, jnp.float32).transpose(0, 2, 1)      # [B,H,S]
+    logf = jax.nn.log_sigmoid(
+        dense(p["wf"], u, jnp.float32)).transpose(0, 2, 1)
+
+    if state is None:
+        # parallel stabilized form
+        F = jnp.cumsum(logf, axis=-1)                              # [B,H,S]
+        Dm = F[:, :, :, None] - F[:, :, None, :] + logi[:, :, None, :]
+        causal = jnp.tril(jnp.ones((S, S), bool))
+        Dm = jnp.where(causal[None, None], Dm, -jnp.inf)
+        m = jnp.max(Dm, axis=-1, keepdims=True)                    # [B,H,S,1]
+        m = jnp.maximum(m, -30.0)
+        W = jnp.exp(Dm - m) * jnp.einsum("bhsd,bhtd->bhst", q, k)
+        n = jnp.maximum(jnp.abs(W.sum(-1, keepdims=True)),
+                        jnp.exp(-m)) + _EPS
+        h = jnp.einsum("bhst,bhtd->bhsd", W / n, v)                # [B,H,S,dh]
+        # exact final recurrent state (for parallel prefill -> O(1) decode):
+        # logw_s = F_S - F_s + logi_s, stabilized against m0 = -30
+        m0 = jnp.full(logf.shape[:2], -30.0)                       # [B,H]
+        logw = F[:, :, -1:] - F + logi                             # [B,H,S]
+        mS = jnp.maximum(jnp.max(logw, axis=-1), F[:, :, -1] + m0)
+        wS = jnp.exp(logw - mS[..., None])                         # [B,H,S]
+        C1 = jnp.einsum("bhs,bhsd,bhse->bhde", wS, k, v)
+        n1 = jnp.einsum("bhs,bhsd->bhd", wS, k)
+        new_state = {"C": C1, "n": n1, "m": mS}
+    else:
+        # recurrent decode (S == 1)
+        C, n0, m0 = state["C"], state["n"], state["m"]
+        li, lf = logi[:, :, 0], logf[:, :, 0]                      # [B,H]
+        m1 = jnp.maximum(lf + m0, li)
+        fs = jnp.exp(lf + m0 - m1)[..., None]
+        is_ = jnp.exp(li - m1)[..., None]
+        k0, v0, q0 = k[:, :, 0], v[:, :, 0], q[:, :, 0]            # [B,H,dh]
+        C1 = fs[..., None] * C + is_[..., None] * jnp.einsum(
+            "bhd,bhe->bhde", k0, v0)
+        n1 = fs * n0 + is_ * k0
+        num = jnp.einsum("bhde,bhd->bhe", C1, q0)
+        den = jnp.maximum(jnp.abs((n1 * q0).sum(-1, keepdims=True)),
+                          jnp.exp(-m1)[..., None]) + _EPS
+        h = (num / den)[:, :, None, :]                             # [B,H,1,dh]
+        new_state = {"C": C1, "n": n1, "m": m1}
+
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, di)
+    # per-channel group norm (paper: head-wise LayerNorm on h)
+    mean = h.mean(-1, keepdims=True)
+    var = h.var(-1, keepdims=True)
+    h = (h - mean) * jax.lax.rsqrt(var + _EPS) * p["norm"].astype(jnp.float32)
+    h = h * jax.nn.silu(g)
+    out = dense(p["down"], h.astype(x.dtype), cfg.compute_dtype)
+    return hint(out, "batch", "seq", "embed"), new_state
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H = cfg.n_heads
+    dh = 2 * cfg.d_model // H
+    return {"C": jnp.zeros((batch, H, dh, dh), dtype),
+            "n": jnp.zeros((batch, H, dh), dtype),
+            "m": jnp.full((batch, H), -30.0, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(rng, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        # 4 gates (z, i, f, o) from input
+        "wx": dense_init(ks[0], d, 4 * d, ("embed", "ff"), bias=True, dtype=dt),
+        # block-diagonal recurrent connections per head: [4, H, dh, dh]
+        "r": ParamMeta(jax.random.normal(ks[1], (4, H, dh, dh), dt) * dh ** -0.5,
+                      (None, "heads", None, None)),
+        "down": dense_init(ks[2], d, d, ("embed", "embed"), dtype=dt),
+    }
+
+
+def _slstm_step(p, cfg, carry, gx):
+    """carry: (h, c, n, m) each [B, H, dh]; gx [B, 4, H, dh] (input gates)."""
+    h, c, n, m = carry
+    r = p["r"].astype(jnp.float32)                      # [4,H,dh,dh]
+    rec = jnp.einsum("bhd,ghde->bghe", h, r)            # [B,4,H,dh]
+    z = jnp.tanh(gx[:, 0] + rec[:, 0])
+    li = gx[:, 1] + rec[:, 1]                           # log-space input gate
+    lf = jax.nn.log_sigmoid(gx[:, 2] + rec[:, 2])       # log forget gate
+    o = jax.nn.sigmoid(gx[:, 3] + rec[:, 3])
+    m1 = jnp.maximum(lf + m, li)
+    i_ = jnp.exp(li - m1)
+    f_ = jnp.exp(lf + m - m1)
+    c1 = f_ * c + i_ * z
+    n1 = jnp.maximum(f_ * n + i_, _EPS)
+    h1 = o * (c1 / n1)
+    return (h1, c1, n1, m1)
+
+
+def slstm_apply(p, cfg: ModelConfig, x, *, state=None):
+    """x [B, S, D]. state (decode): {"h","c","n","m"} each [B,H,dh]."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    gx = dense(p["wx"], x, jnp.float32).reshape(B, S, 4, H, dh)
+
+    if state is None:
+        carry = tuple(jnp.zeros((B, H, dh), jnp.float32) for _ in range(3)) \
+            + (jnp.full((B, H, dh), -30.0, jnp.float32),)
+
+        def step(carry, gxt):
+            new = _slstm_step(p, cfg, carry, gxt)
+            return new, new[0]
+
+        carry, hs = jax.lax.scan(step, carry, gx.transpose(1, 0, 2, 3, 4))
+        h = hs.transpose(1, 0, 2, 3).reshape(B, S, D)   # [B,S,H,dh]->[B,S,D]
+        new_state = {"h": carry[0], "c": carry[1], "n": carry[2],
+                     "m": carry[3]}
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+        new = _slstm_step(p, cfg, carry, gx[:, 0])
+        h = new[0].reshape(B, 1, D)
+        new_state = {"h": new[0], "c": new[1], "n": new[2], "m": new[3]}
+
+    out = dense(p["down"], h.astype(x.dtype), cfg.compute_dtype)
+    return hint(out, "batch", "seq", "embed"), new_state
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), dtype)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, H, dh), -30.0, dtype)}

@@ -1,0 +1,54 @@
+"""Serving steps: prefill (parallel forward filling caches) and decode (one
+token against a seq_len cache). These are what the decode_*/long_* dry-run
+shapes lower; greedy_generate stitches them for the examples/tests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+
+
+def make_prefill_step(model: Model, cache_len: int, last_only: bool = True):
+    def prefill_step(params, batch):
+        """batch: {"tokens": [B, S], optional "enc_feats"} ->
+        (logits, caches). last_only=True returns [B, 1, V] — serving only
+        needs the next-token distribution, and materializing the full
+        [B, S, V] prefill logits costs hundreds of GB at 32k."""
+        logits, caches = model.prefill(params, batch["tokens"], cache_len,
+                                       enc_feats=batch.get("enc_feats"))
+        if last_only:
+            logits = logits[:, -1:, :]
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, tokens, pos):
+        """tokens [B, 1], pos int32 [] -> (logits [B, 1, V], caches)."""
+        return model.decode_step(params, caches, tokens, pos)
+    return decode_step
+
+
+def greedy_generate(model: Model, params, prompt: jnp.ndarray, n_new: int,
+                    cache_len: int, *, enc_feats=None):
+    """Greedy decoding driver (host loop, jitted steps): returns
+    [B, S + n_new] token matrix."""
+    B, S = prompt.shape
+    prefill = jax.jit(make_prefill_step(model, cache_len, last_only=False))
+    decode = jax.jit(make_decode_step(model))
+    logits, caches = prefill(params, {"tokens": prompt,
+                                      "enc_feats": enc_feats})
+    tokens = [prompt]
+    last = logits[:, -1:].argmax(-1).astype(prompt.dtype)
+    for i in range(n_new):
+        tokens.append(last)
+        if i == n_new - 1:
+            break
+        logits, caches = decode(params, caches, last,
+                                jnp.asarray(S + i, jnp.int32))
+        last = logits[:, -1:].argmax(-1).astype(prompt.dtype)
+    return jnp.concatenate(tokens, axis=1)

@@ -1,0 +1,5 @@
+from .optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .step import TrainState, make_train_step, make_init_state, loss_fn
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "TrainState", "make_train_step", "make_init_state", "loss_fn"]

@@ -1,0 +1,79 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and a
+warmup+cosine schedule — implemented directly on pytrees (no external
+optimizer dependency). Optimizer state shards exactly like the parameters
+(same tree structure), so the FSDP rules apply transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/scales/biases (1-D params)."""
+    return True
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    count = opt_state["count"] + 1
+    lr = cosine_schedule(cfg, count)
+    b1, b2 = cfg.beta1, cfg.beta2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                      opt_state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                      opt_state["nu"], grads)
+    c = count.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1 - b1 ** c)
+    nu_hat_scale = 1.0 / (1 - b2 ** c)
+
+    def upd(p, m, v):
+        step = m * mu_hat_scale / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    new_state = {"mu": mu, "nu": nu, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,111 @@
+"""train_step factory: cross-entropy + aux losses, value_and_grad, AdamW.
+
+The returned step is a pure function
+    (state, batch) -> (state, metrics)
+suitable for jax.jit with in_shardings from the rule engine; the dry-run
+lowers exactly this function against ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import Model
+from . import optim
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray          # int32 []
+    params: Any
+    opt_state: Any
+    rng: jnp.ndarray
+
+
+def loss_fn(model: Model, params, batch):
+    """batch: {"tokens": [B,S], "labels": [B,S] (-1 = masked), optional
+    "enc_feats"/"vis_embeds" for the stub frontends}."""
+    logits, aux = model.forward_train(
+        params, batch["tokens"],
+        enc_feats=batch.get("enc_feats"),
+        vis_embeds=batch.get("vis_embeds"))
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    # Sharding-friendly CE: the [B, S, V] logits stay vocab-sharded over
+    # "model" end to end. logsumexp reduces over the sharded vocab (psum of
+    # [B, S] partials) and the label logit is extracted with a one-hot
+    # einsum instead of take_along_axis (which would all-gather the full
+    # logits — measured 26 GiB/chip of temp on phi4 x train_4k).
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)                      # [B, S]
+    onehot = (jnp.arange(logits.shape[-1], dtype=jnp.int32)[None, None, :]
+              == safe[..., None])
+    label_logit = jnp.sum(logits * onehot, axis=-1)              # [B, S]
+    nll = lse - label_logit
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0.0).sum() / denom
+    total = ce
+    for v in aux.values():
+        total = total + v
+    metrics = {"loss": total, "ce": ce,
+               "accuracy": (jnp.where(
+                   valid, (logits.argmax(-1) == safe), False).sum() / denom)}
+    for k, v in aux.items():
+        metrics[k] = v
+    return total, metrics
+
+
+def make_init_state(model: Model, opt_cfg: optim.AdamWConfig):
+    def init(rng) -> TrainState:
+        params, _ = model.init(rng)
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt_state=optim.adamw_init(params),
+                          rng=jax.random.fold_in(rng, 17))
+    return init
+
+
+def make_train_step(model: Model, opt_cfg: optim.AdamWConfig,
+                    microbatches: int = 1):
+    """microbatches > 1 enables gradient accumulation: the global batch is
+    split along dim 0 and scanned, dividing activation memory by N at one
+    optimizer step of identical math (exact when microbatches carry equal
+    valid-token counts, which the step-indexed pipeline guarantees)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, one):
+                g_acc, m_acc = carry
+                (_, m), g = grads_of(state.params, one)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            first = jax.tree.map(lambda x: x[0], mb)
+            m0 = jax.eval_shape(lambda: grads_of(state.params, first)[0][1])
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, msum), _ = jax.lax.scan(body, (g0, m0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, msum)
+        params, opt_state, opt_metrics = optim.adamw_update(
+            opt_cfg, grads, state.opt_state, state.params)
+        metrics.update(opt_metrics)
+        new_state = TrainState(step=state.step + 1, params=params,
+                               opt_state=opt_state,
+                               rng=jax.random.fold_in(state.rng, 1))
+        return new_state, metrics
+    return train_step

@@ -1,0 +1,88 @@
+"""Roofline analysis unit tests: HLO collective parser (trip-count-aware,
+op-semantic byte counts) + analytic FLOP model sanity."""
+import pytest
+
+from repro import configs
+from repro.launch import analysis, analytic
+from repro.launch.specs import SHAPES
+
+HLO = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ag = f32[2048]{0} all-gather(%x), replica_groups={}
+  %ar = bf16[1024]{0} all-reduce(%y), to_apply=%add
+  ROOT %t = tuple(%i, %z)
+}
+
+%cond.1 (p: (s32[], f32[128])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %w = (s32[], f32[128]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %big = f32[4096]{0} reduce-scatter(%operand9), replica_groups={}
+  %operand9 = f32[65536]{0} add(%a, %a)
+  %cp = f32[256]{0} collective-permute(%a), source_target_pairs={{0,1}}
+  ROOT %out = f32[128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_trip_counts():
+    out = analysis.collective_bytes(HLO)
+    # all-gather: 2048 f32 = 8192 B x 10 trips
+    assert out["all-gather"] == 8192 * 10
+    # all-reduce: 1024 bf16 = 2048 B x 2 (ring) x 10 trips
+    assert out["all-reduce"] == 2048 * 2 * 10
+    # reduce-scatter: OPERAND size (65536 f32), not result
+    assert out["reduce-scatter"] == 65536 * 4
+    assert out["collective-permute"] == 256 * 4
+
+
+def test_shape_bytes():
+    assert analysis._shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert analysis._shape_bytes("bf16[16]") == 32
+    assert analysis._shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert analysis._shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_and_bottleneck():
+    r = analysis.Roofline(flops_per_chip=197e12, bytes_per_chip=819e9,
+                          coll_bytes_per_chip=0.0, coll_breakdown={},
+                          model_flops=100e12, chips=1)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.bottleneck in ("compute", "memory")
+    r2 = analysis.Roofline(1, 1, 50e9, {}, chips=1)
+    assert r2.bottleneck == "collective"
+    assert r2.t_collective == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_analytic_flops_sane(arch):
+    """computed >= useful MODEL_FLOPS (waste is never negative) and both
+    scale with tokens."""
+    cfg = configs.get(arch)
+    s = SHAPES["train_4k"]
+    fb = analytic.flops_model(cfg, "train", s.seq_len, s.global_batch)
+    assert fb.computed_flops > 0 and fb.useful_flops > 0
+    assert fb.computed_flops >= 0.9 * fb.useful_flops, (
+        f"{arch}: computed {fb.computed_flops:.2e} < useful "
+        f"{fb.useful_flops:.2e}")
+    fb2 = analytic.flops_model(cfg, "train", s.seq_len, s.global_batch * 2)
+    assert fb2.computed_flops == pytest.approx(2 * fb.computed_flops, rel=.01)
+
+
+def test_decode_flops_much_smaller_than_train():
+    cfg = configs.get("phi4-mini-3.8b")
+    tr = analytic.flops_model(cfg, "train", 4096, 256)
+    de = analytic.flops_model(cfg, "decode", 32768, 128)
+    assert de.computed_flops < 1e-3 * tr.computed_flops
+
+
+def test_moe_flops_use_active_params():
+    cfg = configs.get("qwen3-moe-30b-a3b")
+    fb = analytic.flops_model(cfg, "train", 4096, 256)
+    dense_equiv = 6.0 * cfg.param_count() * 4096 * 256
+    assert fb.useful_flops < 0.2 * dense_equiv

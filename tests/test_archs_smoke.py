@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (reduced configs): one forward + one train
+step + prefill->decode consistency on CPU, asserting shapes and finiteness.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import make_decode_step, make_prefill_step
+from repro.train import AdamWConfig, make_init_state, make_train_step
+
+ARCHS = configs.list_archs()
+
+
+def _batch(cfg, B=2, S=12, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.n_enc_layers:
+        b["enc_feats"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = configs.get(arch, smoke=True)
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: model.forward_train(
+        p, b["tokens"], enc_feats=b.get("enc_feats")))(params, batch)
+    assert logits.shape == (2, 12, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # every param has a logical-axes annotation of matching rank
+    flat_p = jax.tree.leaves(params)
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_a)
+    for p, a in zip(flat_p, flat_a):
+        assert p.ndim == len(a), (p.shape, a)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_loss_decreases(arch):
+    cfg = configs.get(arch, smoke=True)
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    state = jax.jit(make_init_state(model, opt))(jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(model, opt))
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(4):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0]          # memorizes a fixed batch
+    assert int(state.step) == 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = configs.get(arch, smoke=True)
+    if not cfg.has_decoder:
+        pytest.skip("encoder-only arch has no decode step")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    toks, enc = batch["tokens"], batch.get("enc_feats")
+    full, _ = jax.jit(lambda p, t: model.forward_train(
+        p, t, enc_feats=enc))(params, toks)
+    logits_pre, caches = jax.jit(make_prefill_step(model, S + 4,
+                                                   last_only=False))(
+        params, {"tokens": toks[:, :S - 2], "enc_feats": enc})
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(full[:, :S - 2]),
+                               rtol=2e-2, atol=2e-2)
+    dec = jax.jit(make_decode_step(model))
+    lg1, caches = dec(params, caches, toks[:, S - 2:S - 1],
+                      jnp.asarray(S - 2, jnp.int32))
+    lg2, _ = dec(params, caches, toks[:, S - 1:S],
+                 jnp.asarray(S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg1[:, 0]), np.asarray(full[:, S - 2]),
+                               rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]), np.asarray(full[:, S - 1]),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_full_configs_construct():
+    """Full configs build (dataclass validation incl. layer-count math) and
+    report sane parameter counts — no allocation happens here."""
+    expected = {
+        "recurrentgemma-2b": (2.0e9, 3.5e9),
+        "phi4-mini-3.8b": (3.0e9, 4.6e9),
+        "qwen3-4b": (3.0e9, 5.0e9),
+        "qwen2.5-3b": (2.5e9, 3.9e9),
+        "granite-3-8b": (7.0e9, 9.5e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+        "qwen3-moe-30b-a3b": (25e9, 35e9),
+        "llama4-scout-17b-a16e": (95e9, 120e9),
+        "qwen2-vl-7b": (6.5e9, 9e9),
+        "xlstm-125m": (0.10e9, 0.30e9),
+    }
+    for arch in ARCHS:
+        cfg = configs.get(arch)
+        lo, hi = expected[arch]
+        n = cfg.param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params_much_smaller():
+    cfg = configs.get("qwen3-moe-30b-a3b")
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()
+
+
+def test_vision_stub_prefix_embedding():
+    cfg = configs.get("qwen2-vl-7b", smoke=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, S, P = 2, 12, 4
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    vis = jnp.asarray(rng.normal(size=(B, P, cfg.d_model)), jnp.float32)
+    with_vis, _ = jax.jit(lambda p: model.forward_train(
+        p, toks, vis_embeds=vis))(params)
+    without, _ = jax.jit(lambda p: model.forward_train(p, toks))(params)
+    # causal: suffix logits must differ (vision prefix attended), shapes equal
+    assert with_vis.shape == without.shape
+    assert not np.allclose(np.asarray(with_vis[:, -1]),
+                           np.asarray(without[:, -1]))

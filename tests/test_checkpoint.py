@@ -1,0 +1,97 @@
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, CheckpointManager,
+                              latest_step, load_pytree, save_pytree)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32),
+            "nested": {"b": jnp.arange(5), "c": jnp.asarray(3.0)},
+            "list": [jnp.ones((2, 2)), jnp.zeros((3,))]}
+
+
+def _assert_tree_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, tmp_path / "ck")
+    t2 = load_pytree(t, tmp_path / "ck")
+    _assert_tree_equal(t, t2)
+
+
+def test_corruption_detected(tmp_path):
+    import json
+    t = _tree()
+    save_pytree(t, tmp_path / "ck")
+    man = json.loads((tmp_path / "ck" / "manifest.json").read_text())
+    man["leaves"][0]["hash"] = "0" * 32
+    (tmp_path / "ck" / "manifest.json").write_text(json.dumps(man))
+    with pytest.raises(IOError):
+        load_pytree(t, tmp_path / "ck")
+
+
+def test_shape_mismatch_detected(tmp_path):
+    t = _tree()
+    save_pytree(t, tmp_path / "ck")
+    bad = dict(t)
+    bad["a"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        load_pytree(bad, tmp_path / "ck")
+
+
+def test_atomic_no_partial_state(tmp_path):
+    """A leftover .tmp dir (simulated crash) must not shadow a good save."""
+    t = _tree()
+    mgr = CheckpointManager(tmp_path, keep_last=2)
+    mgr.save(0, t)
+    (tmp_path / "step_1.tmp").mkdir()          # crashed writer
+    assert latest_step(tmp_path) == 0
+    restored, step = mgr.restore(t)
+    assert step == 0
+    _assert_tree_equal(t, restored)
+
+
+def test_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=2)
+    for s in range(5):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+    restored, step = mgr.restore(_tree())
+    assert step == 4
+    _assert_tree_equal(_tree(4), restored)
+
+
+def test_async_checkpointer(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    ac = AsyncCheckpointer(mgr)
+    t = _tree(1)
+    ac.save(7, t)
+    ac.wait()
+    restored, step = mgr.restore(t)
+    assert step == 7
+    _assert_tree_equal(t, restored)
+
+
+def test_async_snapshot_isolated_from_mutation(tmp_path):
+    """The async writer must persist the state AT save() time even if the
+    caller immediately mutates buffers (donated-buffer hazard)."""
+    mgr = CheckpointManager(tmp_path)
+    ac = AsyncCheckpointer(mgr)
+    arr = np.ones((1000, 100), np.float32)
+    tree = {"w": arr}
+    ac.save(0, tree)
+    arr *= 0.0                                  # mutate after save
+    ac.wait()
+    restored, _ = mgr.restore({"w": np.zeros_like(arr)})
+    assert restored["w"].mean() == 1.0

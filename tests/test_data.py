@@ -1,0 +1,61 @@
+import numpy as np
+import pytest
+
+from repro.core import dna
+from repro.data import (make_corpus, make_queries, mutate, random_genome,
+                        read_fasta, write_fasta)
+
+
+def test_corpus_shapes_and_determinism():
+    a = make_corpus(10, k=9, mean_length=200, seed=4)
+    b = make_corpus(10, k=9, mean_length=200, seed=4)
+    assert a.n_docs == 10
+    for x, y in zip(a.documents, b.documents):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_corpus_size_skew():
+    c = make_corpus(300, k=15, mean_length=1000, sigma=1.2, seed=0)
+    counts = c.term_counts()
+    assert counts.max() > 5 * counts.mean()  # the property motivating COBS
+
+
+def test_queries_labels_correct():
+    c = make_corpus(20, k=9, mean_length=300, seed=1)
+    qs, origin = make_queries(c, n_pos=5, n_neg=5, length=50, seed=2)
+    assert len(qs) == 10
+    u = set()
+    for t in c.doc_terms:
+        u |= set((t[:, 0].astype(np.uint64)
+                  | (t[:, 1].astype(np.uint64) << np.uint64(32))).tolist())
+    for q, o in zip(qs, origin):
+        terms = dna.pack_kmers(q, c.k)
+        t64 = (terms[:, 0].astype(np.uint64)
+               | (terms[:, 1].astype(np.uint64) << np.uint64(32)))
+        if o >= 0:
+            # every k-mer of a positive is in its origin document
+            d = c.doc_terms[o]
+            d64 = set((d[:, 0].astype(np.uint64)
+                       | (d[:, 1].astype(np.uint64) << np.uint64(32))).tolist())
+            assert all(int(v) in d64 for v in t64)
+        else:
+            assert not any(int(v) in u for v in t64)
+
+
+def test_mutate_rate():
+    rng = np.random.default_rng(0)
+    g = random_genome(rng, 1000)
+    m = mutate(rng, g, 0.1)
+    diff = (g != m).mean()
+    assert 0.05 < diff < 0.15
+    assert mutate(rng, g, 0.0).tolist() == g.tolist()
+
+
+def test_fasta_roundtrip(tmp_path):
+    rng = np.random.default_rng(3)
+    reads = [random_genome(rng, 50), random_genome(rng, 80)]
+    write_fasta(tmp_path / "x.fa", reads)
+    back = read_fasta(tmp_path / "x.fa")
+    assert len(back) == 2
+    for a, b in zip(reads, back):
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,88 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dna
+
+
+def test_encode_decode_roundtrip():
+    s = "ACGTACGTTTGGCCAA"
+    codes = dna.encode_dna(s)
+    assert dna.decode_dna(codes) == s
+
+
+def test_encode_drops_non_acgt():
+    assert dna.decode_dna(dna.encode_dna("ACGNNNTA")) == "ACGTA"
+
+
+def test_pack_kmers_values():
+    # A=0 C=1 G=2 T=3; "CA" with k=2 -> lo = 1 | (0 << 2) = 1
+    codes = dna.encode_dna("CAT")
+    packed = dna.pack_kmers(codes, 2)
+    assert packed.shape == (2, 2)
+    assert packed[0, 0] == 1           # "CA"
+    assert packed[1, 0] == 0 | (3 << 2)  # "AT"
+    assert (packed[:, 1] == 0).all()
+
+
+def test_pack_kmers_hi_word():
+    codes = np.zeros(20, dtype=np.uint8)
+    codes[16] = 3  # base 16 lands in hi word, bit 0..1
+    packed = dna.pack_kmers(codes, 20)
+    assert packed.shape == (1, 2)
+    assert packed[0, 1] == 3
+
+
+def test_pack_kmers_short_input():
+    assert dna.pack_kmers(np.zeros(3, np.uint8), 5).shape == (0, 2)
+
+
+def test_kmer_k_bounds():
+    with pytest.raises(ValueError):
+        dna.pack_kmers(np.zeros(40, np.uint8), 32)
+
+
+def test_canonical_is_revcomp_invariant():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 4, 64, dtype=np.uint8)
+    rc = (3 - codes)[::-1].copy()
+    a = dna.pack_kmers(codes, 15, canonical=True)
+    b = dna.pack_kmers(rc, 15, canonical=True)
+    a64 = set((a[:, 0].astype(np.uint64) | (a[:, 1].astype(np.uint64) << np.uint64(32))).tolist())
+    b64 = set((b[:, 0].astype(np.uint64) | (b[:, 1].astype(np.uint64) << np.uint64(32))).tolist())
+    assert a64 == b64
+
+
+def test_unique_terms():
+    t = np.array([[1, 0], [2, 0], [1, 0], [1, 1]], dtype=np.uint32)
+    u = dna.unique_terms(t)
+    assert u.shape == (3, 2)
+
+
+def test_document_terms_union():
+    r1 = dna.encode_dna("ACGTACGT")
+    r2 = dna.encode_dna("ACGTACGT")
+    t = dna.document_terms([r1, r2], 4)
+    assert t.shape[0] == len(set(map(tuple, dna.pack_kmers(r1, 4).tolist())))
+
+
+def test_qgrams_bytes():
+    packed = dna.pack_qgrams_bytes(b"abcdef", 3)
+    assert packed.shape == (4, 2)
+    assert packed[0, 0] == ord("a") | (ord("b") << 8) | (ord("c") << 16)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(5, 200), st.integers(1, 31), st.integers(0, 2 ** 31))
+def test_property_kmer_count(n, k, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 4, n, dtype=np.uint8)
+    packed = dna.pack_kmers(codes, k)
+    assert packed.shape[0] == max(0, n - k + 1)
+    # every k-mer is reconstructible: decode bits back to codes
+    if packed.shape[0]:
+        i = int(rng.integers(0, packed.shape[0]))
+        lo, hi = int(packed[i, 0]), int(packed[i, 1])
+        val = lo | (hi << 32)
+        rec = [(val >> (2 * j)) & 3 for j in range(k)]
+        assert rec == list(codes[i:i + k])

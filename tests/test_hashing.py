@@ -1,0 +1,62 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+
+
+def test_jnp_np_agree():
+    rng = np.random.default_rng(0)
+    terms = rng.integers(0, 2 ** 32, size=(256, 2), dtype=np.uint32)
+    h_np = hashing.hash_terms_np(terms, 4)
+    h_j = np.asarray(hashing.hash_terms(jnp.asarray(terms), 4))
+    np.testing.assert_array_equal(h_np, h_j)
+
+
+def test_seeds_differ():
+    terms = np.array([[123, 456]], dtype=np.uint32)
+    h = hashing.hash_terms_np(terms, 4)[0]
+    assert len(set(h.tolist())) == 4
+
+
+def test_deterministic():
+    terms = np.array([[1, 2], [3, 4]], dtype=np.uint32)
+    a = hashing.hash_terms_np(terms, 2)
+    b = hashing.hash_terms_np(terms, 2)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_avalanche():
+    """Flipping one input bit should flip ~half the output bits on average —
+    this is what makes the modulo range reduction safe."""
+    rng = np.random.default_rng(1)
+    terms = rng.integers(0, 2 ** 32, size=(2000, 2), dtype=np.uint32)
+    h0 = hashing.hash_terms_np(terms, 1)[:, 0]
+    flipped = terms.copy()
+    flipped[:, 0] ^= np.uint32(1) << rng.integers(0, 32, 2000, dtype=np.uint32)
+    h1 = hashing.hash_terms_np(flipped, 1)[:, 0]
+    diff = np.unpackbits((h0 ^ h1).view(np.uint8)).mean() * 32
+    assert 14.0 < diff < 18.0  # ideal 16
+
+
+def test_uniformity_modulo():
+    """After mod w the distribution should be near-uniform (chi-square)."""
+    rng = np.random.default_rng(2)
+    terms = rng.integers(0, 2 ** 32, size=(50_000, 2), dtype=np.uint32)
+    h = hashing.hash_terms_np(terms, 1)[:, 0]
+    w = 64
+    counts = np.bincount(h % w, minlength=w).astype(np.float64)
+    expected = len(h) / w
+    chi2 = ((counts - expected) ** 2 / expected).sum()
+    # dof = 63; P(chi2 > 120) << 0.001
+    assert chi2 < 120.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1), st.integers(0, 2 ** 32 - 1))
+def test_property_no_trivial_collisions(lo, hi):
+    """Nearby inputs never collide under any of the first 4 seeds."""
+    t = np.array([[lo, hi], [lo ^ 1, hi], [lo, hi ^ 1]], dtype=np.uint32)
+    h = hashing.hash_terms_np(t, 4)
+    assert (h[0] != h[1]).all()
+    assert (h[0] != h[2]).all()

@@ -1,0 +1,156 @@
+import numpy as np
+import pytest
+
+from repro.core import (IndexParams, bloom, build_classic, build_compact,
+                        load_index, merge_classic, save_index, theory)
+
+
+def _docs(n, seed=0, lo=50, hi=4000, k=15):
+    from repro.data import make_corpus
+    c = make_corpus(n, k=k, mean_length=(lo + hi) // 4, sigma=1.2, seed=seed,
+                    min_length=lo, max_length=hi)
+    return c.doc_terms
+
+
+def test_classic_single_block():
+    idx = build_classic(_docs(10), IndexParams(kmer=15))
+    assert idx.n_blocks == 1
+    assert idx.block_docs == 32           # padded to word
+    assert idx.arena.shape[1] == 1
+    assert idx.n_docs == 10
+
+
+def test_compact_blocks_and_widths_monotone():
+    idx = build_compact(_docs(96), IndexParams(kmer=15), block_docs=32,
+                        row_align=64)
+    assert idx.n_blocks == 3
+    widths = np.asarray(idx.block_width)
+    # docs sorted ascending by size -> block widths non-decreasing (Fig. 4)
+    assert (np.diff(widths) >= 0).all()
+    offs = np.asarray(idx.row_offset)
+    assert offs[0] == 0
+    np.testing.assert_array_equal(np.diff(offs), widths[:-1])
+    assert idx.total_rows == widths.sum()
+
+
+def test_compact_smaller_than_classic_on_skewed_corpus():
+    """The paper's headline structural claim (Fig. 4): compaction shrinks the
+    index when document sizes are skewed."""
+    docs = _docs(128, seed=3)
+    params = IndexParams(kmer=15)
+    classic = build_classic(docs, params, row_align=64)
+    compact = build_compact(docs, params, block_docs=32, row_align=64)
+    assert compact.size_bytes() < 0.7 * classic.size_bytes()
+
+
+def test_doc_slot_is_permutation():
+    idx = build_compact(_docs(70), IndexParams(kmer=15), block_docs=32)
+    slots = np.asarray(idx.doc_slot)
+    assert len(set(slots.tolist())) == idx.n_docs
+    assert slots.max() < idx.n_slots
+
+
+def test_expected_fpr_below_target():
+    idx = build_compact(_docs(64), IndexParams(kmer=15, fpr=0.3), block_docs=32)
+    fprs = idx.expected_fpr()
+    assert (fprs <= 0.3 + 1e-9).all()
+
+
+def test_merge_classic():
+    params = IndexParams(kmer=15)
+    docs = _docs(40, seed=1)
+    # force equal widths by building with the same max doc
+    a = build_classic(docs[:20] + [docs[-1]], params)
+    b = build_classic(docs[20:], params)
+    if int(a.block_width[0]) == int(b.block_width[0]):
+        m = merge_classic(a, b)
+        assert m.n_docs == a.n_docs + b.n_docs
+        assert m.arena.shape[1] == a.arena.shape[1] + b.arena.shape[1]
+
+
+def test_merge_rejects_mismatch():
+    params = IndexParams(kmer=15)
+    a = build_classic(_docs(8, seed=1, hi=500), params)
+    b = build_classic(_docs(8, seed=2, hi=50_000), params)
+    if int(a.block_width[0]) != int(b.block_width[0]):
+        with pytest.raises(ValueError):
+            merge_classic(a, b)
+
+
+def test_save_load_roundtrip(tmp_path):
+    idx = build_compact(_docs(48), IndexParams(kmer=15), block_docs=32)
+    save_index(idx, tmp_path / "idx")
+    idx2 = load_index(tmp_path / "idx")
+    np.testing.assert_array_equal(np.asarray(idx.arena), np.asarray(idx2.arena))
+    np.testing.assert_array_equal(np.asarray(idx.doc_slot), np.asarray(idx2.doc_slot))
+    assert idx2.params == idx.params
+    assert idx2.n_docs == idx.n_docs
+
+
+def test_load_rejects_unknown_format(tmp_path):
+    d = tmp_path / "bad"
+    d.mkdir()
+    (d / "manifest.json").write_text('{"format": "nope"}')
+    with pytest.raises(ValueError):
+        load_index(d)
+
+
+def test_aligned_width():
+    assert bloom.aligned_width(1, 64) == 64
+    assert bloom.aligned_width(65, 64) == 128
+    assert bloom.aligned_width(128, 64) == 128
+
+
+def test_empty_docs_and_empty_set():
+    docs = [np.zeros((0, 2), np.uint32)] * 3 + _docs(5)
+    idx = build_compact(docs, IndexParams(kmer=15), block_docs=32)
+    assert idx.n_docs == 8
+    with pytest.raises(ValueError):
+        build_classic([], IndexParams())
+
+
+def test_classic_width_covers_largest_doc():
+    docs = _docs(32, seed=5)
+    params = IndexParams(kmer=15, fpr=0.3, n_hashes=1)
+    idx = build_classic(docs, params, row_align=64)
+    v_max = max(d.shape[0] for d in docs)
+    assert int(idx.block_width[0]) >= theory.bloom_size(v_max, 0.3, 1)
+
+
+def test_merge_compact_preserves_query_results():
+    """Paper section 4 future work: compact indexes merge WITHOUT rebuild
+    (block concatenation); merged queries == querying both separately."""
+    from repro.core import QueryEngine, merge_compact
+    from repro.data import make_corpus, make_queries
+    params = IndexParams(kmer=15)
+    ca = make_corpus(40, k=15, mean_length=500, sigma=1.0, seed=31)
+    cb = make_corpus(40, k=15, mean_length=500, sigma=1.0, seed=32)
+    a = build_compact(ca.doc_terms, params, block_docs=32, row_align=64)
+    b = build_compact(cb.doc_terms, params, block_docs=32, row_align=64)
+    m = merge_compact(a, b)
+    assert m.n_docs == 80 and m.n_blocks == a.n_blocks + b.n_blocks
+
+    qs, origin = make_queries(ca, n_pos=6, n_neg=2, length=80, seed=33)
+    ea, em = QueryEngine(a), QueryEngine(m)
+    for q, o in zip(qs, origin):
+        import repro.core.dna as dna_mod
+        terms = dna_mod.unique_terms(dna_mod.pack_kmers(q, 15))
+        sa = ea.score_terms(terms)
+        sm = em.score_terms(terms)
+        np.testing.assert_array_equal(sa, sm[:40])   # a's docs: same scores
+        if o >= 0:
+            assert sm[o] == terms.shape[0]
+
+
+def test_merge_compact_rejects_mismatch():
+    from repro.core import merge_compact
+    from repro.data import make_corpus
+    ca = make_corpus(10, k=15, mean_length=300, seed=1)
+    a = build_compact(ca.doc_terms, IndexParams(kmer=15), block_docs=32)
+    b = build_compact(ca.doc_terms, IndexParams(kmer=15), block_docs=64)
+    with pytest.raises(ValueError):
+        merge_compact(a, b)
+    c = build_compact(ca.doc_terms, IndexParams(kmer=15, fpr=0.1),
+                      block_docs=32)
+    with pytest.raises(ValueError):
+        merge_compact(a, c)

@@ -1,0 +1,145 @@
+"""Per-kernel validation: shape sweeps + hypothesis properties, asserting
+EXACT equality against the pure-jnp oracles in repro.kernels.ref (outputs
+are integer counts — allclose would hide off-by-ones)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import bitslice_score as k
+
+SHAPES = [(8, 8), (8, 128), (16, 128), (64, 256), (8, 384), (200, 96),
+          (1, 8), (7, 130), (1000, 64)]
+
+
+def _rand_rows(L, W, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2 ** 32, size=(L, W), dtype=np.uint32)
+
+
+@pytest.mark.parametrize("L,W", SHAPES)
+@pytest.mark.parametrize("method", ["unpack", "vertical"])
+def test_score_kernels_match_ref(L, W, method):
+    rows = _rand_rows(L, W, seed=L * 1000 + W)
+    want = np.asarray(ref.bitslice_score_ref(jnp.asarray(rows)))
+    got = np.asarray(ops.bitslice_score(jnp.asarray(rows), method=method))
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("L,W", [(8, 8), (64, 128), (33, 40), (128, 256)])
+def test_lookup_kernel_matches_ref(L, W):
+    rng = np.random.default_rng(L + W)
+    R = 4 * L
+    arena = rng.integers(0, 2 ** 32, size=(R, W), dtype=np.uint32)
+    idx = rng.integers(0, R, size=L).astype(np.int32)
+    mask = rng.integers(0, 2, size=L).astype(np.int32)
+    want = np.asarray(ref.bitslice_lookup_score_ref(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    got = np.asarray(ops.bitslice_lookup_score(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_zero_rows_contribute_zero():
+    rows = np.zeros((16, 64), dtype=np.uint32)
+    out = np.asarray(ops.bitslice_score(jnp.asarray(rows)))
+    assert (out == 0).all()
+
+
+def test_all_ones_counts_L():
+    L, W = 24, 32
+    rows = np.full((L, W), 0xFFFFFFFF, dtype=np.uint32)
+    for method in ("unpack", "vertical"):
+        out = np.asarray(ops.bitslice_score(jnp.asarray(rows), method=method))
+        assert (out == L).all()
+
+
+def test_single_bit_isolation():
+    """Exactly one document's score increments per set bit."""
+    L, W = 8, 16
+    rows = np.zeros((L, W), dtype=np.uint32)
+    rows[3, 5] = np.uint32(1) << 17  # doc 5*32+17
+    for method in ("unpack", "vertical"):
+        out = np.asarray(ops.bitslice_score(jnp.asarray(rows), method=method))
+        assert out[5 * 32 + 17] == 1 and out.sum() == 1
+
+
+def test_and_rows():
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 2 ** 32, size=(8, 3, 16), dtype=np.uint32)
+    got = np.asarray(ops.and_rows(jnp.asarray(rows)))
+    want = rows[:, 0] & rows[:, 1] & rows[:, 2]
+    np.testing.assert_array_equal(want, got)
+
+
+def test_vmap_batches():
+    f = lambda r: ops.bitslice_score(r, method="vertical")
+    rows = jnp.asarray(_rand_rows(16, 64, 1)).reshape(2, 8, 64)
+    got = jax.vmap(f)(rows)
+    want = jnp.stack([ref.bitslice_score_ref(rows[0]),
+                      ref.bitslice_score_ref(rows[1])])
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_num_planes():
+    assert k._num_planes(1) == 1
+    assert k._num_planes(7) == 3
+    assert k._num_planes(8) == 4
+    assert k._num_planes(1023) == 10
+    assert k._num_planes(1024) == 11
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 40), st.integers(0, 2 ** 31),
+       st.sampled_from(["unpack", "vertical"]))
+def test_property_kernel_equals_oracle(L, W, seed, method):
+    rows = _rand_rows(L, W, seed)
+    want = np.asarray(ref.bitslice_score_ref(jnp.asarray(rows)))
+    got = np.asarray(ops.bitslice_score(jnp.asarray(rows), method=method))
+    np.testing.assert_array_equal(want, got)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 60), st.integers(1, 20), st.integers(0, 2 ** 31))
+def test_property_lookup_equals_oracle(L, W, seed):
+    rng = np.random.default_rng(seed)
+    arena = rng.integers(0, 2 ** 32, size=(2 * L + 1, W), dtype=np.uint32)
+    idx = rng.integers(0, arena.shape[0], size=L).astype(np.int32)
+    mask = rng.integers(0, 2, size=L).astype(np.int32)
+    want = np.asarray(ref.bitslice_lookup_score_ref(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    got = np.asarray(ops.bitslice_lookup_score(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("nb,L,W", [(3, 17, 8), (5, 64, 40), (2, 100, 130),
+                                    (1, 8, 128)])
+def test_lookup_blocks_kernel_matches_ref(nb, L, W):
+    rng = np.random.default_rng(nb * 100 + L)
+    R = 4 * L
+    arena = rng.integers(0, 2 ** 32, size=(R, W), dtype=np.uint32)
+    idx = rng.integers(0, R, size=(nb, L)).astype(np.int32)
+    mask = rng.integers(0, 2, size=(nb, L)).astype(np.int32)
+    want = np.asarray(ref.bitslice_lookup_score_blocks_ref(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    got = np.asarray(ops.bitslice_lookup_score_blocks(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    np.testing.assert_array_equal(want, got)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 40), st.integers(1, 24),
+       st.integers(0, 2 ** 31))
+def test_property_lookup_blocks_equals_oracle(nb, L, W, seed):
+    rng = np.random.default_rng(seed)
+    arena = rng.integers(0, 2 ** 32, size=(2 * L + 1, W), dtype=np.uint32)
+    idx = rng.integers(0, arena.shape[0], size=(nb, L)).astype(np.int32)
+    mask = rng.integers(0, 2, size=(nb, L)).astype(np.int32)
+    want = np.asarray(ref.bitslice_lookup_score_blocks_ref(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    got = np.asarray(ops.bitslice_lookup_score_blocks(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    np.testing.assert_array_equal(want, got)

@@ -1,0 +1,38 @@
+"""CLI launcher smoke tests (subprocess, tiny workloads)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+_SRC = str(Path(__file__).parent.parent / "src")
+
+
+def _run(args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run([sys.executable, "-m"] + args, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_train_cli_runs_and_resumes(tmp_path):
+    args = ["repro.launch.train", "--arch", "xlstm-125m", "--smoke",
+            "--batch", "2", "--seq", "16", "--ckpt-dir", str(tmp_path)]
+    p1 = _run(args + ["--steps", "6", "--ckpt-every", "3"])
+    assert p1.returncode == 0, p1.stderr[-2000:]
+    assert "done" in p1.stdout
+    p2 = _run(args + ["--steps", "9", "--ckpt-every", "3"])
+    assert p2.returncode == 0, p2.stderr[-2000:]
+    assert "resumed from step 5" in p2.stdout
+
+
+@pytest.mark.slow
+def test_serve_cli(tmp_path):
+    p = _run(["repro.launch.serve", "--n-docs", "48", "--batches", "2",
+              "--batch-size", "8", "--query-len", "60"])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "accuracy vs ground truth: 16/16" in p.stdout

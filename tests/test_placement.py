@@ -1,0 +1,82 @@
+import pytest
+
+from repro.index import BlockPlacement
+
+
+def test_deterministic_assignment():
+    p1 = BlockPlacement(["n0", "n1", "n2"], n_blocks=50)
+    p2 = BlockPlacement(["n0", "n1", "n2"], n_blocks=50)
+    assert p1.assignment() == p2.assignment()
+
+
+def test_all_blocks_assigned_and_balanced():
+    p = BlockPlacement([f"n{i}" for i in range(8)], n_blocks=400)
+    a = p.assignment()
+    total = sum(len(v) for v in a.values())
+    assert total == 400
+    sizes = [len(v) for v in a.values()]
+    assert min(sizes) > 20 and max(sizes) < 90  # ~50 each, HRW-balanced
+
+
+def test_replicas_distinct():
+    p = BlockPlacement([f"n{i}" for i in range(5)], n_blocks=100, replication=3)
+    for b in range(100):
+        r = p.replicas(b)
+        assert len(r) == 3 and len(set(r)) == 3
+
+
+def test_failover_keeps_coverage():
+    p = BlockPlacement([f"n{i}" for i in range(6)], n_blocks=200, replication=2)
+    moved = p.fail("n2")
+    assert p.is_covered()
+    assert all(p.owner(b) != "n2" for b in range(200))
+    # only blocks whose primary was n2 moved
+    assert all("n2" in p.replicas(b) for b in moved)
+
+
+def test_double_failure_may_lose_coverage():
+    p = BlockPlacement(["a", "b"], n_blocks=20, replication=2)
+    p.fail("a")
+    p.fail("b")
+    assert not p.is_covered()
+    with pytest.raises(RuntimeError):
+        p.owner(0)
+
+
+def test_recover_restores_primary():
+    p = BlockPlacement([f"n{i}" for i in range(4)], n_blocks=100)
+    before = p.assignment()
+    p.fail("n1")
+    rebuild = p.recover("n1")
+    assert p.assignment() == before
+    # rebuild set is exactly n1's replica blocks
+    assert all("n1" in p.replicas(b) for b in rebuild)
+
+
+def test_elastic_add_moves_minority():
+    p = BlockPlacement([f"n{i}" for i in range(8)], n_blocks=800, replication=2)
+    moved = p.add_node("n8")
+    # HRW: expected moved fraction ~ replication/(n+1) = 2/9 ~ 178 blocks
+    assert 0.10 * 800 < len(moved) < 0.35 * 800
+    assert p.is_covered()
+
+
+def test_elastic_remove_rehomes_only_its_blocks():
+    p = BlockPlacement([f"n{i}" for i in range(8)], n_blocks=800, replication=2)
+    served = set()
+    for b in range(800):
+        if "n3" in p.replicas(b):
+            served.add(b)
+    moved = p.remove_node("n3")
+    assert set(moved) == served
+    assert p.is_covered()
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        BlockPlacement([], n_blocks=10)
+    with pytest.raises(ValueError):
+        BlockPlacement(["a"], n_blocks=10, replication=0)
+    p = BlockPlacement(["a"], n_blocks=10)
+    with pytest.raises(KeyError):
+        p.fail("nope")

@@ -1,0 +1,191 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IndexParams, QueryEngine, build_classic, build_compact, dna
+from repro.data import make_corpus, make_queries
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = make_corpus(64, k=15, mean_length=400, sigma=1.0, seed=7)
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+    classic = build_classic(corpus.doc_terms, params)
+    compact = build_compact(corpus.doc_terms, params, block_docs=32,
+                            row_align=64)
+    queries, origin = make_queries(corpus, n_pos=25, n_neg=25, length=80,
+                                   seed=11)
+    return corpus, classic, compact, queries, origin
+
+
+def brute_force_scores(corpus, query_codes):
+    """Oracle: exact q-gram containment count per document."""
+    q = dna.unique_terms(dna.pack_kmers(query_codes, corpus.k))
+    q64 = set((q[:, 0].astype(np.uint64)
+               | (q[:, 1].astype(np.uint64) << np.uint64(32))).tolist())
+    out = np.zeros(corpus.n_docs, dtype=np.int32)
+    for i, t in enumerate(corpus.doc_terms):
+        d64 = (t[:, 0].astype(np.uint64)
+               | (t[:, 1].astype(np.uint64) << np.uint64(32)))
+        out[i] = sum(1 for v in d64.tolist() if v in q64)
+    return out, len(q64)
+
+
+def test_no_false_negatives_invariant(setup):
+    """One-sided error: index score >= true containment count, ALWAYS."""
+    corpus, classic, compact, queries, _ = setup
+    for idx in (classic, compact):
+        eng = QueryEngine(idx, method="ref")
+        for q in queries[:10]:
+            truth, _ = brute_force_scores(corpus, q)
+            terms = dna.unique_terms(dna.pack_kmers(q, corpus.k))
+            scores = eng.score_terms(terms)
+            assert (scores >= truth).all()
+
+
+def test_true_positives_found(setup):
+    corpus, classic, compact, queries, origin = setup
+    for idx in (classic, compact):
+        eng = QueryEngine(idx)
+        for q, o in zip(queries, origin):
+            if o < 0:
+                continue
+            r = eng.search(q, threshold=1.0)  # exact substring -> full score
+            assert o in set(r.doc_ids.tolist())
+
+
+def test_score_of_origin_is_full(setup):
+    corpus, classic, _, queries, origin = setup
+    eng = QueryEngine(classic)
+    for q, o in zip(queries, origin):
+        if o < 0:
+            continue
+        terms = dna.unique_terms(dna.pack_kmers(q, corpus.k))
+        scores = eng.score_terms(terms)
+        assert scores[o] == terms.shape[0]
+
+
+def test_methods_agree(setup):
+    corpus, classic, compact, queries, _ = setup
+    for idx in (classic, compact):
+        engines = {m: QueryEngine(idx, method=m)
+                   for m in ("ref", "unpack", "vertical", "lookup")}
+        for q in queries[:6]:
+            terms = dna.unique_terms(dna.pack_kmers(q, corpus.k))
+            ref_scores = engines["ref"].score_terms(terms)
+            for m in ("unpack", "vertical", "lookup"):
+                np.testing.assert_array_equal(
+                    ref_scores, engines[m].score_terms(terms), err_msg=m)
+
+
+def test_batch_equals_single(setup):
+    corpus, classic, compact, queries, _ = setup
+    for idx in (classic, compact):
+        eng = QueryEngine(idx)
+        singles = [eng.search(q, threshold=0.8) for q in queries[:8]]
+        batch = eng.search_batch(queries[:8], threshold=0.8)
+        for s, b in zip(singles, batch):
+            np.testing.assert_array_equal(s.doc_ids, b.doc_ids)
+            np.testing.assert_array_equal(s.scores, b.scores)
+
+
+def test_classic_compact_same_hits_at_threshold(setup):
+    """Both layouts must report every true hit; false-positive sets may
+    differ (different widths) but true positives never drop."""
+    corpus, classic, compact, queries, origin = setup
+    ec, ek = QueryEngine(classic), QueryEngine(compact)
+    for q, o in zip(queries, origin):
+        if o < 0:
+            continue
+        assert o in set(ec.search(q, 0.9).doc_ids.tolist())
+        assert o in set(ek.search(q, 0.9).doc_ids.tolist())
+
+
+def test_threshold_semantics(setup):
+    corpus, classic, _, queries, _ = setup
+    eng = QueryEngine(classic)
+    q = queries[0]
+    r_all = eng.search(q, threshold=0.0)
+    r_half = eng.search(q, threshold=0.5)
+    r_full = eng.search(q, threshold=1.0)
+    assert len(r_full.doc_ids) <= len(r_half.doc_ids) <= len(r_all.doc_ids)
+    if len(r_half.doc_ids):
+        assert (r_half.scores >= r_half.threshold).all()
+        # descending order
+        assert (np.diff(r_half.scores) <= 0).all()
+
+
+def test_top_k(setup):
+    corpus, classic, _, queries, origin = setup
+    eng = QueryEngine(classic)
+    pos = [q for q, o in zip(queries, origin) if o >= 0][0]
+    o = [o for o in origin if o >= 0][0]
+    r = eng.top_k(pos, k=5)
+    assert len(r.doc_ids) == 5
+    assert r.doc_ids[0] == o or r.scores[0] == r.n_terms
+
+
+def test_empty_query(setup):
+    _, classic, _, _, _ = setup
+    eng = QueryEngine(classic)
+    r = eng.search("ACG", threshold=0.5)  # shorter than k=15
+    assert len(r.doc_ids) == 0 and r.n_terms == 0
+
+
+def test_string_query_interface(setup):
+    corpus, classic, _, _, _ = setup
+    doc = corpus.documents[0]
+    s = dna.decode_dna(doc[:60])
+    r = QueryEngine(classic).search(s, threshold=1.0)
+    assert 0 in set(r.doc_ids.tolist())
+
+
+def test_measured_fpr_near_prescribed(setup):
+    """Paper Table 3: COBS returns ~the prescribed 0.3 FPR for single-k-mer
+    queries; multi-k-mer queries (ell >= 100 terms) return ZERO false
+    positives at K=0.8."""
+    corpus, _, compact, _, _ = setup
+    eng = QueryEngine(compact)
+    rng = np.random.default_rng(5)
+    # single k-mer probes that are true negatives
+    universe = set()
+    for t in corpus.doc_terms:
+        u = t[:, 0].astype(np.uint64) | (t[:, 1].astype(np.uint64) << np.uint64(32))
+        universe |= set(u.tolist())
+    hits = total = 0
+    for _ in range(400):
+        kmer = rng.integers(0, 4, corpus.k, dtype=np.uint8)
+        t = dna.pack_kmers(kmer, corpus.k)
+        v = int(t[0, 0]) | (int(t[0, 1]) << 32)
+        if v in universe:
+            continue
+        scores = eng.score_terms(t)
+        hits += int((scores >= 1).sum())
+        total += corpus.n_docs
+    measured = hits / total
+    expected = compact.expected_fpr().mean()
+    assert abs(measured - expected) < 0.08
+    assert measured < 0.35
+
+
+def test_long_negative_queries_zero_false_positives(setup):
+    corpus, _, compact, queries, origin = setup
+    eng = QueryEngine(compact)
+    for q, o in zip(queries, origin):
+        if o >= 0:
+            continue
+        r = eng.search(q, threshold=0.8)
+        assert len(r.doc_ids) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_property_search_is_deterministic(seed):
+    corpus = make_corpus(8, k=9, mean_length=100, sigma=0.5, seed=3)
+    idx = build_classic(corpus.doc_terms, IndexParams(kmer=9), row_align=64)
+    eng = QueryEngine(idx)
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 4, 30, dtype=np.uint8)
+    a, b = eng.search(q, 0.5), eng.search(q, 0.5)
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+    np.testing.assert_array_equal(a.scores, b.scores)

@@ -1,0 +1,92 @@
+"""Sharding rule engine + partitioning context unit tests (single device:
+mesh axes of size 1, plus abstract divisibility logic)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.models.partition import resolve_spec
+
+
+class FakeMesh:
+    """Duck-typed mesh for pure rule-resolution tests."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisible_dims_shard():
+    spec = shd.spec_for(("vocab", "embed"), (256000, 2560), MESH)
+    assert spec == P("model", "data")
+
+
+def test_indivisible_heads_fall_back_to_replicate():
+    # phi4: 24 heads don't divide 16 -> heads dim unsharded
+    spec = shd.spec_for(("embed", "heads", "head_dim"), (3072, 24, 128), MESH)
+    assert spec == P("data")
+
+
+def test_no_mesh_axis_reused():
+    # both dims want "model": only the first gets it
+    spec = shd.spec_for(("ff", "vocab"), (8192, 256000), MESH)
+    assert spec == P("model")
+
+
+def test_batch_uses_pod_and_data():
+    spec = shd.spec_for(("batch", "seq"), (256, 4096), MESH)
+    assert spec == P(("pod", "data"))
+
+
+def test_batch_of_one_replicates():
+    spec = shd.spec_for(("batch", "kv_seq"), (1, 524288), MESH)
+    assert spec == P()
+
+
+def test_cache_rules_head_dim_fallback():
+    # kv=8 doesn't divide 16 -> cache shards head_dim instead
+    spec = shd.spec_for(("batch", "kv_seq", "kv", "head_dim"),
+                        (128, 32768, 8, 128), MESH, rules=shd.CACHE_RULES)
+    assert spec == P(("pod", "data"), None, None, "model")
+
+
+def test_param_rules_no_head_dim_tp():
+    spec = shd.spec_for(("embed", "kv", "head_dim"), (3072, 8, 128), MESH)
+    assert spec == P("data")
+
+
+def test_missing_mesh_axis_filtered():
+    single = FakeMesh({"data": 16, "model": 16})
+    spec = shd.spec_for(("batch",), (256,), single)
+    assert spec == P("data")
+
+
+def test_act_rules_for_filters():
+    single = FakeMesh({"data": 4})
+    rules = shd.act_rules_for(single)
+    assert rules["batch"] == ("data",)
+    assert rules["ff"] is None          # "model" absent
+    assert rules["embed"] is None
+
+
+def test_resolve_spec_rank_mismatch_returns_empty():
+    assert resolve_spec(("batch", "seq", "embed"), (8, 16), MESH,
+                        {"batch": ("data",)}) == P()
+
+
+def test_real_mesh_tree_shardings():
+    mesh = make_mesh((1,), ("data",))
+    axes = {"w": ("embed", "ff"), "b": ("ff",)}
+
+    class S:
+        def __init__(self, shape):
+            self.shape = shape
+
+    shapes = {"w": S((64, 128)), "b": S((128,))}
+    sh = shd.tree_shardings(axes, shapes, mesh)
+    # size-1 axes shard nothing
+    assert sh["w"].spec == P()
+    assert sh["b"].spec == P()

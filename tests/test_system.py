@@ -1,0 +1,120 @@
+"""End-to-end behaviour of the whole system (the paper's workflow):
+corpus -> build both index flavours -> labeled query batches -> accuracy,
+size, and theory checks — plus persistence and ranking flows."""
+import numpy as np
+import pytest
+
+from repro.core import (IndexParams, QueryEngine, build_classic,
+                        build_compact, dna, load_index, save_index, theory)
+from repro.data import make_corpus, make_queries, mutate
+
+
+@pytest.fixture(scope="module")
+def world():
+    corpus = make_corpus(150, k=15, mean_length=1200, sigma=1.0, seed=8)
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+    classic = build_classic(corpus.doc_terms, params)
+    compact = build_compact(corpus.doc_terms, params, block_docs=64)
+    return corpus, params, classic, compact
+
+
+def test_paper_workflow_end_to_end(world):
+    corpus, params, classic, compact = world
+    # Fig. 4: compaction shrinks the index on skewed corpora
+    assert compact.size_bytes() < classic.size_bytes()
+
+    # Table 3 semantics on a labeled batch
+    queries, origin = make_queries(corpus, n_pos=15, n_neg=15, length=100,
+                                   seed=3)
+    for idx in (classic, compact):
+        eng = QueryEngine(idx)
+        results = eng.search_batch(queries, threshold=0.8)
+        for r, o in zip(results, origin):
+            ids = set(r.doc_ids.tolist())
+            if o >= 0:
+                assert o in ids                  # no false negatives, ever
+            else:
+                assert len(ids) == 0             # Theorem 1 at ell=86, K=.8
+
+
+def test_mutated_queries_rank_origin_first(world):
+    corpus, params, classic, compact = world
+    rng = np.random.default_rng(11)
+    eng = QueryEngine(compact)
+    hits = trials = 0
+    for _ in range(12):
+        d = int(rng.integers(0, corpus.n_docs))
+        doc = corpus.documents[d]
+        if len(doc) < 150:
+            continue
+        start = int(rng.integers(0, len(doc) - 120))
+        q = mutate(rng, doc[start:start + 120], 0.02)
+        r = eng.top_k(q, k=3)
+        trials += 1
+        hits += int(r.doc_ids[0] == d)
+    assert trials > 0 and hits >= trials - 1
+
+
+def test_index_survives_disk_roundtrip_with_same_results(world, tmp_path):
+    corpus, params, classic, compact = world
+    save_index(compact, tmp_path / "idx")
+    re = load_index(tmp_path / "idx")
+    queries, _ = make_queries(corpus, n_pos=5, n_neg=5, length=80, seed=4)
+    a = QueryEngine(compact).search_batch(queries, threshold=0.6)
+    b = QueryEngine(re).search_batch(queries, threshold=0.6)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.doc_ids, y.doc_ids)
+        np.testing.assert_array_equal(x.scores, y.scores)
+
+
+def test_scores_scale_with_containment(world):
+    """q-gram score ~ containment: longer shared spans -> higher scores."""
+    corpus, params, classic, compact = world
+    rng = np.random.default_rng(13)
+    eng = QueryEngine(compact)
+    d = next(i for i in range(corpus.n_docs)
+             if len(corpus.documents[i]) >= 400)
+    doc = corpus.documents[d]
+    noise = rng.integers(0, 4, 200, dtype=np.uint8)
+    scores_at = []
+    for span in (40, 100, 180):
+        q = np.concatenate([doc[:span], noise[:200 - span]])
+        terms = dna.unique_terms(dna.pack_kmers(q, corpus.k))
+        scores_at.append(int(eng.score_terms(terms)[d]))
+    assert scores_at[0] < scores_at[1] < scores_at[2]
+
+
+def test_expected_fp_documents_formula(world):
+    corpus, params, classic, compact = world
+    # the paper's '143 per million documents' example scales to < 1 here
+    exp = theory.expected_false_positive_docs(corpus.n_docs, 70, 0.3, 0.5)
+    assert exp < 1.0
+
+
+def test_multi_index_frontend(world):
+    """Paper section 4: a frontend querying multiple index files merges
+    ranked results across datasets and supports attach/detach."""
+    from repro.core import MultiIndexEngine, build_compact
+    corpus, params, classic, compact = world
+    other = make_corpus(30, k=15, mean_length=800, sigma=0.8, seed=99)
+    idx2 = build_compact(other.doc_terms, params, block_docs=32)
+
+    multi = MultiIndexEngine()
+    multi.attach("main", compact)
+    multi.attach("aux", idx2)
+    assert multi.datasets == ("main", "aux")
+
+    # a query from 'aux' must surface with dataset label, top-ranked
+    doc = other.documents[3]
+    hits = multi.search(doc[:90], threshold=0.9)
+    assert hits and hits[0].dataset == "aux" and hits[0].doc_id == 3
+
+    # dataset selection filters
+    hits_main = multi.search(doc[:90], threshold=0.9, datasets=("main",))
+    assert all(h.dataset == "main" for h in hits_main)
+
+    multi.detach("aux")
+    assert multi.datasets == ("main",)
+    import pytest as _pt
+    with _pt.raises(KeyError):
+        multi.attach("main", compact)

@@ -1,0 +1,91 @@
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import theory
+
+
+def test_bloom_size_paper_defaults():
+    # k=1, p=0.3 -> w = v / -ln(0.7) ~= 2.804 v (paper section 2.2 / Fig. 4)
+    w = theory.bloom_size(1_000_000, 0.3, 1)
+    assert abs(w / 1_000_000 - 2.804) < 0.01
+
+
+def test_bloom_fpr_inverts_size():
+    for v in (100, 10_000, 1_000_000):
+        for p in (0.05, 0.3, 0.5):
+            for k in (1, 2, 4):
+                w = theory.bloom_size(v, p, k)
+                assert theory.bloom_fpr(w, k, v) <= p + 1e-9
+                # minimality: one step smaller violates the target
+                if w > 1:
+                    assert theory.bloom_fpr(w - max(1, w // 100), k, v) > p - 0.02
+
+
+def test_query_fpr_matches_bruteforce():
+    """Theorem 1 against a direct binomial-tail computation."""
+    for ell, p, theta in [(10, 0.3, 0.5), (70, 0.3, 0.5), (31, 0.1, 0.8)]:
+        t = int(math.floor(theta * ell))
+        direct = 0.0
+        for i in range(t + 1, ell + 1):
+            direct += math.comb(ell, i) * p ** i * (1 - p) ** (ell - i)
+        assert abs(theory.query_fpr(ell, p, theta) - direct) < 1e-12
+
+
+def test_query_fpr_paper_example():
+    """Paper: ell=70, p=0.3, K=0.5 -> ~0.000143 (143 per million docs)."""
+    fpr = theory.query_fpr(70, 0.3, 0.5)
+    assert abs(fpr - 0.000143) < 0.00002
+    exp = theory.expected_false_positive_docs(1_000_000, 70, 0.3, 0.5)
+    assert 120 < exp < 165
+
+
+def test_query_fpr_decays_with_length():
+    vals = [theory.query_fpr(ell, 0.3, 0.5) for ell in (10, 30, 100, 300)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+    assert vals[-1] < 1e-8
+
+
+def test_chernoff_upper_bounds_exact():
+    for ell in (20, 50, 100):
+        exact = theory.query_fpr(ell, 0.3, 0.6)
+        bound = theory.query_fpr_chernoff(ell, 0.3, 0.6)
+        assert exact <= bound + 1e-12
+
+
+def test_optimal_k():
+    # w/v = 10 -> k_opt ~ 6.93 -> 7
+    assert theory.optimal_k(1000, 100) == 7
+
+
+def test_edge_cases():
+    assert theory.bloom_fpr(100, 1, 0) == 0.0
+    assert theory.query_fpr(0, 0.3, 0.5) == 0.0
+    assert theory.query_fpr(10, 0.0, 0.5) == 0.0
+    assert theory.query_fpr(10, 1.0, 0.5) == 1.0
+    assert theory.bloom_size(0, 0.3, 1) == 1
+    with pytest.raises(ValueError):
+        theory.bloom_size(10, 1.5, 1)
+
+
+def test_empirical_single_filter_fpr():
+    """Build one real filter via the jit path and measure its FPR against
+    the analytic prediction — validates the murmur-style hash substitution."""
+    import jax.numpy as jnp
+    from repro.core import bloom, hashing
+
+    rng = np.random.default_rng(3)
+    v, p = 5_000, 0.3
+    w = theory.bloom_size(v, p, 1)
+    terms = rng.integers(0, 2 ** 32, size=(1, v, 2), dtype=np.uint32)
+    filt = np.asarray(bloom.build_filters(
+        jnp.asarray(terms), jnp.asarray([v], np.int32), w, 1))[0]
+    # fill rate check
+    fill = filt.mean()
+    assert abs(fill - theory.fill_rate(w, 1, v)) < 0.02
+    # probe with fresh random terms (collisions with inserted set negligible)
+    probes = rng.integers(0, 2 ** 32, size=(200_000, 2), dtype=np.uint32)
+    h = hashing.hash_terms_np(probes, 1)[:, 0] % np.uint32(w)
+    measured = filt[h].mean()
+    assert abs(measured - theory.bloom_fpr(w, 1, v)) < 0.02
