@@ -28,7 +28,7 @@ def main() -> None:
 
     from . import common
     from . import (compaction, construction, fpr, hedging, kernel_micro,
-                   query, scaling)
+                   query, scaling, serving)
 
     n = 128 if args.quick else 512
     suites = {
@@ -40,6 +40,8 @@ def main() -> None:
         "compaction": lambda: compaction.run(64 if args.quick else 256),
         "kernel": kernel_micro.run,
         "hedging": hedging.run,
+        "serving": lambda: serving.run(64 if args.quick else 256,
+                                       n_queries=48 if args.quick else 96),
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

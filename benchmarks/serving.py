@@ -1,0 +1,86 @@
+"""Serving benchmark: throughput and latency through the full
+micro-batching stack (repro.serve) vs offered load.
+
+Closed-loop sweeps measure capacity at several concurrency windows;
+open-loop replays Poisson arrivals at increasing qps until the measured
+latency shows queueing. Also reports the batched fused-lookup kernel
+against the old per-query path (the regression the multi-query kernel
+exists to fix: batched compact-index lookups used to fall back to the
+pure-jnp ref scorer)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import QueryEngine
+from repro.data import make_queries
+from repro.launch.serve import make_workload, run_closed, run_open
+from repro.serve import QueryServer, ServerConfig
+
+from .common import built_indexes, emit
+
+
+def _fresh_server(index, max_batch: int = 32) -> QueryServer:
+    return QueryServer(index, ServerConfig(max_batch=max_batch,
+                                           max_wait_s=0.0))
+
+
+def _warm(server: QueryServer, run_once) -> None:
+    """Replay the measured routine once so the timed run pays no jit
+    compiles (closed-loop batch formation is deterministic; open-loop is
+    near-identical), then clear the caches it filled."""
+    run_once()
+    server.pop_responses()
+    server.reset_metrics(clear_caches=True)
+
+
+def run(n_docs: int = 256, n_queries: int = 96) -> dict:
+    c, classic, compact = built_indexes(n_docs)
+    queries, _ = make_workload(c, n_queries, seed=71)
+    out = {}
+
+    # -- closed loop: capacity vs concurrency window ------------------------
+    for conc in (1, 8, 32):
+        server = _fresh_server(compact)
+        _warm(server, lambda: run_closed(server, queries, 0.8, conc))
+        t0 = time.perf_counter()
+        run_closed(server, queries, 0.8, conc)
+        wall = time.perf_counter() - t0
+        snap = server.metrics.snapshot()
+        qps = snap.served / wall
+        emit(f"serving/closed/conc{conc}", wall / snap.served * 1e6,
+             f"qps={qps:.0f};p50_ms={snap.p50_ms:.2f};"
+             f"p99_ms={snap.p99_ms:.2f};occ={snap.mean_occupancy:.2f}")
+        out[("closed", conc)] = qps
+
+    # -- open loop: latency vs offered load ---------------------------------
+    base_qps = out[("closed", 32)]
+    for frac in (0.25, 0.75):
+        offered = max(10.0, base_qps * frac)
+        server = _fresh_server(compact)
+        _warm(server, lambda: run_open(server, queries, 0.8, offered))
+        t0 = time.perf_counter()
+        run_open(server, queries, 0.8, offered)
+        wall = time.perf_counter() - t0
+        snap = server.metrics.snapshot()
+        emit(f"serving/open/load{int(frac * 100)}",
+             wall / snap.served * 1e6,
+             f"offered_qps={offered:.0f};achieved_qps={snap.served / wall:.0f};"
+             f"p50_ms={snap.p50_ms:.2f};p99_ms={snap.p99_ms:.2f}")
+        out[("open", frac)] = snap.served / wall
+
+    # -- fused multi-query kernel vs vmapped gather on batched lookups ------
+    batch, _ = make_queries(c, n_pos=16, n_neg=16, length=120, seed=5)
+    for method in ("lookup", "vertical"):
+        eng = QueryEngine(compact, method=method)
+        eng.search_batch(batch, threshold=0.8)      # compile
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            eng.search_batch(batch, threshold=0.8)
+        per_q = (time.perf_counter() - t0) / reps / len(batch)
+        emit(f"serving/batch32/{method}", per_q * 1e6,
+             f"n_q={len(batch)}")
+        out[("batch", method)] = per_q
+    return out

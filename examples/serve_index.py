@@ -1,16 +1,24 @@
-"""End-to-end serving driver (the paper's kind of system = an index, so the
-served artifact is the index): build a compact index over a few hundred
-documents, then serve batched approximate-matching queries and report
-latency percentiles + ground-truth accuracy.
+"""End-to-end serving example: build a compact index and push a mixed
+query workload through the serving subsystem (shape-bucketed micro-batcher
++ kernel planner + caches), reporting latency percentiles and accuracy.
 
     PYTHONPATH=src python examples/serve_index.py
+    PYTHONPATH=src python examples/serve_index.py --mode open --qps 200
+
+Quickstart, in code:
+
+    from repro.serve import QueryServer, ServerConfig
+    server = QueryServer(index, ServerConfig(max_batch=32))
+    rid = server.submit("ACGT...", threshold=0.8)
+    server.drain()
+    result = server.pop_responses()[rid].result   # SearchResult
+
 (thin wrapper over `python -m repro.launch.serve` with example defaults)
 """
 import sys
 
 from repro.launch import serve
 
-sys.argv = [sys.argv[0], "--n-docs", "256", "--batches", "8",
-            "--batch-size", "32", "--query-len", "100",
-            "--method", "vertical"] + sys.argv[1:]
+sys.argv = [sys.argv[0], "--n-docs", "256", "--queries", "128",
+            "--mode", "closed", "--concurrency", "32"] + sys.argv[1:]
 serve.main()

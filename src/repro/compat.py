@@ -1,0 +1,57 @@
+"""Version compatibility shims for jax.
+
+The repo targets jax 0.4.37 (the baked toolchain) but was written against
+newer spellings in places. Everything version-dependent funnels through
+here so call sites stay clean:
+
+* ``shard_map`` — moved from ``jax.experimental.shard_map`` to ``jax``
+  top-level in 0.6; the replication-check kwarg was renamed
+  ``check_rep`` -> ``check_vma``. We accept the new spelling and translate.
+* ``make_mesh`` — ``axis_types=`` (and ``jax.sharding.AxisType``) only
+  exist on newer jax; on 0.4.x every mesh axis is Auto already, so the
+  argument is dropped.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Sequence
+
+import jax
+
+try:  # jax >= 0.6 spelling
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None,
+              **kwargs):
+    """``jax.shard_map`` with the ``check_vma`` kwarg accepted everywhere.
+
+    On jax 0.4.x the same switch is spelled ``check_rep``; passing the
+    wrong name raises TypeError, so translate to whatever this jax has.
+    """
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with explicit Auto axis types where supported.
+
+    Newer jax grew explicit/auto axis types; pinning Auto keeps the
+    historical shard_map/pjit behaviour. jax 0.4.x has no ``axis_types``
+    kwarg and every axis is Auto, so the plain call is equivalent.
+    """
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(tuple(shape), tuple(axes))

@@ -3,12 +3,14 @@ from . import bloom, dna, hashing, theory
 from .index import (BitSlicedIndex, IndexParams, build_classic, build_compact,
                     load_index, merge_classic, merge_compact, save_index)
 from .multi import MultiHit, MultiIndexEngine
-from .query import QueryEngine, SearchResult, make_score_fn
+from .query import (QueryEngine, SearchResult, make_batch_score_fn,
+                    make_score_fn)
 
 __all__ = [
     "BitSlicedIndex", "IndexParams", "QueryEngine", "SearchResult",
     "build_classic", "build_compact", "load_index", "merge_classic",
-    "merge_compact", "save_index", "make_score_fn", "MultiHit",
+    "merge_compact", "save_index", "make_score_fn", "make_batch_score_fn",
+    "MultiHit",
     "MultiIndexEngine", "bloom", "dna",
     "hashing", "theory",
 ]

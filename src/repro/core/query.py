@@ -7,12 +7,17 @@ be reported. Single queries and padded batches are supported; scoring runs
 through the Pallas kernels (repro.kernels.ops) with a pure-jnp method for
 oracle comparisons.
 
+Planning (term compilation, padding, threshold math, hit selection) is kept
+in PURE module-level functions so the synchronous QueryEngine and the
+serving subsystem (repro.serve) share one implementation — the server's
+micro-batcher pads with ``pad_term_batch`` and its planner keys buckets off
+``padded_len``, so batched results are byte-identical to ``search``.
+
 Distribution (mesh-sharded arenas, psum'd partial scores, distributed top-k)
 lives in repro.index.distributed and reuses the same planning functions.
 """
 from __future__ import annotations
 
-import functools
 import math
 from dataclasses import dataclass
 
@@ -21,9 +26,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dna, hashing
-from .index import BitSlicedIndex
+from .index import BitSlicedIndex, IndexParams
 from ..kernels import ops
 
+
+# --------------------------------------------------------------------------
+# Pure planning helpers (no device state; shared by engine / server / dist)
+# --------------------------------------------------------------------------
 
 def plan_rows(
     hashes: jnp.ndarray, row_offset: jnp.ndarray, block_width: jnp.ndarray
@@ -35,6 +44,76 @@ def plan_rows(
     w = block_width.astype(jnp.uint32)
     rows = hashes[..., None] % w
     return (rows + row_offset.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def compile_pattern(pattern, params: IndexParams) -> np.ndarray:
+    """Pattern (DNA string or uint8 code array) -> distinct packed terms
+    [ell, 2] under the index's k-mer parameters. Host-side and pure."""
+    codes = dna.encode_dna(pattern) if isinstance(pattern, str) else pattern
+    return dna.unique_terms(
+        dna.pack_kmers(codes, params.kmer, params.canonical))
+
+
+def padded_len(n_terms: int, term_pad: int) -> int:
+    """Smallest multiple of ``term_pad`` holding ``n_terms`` (>= term_pad).
+
+    This is the jit-cache key of a query's shape: every query padded to the
+    same length shares one compiled scoring executable, which is what the
+    serving batcher's shape buckets are built on."""
+    return max(term_pad,
+               ((n_terms + term_pad - 1) // term_pad) * term_pad)
+
+
+def pad_terms(terms: np.ndarray, term_pad: int) -> tuple[np.ndarray, int]:
+    """Packed terms [L, 2] -> (zero-padded [padded_len, 2], L)."""
+    L = terms.shape[0]
+    out = np.zeros((padded_len(L, term_pad), 2), dtype=np.uint32)
+    out[:L] = terms
+    return out, L
+
+
+def pad_term_batch(term_sets: list[np.ndarray], term_pad: int
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Term sets -> (shared-padding buffer [Q, pad, 2], ells int32 [Q])."""
+    ells = np.array([t.shape[0] for t in term_sets], dtype=np.int32)
+    pad = padded_len(int(ells.max(initial=1)), term_pad)
+    buf = np.zeros((len(term_sets), pad, 2), dtype=np.uint32)
+    for i, t in enumerate(term_sets):
+        buf[i, : t.shape[0]] = t
+    return buf, ells
+
+
+def coverage_cutoff(threshold: float, n_terms: int) -> int:
+    """The paper's K-threshold: minimum score = ceil(threshold * ell),
+    never below 1 (a zero cutoff would report every document)."""
+    return max(1, math.ceil(threshold * n_terms))
+
+
+def select_hits(scores: np.ndarray, n_terms: int, threshold: float
+                ) -> "SearchResult":
+    """Apply the coverage cutoff and order hits best-first (stable)."""
+    if n_terms == 0:
+        return SearchResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
+    cut = coverage_cutoff(threshold, n_terms)
+    hits = np.nonzero(scores >= cut)[0]
+    order = np.argsort(-scores[hits], kind="stable")
+    return SearchResult(hits[order].astype(np.int32),
+                        scores[hits][order].astype(np.int32), n_terms, cut)
+
+
+def select_top_k(scores: np.ndarray, n_terms: int, k: int) -> "SearchResult":
+    """Best-k documents by score (the paper's top-k selection). The
+    reported threshold is the k-th best score — the effective cutoff.
+
+    Stable sort (not argpartition) so ties — including at the k boundary —
+    resolve to ascending doc id deterministically."""
+    k = min(k, scores.shape[0])
+    if k == 0:
+        return SearchResult(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                            n_terms, 0)
+    order = np.argsort(-scores, kind="stable")[:k]
+    top = scores[order].astype(np.int32)
+    return SearchResult(order.astype(np.int32), top, n_terms, int(top[-1]))
 
 
 def gather_rows(arena: jnp.ndarray, rows: jnp.ndarray, valid: jnp.ndarray
@@ -50,8 +129,11 @@ def gather_rows(arena: jnp.ndarray, rows: jnp.ndarray, valid: jnp.ndarray
     return anded.reshape(L, nb * arena.shape[1])
 
 
-# The scoring function is built per-index (static n_hashes / method) to keep
-# the jit cache tidy.
+# --------------------------------------------------------------------------
+# Scoring functions (built per-index: static n_hashes / method keeps the
+# jit cache tidy)
+# --------------------------------------------------------------------------
+
 def make_score_fn(n_hashes: int, method: str = "vertical"):
     """Returns score(arena, row_offset, block_width, terms [L,2], n_valid)
     -> int32 [n_slots] scores in slot order."""
@@ -62,10 +144,15 @@ def make_score_fn(n_hashes: int, method: str = "vertical"):
         h = hashing.hash_terms(terms, n_hashes)            # [L, k]
         rows = plan_rows(h, row_offset, block_width)       # [L, k, nb]
         valid = jnp.arange(L, dtype=jnp.int32) < n_valid
-        if method == "lookup" and n_hashes == 1 and row_offset.shape[0] == 1:
-            # fused path: single block, k=1 — gather happens inside the kernel
-            return ops.bitslice_lookup_score(
-                arena, rows[:, 0, 0], valid.astype(jnp.int32))
+        if method == "lookup" and n_hashes == 1:
+            # fused path (k=1): the gather happens inside the kernel.
+            if row_offset.shape[0] == 1:
+                return ops.bitslice_lookup_score(
+                    arena, rows[:, 0, 0], valid.astype(jnp.int32))
+            idx = rows[:, 0, :].T                          # [nb, L]
+            msk = jnp.broadcast_to(valid.astype(jnp.int32)[None, :],
+                                   idx.shape)
+            return ops.bitslice_lookup_score_blocks(arena, idx, msk)
         flat = gather_rows(arena, rows, valid)             # [L, nb*Wb]
         return ops.bitslice_score(flat, method=method if method != "lookup"
                                   else "vertical")
@@ -73,20 +160,65 @@ def make_score_fn(n_hashes: int, method: str = "vertical"):
     return score
 
 
+def make_batch_score_fn(n_hashes: int, method: str = "vertical"):
+    """Returns score(arena, row_offset, block_width, terms [Q,L,2],
+    n_valid [Q]) -> int32 [Q, n_slots].
+
+    method='lookup' with k=1 dispatches the whole batch to the fused
+    multi-query kernel (one pallas_call, shared arena tiles) instead of
+    vmapping — vmap cannot batch the scalar-prefetch gather, which is why
+    the old engine silently fell back to the jnp ref scorer here. Other
+    methods vmap the single-query scorer; 'lookup' with k>1 degrades to
+    'vertical' (the AND over hash rows needs the materialized gather).
+    """
+    if method == "lookup" and n_hashes == 1:
+        @jax.jit
+        def score_batch(arena, row_offset, block_width, terms, n_valid):
+            Q, L = terms.shape[0], terms.shape[1]
+            h = hashing.hash_terms(terms, n_hashes)        # [Q, L, 1]
+            rows = plan_rows(h, row_offset, block_width)   # [Q, L, 1, nb]
+            idx = jnp.swapaxes(rows[:, :, 0, :], 1, 2)     # [Q, nb, L]
+            valid = (jnp.arange(L, dtype=jnp.int32)[None, :]
+                     < n_valid[:, None])                   # [Q, L]
+            msk = jnp.broadcast_to(valid.astype(jnp.int32)[:, None, :],
+                                   idx.shape)
+            return ops.bitslice_lookup_score_multi(arena, idx, msk)
+        return score_batch
+
+    inner = make_score_fn(
+        n_hashes, "vertical" if method == "lookup" else method)
+    return jax.jit(jax.vmap(inner, in_axes=(None, None, None, 0, 0)))
+
+
 @dataclass
 class SearchResult:
-    doc_ids: np.ndarray    # int32, descending score
-    scores: np.ndarray     # int32, aligned with doc_ids
-    n_terms: int           # distinct query terms ell
-    threshold: int         # score cut-off applied
+    """One query's reported documents, best-first.
+
+    Fields:
+        doc_ids:   int32 [n_hits] original document ids, descending score
+                   (ties keep ascending-id order — the sort is stable).
+        scores:    int32 [n_hits] q-gram containment scores, aligned with
+                   ``doc_ids``; score <= n_terms, with one-sided Bloom
+                   error (never below the true containment count).
+        n_terms:   number of DISTINCT query q-grams (the paper's ell);
+                   a full-containment hit has score == n_terms.
+        threshold: the actual integer score cutoff applied: ceil(K * ell)
+                   for ``search``/``search_batch``, the k-th best score
+                   for ``top_k``, 0 for an empty result.
+    """
+
+    doc_ids: np.ndarray
+    scores: np.ndarray
+    n_terms: int
+    threshold: int
 
 
 class QueryEngine:
     """High-level search over a BitSlicedIndex.
 
     method: 'vertical' (default, Harley–Seal kernel), 'unpack'
-    (paper-faithful kernel), 'lookup' (fused gather kernel, classic/k=1
-    indexes), or 'ref' (pure jnp oracle).
+    (paper-faithful kernel), 'lookup' (fused gather kernel, k=1 indexes),
+    or 'ref' (pure jnp oracle).
     """
 
     def __init__(self, index: BitSlicedIndex, method: str = "vertical",
@@ -95,24 +227,13 @@ class QueryEngine:
         self.method = method
         self.term_pad = term_pad
         self._score = make_score_fn(index.params.n_hashes, method)
-        batch_inner = make_score_fn(
-            index.params.n_hashes, "ref" if method == "lookup" else method)
-        self._score_batch = jax.jit(
-            jax.vmap(batch_inner, in_axes=(None, None, None, 0, 0)))
+        self._score_batch = make_batch_score_fn(index.params.n_hashes, method)
 
     # -- scoring -------------------------------------------------------------
-    def _pad_terms(self, terms: np.ndarray) -> tuple[np.ndarray, int]:
-        L = terms.shape[0]
-        pad = max(self.term_pad,
-                  ((L + self.term_pad - 1) // self.term_pad) * self.term_pad)
-        out = np.zeros((pad, 2), dtype=np.uint32)
-        out[:L] = terms
-        return out, L
-
     def score_terms(self, terms: np.ndarray) -> np.ndarray:
         """Distinct packed terms [L, 2] -> int32 scores [n_docs] (original
         document order)."""
-        padded, L = self._pad_terms(terms)
+        padded, L = pad_terms(terms, self.term_pad)
         slots = self._score(self.index.arena, self.index.row_offset,
                             self.index.block_width, jnp.asarray(padded),
                             jnp.int32(L))
@@ -130,62 +251,26 @@ class QueryEngine:
     def search(self, pattern, threshold: float = 0.8) -> SearchResult:
         """pattern: DNA string or uint8 code array. Reports every document
         whose q-gram score is >= ceil(threshold * ell), best first."""
-        codes = dna.encode_dna(pattern) if isinstance(pattern, str) else pattern
-        terms = dna.unique_terms(
-            dna.pack_kmers(codes, self.index.params.kmer,
-                           self.index.params.canonical))
-        ell = terms.shape[0]
-        if ell == 0:
+        terms = compile_pattern(pattern, self.index.params)
+        if terms.shape[0] == 0:
             return SearchResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
         scores = self.score_terms(terms)
-        cut = max(1, math.ceil(threshold * ell))
-        hits = np.nonzero(scores >= cut)[0]
-        order = np.argsort(-scores[hits], kind="stable")
-        return SearchResult(hits[order].astype(np.int32),
-                            scores[hits][order].astype(np.int32), ell, cut)
+        return select_hits(scores, terms.shape[0], threshold)
 
     def search_batch(self, patterns: list, threshold: float = 0.8
                      ) -> list[SearchResult]:
         """Batched search with shared padding (the paper's bulk queries)."""
-        term_sets = []
-        for p in patterns:
-            codes = dna.encode_dna(p) if isinstance(p, str) else p
-            term_sets.append(dna.unique_terms(
-                dna.pack_kmers(codes, self.index.params.kmer,
-                               self.index.params.canonical)))
-        ells = np.array([t.shape[0] for t in term_sets], dtype=np.int32)
-        pad = max(self.term_pad,
-                  ((int(ells.max(initial=1)) + self.term_pad - 1)
-                   // self.term_pad) * self.term_pad)
-        buf = np.zeros((len(patterns), pad, 2), dtype=np.uint32)
-        for i, t in enumerate(term_sets):
-            buf[i, : t.shape[0]] = t
+        term_sets = [compile_pattern(p, self.index.params) for p in patterns]
+        buf, ells = pad_term_batch(term_sets, self.term_pad)
         scores = self.score_terms_batch(buf, ells)
-        results = []
-        for i, ell in enumerate(ells):
-            if ell == 0:
-                results.append(SearchResult(np.zeros(0, np.int32),
-                                            np.zeros(0, np.int32), 0, 0))
-                continue
-            cut = max(1, math.ceil(threshold * int(ell)))
-            hits = np.nonzero(scores[i] >= cut)[0]
-            order = np.argsort(-scores[i][hits], kind="stable")
-            results.append(SearchResult(hits[order].astype(np.int32),
-                                        scores[i][hits][order].astype(np.int32),
-                                        int(ell), cut))
-        return results
+        return [select_hits(scores[i], int(ell), threshold)
+                for i, ell in enumerate(ells)]
 
     def top_k(self, pattern, k: int = 10) -> SearchResult:
         """Rank documents by q-gram score, return the top k (paper's partial
-        sort selection)."""
-        codes = dna.encode_dna(pattern) if isinstance(pattern, str) else pattern
-        terms = dna.unique_terms(
-            dna.pack_kmers(codes, self.index.params.kmer,
-                           self.index.params.canonical))
+        sort selection). ``threshold`` reports the k-th best score."""
+        terms = compile_pattern(pattern, self.index.params)
+        if terms.shape[0] == 0:
+            return SearchResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
         scores = self.score_terms(terms)
-        k = min(k, scores.shape[0])
-        part = np.argpartition(-scores, k - 1)[:k]
-        order = part[np.argsort(-scores[part], kind="stable")]
-        return SearchResult(order.astype(np.int32),
-                            scores[order].astype(np.int32),
-                            terms.shape[0], 0)
+        return select_top_k(scores, terms.shape[0], k)

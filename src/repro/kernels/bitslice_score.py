@@ -244,6 +244,78 @@ def lookup_score_blocks(
     )(rows_idx, mask, arena)
 
 
+def _lookup_multi_kernel(idx_ref, mask_ref, arena_ref, out_ref, planes_ref,
+                         *, n_planes: int):
+    il = pl.program_id(3)
+    n_l = pl.num_programs(3)
+
+    @pl.when(il == 0)
+    def _init():
+        planes_ref[...] = jnp.zeros_like(planes_ref)
+
+    iq = pl.program_id(1)
+    ib = pl.program_id(2)
+    row = arena_ref[0, :] * mask_ref[iq, ib, il].astype(jnp.uint32)
+    carry = row
+    for j in range(n_planes):
+        new_carry = planes_ref[j, :] & carry
+        planes_ref[j, :] = planes_ref[j, :] ^ carry
+        carry = new_carry
+
+    @pl.when(il == n_l - 1)
+    def _expand():
+        shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+        acc = jnp.zeros(out_ref.shape[2:], jnp.int32)
+        for j in range(n_planes):
+            bits = ((planes_ref[j, :][:, None] >> shifts) & jnp.uint32(1))
+            acc += bits.astype(jnp.int32) << j
+        out_ref[0, 0] = acc
+
+
+def lookup_score_multi(
+    arena: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused MULTI-QUERY gather+score (the batched-serving hot loop).
+
+    arena uint32 [R, W]; rows_idx int32 [Q, nb, L] (term row per query per
+    sub-index block); mask int32 [Q, nb, L] -> int32 [Q, nb, W, 32].
+
+    The batched generalization of lookup_score_blocks: the grid grows a
+    query dimension, every (word-tile, query, block) cell streams its L
+    rows HBM->VMEM via scalar-prefetched indices and keeps Harley-Seal
+    counter planes in a single shared VMEM scratch. Queries share arena
+    tiles through the same BlockSpec pipeline, so a batch never
+    materializes the [Q, L, W] gather that forces the unfused path to the
+    pure-jnp ref scorer under vmap.
+    """
+    R, W = arena.shape
+    Q, nb, L = rows_idx.shape
+    n_planes = _num_planes(L)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W // word_block, Q, nb, L),
+        in_specs=[
+            pl.BlockSpec((1, word_block),
+                         lambda iw, iq, ib, il, idx, msk: (idx[iq, ib, il], iw)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, word_block, 32),
+                               lambda iw, iq, ib, il, idx, msk: (iq, ib, iw, 0)),
+        scratch_shapes=[pltpu.VMEM((n_planes, word_block), jnp.uint32)],
+    )
+    kernel = functools.partial(_lookup_multi_kernel, n_planes=n_planes)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, nb, W, 32), jnp.int32),
+        interpret=interpret,
+    )(rows_idx, mask, arena)
+
+
 def lookup_score(
     arena: jnp.ndarray,
     rows_idx: jnp.ndarray,

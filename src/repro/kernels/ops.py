@@ -99,6 +99,28 @@ def bitslice_lookup_score_blocks(
     return out[:, :W].reshape(-1)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitslice_lookup_score_multi(
+    arena: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Multi-query multi-block fused gather+score: (arena [R, W], rows_idx
+    [Q, nb, L], mask [Q, nb, L]) -> int32 [Q, nb * W * 32], each query in
+    (block, word, bit) slot order — the serving batch hot path."""
+    if interpret is None:
+        interpret = _use_interpret()
+    R, W = arena.shape
+    Q = rows_idx.shape[0]
+    wb = min(_k.DEFAULT_WORD_BLOCK, max(8, W))
+    arena_p = _pad_axis(arena, 1, wb)
+    out = _k.lookup_score_multi(
+        arena_p, rows_idx.astype(jnp.int32), mask.astype(jnp.int32),
+        word_block=wb, interpret=interpret)
+    return out[:, :, :W].reshape(Q, -1)
+
+
 def and_rows(rows: jnp.ndarray) -> jnp.ndarray:
     """AND over the k hash rows: uint32 [L, k, W] -> [L, W] (jnp; XLA fuses
     this into the surrounding gather — measured no win from a kernel)."""

@@ -53,6 +53,22 @@ def bitslice_lookup_score_blocks_ref(
     return bits.sum(axis=1).reshape(-1)               # sum over L
 
 
+def bitslice_lookup_score_multi_ref(
+    arena: jnp.ndarray, rows_idx: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Multi-query multi-block fused GATHER + ADD oracle.
+
+    arena uint32 [R, W]; rows_idx int32 [Q, nb, L]; mask int32 [Q, nb, L]
+    -> int32 [Q, nb * W * 32], each query in (block, word, bit) slot order.
+    """
+    Q = rows_idx.shape[0]
+    gathered = arena[rows_idx]                        # [Q, nb, L, W]
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, None, None, :]
+    bits = ((gathered[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    bits = bits * mask[:, :, :, None, None]
+    return bits.sum(axis=2).reshape(Q, -1)            # sum over L
+
+
 def and_rows_ref(rows: jnp.ndarray) -> jnp.ndarray:
     """AND step over the k hash functions: uint32 [L, k, W] -> [L, W]."""
     out = rows[:, 0]

@@ -11,15 +11,16 @@ over ("pod", "data") (FSDP on "data") and tensor/expert dims over "model".
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..compat import make_mesh as _compat_make_mesh
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
-    """jax.make_mesh with explicit Auto axis types (keeps the historical
-    shard_map/pjit behaviour stable across jax versions)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    """jax.make_mesh with explicit Auto axis types where the installed jax
+    supports them (keeps the historical shard_map/pjit behaviour stable
+    across jax versions)."""
+    return _compat_make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -1,12 +1,22 @@
-"""Index-serving launcher (the paper's workload): build or load a COBS
-index and serve batched approximate-matching queries.
+"""Index-serving launcher: drive the repro.serve query-serving subsystem
+(micro-batcher + planner + caches) under generated load and report
+latency/throughput.
 
-    PYTHONPATH=src python -m repro.launch.serve --n-docs 256 --batches 10
+    PYTHONPATH=src python -m repro.launch.serve --n-docs 256 --queries 200
+    PYTHONPATH=src python -m repro.launch.serve --mode open --qps 500
 
-Reports per-batch latency percentiles and validates results against the
-ground-truth origin labels — the end-to-end driver for the 'serve a small
-model with batched requests' deliverable (the paper is an index, so the
-served artifact is the index).
+Two load models:
+
+* ``closed`` — a fixed window of in-flight queries: submit ``--concurrency``
+  at a time, drain, repeat. Measures the system's capacity (best-case
+  batching).
+* ``open``   — Poisson arrivals at ``--qps`` on the wall clock: submit at
+  each arrival instant, ``step`` the server in between so flush timers
+  fire. Measures latency under a fixed offered load, queueing included.
+
+Results are validated against the ground-truth origin labels of the
+synthetic query set, and the report includes the planner's kernel mix and
+cache hit rate alongside p50/p99.
 """
 from __future__ import annotations
 
@@ -15,23 +25,12 @@ import time
 
 import numpy as np
 
-from ..core import IndexParams, QueryEngine, build_compact, load_index, save_index
+from ..core import IndexParams, build_compact, load_index, save_index
 from ..data import make_corpus, make_queries
+from ..serve import QueryServer, ServerConfig, Status
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n-docs", type=int, default=256)
-    ap.add_argument("--batches", type=int, default=10)
-    ap.add_argument("--batch-size", type=int, default=32)
-    ap.add_argument("--query-len", type=int, default=100)
-    ap.add_argument("--threshold", type=float, default=0.8)
-    ap.add_argument("--method", default="vertical",
-                    choices=["ref", "unpack", "vertical", "lookup"])
-    ap.add_argument("--index-dir", default=None,
-                    help="load/save the index here")
-    args = ap.parse_args()
-
+def build_or_load(args):
     corpus = make_corpus(args.n_docs, k=15, mean_length=2000, sigma=1.0,
                          seed=0)
     index = None
@@ -50,26 +49,114 @@ def main() -> None:
               f"{index.size_bytes() / 2**20:.1f} MiB in {time.time()-t0:.1f}s")
         if args.index_dir:
             save_index(index, args.index_dir)
+    return corpus, index
 
-    eng = QueryEngine(index, method=args.method)
-    lat, correct, total = [], 0, 0
-    for b in range(args.batches):
-        queries, origin = make_queries(
-            corpus, n_pos=args.batch_size // 2, n_neg=args.batch_size // 2,
-            length=args.query_len, seed=100 + b)
-        t0 = time.perf_counter()
-        results = eng.search_batch(queries, threshold=args.threshold)
-        lat.append(time.perf_counter() - t0)
-        for r, o in zip(results, origin):
-            ids = set(r.doc_ids.tolist())
-            correct += (o in ids) if o >= 0 else (len(ids) == 0)
-            total += 1
-    lat_ms = np.array(lat) * 1e3
-    print(f"served {total} queries in {args.batches} batches "
-          f"({args.batch_size}/batch, method={args.method})")
-    print(f"batch latency ms: p50={np.percentile(lat_ms, 50):.1f} "
-          f"p90={np.percentile(lat_ms, 90):.1f} max={lat_ms.max():.1f} "
-          f"(first batch includes jit)")
+
+def make_workload(corpus, n_queries: int, seed: int = 100):
+    """Mixed-length query stream of EXACTLY n_queries (short queries
+    exercise the planner's unpack path, long ones the fused/vertical
+    paths)."""
+    queries, origin = [], []
+    lengths = (40, 80, 160, 320)
+    for i, length in enumerate(lengths):
+        count = n_queries // len(lengths) + (i < n_queries % len(lengths))
+        if count == 0:
+            continue
+        q, o = make_queries(corpus, n_pos=count - count // 2,
+                            n_neg=count // 2, length=length,
+                            seed=seed + i)
+        queries.extend(q)
+        origin.extend(o)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(queries))
+    return [queries[i] for i in perm], [origin[i] for i in perm]
+
+
+def run_closed(server: QueryServer, queries, threshold: float,
+               concurrency: int) -> list[int]:
+    ids = []
+    for i in range(0, len(queries), concurrency):
+        for q in queries[i: i + concurrency]:
+            ids.append(server.submit(q, threshold=threshold))
+        server.drain()
+    return ids
+
+
+def run_open(server: QueryServer, queries, threshold: float, qps: float
+             ) -> list[int]:
+    rng = np.random.default_rng(0)
+    gaps = rng.exponential(1.0 / qps, size=len(queries))
+    arrival = server.clock() + np.cumsum(gaps)
+    ids = []
+    for q, t_arr in zip(queries, arrival):
+        while server.clock() < t_arr:
+            server.step()                     # let flush timers fire
+            remaining = t_arr - server.clock()
+            if remaining > 0:
+                time.sleep(min(remaining, 1e-4))
+        ids.append(server.submit(q, threshold=threshold))
+        server.step()
+    server.drain()
+    return ids
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=160)
+    ap.add_argument("--threshold", type=float, default=0.8)
+    ap.add_argument("--mode", default="closed", choices=["closed", "open"])
+    ap.add_argument("--concurrency", type=int, default=32,
+                    help="closed-loop in-flight window")
+    ap.add_argument("--qps", type=float, default=200.0,
+                    help="open-loop offered load")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--index-dir", default=None,
+                    help="load/save the index here")
+    ap.add_argument("--no-warmup", action="store_true")
+    args = ap.parse_args()
+    if args.mode == "open" and args.qps <= 0:
+        ap.error("--qps must be > 0 in open-loop mode")
+    if args.concurrency < 1:
+        ap.error("--concurrency must be >= 1")
+
+    corpus, index = build_or_load(args)
+    server = QueryServer(index, ServerConfig(
+        max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3))
+    queries, origin = make_workload(corpus, args.queries)
+
+    if args.mode == "closed":
+        runner = lambda: run_closed(server, queries, args.threshold,
+                                    args.concurrency)
+    else:
+        runner = lambda: run_open(server, queries, args.threshold, args.qps)
+
+    if not args.no_warmup:
+        # Replay the measured routine once so every (bucket, batch-shape)
+        # jit entry the timed run hits is already compiled — closed-loop
+        # batching is deterministic, so the shape sets match exactly.
+        runner()
+        server.pop_responses()
+        server.reset_metrics(clear_caches=True)
+
+    t0 = time.perf_counter()
+    ids = runner()
+    wall = time.perf_counter() - t0
+
+    responses = server.pop_responses()
+    correct = total = 0
+    for rid, o in zip(ids, origin):
+        r = responses.get(rid)
+        if r is None or r.status != Status.OK:
+            continue
+        hit_ids = set(r.result.doc_ids.tolist())
+        correct += (o in hit_ids) if o >= 0 else (len(hit_ids) == 0)
+        total += 1
+    snap = server.metrics.snapshot()
+    print(f"mode={args.mode} served {snap.served} queries in {wall:.2f}s "
+          f"-> {snap.served / wall:.0f} qps")
+    print(snap.report())
     print(f"accuracy vs ground truth: {correct}/{total}")
 
 

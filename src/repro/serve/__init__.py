@@ -1,3 +1,26 @@
+"""Serving subsystem.
+
+Two serving surfaces live here:
+
+* the COBS query-serving stack (the paper's workload): shape-bucketed
+  micro-batching (`batcher`), kernel planning (`planner`), LRU caches
+  (`cache`), latency/occupancy metrics (`metrics`), and the `QueryServer`
+  front-end (`server`). Driven by `repro.launch.serve` and
+  `benchmarks.serving`.
+* LM inference steps (`step`) for the model substrate: prefill/decode and
+  the greedy generation driver.
+"""
+from .batcher import MicroBatch, MicroBatcher
+from .cache import LRUCache, result_key, term_key
+from .metrics import MetricsSnapshot, ServingMetrics
+from .planner import QueryPlan, QueryPlanner
+from .request import QueryRequest, QueryResponse, Status
+from .server import QueryServer, ServerConfig
 from .step import make_prefill_step, make_decode_step, greedy_generate
 
-__all__ = ["make_prefill_step", "make_decode_step", "greedy_generate"]
+__all__ = [
+    "MicroBatch", "MicroBatcher", "LRUCache", "result_key", "term_key",
+    "MetricsSnapshot", "ServingMetrics", "QueryPlan", "QueryPlanner",
+    "QueryRequest", "QueryResponse", "Status", "QueryServer", "ServerConfig",
+    "make_prefill_step", "make_decode_step", "greedy_generate",
+]

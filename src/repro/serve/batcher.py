@@ -1,0 +1,114 @@
+"""Shape-bucketed dynamic micro-batching.
+
+Queries arrive with arbitrary term counts; jit'd scoring is shape-
+specialized. Padding every query to the global maximum wastes compute,
+while padding each to its own length explodes the jit cache. The batcher
+takes the middle road the serving literature (and COBS §3's bulk queries)
+points at: queries are grouped into *buckets* by padded term length
+(multiples of ``term_pad``), and each bucket accumulates a dense
+micro-batch that flushes when it is full, when its oldest entry has waited
+``max_wait_s``, or on an explicit drain. Bucket count — and therefore the
+jit-cache footprint — is bounded by the term-length spread, not the query
+count.
+
+Backpressure is a hard cap on queued requests: ``submit`` refuses beyond
+``max_queued`` and the caller answers the client with Status.REJECTED
+instead of letting the queue grow without bound. Deadline handling is at
+flush time: expired requests are returned separately and never scored.
+
+The batcher is passive (no threads): a driver calls ``submit`` and then
+``poll``/``drain`` from its own loop, which keeps it deterministic for
+tests and embeddable under any async runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+
+from ..core.query import padded_len
+from .request import QueryRequest
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """A dense, same-bucket group of live requests ready to score."""
+    bucket: int                       # padded term length of every member
+    requests: list[QueryRequest]
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+
+class MicroBatcher:
+    def __init__(self, *, term_pad: int = 64, max_batch: int = 32,
+                 max_wait_s: float = 0.002, max_queued: int = 1024):
+        if max_batch < 1 or max_queued < 1:
+            raise ValueError("max_batch and max_queued must be >= 1")
+        self.term_pad = term_pad
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.max_queued = max_queued
+        # bucket -> FIFO of requests; OrderedDict gives deterministic
+        # bucket visit order (insertion order of first use).
+        self._buckets: "OrderedDict[int, deque[QueryRequest]]" = OrderedDict()
+        self._queued = 0
+
+    # -- enqueue -----------------------------------------------------------
+    def __len__(self) -> int:
+        return self._queued
+
+    @property
+    def full(self) -> bool:
+        return self._queued >= self.max_queued
+
+    def bucket_of(self, n_terms: int) -> int:
+        return padded_len(n_terms, self.term_pad)
+
+    def submit(self, req: QueryRequest) -> bool:
+        """Queue a request; False = refused (backpressure)."""
+        if self.full:
+            return False
+        b = self.bucket_of(req.n_terms)
+        req.bucket = b
+        self._buckets.setdefault(b, deque()).append(req)
+        self._queued += 1
+        return True
+
+    # -- flush -------------------------------------------------------------
+    def _take(self, q: "deque[QueryRequest]", now: float, limit: int,
+              expired: list[QueryRequest]) -> list[QueryRequest]:
+        live: list[QueryRequest] = []
+        while q and len(live) < limit:
+            r = q.popleft()
+            self._queued -= 1
+            (expired if r.expired(now) else live).append(r)
+        return live
+
+    def poll(self, now: float, *, force: bool = False
+             ) -> tuple[list[MicroBatch], list[QueryRequest]]:
+        """Collect every bucket that is due at ``now``.
+
+        Returns (batches, expired): dense micro-batches to score plus the
+        requests whose deadline passed while queued (to answer DROPPED).
+        force=True flushes everything regardless of fill/wait — the drain
+        path and the load-generator's end-of-run.
+        """
+        batches: list[MicroBatch] = []
+        expired: list[QueryRequest] = []
+        for b, q in list(self._buckets.items()):
+            while q:
+                due = (force or len(q) >= self.max_batch
+                       or now - q[0].submitted_at >= self.max_wait_s
+                       or q[0].expired(now))
+                if not due:
+                    break
+                live = self._take(q, now, self.max_batch, expired)
+                if live:
+                    batches.append(MicroBatch(b, live))
+            if not q:
+                del self._buckets[b]
+        return batches, expired
+
+    def occupancy(self, batch: MicroBatch) -> float:
+        return batch.size / self.max_batch

@@ -1,0 +1,101 @@
+"""Serving metrics: latency percentiles, batch occupancy, cache hit rate.
+
+Plain in-process counters — the aggregation a production exporter would
+scrape. Latencies are recorded per REQUEST (queue wait + service), batch
+stats per micro-batch, so occupancy weighs each flush equally while the
+percentiles weigh each query.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MetricsSnapshot:
+    served: int
+    rejected: int
+    dropped: int
+    cache_hits: int
+    batches: int
+    p50_ms: float
+    p99_ms: float
+    mean_occupancy: float
+    cache_hit_rate: float
+    methods: dict[str, int]
+
+    def report(self) -> str:
+        meth = " ".join(f"{m}={n}" for m, n in sorted(self.methods.items()))
+        return (f"served={self.served} rejected={self.rejected} "
+                f"dropped={self.dropped} batches={self.batches} "
+                f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
+                f"occupancy={self.mean_occupancy:.2f} "
+                f"cache_hit_rate={self.cache_hit_rate:.2f} "
+                f"dispatch[{meth}]")
+
+
+class ServingMetrics:
+    """``window`` bounds the per-request/per-batch sample history (sliding
+    window for the percentiles); the integer counters stay exact totals
+    for the server's whole lifetime."""
+
+    def __init__(self, window: int = 65536):
+        self.latencies_s: "deque[float]" = deque(maxlen=window)
+        self.wait_s: "deque[float]" = deque(maxlen=window)
+        self.service_s: "deque[float]" = deque(maxlen=window)
+        self.occupancies: "deque[float]" = deque(maxlen=window)
+        self.batch_sizes: "deque[int]" = deque(maxlen=window)
+        self.method_counts: Counter[str] = Counter()
+        self.served = 0
+        self.rejected = 0
+        self.dropped = 0
+        self.cache_hits = 0
+        self.n_batches = 0
+
+    # -- recording ---------------------------------------------------------
+    def record_request(self, *, wait_s: float, service_s: float,
+                       cached: bool = False) -> None:
+        self.served += 1
+        self.wait_s.append(wait_s)
+        self.service_s.append(service_s)
+        self.latencies_s.append(wait_s + service_s)
+        if cached:
+            self.cache_hits += 1
+
+    def record_batch(self, size: int, occupancy: float, method: str) -> None:
+        self.batch_sizes.append(size)
+        self.occupancies.append(occupancy)
+        self.method_counts[method] += size
+        self.n_batches += 1
+
+    def record_rejected(self) -> None:
+        self.rejected += 1
+
+    def record_dropped(self) -> None:
+        self.dropped += 1
+
+    # -- reading -----------------------------------------------------------
+    def percentile_ms(self, p: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.fromiter(self.latencies_s, float),
+                                   p) * 1e3)
+
+    def snapshot(self) -> MetricsSnapshot:
+        n_cacheable = self.served
+        return MetricsSnapshot(
+            served=self.served,
+            rejected=self.rejected,
+            dropped=self.dropped,
+            cache_hits=self.cache_hits,
+            batches=self.n_batches,
+            p50_ms=self.percentile_ms(50),
+            p99_ms=self.percentile_ms(99),
+            mean_occupancy=(float(np.mean(self.occupancies))
+                            if self.occupancies else 0.0),
+            cache_hit_rate=(self.cache_hits / n_cacheable
+                            if n_cacheable else 0.0),
+            methods=dict(self.method_counts),
+        )

@@ -1,0 +1,106 @@
+"""Query planner: pick the scoring kernel per micro-batch.
+
+The repo has four scoring methods with very different cost shapes (see
+repro.kernels.bitslice_score):
+
+* ``lookup``   — fused gather+score with scalar-prefetched row indices;
+  k=1 only. For batches this is the multi-query kernel: one pallas_call
+  for the whole [Q, nb, L] batch, shared arena tiles, and no [Q, L, W]
+  gathered intermediate. The preferred path whenever it applies.
+* ``vertical`` — Harley–Seal bit-sliced counters over a materialized
+  gather; O(2 log2 L) vector ops per word. Wins for long queries.
+* ``unpack``   — paper-faithful 32-way expansion; O(32) ops per word but
+  the lowest fixed cost. Wins for short queries where the fused kernel's
+  per-row DMA pipeline and the vertical plane expansion dominate.
+* ``ref``      — pure-jnp oracle; never planned, test/debug only.
+
+The planner inspects the index layout ONCE (n_hashes, block count, arena
+size) and per batch sees only (bucket = padded term length, batch size),
+so a plan is a pure function of a small key — score functions are built
+lazily per method and memoized, keeping the jit cache bounded by the
+bucket set times the method set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+from ..core.index import BitSlicedIndex
+from ..core.query import make_batch_score_fn, make_score_fn
+
+# Below this many (padded) terms the fixed costs dominate and the simple
+# unpack expansion is fastest; at/above it Harley–Seal / fused lookup win.
+# The crossover in kernels/bitslice_score.py's measurements is ell ~100;
+# buckets are multiples of term_pad so the default bites at 64-term pads.
+SHORT_QUERY_TERMS = 96
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Dispatch decision for one micro-batch."""
+    method: str        # 'lookup' | 'vertical' | 'unpack'
+    bucket: int        # padded term length (jit-cache shape key)
+    batch_size: int    # live queries in the batch
+    fused: bool        # True = single pallas_call for the whole batch
+
+
+class QueryPlanner:
+    """Chooses the kernel for each (bucket, batch-size) micro-batch and
+    owns the memoized score functions for the methods it dispatches."""
+
+    def __init__(self, index: BitSlicedIndex, *,
+                 short_query_terms: int = SHORT_QUERY_TERMS):
+        self.index = index
+        self.short_query_terms = short_query_terms
+        self._k = index.params.n_hashes
+        self._single_fns: dict[str, object] = {}
+        self._batch_fns: dict[str, object] = {}
+        self.dispatch_counts: Counter[str] = Counter()
+
+    # -- planning ----------------------------------------------------------
+    def plan(self, bucket: int, batch_size: int) -> QueryPlan:
+        """Pure dispatch decision; records nothing."""
+        if batch_size > 1:
+            # Batched: the fused multi-query kernel whenever it applies
+            # (k=1 — the paper's default); otherwise the gather path, with
+            # the ADD kernel picked by query length.
+            if self._k == 1:
+                method = "lookup"
+            else:
+                method = ("unpack" if bucket < self.short_query_terms
+                          else "vertical")
+            return QueryPlan(method, bucket, batch_size,
+                             fused=(method == "lookup"))
+        # Singletons: short queries take the cheap expansion; long ones the
+        # fused gather (k=1) or vertical counters.
+        if bucket < self.short_query_terms:
+            method = "unpack"
+        elif self._k == 1:
+            method = "lookup"
+        else:
+            method = "vertical"
+        return QueryPlan(method, bucket, batch_size, fused=False)
+
+    # -- score-function cache ---------------------------------------------
+    def batch_score_fn(self, plan: QueryPlan):
+        """score(arena, row_offset, block_width, terms [Q,L,2], n_valid [Q])
+        -> [Q, n_slots] for this plan's method."""
+        fn = self._batch_fns.get(plan.method)
+        if fn is None:
+            fn = make_batch_score_fn(self._k, plan.method)
+            self._batch_fns[plan.method] = fn
+        return fn
+
+    def single_score_fn(self, plan: QueryPlan):
+        fn = self._single_fns.get(plan.method)
+        if fn is None:
+            fn = make_score_fn(self._k, plan.method)
+            self._single_fns[plan.method] = fn
+        return fn
+
+    def record(self, plan: QueryPlan) -> None:
+        self.dispatch_counts[plan.method] += plan.batch_size
+
+    @property
+    def methods_used(self) -> tuple[str, ...]:
+        return tuple(sorted(self.dispatch_counts))

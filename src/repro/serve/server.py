@@ -1,0 +1,246 @@
+"""QueryServer: the serving front-end tying planner, batcher, caches and
+metrics together.
+
+Life of a request:
+
+1. ``submit`` compiles the pattern to distinct packed terms, answers
+   immediately on a result-cache hit, a single-term row-cache hit, or
+   backpressure (queue full), and otherwise enqueues into the
+   shape-bucketed micro-batcher.
+2. ``step`` (called from the driver's loop) polls the batcher; every due
+   micro-batch is planned (kernel choice from index layout x batch shape),
+   scored in one device call, split back into per-request results with the
+   request's own threshold, and cached.
+3. Responses accumulate until ``pop_responses``.
+
+The server is single-threaded and clock-injectable: drivers decide the
+cadence (closed-loop benchmarks call ``drain``; open-loop ones call
+``step`` on arrival timestamps), and tests run on a virtual clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import hashing
+from ..core.index import BitSlicedIndex
+from ..core.query import (SearchResult, compile_pattern, select_hits)
+from .batcher import MicroBatch, MicroBatcher
+from .cache import LRUCache, result_key, term_key
+from .metrics import ServingMetrics
+from .planner import QueryPlanner
+from .request import QueryRequest, QueryResponse, Status
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    term_pad: int = 64          # bucket granularity (multiples of this)
+    max_batch: int = 32         # micro-batch cap per bucket
+    max_wait_s: float = 0.002   # flush timer for partially-filled buckets
+    max_queued: int = 1024      # backpressure cap across all buckets
+    result_cache: int = 1024    # whole-query LRU entries (0 disables)
+    row_cache: int = 4096       # single-term row LRU entries (0 disables)
+    default_threshold: float = 0.8
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+class QueryServer:
+    def __init__(self, index: BitSlicedIndex,
+                 config: ServerConfig = ServerConfig(), *,
+                 clock: Callable[[], float] = time.monotonic):
+        self.index = index
+        self.config = config
+        self.clock = clock
+        self.planner = QueryPlanner(index)
+        self.batcher = MicroBatcher(
+            term_pad=config.term_pad, max_batch=config.max_batch,
+            max_wait_s=config.max_wait_s, max_queued=config.max_queued)
+        self.metrics = ServingMetrics()
+        self.results_cache = LRUCache(config.result_cache)
+        self.rows_cache = LRUCache(config.row_cache)
+        self._responses: dict[int, QueryResponse] = {}
+        self._next_id = 0
+        self._host_slot = np.asarray(index.doc_slot)
+        # Host arena copy for the row-cache point-query path, built on
+        # first use: eager np.asarray(arena) would double resident memory
+        # for large indexes even with the point-query path disabled.
+        self._host_arena: Optional[np.ndarray] = None
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, pattern=None, *, terms: Optional[np.ndarray] = None,
+               threshold: Optional[float] = None,
+               deadline: Optional[float] = None) -> int:
+        """Accept one query (pattern or precompiled terms); returns the
+        request id. Fast paths answer immediately; everything else lands
+        in the micro-batcher until the next ``step``/``drain``."""
+        if (pattern is None) == (terms is None):
+            raise ValueError("pass exactly one of pattern / terms")
+        if terms is None:
+            terms = compile_pattern(pattern, self.index.params)
+        threshold = (self.config.default_threshold if threshold is None
+                     else threshold)
+        now = self.clock()
+        rid = self._next_id
+        self._next_id += 1
+        ell = terms.shape[0]
+
+        if ell == 0:
+            empty = SearchResult(np.zeros(0, np.int32),
+                                 np.zeros(0, np.int32), 0, 0)
+            self._answer(rid, Status.OK, empty, wait=0.0, service=0.0)
+            return rid
+
+        key = result_key(terms, threshold)
+        hit = self.results_cache.get(key)
+        if hit is not None:
+            self.metrics.record_request(wait_s=0.0, service_s=0.0,
+                                        cached=True)
+            self._responses[rid] = QueryResponse(
+                rid, Status.OK, hit, method="cache", batch_size=1,
+                cached=True)
+            return rid
+
+        if ell == 1 and self.rows_cache.capacity:
+            result, row_hit = self._point_query(terms, threshold)
+            service = self.clock() - now
+            self.metrics.record_request(wait_s=0.0, service_s=service,
+                                        cached=row_hit)
+            self._responses[rid] = QueryResponse(
+                rid, Status.OK, result, method="row_cache", batch_size=1,
+                wait_s=0.0, service_s=service, cached=row_hit)
+            self.results_cache.put(key, result)
+            return rid
+
+        req = QueryRequest(rid, terms, ell, threshold,
+                           submitted_at=now, deadline=deadline)
+        if not self.batcher.submit(req):
+            self.metrics.record_rejected()
+            self._responses[rid] = QueryResponse(rid, Status.REJECTED)
+            return rid
+        return rid
+
+    # -- point queries (COBS single-k-mer lookups) via the row cache --------
+    def _gather_host_row(self, term: np.ndarray) -> np.ndarray:
+        """ANDed arena row for one term, host-side: uint32 [nb * W] in
+        slot-word order (mirrors plan_rows + gather exactly)."""
+        if self._host_arena is None:
+            self._host_arena = np.asarray(self.index.arena)
+        h = hashing.hash_terms_np(term[None, :],
+                                  self.index.params.n_hashes)[0]  # [k]
+        rows = (h[:, None] % np.asarray(self.index.block_width, np.uint32)
+                + np.asarray(self.index.row_offset, np.uint32))   # [k, nb]
+        g = self._host_arena[rows.astype(np.int64)]               # [k, nb, W]
+        anded = g[0]
+        for i in range(1, g.shape[0]):
+            anded = anded & g[i]
+        return anded.reshape(-1)                                  # [nb * W]
+
+    def _point_query(self, terms: np.ndarray, threshold: float
+                     ) -> tuple[SearchResult, bool]:
+        """Returns (result, served-from-row-cache)."""
+        k = term_key(terms[0])
+        row = self.rows_cache.get(k)
+        hit = row is not None
+        if row is None:
+            row = self._gather_host_row(terms[0])
+            self.rows_cache.put(k, row)
+        bits = ((row[:, None] >> np.arange(32, dtype=np.uint32)) & 1)
+        scores = bits.astype(np.int32).reshape(-1)[self._host_slot]
+        return select_hits(scores, 1, threshold), hit
+
+    # -- batch scoring -------------------------------------------------------
+    def _score_batch(self, batch: MicroBatch) -> None:
+        t0 = self.clock()
+        Q, B = batch.size, batch.bucket
+        plan = self.planner.plan(B, Q)
+        ells = np.array([r.n_terms for r in batch.requests], dtype=np.int32)
+        if Q == 1:
+            buf = np.zeros((B, 2), dtype=np.uint32)
+            buf[: ells[0]] = batch.requests[0].terms
+            fn = self.planner.single_score_fn(plan)
+            slots = fn(self.index.arena, self.index.row_offset,
+                       self.index.block_width, jnp.asarray(buf),
+                       jnp.int32(ells[0]))
+            scores = np.asarray(slots)[None, self._host_slot]
+        else:
+            # Pad the query axis to a power of two so jit entries stay
+            # bounded at (buckets x log2 max_batch) rather than one per
+            # observed batch size.
+            q_pad = _next_pow2(Q)
+            buf = np.zeros((q_pad, B, 2), dtype=np.uint32)
+            for i, r in enumerate(batch.requests):
+                buf[i, : r.n_terms] = r.terms
+            n_valid = np.zeros(q_pad, dtype=np.int32)
+            n_valid[:Q] = ells
+            fn = self.planner.batch_score_fn(plan)
+            slots = fn(self.index.arena, self.index.row_offset,
+                       self.index.block_width, jnp.asarray(buf),
+                       jnp.asarray(n_valid))
+            scores = np.asarray(slots)[:Q][:, self._host_slot]
+        t1 = self.clock()
+        service = t1 - t0
+
+        self.planner.record(plan)
+        self.metrics.record_batch(Q, self.batcher.occupancy(batch),
+                                  plan.method)
+        for i, r in enumerate(batch.requests):
+            result = select_hits(scores[i], r.n_terms, r.threshold)
+            wait = max(0.0, t0 - r.submitted_at)
+            self.metrics.record_request(wait_s=wait, service_s=service)
+            self._responses[r.request_id] = QueryResponse(
+                r.request_id, Status.OK, result, method=plan.method,
+                batch_size=Q, wait_s=wait, service_s=service)
+            self.results_cache.put(result_key(r.terms, r.threshold), result)
+
+    def _answer(self, rid: int, status: Status, result, *, wait: float,
+                service: float) -> None:
+        self.metrics.record_request(wait_s=wait, service_s=service)
+        self._responses[rid] = QueryResponse(rid, status, result,
+                                             wait_s=wait, service_s=service)
+
+    # -- serving loop --------------------------------------------------------
+    def step(self, now: Optional[float] = None, *, force: bool = False
+             ) -> int:
+        """Score every micro-batch due at ``now``; returns requests answered
+        this step (scored + dropped)."""
+        now = self.clock() if now is None else now
+        batches, expired = self.batcher.poll(now, force=force)
+        for r in expired:
+            self.metrics.record_dropped()
+            self._responses[r.request_id] = QueryResponse(
+                r.request_id, Status.DROPPED,
+                wait_s=max(0.0, now - r.submitted_at))
+        n = len(expired)
+        for batch in batches:
+            self._score_batch(batch)
+            n += batch.size
+        return n
+
+    def drain(self) -> None:
+        """Flush every queued request regardless of batch fill or timers."""
+        while len(self.batcher):
+            self.step(force=True)
+
+    def reset_metrics(self, *, clear_caches: bool = False) -> None:
+        """Fresh counters (drivers call this after jit warmup so compile
+        time does not pollute the latency percentiles). clear_caches=True
+        also empties the result/row caches — needed when the warmup replays
+        the measurement workload, which would otherwise be served entirely
+        from cache."""
+        self.metrics = ServingMetrics()
+        self.planner.dispatch_counts.clear()
+        if clear_caches:
+            self.results_cache = LRUCache(self.results_cache.capacity)
+            self.rows_cache = LRUCache(self.rows_cache.capacity)
+
+    def pop_responses(self) -> dict[int, QueryResponse]:
+        out = self._responses
+        self._responses = {}
+        return out

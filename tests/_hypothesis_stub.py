@@ -1,0 +1,74 @@
+"""Minimal stand-in for the `hypothesis` API used by this test suite.
+
+The container image does not ship hypothesis and nothing may be pip
+installed, so conftest.py aliases this module into ``sys.modules`` when the
+real package is missing. It implements exactly the surface the tests use —
+``@given`` with ``st.integers`` / ``st.sampled_from`` and ``@settings(
+max_examples=..., deadline=...)`` — as a deterministic seeded sweep: every
+test still runs ``max_examples`` distinct drawn inputs, it just loses
+hypothesis's shrinking and example database. With the real package
+installed, conftest leaves it alone and this file is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+class strategies:
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            # Deterministic per-test seed so failures reproduce exactly
+            # (crc32, not hash(): str hashing is salted per process).
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = [s.draw(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+
+        # Drawn params fill the TRAILING positions; only the leading ones
+        # are pytest fixtures. Hide the drawn ones from pytest's collector.
+        sig = inspect.signature(fn)
+        fixture_params = list(sig.parameters.values())[:-len(strats)] \
+            if strats else list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

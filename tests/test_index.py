@@ -142,6 +142,61 @@ def test_merge_compact_preserves_query_results():
             assert sm[o] == terms.shape[0]
 
 
+def test_merge_compact_union_of_results():
+    """Merged-index queries == the UNION of per-index results, with b's
+    doc ids shifted by a.n_docs (the doc_slot remapping contract)."""
+    from repro.core import QueryEngine, merge_compact
+    from repro.data import make_corpus, make_queries
+    params = IndexParams(kmer=15)
+    ca = make_corpus(40, k=15, mean_length=500, sigma=1.0, seed=41)
+    cb = make_corpus(24, k=15, mean_length=500, sigma=1.0, seed=42)
+    a = build_compact(ca.doc_terms, params, block_docs=32, row_align=64)
+    b = build_compact(cb.doc_terms, params, block_docs=32, row_align=64)
+    m = merge_compact(a, b)
+
+    ea, eb, em = QueryEngine(a), QueryEngine(b), QueryEngine(m)
+    qa, _ = make_queries(ca, n_pos=4, n_neg=2, length=80, seed=43)
+    qb, _ = make_queries(cb, n_pos=4, n_neg=2, length=80, seed=44)
+    for q in list(qa) + list(qb):
+        ra, rb, rm = (e.search(q, threshold=0.8) for e in (ea, eb, em))
+        want = set(ra.doc_ids.tolist()) | {
+            int(d) + a.n_docs for d in rb.doc_ids}
+        assert set(rm.doc_ids.tolist()) == want
+        # scores survive the merge doc-by-doc
+        score_of = dict(zip(rm.doc_ids.tolist(), rm.scores.tolist()))
+        for d, s in zip(ra.doc_ids.tolist(), ra.scores.tolist()):
+            assert score_of[d] == s
+        for d, s in zip(rb.doc_ids.tolist(), rb.scores.tolist()):
+            assert score_of[d + a.n_docs] == s
+
+
+def test_merge_classic_union_of_results():
+    """Same union contract for the classic (column-concatenation) merge."""
+    from repro.core import QueryEngine
+    from repro.data import make_corpus, make_queries
+    params = IndexParams(kmer=15)
+    ca = make_corpus(20, k=15, mean_length=400, sigma=0.5, seed=45)
+    cb = make_corpus(12, k=15, mean_length=400, sigma=0.5, seed=46)
+    # classic width is set by the largest doc: cap b's docs at a's max and
+    # append a's largest so both filters come out identical
+    biggest = max(ca.doc_terms, key=lambda t: t.shape[0])
+    b_docs = [t for t in cb.doc_terms
+              if t.shape[0] <= biggest.shape[0]] + [biggest]
+    a = build_classic(ca.doc_terms, params, row_align=64)
+    b = build_classic(b_docs, params, row_align=64)
+    assert int(a.block_width[0]) == int(b.block_width[0])
+    m = merge_classic(a, b)
+    assert m.n_docs == a.n_docs + b.n_docs
+
+    ea, eb, em = QueryEngine(a), QueryEngine(b), QueryEngine(m)
+    qa, _ = make_queries(ca, n_pos=4, n_neg=2, length=80, seed=47)
+    for q in qa:
+        ra, rb, rm = (e.search(q, threshold=0.8) for e in (ea, eb, em))
+        want = set(ra.doc_ids.tolist()) | {
+            int(d) + a.n_docs for d in rb.doc_ids}
+        assert set(rm.doc_ids.tolist()) == want
+
+
 def test_merge_compact_rejects_mismatch():
     from repro.core import merge_compact
     from repro.data import make_corpus

@@ -130,6 +130,52 @@ def test_lookup_blocks_kernel_matches_ref(nb, L, W):
     np.testing.assert_array_equal(want, got)
 
 
+@pytest.mark.parametrize("Q,nb,L,W", [(1, 1, 8, 8), (3, 2, 17, 8),
+                                      (4, 1, 33, 130), (2, 3, 64, 40)])
+def test_lookup_multi_kernel_matches_ref(Q, nb, L, W):
+    rng = np.random.default_rng(Q * 1000 + nb * 100 + L)
+    R = 4 * L
+    arena = rng.integers(0, 2 ** 32, size=(R, W), dtype=np.uint32)
+    idx = rng.integers(0, R, size=(Q, nb, L)).astype(np.int32)
+    mask = rng.integers(0, 2, size=(Q, nb, L)).astype(np.int32)
+    want = np.asarray(ref.bitslice_lookup_score_multi_ref(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    got = np.asarray(ops.bitslice_lookup_score_multi(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_lookup_multi_row_agrees_with_blocks():
+    """Each query slice of the multi kernel must equal the single-query
+    blocks kernel on the same indices (the fallback it replaces)."""
+    rng = np.random.default_rng(9)
+    Q, nb, L, W = 3, 2, 24, 16
+    arena = rng.integers(0, 2 ** 32, size=(64, W), dtype=np.uint32)
+    idx = rng.integers(0, 64, size=(Q, nb, L)).astype(np.int32)
+    mask = rng.integers(0, 2, size=(Q, nb, L)).astype(np.int32)
+    multi = np.asarray(ops.bitslice_lookup_score_multi(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    for q in range(Q):
+        single = np.asarray(ops.bitslice_lookup_score_blocks(
+            jnp.asarray(arena), jnp.asarray(idx[q]), jnp.asarray(mask[q])))
+        np.testing.assert_array_equal(single, multi[q])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 33),
+       st.integers(1, 20), st.integers(0, 2 ** 31))
+def test_property_lookup_multi_equals_oracle(Q, nb, L, W, seed):
+    rng = np.random.default_rng(seed)
+    arena = rng.integers(0, 2 ** 32, size=(2 * L + 1, W), dtype=np.uint32)
+    idx = rng.integers(0, arena.shape[0], size=(Q, nb, L)).astype(np.int32)
+    mask = rng.integers(0, 2, size=(Q, nb, L)).astype(np.int32)
+    want = np.asarray(ref.bitslice_lookup_score_multi_ref(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    got = np.asarray(ops.bitslice_lookup_score_multi(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    np.testing.assert_array_equal(want, got)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 4), st.integers(1, 40), st.integers(1, 24),
        st.integers(0, 2 ** 31))

@@ -32,7 +32,8 @@ def test_train_cli_runs_and_resumes(tmp_path):
 
 @pytest.mark.slow
 def test_serve_cli(tmp_path):
-    p = _run(["repro.launch.serve", "--n-docs", "48", "--batches", "2",
-              "--batch-size", "8", "--query-len", "60"])
+    p = _run(["repro.launch.serve", "--n-docs", "48", "--queries", "16",
+              "--concurrency", "8", "--no-warmup"])
     assert p.returncode == 0, p.stderr[-2000:]
     assert "accuracy vs ground truth: 16/16" in p.stdout
+    assert "p50=" in p.stdout and "dispatch[" in p.stdout

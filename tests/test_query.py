@@ -89,6 +89,42 @@ def test_batch_equals_single(setup):
             np.testing.assert_array_equal(s.scores, b.scores)
 
 
+def test_batch_equals_single_lookup_method(setup):
+    """Regression: batched method='lookup' used to silently score via the
+    jnp ref oracle; it now runs the fused multi-query kernel and must match
+    per-query fused scoring exactly, on classic AND compact layouts."""
+    corpus, classic, compact, queries, _ = setup
+    for idx in (classic, compact):
+        eng = QueryEngine(idx, method="lookup")
+        term_sets = [dna.unique_terms(dna.pack_kmers(q, corpus.k))
+                     for q in queries[:8]]
+        ells = np.array([t.shape[0] for t in term_sets], dtype=np.int32)
+        pad = max(64, ((int(ells.max()) + 63) // 64) * 64)
+        buf = np.zeros((8, pad, 2), dtype=np.uint32)
+        for i, t in enumerate(term_sets):
+            buf[i, : t.shape[0]] = t
+        batched = eng.score_terms_batch(buf, ells)
+        for i, t in enumerate(term_sets):
+            np.testing.assert_array_equal(eng.score_terms(t), batched[i])
+        singles = [eng.search(q, threshold=0.8) for q in queries[:8]]
+        batch = eng.search_batch(queries[:8], threshold=0.8)
+        for s, b in zip(singles, batch):
+            np.testing.assert_array_equal(s.doc_ids, b.doc_ids)
+            np.testing.assert_array_equal(s.scores, b.scores)
+
+
+def test_top_k_reports_actual_cutoff(setup):
+    corpus, classic, _, queries, _ = setup
+    eng = QueryEngine(classic)
+    r = eng.top_k(queries[0], k=5)
+    assert r.threshold == int(r.scores[-1])      # k-th best score
+    assert (r.scores >= r.threshold).all()
+    full = eng.score_terms(dna.unique_terms(
+        dna.pack_kmers(queries[0], corpus.k)))
+    # nothing outside the top-k beats the reported cutoff's rank boundary
+    assert int(np.sort(full)[-5]) == r.threshold
+
+
 def test_classic_compact_same_hits_at_threshold(setup):
     """Both layouts must report every true hit; false-positive sets may
     differ (different widths) but true positives never drop."""

@@ -1,0 +1,291 @@
+"""Serving subsystem tests: batcher, planner, caches, metrics, and the
+end-to-end guarantee — anything that flows through the micro-batching
+server is byte-identical to a per-query QueryEngine.search."""
+import numpy as np
+import pytest
+
+from repro.core import IndexParams, QueryEngine, build_classic, build_compact
+from repro.core.query import padded_len, select_hits
+from repro.data import make_corpus, make_queries
+from repro.serve import (LRUCache, MicroBatcher, QueryPlanner, QueryRequest,
+                         QueryServer, ServerConfig, ServingMetrics, Status)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = make_corpus(48, k=15, mean_length=400, sigma=1.0, seed=7)
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+    compact = build_compact(corpus.doc_terms, params, block_docs=32,
+                            row_align=64)
+    return corpus, compact
+
+
+def _req(rid, ell, now=0.0, deadline=None, threshold=0.8):
+    terms = np.full((ell, 2), rid + 1, dtype=np.uint32)
+    return QueryRequest(rid, terms, ell, threshold, submitted_at=now,
+                       deadline=deadline)
+
+
+# --------------------------------------------------------------------------
+# MicroBatcher
+# --------------------------------------------------------------------------
+
+def test_batcher_buckets_by_padded_length():
+    b = MicroBatcher(term_pad=64, max_batch=8, max_wait_s=10.0)
+    for rid, ell in enumerate([3, 60, 64, 65, 190]):
+        assert b.submit(_req(rid, ell))
+    batches, expired = b.poll(now=0.0, force=True)
+    assert not expired
+    got = {mb.bucket: sorted(r.request_id for r in mb.requests)
+           for mb in batches}
+    assert got == {64: [0, 1, 2], 128: [3], 192: [4]}
+    assert all(padded_len(r.n_terms, 64) == mb.bucket
+               for mb in batches for r in mb.requests)
+
+
+def test_batcher_flushes_full_bucket_immediately():
+    b = MicroBatcher(term_pad=64, max_batch=4, max_wait_s=100.0)
+    for rid in range(11):
+        b.submit(_req(rid, 10))
+    batches, _ = b.poll(now=0.0)
+    # two full batches leave; the remainder (3) waits for the timer
+    assert [mb.size for mb in batches] == [4, 4]
+    assert len(b) == 3
+    batches, _ = b.poll(now=200.0)
+    assert [mb.size for mb in batches] == [3]
+
+
+def test_batcher_wait_timer():
+    b = MicroBatcher(term_pad=64, max_batch=8, max_wait_s=0.5)
+    b.submit(_req(0, 10, now=1.0))
+    assert b.poll(now=1.2)[0] == []          # not due yet
+    batches, _ = b.poll(now=1.6)             # oldest waited 0.6 > 0.5
+    assert len(batches) == 1 and batches[0].size == 1
+
+
+def test_batcher_backpressure():
+    b = MicroBatcher(term_pad=64, max_batch=4, max_queued=2)
+    assert b.submit(_req(0, 5))
+    assert b.submit(_req(1, 5))
+    assert not b.submit(_req(2, 5))          # full -> refused
+    b.poll(now=0.0, force=True)
+    assert b.submit(_req(3, 5))              # drained -> accepts again
+
+
+def test_batcher_drops_expired():
+    b = MicroBatcher(term_pad=64, max_batch=8)
+    b.submit(_req(0, 5, now=0.0, deadline=1.0))
+    b.submit(_req(1, 5, now=0.0, deadline=50.0))
+    batches, expired = b.poll(now=2.0, force=True)
+    assert [r.request_id for r in expired] == [0]
+    assert [r.request_id for mb in batches for r in mb.requests] == [1]
+
+
+# --------------------------------------------------------------------------
+# LRUCache
+# --------------------------------------------------------------------------
+
+def test_lru_eviction_order():
+    c = LRUCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1                   # refresh a
+    c.put("c", 3)                            # evicts b (least recent)
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert c.hits == 3 and c.misses == 1
+
+
+def test_lru_zero_capacity_disabled():
+    c = LRUCache(0)
+    c.put("a", 1)
+    assert c.get("a") is None and len(c) == 0
+
+
+# --------------------------------------------------------------------------
+# QueryPlanner
+# --------------------------------------------------------------------------
+
+def test_planner_rules_k1(setup):
+    _, compact = setup
+    p = QueryPlanner(compact)                # n_hashes == 1
+    assert p.plan(64, 8).method == "lookup"  # batch -> fused
+    assert p.plan(64, 8).fused
+    assert p.plan(64, 1).method == "unpack"  # short singleton
+    assert p.plan(256, 1).method == "lookup"  # long singleton, k=1
+
+
+def test_planner_rules_k2(setup):
+    corpus, _ = setup
+    idx = build_classic(corpus.doc_terms,
+                        IndexParams(n_hashes=2, fpr=0.3, kmer=15))
+    p = QueryPlanner(idx)
+    assert p.plan(64, 8).method == "unpack"   # short batch, k>1
+    assert p.plan(256, 8).method == "vertical"
+    assert p.plan(256, 1).method == "vertical"
+    assert not p.plan(256, 8).fused
+
+
+def test_planner_never_plans_ref(setup):
+    _, compact = setup
+    p = QueryPlanner(compact)
+    for bucket in (64, 128, 512):
+        for q in (1, 2, 32):
+            assert p.plan(bucket, q).method in ("lookup", "vertical",
+                                                "unpack")
+
+
+# --------------------------------------------------------------------------
+# ServingMetrics
+# --------------------------------------------------------------------------
+
+def test_metrics_percentiles_and_occupancy():
+    m = ServingMetrics()
+    for ms in (1, 2, 3, 4, 100):
+        m.record_request(wait_s=ms / 1e3, service_s=0.0)
+    m.record_batch(8, 0.25, "lookup")
+    m.record_batch(4, 0.125, "unpack")
+    m.record_rejected()
+    s = m.snapshot()
+    assert s.served == 5 and s.rejected == 1 and s.batches == 2
+    assert s.p50_ms == pytest.approx(3.0)
+    assert s.p99_ms > 50
+    assert s.mean_occupancy == pytest.approx(0.1875)
+    assert s.methods == {"lookup": 8, "unpack": 4}
+    assert "p50" in s.report()
+
+
+# --------------------------------------------------------------------------
+# QueryServer end-to-end
+# --------------------------------------------------------------------------
+
+def test_server_results_byte_identical_and_planner_mixes(setup):
+    """The acceptance test: a mixed-length 'concurrent' workload through the
+    batcher produces byte-identical results to per-query search, and the
+    planner exercises >= 2 distinct kernels along the way."""
+    corpus, compact = setup
+    eng = QueryEngine(compact)
+    workload = []
+    for i, length in enumerate((30, 40, 90, 200, 400)):
+        qs, _ = make_queries(corpus, n_pos=3, n_neg=3, length=length,
+                             seed=20 + i)
+        workload.extend(qs)
+    rng = np.random.default_rng(0)
+    workload = [workload[i] for i in rng.permutation(len(workload))]
+
+    server = QueryServer(compact, ServerConfig(max_batch=8, max_wait_s=0.0,
+                                               result_cache=0))
+    ids = [server.submit(q, threshold=0.7) for q in workload]
+    server.drain()
+    # one lone short query flushed by itself exercises the singleton path
+    lone, _ = make_queries(corpus, n_pos=1, n_neg=0, length=25, seed=99)
+    lone_id = server.submit(lone[0], threshold=0.7)
+    server.drain()
+    responses = server.pop_responses()
+
+    for rid, q in list(zip(ids, workload)) + [(lone_id, lone[0])]:
+        r = responses[rid]
+        assert r.status == Status.OK
+        want = eng.search(q, threshold=0.7)
+        np.testing.assert_array_equal(r.result.doc_ids, want.doc_ids)
+        np.testing.assert_array_equal(r.result.scores, want.scores)
+        assert r.result.n_terms == want.n_terms
+        assert r.result.threshold == want.threshold
+
+    assert len(server.planner.methods_used) >= 2, \
+        server.planner.dispatch_counts
+    snap = server.metrics.snapshot()
+    assert snap.served == len(workload) + 1
+    assert snap.batches >= 2
+
+
+def test_server_result_cache_hit(setup):
+    corpus, compact = setup
+    qs, _ = make_queries(corpus, n_pos=2, n_neg=0, length=100, seed=41)
+    server = QueryServer(compact, ServerConfig(max_batch=4, max_wait_s=0.0))
+    a = server.submit(qs[0]); b = server.submit(qs[1])
+    server.drain()
+    first = server.pop_responses()
+    c = server.submit(qs[0])                  # identical resubmission
+    server.drain()
+    second = server.pop_responses()
+    assert second[c].cached and second[c].method == "cache"
+    np.testing.assert_array_equal(second[c].result.doc_ids,
+                                  first[a].result.doc_ids)
+    assert server.metrics.cache_hits == 1
+
+
+def test_server_point_query_row_cache(setup):
+    """Single-k-mer point queries are answered host-side from the row cache
+    and still match the engine exactly."""
+    corpus, compact = setup
+    eng = QueryEngine(compact)
+    term = corpus.doc_terms[3][:1]
+    server = QueryServer(compact)
+    a = server.submit(terms=term, threshold=0.5)
+    b = server.submit(terms=term.copy(), threshold=0.9)
+    resp = server.pop_responses()             # answered at submit, no drain
+    assert resp[a].method == "row_cache"
+    want = select_hits(eng.score_terms(term), 1, 0.5)
+    np.testing.assert_array_equal(resp[a].result.doc_ids, want.doc_ids)
+    np.testing.assert_array_equal(resp[a].result.scores, want.scores)
+    assert server.rows_cache.hits == 1        # second submit reused the row
+
+
+def test_server_backpressure_rejects(setup):
+    corpus, compact = setup
+    qs, _ = make_queries(corpus, n_pos=4, n_neg=0, length=80, seed=51)
+    server = QueryServer(compact, ServerConfig(max_queued=2, max_batch=8,
+                                               result_cache=0, row_cache=0))
+    ids = [server.submit(q) for q in qs]
+    server.drain()
+    resp = server.pop_responses()
+    statuses = [resp[i].status for i in ids]
+    assert statuses.count(Status.REJECTED) == 2
+    assert statuses.count(Status.OK) == 2
+    assert server.metrics.snapshot().rejected == 2
+
+
+def test_server_deadline_drop(setup):
+    corpus, compact = setup
+    qs, _ = make_queries(corpus, n_pos=2, n_neg=0, length=80, seed=61)
+    t = [0.0]
+    server = QueryServer(compact,
+                         ServerConfig(max_batch=8, max_wait_s=0.0,
+                                      result_cache=0),
+                         clock=lambda: t[0])
+    a = server.submit(qs[0], deadline=1.0)
+    b = server.submit(qs[1], deadline=100.0)
+    t[0] = 5.0                                # past a's deadline
+    server.drain()
+    resp = server.pop_responses()
+    assert resp[a].status == Status.DROPPED and resp[a].result is None
+    assert resp[b].status == Status.OK
+    assert server.metrics.snapshot().dropped == 1
+
+
+def test_server_empty_query_immediate(setup):
+    _, compact = setup
+    server = QueryServer(compact)
+    rid = server.submit("ACG")                # shorter than k
+    resp = server.pop_responses()
+    assert resp[rid].status == Status.OK
+    assert len(resp[rid].result.doc_ids) == 0
+
+
+def test_server_batch_vs_engine_on_classic_k2(setup):
+    """k=2 index: the planner cannot fuse, results must still be exact."""
+    corpus, _ = setup
+    idx = build_classic(corpus.doc_terms,
+                        IndexParams(n_hashes=2, fpr=0.3, kmer=15))
+    eng = QueryEngine(idx)
+    qs, _ = make_queries(corpus, n_pos=4, n_neg=4, length=120, seed=71)
+    server = QueryServer(idx, ServerConfig(max_batch=4, max_wait_s=0.0,
+                                           result_cache=0))
+    ids = [server.submit(q, threshold=0.6) for q in qs]
+    server.drain()
+    resp = server.pop_responses()
+    for rid, q in zip(ids, qs):
+        want = eng.search(q, threshold=0.6)
+        np.testing.assert_array_equal(resp[rid].result.doc_ids, want.doc_ids)
+        np.testing.assert_array_equal(resp[rid].result.scores, want.scores)
