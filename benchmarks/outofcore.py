@@ -1,0 +1,79 @@
+"""Out-of-core query execution: cold mmap paging vs warm device tile cache.
+
+The paper's scaling claim is that COBS streams its index instead of
+holding it in RAM; the cost model for the reproduction is
+
+  cold  — v2 store just opened, nothing resident: every shard is a page
+          fault (OS reads the .npy) plus a host->device stage.
+  warm  — all tiles resident in the DeviceTileCache: queries only gather
+          and score, identical to the dense in-HBM engine.
+  evict — tile budget of ONE shard: steady-state thrash, the worst case
+          (every shard re-paged per query) that bounds cold latency.
+
+Reported ratios quantify what the LRU tile cache buys at serve time.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from pathlib import Path
+
+from repro.core import DeviceTileCache, IndexParams, QueryEngine
+from repro.core.store import load_index_v2
+from repro.data import make_queries
+from repro.index import build_compact_streaming
+
+from .common import corpus, emit, timeit
+
+
+def run(n_docs: int = 256, n_queries: int = 16) -> dict:
+    c = corpus(n_docs)
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+    tmp = Path(tempfile.mkdtemp(prefix="cobs-ooc-"))
+    try:
+        # block_docs=32 keeps several shards even at --quick corpus sizes
+        # (paging behavior is the thing under test)
+        _, stats = build_compact_streaming(c.doc_terms, tmp, params,
+                                           block_docs=32)
+        qs, _ = make_queries(c, n_pos=n_queries // 2, n_neg=n_queries // 2,
+                             length=120, seed=5)
+        queries = list(qs)
+
+        def run_queries(engine):
+            for q in queries:
+                engine.search(q, threshold=0.7)
+
+        # warmup one engine for jit compilation so timings are paging, not
+        # tracing (every variant below reuses the same compiled kernels)
+        warm_idx = load_index_v2(tmp)
+        warm_eng = QueryEngine(warm_idx, method="lookup")
+        run_queries(warm_eng)
+
+        def cold():
+            idx = load_index_v2(tmp)      # fresh mmaps, empty tile cache
+            run_queries(QueryEngine(idx, method="lookup"))
+
+        t_cold = timeit(cold, repeats=2, warmup=0)
+        t_warm = timeit(lambda: run_queries(warm_eng), repeats=2, warmup=1)
+
+        evict_idx = load_index_v2(tmp)
+        evict_eng = QueryEngine(
+            evict_idx, method="lookup",
+            tile_cache=DeviceTileCache(evict_idx.storage,
+                                       capacity_bytes=stats.max_shard_bytes))
+        run_queries(evict_eng)            # warm the jit, thrash the tiles
+        t_evict = timeit(lambda: run_queries(evict_eng), repeats=2, warmup=0)
+
+        per_q = 1e6 / len(queries)
+        emit("outofcore/query_cold_mmap", t_cold * per_q,
+             f"n_docs={n_docs};shards={stats.n_shards}")
+        emit("outofcore/query_warm_tiles", t_warm * per_q,
+             f"n_docs={n_docs};resident={len(warm_eng.tiles)}")
+        emit("outofcore/query_tile_thrash", t_evict * per_q,
+             f"n_docs={n_docs};budget=1_shard;"
+             f"faults={evict_eng.tiles.faults}")
+        emit("outofcore/cold_over_warm", t_cold / max(t_warm, 1e-12),
+             "paging_cost_ratio")
+        return {"t_cold": t_cold, "t_warm": t_warm, "t_evict": t_evict}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

@@ -28,7 +28,7 @@ def main() -> None:
 
     from . import common
     from . import (compaction, construction, fpr, hedging, kernel_micro,
-                   query, scaling, serving)
+                   outofcore, query, scaling, serving)
 
     n = 128 if args.quick else 512
     suites = {
@@ -42,6 +42,8 @@ def main() -> None:
         "hedging": hedging.run,
         "serving": lambda: serving.run(64 if args.quick else 256,
                                        n_queries=48 if args.quick else 96),
+        "outofcore": lambda: outofcore.run(64 if args.quick else 256,
+                                           n_queries=8 if args.quick else 16),
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -38,3 +38,32 @@ print(f"3%-mutated query still hits doc {res.doc_ids[0]} "
 # --- a random negative ------------------------------------------------------
 res = engine.search(rng.integers(0, 4, 120, dtype=np.uint8), threshold=0.8)
 print(f"random query: {len(res.doc_ids)} hits (expected 0)")
+
+# --- out of core: the index never has to be in RAM --------------------------
+# A BitSlicedIndex is layout (metadata) + storage (bytes). Streaming the
+# build into a cobs-jax-v2 store writes one raw .npy shard per block group
+# (peak host memory = one block group); loading it back gives a MappedArena
+# whose shards are np.memmap'd and paged to the device per query — results
+# are bit-identical to the in-memory index. Legacy v1 directories still
+# load via the same load_index, and migrate_v1_to_v2 upgrades them.
+import tempfile
+from pathlib import Path
+
+from repro.core import load_index
+from repro.index import build_compact_streaming
+
+store = Path(tempfile.mkdtemp()) / "cobs-v2"
+streamed, stats = build_compact_streaming(
+    doc_terms, store, params, block_docs=32, row_align=64)
+print(f"v2 store: {stats.n_shards} shard(s), peak build memory "
+      f"{stats.peak_block_bytes / 1024:.1f} KiB of "
+      f"{stats.total_arena_bytes / 1024:.1f} KiB arena")
+
+paged = QueryEngine(load_index(store))     # mmap-backed, pages per shard
+res2 = paged.search(genomes[1][200:320], threshold=0.8)
+assert res2.doc_ids[0] == 1
+print(f"paged query matches in-memory: doc{res2.doc_ids[0]} "
+      f"score {res2.scores[0]}/{res2.n_terms}")
+# (with many documents the store splits into one shard per block group and
+#  QueryEngine pages shard tiles through paged.tiles, an LRU device cache —
+#  see tests/test_arena_store.py and benchmarks/outofcore.py)

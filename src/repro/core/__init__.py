@@ -1,16 +1,24 @@
 """COBS core: the paper's contribution — a compact bit-sliced signature index."""
-from . import bloom, dna, hashing, theory
+from . import bloom, dna, hashing, store, theory
+from .arena import (ArenaLayout, ArenaStorage, DeviceArena, DeviceTileCache,
+                    HostArena, MappedArena)
 from .index import (BitSlicedIndex, IndexParams, build_classic, build_compact,
                     load_index, merge_classic, merge_compact, save_index)
 from .multi import MultiHit, MultiIndexEngine
 from .query import (QueryEngine, SearchResult, make_batch_score_fn,
                     make_score_fn)
+from .store import (load_index_v2, merge_stores, migrate_v1_to_v2,
+                    save_index_v2)
 
 __all__ = [
-    "BitSlicedIndex", "IndexParams", "QueryEngine", "SearchResult",
-    "build_classic", "build_compact", "load_index", "merge_classic",
-    "merge_compact", "save_index", "make_score_fn", "make_batch_score_fn",
+    "ArenaLayout", "ArenaStorage", "BitSlicedIndex", "DeviceArena",
+    "DeviceTileCache", "HostArena", "IndexParams", "MappedArena",
+    "QueryEngine", "SearchResult",
+    "build_classic", "build_compact", "load_index", "load_index_v2",
+    "merge_classic",
+    "merge_compact", "merge_stores", "migrate_v1_to_v2", "save_index",
+    "save_index_v2", "make_score_fn", "make_batch_score_fn",
     "MultiHit",
     "MultiIndexEngine", "bloom", "dna",
-    "hashing", "theory",
+    "hashing", "store", "theory",
 ]

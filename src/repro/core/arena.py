@@ -1,0 +1,364 @@
+"""Arena layout / storage split: the out-of-core representation of the index.
+
+The paper's headline scaling property — "COBS does not need the complete
+index in RAM" — requires the arena (uint32 [total_rows, doc_words]) to be
+*addressable in shards* rather than one dense array. This module separates
+the two concerns that BitSlicedIndex used to conflate:
+
+* ``ArenaLayout`` — pure host-side metadata (per-block row offsets and
+  filter widths, the document-slot permutation, term counts). It fully
+  determines query addressing and never touches arena bytes; it is
+  pytree-static in the sense that no piece of it is a traced value.
+
+* ``ArenaStorage`` — where the arena bytes live. Three backends:
+
+  - ``DeviceArena``  — one dense device array (the original behavior; the
+    zero-copy migration path for existing code).
+  - ``HostArena``    — one dense host array, moved to device lazily.
+  - ``MappedArena``  — a list of row-range shards, each an ``np.memmap``
+    over a raw ``.npy`` file (or an in-memory array for O(metadata)
+    merges). Rows are paged to device per shard, on demand — the index
+    never has to be resident anywhere end to end.
+
+Shards always cover whole blocks (the store writes shard boundaries on
+block-group edges), so per-shard query addressing is the global addressing
+with row offsets rebased to the shard's first row.
+
+``DeviceTileCache`` is the HBM paging policy: a bounded LRU of shard id ->
+device tile with hit/fault counters, shared by the QueryEngine and the
+serving subsystem (which exports the counters as metrics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaLayout:
+    """Geometric metadata of an arena; pure, host-side, and immutable.
+
+    row_offset[b] is the global first arena row of block b; block b owns
+    rows [row_offset[b], row_offset[b] + block_width[b]). Document i of
+    the original corpus lives at slot doc_slot[i] (block slot//block_docs,
+    column slot%block_docs).
+    """
+
+    row_offset: np.ndarray   # int32 [n_blocks]
+    block_width: np.ndarray  # int32 [n_blocks]
+    doc_slot: np.ndarray     # int32 [n_docs]
+    doc_n_terms: np.ndarray  # int32 [n_docs]
+    block_docs: int
+    n_docs: int
+
+    @staticmethod
+    def make(row_offset, block_width, doc_slot, doc_n_terms,
+             block_docs: int, n_docs: int) -> "ArenaLayout":
+        return ArenaLayout(
+            row_offset=np.asarray(row_offset, dtype=np.int32),
+            block_width=np.asarray(block_width, dtype=np.int32),
+            doc_slot=np.asarray(doc_slot, dtype=np.int32),
+            doc_n_terms=np.asarray(doc_n_terms, dtype=np.int32),
+            block_docs=int(block_docs),
+            n_docs=int(n_docs),
+        )
+
+    # -- derived geometry ---------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return int(self.row_offset.shape[0])
+
+    @property
+    def doc_words(self) -> int:
+        return self.block_docs // 32
+
+    @property
+    def total_rows(self) -> int:
+        if self.n_blocks == 0:
+            return 0
+        return int(self.row_offset[-1]) + int(self.block_width[-1])
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_blocks * self.block_docs
+
+    def block_row_range(self, b: int) -> tuple[int, int]:
+        start = int(self.row_offset[b])
+        return start, start + int(self.block_width[b])
+
+    def shard_blocks(self, shard_row_starts: np.ndarray
+                     ) -> list[tuple[int, int]]:
+        """Partition blocks by shard: returns [(block_start, block_end)] per
+        shard for row boundaries ``shard_row_starts`` (int64 [n_shards+1]).
+        Every shard boundary must fall on a block boundary."""
+        bounds = np.concatenate([self.row_offset.astype(np.int64),
+                                 [self.total_rows]])
+        out = []
+        for s in range(len(shard_row_starts) - 1):
+            lo = int(np.searchsorted(bounds, shard_row_starts[s]))
+            hi = int(np.searchsorted(bounds, shard_row_starts[s + 1]))
+            if (bounds[lo] != shard_row_starts[s]
+                    or bounds[hi] != shard_row_starts[s + 1]):
+                raise ValueError("shard boundary not on a block boundary")
+            out.append((lo, hi))
+        return out
+
+
+# --------------------------------------------------------------------------
+# Storage backends
+# --------------------------------------------------------------------------
+
+class ArenaStorage:
+    """Protocol for arena byte storage.
+
+    shape/dtype mirror the dense array; shards are contiguous row ranges
+    covering [0, total_rows) whose boundaries are ``shard_row_starts``
+    (int64 [n_shards + 1]).
+    """
+
+    shape: tuple[int, int]
+    dtype: np.dtype
+    shard_row_starts: np.ndarray
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shard_row_starts) - 1
+
+    def nbytes(self) -> int:
+        return int(self.shape[0]) * int(self.shape[1]) * \
+            np.dtype(self.dtype).itemsize
+
+    def shard_nbytes(self, s: int) -> int:
+        rows = int(self.shard_row_starts[s + 1] - self.shard_row_starts[s])
+        return rows * int(self.shape[1]) * np.dtype(self.dtype).itemsize
+
+    # -- byte access (implemented per backend) ------------------------------
+    def shard_host(self, s: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def shard_device(self, s: int) -> jnp.ndarray:
+        return jnp.asarray(self.shard_host(s))
+
+    def full_host(self) -> np.ndarray:
+        return np.concatenate([np.asarray(self.shard_host(s))
+                               for s in range(self.n_shards)], axis=0)
+
+    def full_device(self) -> jnp.ndarray:
+        """Dense device arena — the legacy path; materializes everything."""
+        if self.n_shards == 1:
+            return self.shard_device(0)
+        return jnp.concatenate([self.shard_device(s)
+                                for s in range(self.n_shards)], axis=0)
+
+    def read_rows_host(self, rows: np.ndarray) -> np.ndarray:
+        """Arbitrary global rows, host-side (point-query path). Pages only
+        the rows' shards; never materializes the dense arena for mapped
+        storage."""
+        rows = np.asarray(rows, dtype=np.int64)
+        out = np.empty((rows.size, self.shape[1]), dtype=self.dtype)
+        flat = rows.reshape(-1)
+        owner = np.searchsorted(self.shard_row_starts, flat, side="right") - 1
+        for s in np.unique(owner):
+            sel = owner == s
+            local = flat[sel] - int(self.shard_row_starts[s])
+            out[sel] = np.asarray(self.shard_host(int(s)))[local]
+        return out.reshape(*rows.shape, self.shape[1])
+
+
+def _starts(n_rows: int) -> np.ndarray:
+    return np.array([0, n_rows], dtype=np.int64)
+
+
+class DeviceArena(ArenaStorage):
+    """One dense device-resident array — today's behavior, one shard."""
+
+    def __init__(self, arena):
+        self.arena = arena
+        self.shape = tuple(arena.shape)
+        self.dtype = np.dtype(getattr(arena, "dtype", np.uint32))
+        self.shard_row_starts = _starts(self.shape[0])
+        self._host: np.ndarray | None = None
+
+    def shard_host(self, s: int) -> np.ndarray:
+        if self._host is None:
+            self._host = np.asarray(self.arena)
+        return self._host
+
+    def shard_device(self, s: int) -> jnp.ndarray:
+        return self.arena
+
+    def full_device(self):
+        return self.arena
+
+
+class HostArena(ArenaStorage):
+    """One dense host array; the device copy is made lazily and cached."""
+
+    def __init__(self, arena: np.ndarray):
+        self.arena = np.asarray(arena)
+        self.shape = tuple(self.arena.shape)
+        self.dtype = self.arena.dtype
+        self.shard_row_starts = _starts(self.shape[0])
+        self._device: jnp.ndarray | None = None
+
+    def shard_host(self, s: int) -> np.ndarray:
+        return self.arena
+
+    def shard_device(self, s: int) -> jnp.ndarray:
+        if self._device is None:
+            self._device = jnp.asarray(self.arena)
+        return self._device
+
+
+class MappedArena(ArenaStorage):
+    """Row-range shards backed by raw ``.npy`` files (np.memmap) and/or
+    in-memory arrays. File-backed shards are opened lazily with
+    ``mmap_mode='r'`` so touching a shard costs page faults, not a load;
+    in-memory sources make merge an O(metadata) shard-list concatenation.
+    """
+
+    def __init__(self, sources: list, shard_row_starts: np.ndarray,
+                 doc_words: int, dtype=np.uint32):
+        self.sources = list(sources)        # each: Path | str | np.ndarray
+        self.shard_row_starts = np.asarray(shard_row_starts, dtype=np.int64)
+        if len(self.sources) != self.n_shards:
+            raise ValueError("sources / shard_row_starts length mismatch")
+        self.shape = (int(self.shard_row_starts[-1]), int(doc_words))
+        self.dtype = np.dtype(dtype)
+        self._open: dict[int, np.ndarray] = {}
+
+    def shard_host(self, s: int) -> np.ndarray:
+        a = self._open.get(s)
+        if a is None:
+            src = self.sources[s]
+            a = src if isinstance(src, np.ndarray) else np.load(
+                src, mmap_mode="r")
+            want_rows = int(self.shard_row_starts[s + 1]
+                            - self.shard_row_starts[s])
+            if a.shape != (want_rows, self.shape[1]):
+                raise ValueError(
+                    f"shard {s}: shape {a.shape} != "
+                    f"({want_rows}, {self.shape[1]})")
+            self._open[s] = a
+        return a
+
+    @staticmethod
+    def concat(a: "ArenaStorage", b: "ArenaStorage") -> "MappedArena":
+        """Row-axis concatenation without touching bytes: the merged arena
+        is the two shard lists back to back (paper section 2.3 merging as
+        an O(metadata) operation)."""
+        if a.shape[1] != b.shape[1]:
+            raise ValueError("doc_words mismatch")
+
+        def shard_sources(st: ArenaStorage) -> list:
+            if isinstance(st, MappedArena):
+                return st.sources
+            return [st.shard_host(s) for s in range(st.n_shards)]
+
+        starts = np.concatenate([
+            a.shard_row_starts,
+            b.shard_row_starts[1:] + int(a.shard_row_starts[-1])])
+        return MappedArena(shard_sources(a) + shard_sources(b), starts,
+                           doc_words=a.shape[1], dtype=a.dtype)
+
+
+def wrap_arena(arena) -> ArenaStorage:
+    """Adopt a raw arena value under the storage protocol: numpy stays on
+    host (HostArena), anything device-shaped (jax arrays, abstract
+    ShapeDtypeStructs from the dry-run lowering) is a DeviceArena."""
+    if isinstance(arena, ArenaStorage):
+        return arena
+    if isinstance(arena, np.ndarray):
+        return HostArena(arena)
+    return DeviceArena(arena)
+
+
+# --------------------------------------------------------------------------
+# HBM paging
+# --------------------------------------------------------------------------
+
+def common_tile_rows(storage: ArenaStorage) -> int | None:
+    """Row count unifying all of a sharded storage's tiles (the tallest
+    shard), or None for dense single-shard storage (no padding needed)."""
+    if storage.n_shards <= 1:
+        return None
+    return int(np.max(np.diff(storage.shard_row_starts)))
+
+
+class DeviceTileCache:
+    """Bounded LRU of shard id -> device tile.
+
+    ``capacity_bytes`` caps resident tile bytes (None = unbounded: every
+    shard sticks after first touch, the right default for engines that own
+    the whole device). A miss ("page fault") stages the shard host->device
+    and may evict least-recently-used tiles; counters feed the serving
+    metrics (shard residency / page faults).
+
+    ``pad_rows_to`` zero-pads every staged tile to a common row count
+    (typically the tallest shard): addressed rows are always < the real
+    shard height, so results are unchanged, but all tiles share one shape
+    and the scoring kernels compile ONCE per (bucket, method) instead of
+    once per distinct shard height — compile time would otherwise dominate
+    cold out-of-core serving on stores with many block groups.
+    """
+
+    def __init__(self, storage: ArenaStorage,
+                 capacity_bytes: int | None = None,
+                 pad_rows_to: int | None = None):
+        self.storage = storage
+        self.capacity_bytes = capacity_bytes
+        self.pad_rows_to = pad_rows_to
+        self._tiles: "OrderedDict[int, jnp.ndarray]" = OrderedDict()
+        self.resident_bytes = 0
+        self.hits = 0
+        self.faults = 0
+
+    def _stage(self, s: int) -> jnp.ndarray:
+        if not self.pad_rows_to:
+            return self.storage.shard_device(s)
+        host = self.storage.shard_host(s)
+        pad = self.pad_rows_to - host.shape[0]
+        if pad < 0:
+            raise ValueError(f"shard {s} taller than pad_rows_to")
+        if pad == 0:
+            return self.storage.shard_device(s)
+        return jnp.asarray(np.pad(host, ((0, pad), (0, 0))))
+
+    def _tile_nbytes(self, s: int) -> int:
+        if not self.pad_rows_to:
+            return self.storage.shard_nbytes(s)
+        return (self.pad_rows_to * int(self.storage.shape[1])
+                * np.dtype(self.storage.dtype).itemsize)
+
+    def __len__(self) -> int:
+        return len(self._tiles)
+
+    @property
+    def resident_shards(self) -> tuple[int, ...]:
+        return tuple(self._tiles)
+
+    def get(self, s: int) -> jnp.ndarray:
+        tile = self._tiles.get(s)
+        if tile is not None:
+            self._tiles.move_to_end(s)
+            self.hits += 1
+            return tile
+        self.faults += 1
+        tile = self._stage(s)
+        need = self._tile_nbytes(s)
+        if self.capacity_bytes is not None:
+            while (self._tiles
+                   and self.resident_bytes + need > self.capacity_bytes):
+                old, _ = self._tiles.popitem(last=False)
+                self.resident_bytes -= self._tile_nbytes(old)
+        self._tiles[s] = tile
+        self.resident_bytes += need
+        return tile
+
+    def clear(self) -> None:
+        self._tiles.clear()
+        self.resident_bytes = 0

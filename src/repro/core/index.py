@@ -13,6 +13,14 @@ ClaBS/BIGSI layout. Query row addressing for term t in block b is
     row(t, b) = row_offset[b] + hash(t) % w_b[b]
 
 i.e. the paper's 'one hash function with a larger output range + modulo'.
+
+Since the out-of-core refactor the index is a pair (ArenaLayout, storage):
+the layout (repro.core.arena.ArenaLayout) is pure metadata, and the arena
+bytes live behind a pluggable ArenaStorage — dense on device (DeviceArena),
+dense on host (HostArena), or paged per-shard from disk (MappedArena over a
+cobs-jax-v2 store, repro.core.store). ``index.arena`` still yields the
+dense device array for legacy callers; shard-aware paths (QueryEngine,
+repro.serve) address storage shards directly and never materialize it.
 """
 from __future__ import annotations
 
@@ -25,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bloom, theory
+from .arena import (ArenaLayout, ArenaStorage, DeviceArena, HostArena,
+                    MappedArena, wrap_arena)
 
 DEFAULT_FPR = 0.3      # paper section 2.1: high FPR is optimal for this workload
 DEFAULT_HASHES = 1     # paper: k = 1 minimizes cache faults / IOs
@@ -47,20 +57,35 @@ class IndexParams:
 
 
 @jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
 class BitSlicedIndex:
-    """Arena-layout bit-sliced signature index (classic or compact)."""
+    """Arena-layout bit-sliced signature index (classic or compact).
 
-    arena: jnp.ndarray       # uint32 [total_rows, block_docs // 32]
-    row_offset: jnp.ndarray  # int32  [n_blocks]
-    block_width: jnp.ndarray # int32  [n_blocks]  (w_b, filter width per block)
-    doc_slot: jnp.ndarray    # int32  [n_docs]    slot of original doc i
-    doc_n_terms: jnp.ndarray # int32  [n_docs]
-    block_docs: int          # docs per block (multiple of 32)
-    n_docs: int
-    params: IndexParams
+    Thin composition of ``layout`` (ArenaLayout metadata) and ``storage``
+    (ArenaStorage bytes) plus the Bloom parameters. The historical flat
+    constructor / attribute surface (arena, row_offset, block_width,
+    doc_slot, doc_n_terms, block_docs, n_docs, params) is preserved:
+    metadata attributes come back as cached device arrays and ``arena``
+    materializes the dense device arena from whatever backend is attached.
+    """
 
-    # -- pytree protocol (arrays are leaves; the rest is static aux) --------
+    def __init__(self, arena=None, row_offset=None, block_width=None,
+                 doc_slot=None, doc_n_terms=None, block_docs: int = 0,
+                 n_docs: int = 0, params: IndexParams | None = None, *,
+                 layout: ArenaLayout | None = None,
+                 storage: ArenaStorage | None = None):
+        if layout is None:
+            layout = ArenaLayout.make(row_offset, block_width, doc_slot,
+                                      doc_n_terms, block_docs, n_docs)
+        if storage is None:
+            storage = wrap_arena(arena)
+        self.layout = layout
+        self.storage = storage
+        self.params = params if params is not None else IndexParams()
+        self._device_meta: dict[str, jnp.ndarray] = {}
+
+    # -- pytree protocol (arrays are leaves; the rest is static aux). NOTE:
+    # flattening materializes the dense arena — it exists for legacy
+    # device_put/tree_map paths and is not the out-of-core route. ---------
     def tree_flatten(self):
         leaves = (self.arena, self.row_offset, self.block_width,
                   self.doc_slot, self.doc_n_terms)
@@ -71,33 +96,70 @@ class BitSlicedIndex:
     def tree_unflatten(cls, aux, leaves):
         return cls(*leaves, *aux)
 
+    # -- legacy flat attribute surface --------------------------------------
+    @property
+    def arena(self) -> jnp.ndarray:
+        """Dense device arena (materialized on demand for mapped storage)."""
+        return self.storage.full_device()
+
+    def _meta(self, name: str) -> jnp.ndarray:
+        a = self._device_meta.get(name)
+        if a is None:
+            a = jnp.asarray(getattr(self.layout, name))
+            self._device_meta[name] = a
+        return a
+
+    @property
+    def row_offset(self) -> jnp.ndarray:
+        return self._meta("row_offset")
+
+    @property
+    def block_width(self) -> jnp.ndarray:
+        return self._meta("block_width")
+
+    @property
+    def doc_slot(self) -> jnp.ndarray:
+        return self._meta("doc_slot")
+
+    @property
+    def doc_n_terms(self) -> jnp.ndarray:
+        return self._meta("doc_n_terms")
+
+    @property
+    def block_docs(self) -> int:
+        return self.layout.block_docs
+
+    @property
+    def n_docs(self) -> int:
+        return self.layout.n_docs
+
     # -- derived properties -------------------------------------------------
     @property
     def n_blocks(self) -> int:
-        return int(self.row_offset.shape[0])
+        return self.layout.n_blocks
 
     @property
     def doc_words(self) -> int:
-        return int(self.arena.shape[1])
+        return self.layout.doc_words
 
     @property
     def total_rows(self) -> int:
-        return int(self.arena.shape[0])
+        return self.layout.total_rows
 
     @property
     def n_slots(self) -> int:
-        return self.n_blocks * self.block_docs
+        return self.layout.n_slots
 
     def size_bytes(self) -> int:
-        return int(self.arena.size) * 4
+        return self.storage.nbytes()
 
     def expected_fpr(self) -> np.ndarray:
         """Per-document analytic FPR given actual block widths (tests compare
         this to measured rates)."""
-        w_b = np.asarray(self.block_width)
-        slots = np.asarray(self.doc_slot)
+        w_b = self.layout.block_width
+        slots = self.layout.doc_slot
         widths = w_b[slots // self.block_docs]
-        v = np.asarray(self.doc_n_terms)
+        v = self.layout.doc_n_terms
         return np.array(
             [theory.bloom_fpr(int(w), self.params.n_hashes, int(n))
              for w, n in zip(widths, v)]
@@ -106,6 +168,37 @@ class BitSlicedIndex:
 
 def _pad32(n: int) -> int:
     return ((n + 31) // 32) * 32
+
+
+def plan_compact_layout(
+    counts: np.ndarray,
+    params: IndexParams,
+    block_docs: int,
+    row_align: int = bloom.ROW_ALIGN,
+) -> tuple[ArenaLayout, np.ndarray]:
+    """The pure planning half of a compact build: document order, block
+    widths, and row offsets from term counts alone. Returns (layout, order)
+    where order[j] is the original doc id at slot j — the builder's work
+    list. Shared by the dense, parallel, and streaming builders so their
+    outputs are bit-identical by construction."""
+    n_docs = counts.shape[0]
+    block_docs = _pad32(block_docs)
+    order = np.argsort(counts, kind="stable")          # ascending by size
+    doc_slot = np.empty(n_docs, dtype=np.int32)
+    doc_slot[order] = np.arange(n_docs, dtype=np.int32)
+
+    n_blocks = (n_docs + block_docs - 1) // block_docs
+    widths = np.empty(n_blocks, dtype=np.int32)
+    for b in range(n_blocks):
+        ids = order[b * block_docs:(b + 1) * block_docs]
+        v_max = int(counts[ids].max()) if ids.size else 0
+        widths[b] = bloom.aligned_width(
+            theory.bloom_size(max(v_max, 1), params.fpr, params.n_hashes),
+            row_align)
+    offsets = np.concatenate([[0], np.cumsum(widths)[:-1]]).astype(np.int32)
+    layout = ArenaLayout.make(offsets, widths, doc_slot,
+                              counts.astype(np.int32), block_docs, n_docs)
+    return layout, order
 
 
 def build_compact(
@@ -119,34 +212,17 @@ def build_compact(
     n_docs = len(doc_terms)
     if n_docs == 0:
         raise ValueError("empty document set")
-    block_docs = _pad32(block_docs)
     counts = np.array([t.shape[0] for t in doc_terms], dtype=np.int64)
-    order = np.argsort(counts, kind="stable")          # ascending by size
-    doc_slot = np.empty(n_docs, dtype=np.int32)
-    doc_slot[order] = np.arange(n_docs, dtype=np.int32)
-
-    n_blocks = (n_docs + block_docs - 1) // block_docs
-    blocks, widths, offsets = [], [], []
-    off = 0
-    for b in range(n_blocks):
-        ids = order[b * block_docs:(b + 1) * block_docs]
-        v_max = int(counts[ids].max()) if ids.size else 0
-        w = bloom.aligned_width(
-            theory.bloom_size(max(v_max, 1), params.fpr, params.n_hashes), row_align)
+    layout, order = plan_compact_layout(counts, params, block_docs, row_align)
+    blocks = []
+    for b in range(layout.n_blocks):
+        ids = order[b * layout.block_docs:(b + 1) * layout.block_docs]
         blocks.append(bloom.build_block_matrix(
-            [doc_terms[i] for i in ids], w, params.n_hashes, block_docs))
-        widths.append(w)
-        offsets.append(off)
-        off += w
-
+            [doc_terms[i] for i in ids], int(layout.block_width[b]),
+            params.n_hashes, layout.block_docs))
     return BitSlicedIndex(
-        arena=jnp.asarray(np.concatenate(blocks, axis=0)),
-        row_offset=jnp.asarray(np.array(offsets, dtype=np.int32)),
-        block_width=jnp.asarray(np.array(widths, dtype=np.int32)),
-        doc_slot=jnp.asarray(doc_slot),
-        doc_n_terms=jnp.asarray(counts.astype(np.int32)),
-        block_docs=block_docs,
-        n_docs=n_docs,
+        layout=layout,
+        storage=DeviceArena(jnp.asarray(np.concatenate(blocks, axis=0))),
         params=params,
     )
 
@@ -167,37 +243,49 @@ def build_classic(
         theory.bloom_size(max(v_max, 1), params.fpr, params.n_hashes), row_align)
     block_docs = _pad32(n_docs)
     matrix = bloom.build_block_matrix(list(doc_terms), w, params.n_hashes, block_docs)
-    return BitSlicedIndex(
-        arena=jnp.asarray(matrix),
-        row_offset=jnp.zeros((1,), dtype=jnp.int32),
-        block_width=jnp.full((1,), w, dtype=jnp.int32),
-        doc_slot=jnp.arange(n_docs, dtype=jnp.int32),
-        doc_n_terms=jnp.asarray(counts.astype(np.int32)),
-        block_docs=block_docs,
-        n_docs=n_docs,
-        params=params,
-    )
+    layout = ArenaLayout.make(
+        np.zeros(1, np.int32), np.full(1, w, np.int32),
+        np.arange(n_docs, dtype=np.int32), counts.astype(np.int32),
+        block_docs, n_docs)
+    return BitSlicedIndex(layout=layout,
+                          storage=DeviceArena(jnp.asarray(matrix)),
+                          params=params)
 
 
 def merge_classic(a: BitSlicedIndex, b: BitSlicedIndex) -> BitSlicedIndex:
     """Merge two classic indexes built with identical parameters and widths
     (paper section 2.3: 'classic indexes with the same parameters can be
-    concatenated straightforwardly')."""
+    concatenated straightforwardly'). Column (document-axis) concatenation
+    is the one merge that must touch bytes: rows interleave, so the merged
+    arena is rebuilt dense from the sources' host shards."""
     if a.n_blocks != 1 or b.n_blocks != 1:
         raise ValueError("merge_classic only merges classic (single-block) indexes")
-    if int(a.block_width[0]) != int(b.block_width[0]) or a.params != b.params:
+    if int(a.layout.block_width[0]) != int(b.layout.block_width[0]) \
+            or a.params != b.params:
         raise ValueError("parameter mismatch")
-    arena = jnp.concatenate([a.arena, b.arena], axis=1)
-    return BitSlicedIndex(
-        arena=arena,
-        row_offset=a.row_offset,
-        block_width=a.block_width,
-        doc_slot=jnp.concatenate([a.doc_slot, b.doc_slot + a.block_docs]),
-        doc_n_terms=jnp.concatenate([a.doc_n_terms, b.doc_n_terms]),
-        block_docs=a.block_docs + b.block_docs,
-        n_docs=a.n_docs + b.n_docs,
-        params=a.params,
-    )
+    arena = jnp.concatenate([jnp.asarray(a.storage.full_host()),
+                             jnp.asarray(b.storage.full_host())], axis=1)
+    layout = ArenaLayout.make(
+        a.layout.row_offset, a.layout.block_width,
+        np.concatenate([a.layout.doc_slot,
+                        b.layout.doc_slot + a.block_docs]),
+        np.concatenate([a.layout.doc_n_terms, b.layout.doc_n_terms]),
+        a.block_docs + b.block_docs, a.n_docs + b.n_docs)
+    return BitSlicedIndex(layout=layout, storage=DeviceArena(arena),
+                          params=a.params)
+
+
+def merge_compact_layout(a: ArenaLayout, b: ArenaLayout) -> ArenaLayout:
+    """Pure metadata half of the compact merge: blocks append along the row
+    axis, b's slots shift by a's slot capacity."""
+    if a.block_docs != b.block_docs:
+        raise ValueError("block_docs mismatch")
+    return ArenaLayout.make(
+        np.concatenate([a.row_offset, b.row_offset + a.total_rows]),
+        np.concatenate([a.block_width, b.block_width]),
+        np.concatenate([a.doc_slot, b.doc_slot + a.n_slots]),
+        np.concatenate([a.doc_n_terms, b.doc_n_terms]),
+        a.block_docs, a.n_docs + b.n_docs)
 
 
 def merge_compact(a: BitSlicedIndex, b: BitSlicedIndex) -> BitSlicedIndex:
@@ -207,39 +295,50 @@ def merge_compact(a: BitSlicedIndex, b: BitSlicedIndex) -> BitSlicedIndex:
     axis — b's documents keep their own blocks, slots shift by a's slot
     capacity. Requires identical params and block_docs. Size optimality of
     the global staircase is not re-established (documents are only sorted
-    within each source index); queries are exact either way."""
+    within each source index); queries are exact either way.
+
+    On the split layout this is O(metadata): when either side is sharded
+    (or host/mapped) the merged storage is just the two shard lists back
+    to back — no arena bytes are read or copied. Two dense device arenas
+    keep the historical dense concatenation."""
     if a.params != b.params:
         raise ValueError("parameter mismatch")
-    if a.block_docs != b.block_docs:
-        raise ValueError("block_docs mismatch")
-    return BitSlicedIndex(
-        arena=jnp.concatenate([a.arena, b.arena], axis=0),
-        row_offset=jnp.concatenate(
-            [a.row_offset, b.row_offset + a.total_rows]),
-        block_width=jnp.concatenate([a.block_width, b.block_width]),
-        doc_slot=jnp.concatenate([a.doc_slot, b.doc_slot + a.n_slots]),
-        doc_n_terms=jnp.concatenate([a.doc_n_terms, b.doc_n_terms]),
-        block_docs=a.block_docs,
-        n_docs=a.n_docs + b.n_docs,
-        params=a.params,
-    )
+    layout = merge_compact_layout(a.layout, b.layout)
+    if isinstance(a.storage, DeviceArena) and isinstance(b.storage, DeviceArena):
+        storage: ArenaStorage = DeviceArena(
+            jnp.concatenate([a.storage.full_device(),
+                             b.storage.full_device()], axis=0))
+    else:
+        storage = MappedArena.concat(a.storage, b.storage)
+    return BitSlicedIndex(layout=layout, storage=storage, params=a.params)
 
 
 # --------------------------------------------------------------------------
-# Persistence: a directory with a JSON manifest + npz payload. This is the
-# single-host flavour; sharded checkpointing lives in repro.checkpoint.
+# Persistence. Two on-disk formats:
+#   cobs-jax-v1 — JSON manifest + one compressed npz monolith (legacy;
+#                 loading materializes the whole arena on host).
+#   cobs-jax-v2 — JSON manifest + one raw .npy shard per block group
+#                 (repro.core.store): loads as an np.memmap-backed
+#                 MappedArena, so opening an index costs metadata only.
+# ``save_index`` keeps writing v1 for compatibility (version=2 opts in);
+# ``load_index`` dispatches on the manifest.
 # --------------------------------------------------------------------------
 
-def save_index(index: BitSlicedIndex, path: str | Path) -> None:
+def save_index(index: BitSlicedIndex, path: str | Path, *,
+               version: int = 1, blocks_per_shard: int = 1) -> None:
+    if version == 2:
+        from . import store
+        store.save_index_v2(index, path, blocks_per_shard=blocks_per_shard)
+        return
     path = Path(path)
     path.mkdir(parents=True, exist_ok=True)
     np.savez_compressed(
         path / "index.npz",
-        arena=np.asarray(index.arena),
-        row_offset=np.asarray(index.row_offset),
-        block_width=np.asarray(index.block_width),
-        doc_slot=np.asarray(index.doc_slot),
-        doc_n_terms=np.asarray(index.doc_n_terms),
+        arena=index.storage.full_host(),
+        row_offset=index.layout.row_offset,
+        block_width=index.layout.block_width,
+        doc_slot=index.layout.doc_slot,
+        doc_n_terms=index.layout.doc_n_terms,
     )
     manifest = {
         "format": "cobs-jax-v1",
@@ -253,16 +352,19 @@ def save_index(index: BitSlicedIndex, path: str | Path) -> None:
 def load_index(path: str | Path) -> BitSlicedIndex:
     path = Path(path)
     manifest = json.loads((path / "manifest.json").read_text())
-    if manifest.get("format") != "cobs-jax-v1":
+    fmt = manifest.get("format")
+    if fmt == "cobs-jax-v2":
+        from . import store
+        return store.load_index_v2(path)
+    if fmt != "cobs-jax-v1":
         raise ValueError(f"unknown index format in {path}")
     with np.load(path / "index.npz") as z:
+        layout = ArenaLayout.make(
+            z["row_offset"], z["block_width"], z["doc_slot"],
+            z["doc_n_terms"], int(manifest["block_docs"]),
+            int(manifest["n_docs"]))
         return BitSlicedIndex(
-            arena=jnp.asarray(z["arena"]),
-            row_offset=jnp.asarray(z["row_offset"]),
-            block_width=jnp.asarray(z["block_width"]),
-            doc_slot=jnp.asarray(z["doc_slot"]),
-            doc_n_terms=jnp.asarray(z["doc_n_terms"]),
-            block_docs=int(manifest["block_docs"]),
-            n_docs=int(manifest["n_docs"]),
+            layout=layout,
+            storage=DeviceArena(jnp.asarray(z["arena"])),
             params=IndexParams.from_json(manifest["params"]),
         )

@@ -13,6 +13,14 @@ serving subsystem (repro.serve) share one implementation — the server's
 micro-batcher pads with ``pad_term_batch`` and its planner keys buckets off
 ``padded_len``, so batched results are byte-identical to ``search``.
 
+Out-of-core indexes (storage with more than one shard — MappedArena over a
+cobs-jax-v2 store) run PAGED execution: ``plan_shards`` rebases each
+shard's block row offsets to the shard's first row, the engine pages one
+shard tile at a time to device (through a DeviceTileCache), scores it with
+the same kernels, and the score-combine step concatenates per-shard slot
+scores in block order — blocks partition the document slots, so the
+combine is exact and results are bit-identical to dense execution.
+
 Distribution (mesh-sharded arenas, psum'd partial scores, distributed top-k)
 lives in repro.index.distributed and reuses the same planning functions.
 """
@@ -26,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dna, hashing
+from .arena import ArenaLayout, DeviceTileCache, common_tile_rows
 from .index import BitSlicedIndex, IndexParams
 from ..kernels import ops
 
@@ -44,6 +53,35 @@ def plan_rows(
     w = block_width.astype(jnp.uint32)
     rows = hashes[..., None] % w
     return (rows + row_offset.astype(jnp.uint32)).astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """Per-shard query addressing: the shard's blocks with row offsets
+    rebased to the shard's first arena row. Scoring shard ``shard`` with
+    (row_offset, block_width) against its device tile yields the slot
+    scores of blocks [block_start, block_end) — per-shard outputs
+    concatenated in shard order ARE the global slot scores."""
+    shard: int
+    block_start: int
+    block_end: int
+    row_offset: np.ndarray   # int32 [nb_s], shard-local
+    block_width: np.ndarray  # int32 [nb_s]
+
+
+def plan_shards(layout: ArenaLayout, shard_row_starts: np.ndarray
+                ) -> list[ShardPlan]:
+    """Map every storage shard to the blocks it holds (pure; shared by the
+    QueryEngine and the serving planner)."""
+    ranges = layout.shard_blocks(np.asarray(shard_row_starts, np.int64))
+    plans = []
+    for s, (b0, b1) in enumerate(ranges):
+        base = np.int32(shard_row_starts[s])
+        plans.append(ShardPlan(
+            shard=s, block_start=b0, block_end=b1,
+            row_offset=layout.row_offset[b0:b1] - base,
+            block_width=layout.block_width[b0:b1]))
+    return plans
 
 
 def compile_pattern(pattern, params: IndexParams) -> np.ndarray:
@@ -219,33 +257,71 @@ class QueryEngine:
     method: 'vertical' (default, Harley–Seal kernel), 'unpack'
     (paper-faithful kernel), 'lookup' (fused gather kernel, k=1 indexes),
     or 'ref' (pure jnp oracle).
+
+    Dense storage (one shard) scores in one device call against the
+    resident arena. Sharded storage scores shard by shard through
+    ``tile_cache`` (default: an unbounded DeviceTileCache, so hot shards
+    stay in HBM) and concatenates — bit-identical either way.
     """
 
     def __init__(self, index: BitSlicedIndex, method: str = "vertical",
-                 term_pad: int = 64):
+                 term_pad: int = 64,
+                 tile_cache: DeviceTileCache | None = None):
         self.index = index
         self.method = method
         self.term_pad = term_pad
         self._score = make_score_fn(index.params.n_hashes, method)
         self._score_batch = make_batch_score_fn(index.params.n_hashes, method)
+        self._paged = index.storage.n_shards > 1
+        self.tiles = (tile_cache if tile_cache is not None
+                      else DeviceTileCache(
+                          index.storage,
+                          pad_rows_to=common_tile_rows(index.storage)))
+        self._shard_plans = plan_shards(index.layout,
+                                        index.storage.shard_row_starts)
+        # device-staged per-shard addressing (one H2D copy, not per query)
+        self._shard_args = [(sp.shard, jnp.asarray(sp.row_offset),
+                             jnp.asarray(sp.block_width))
+                            for sp in self._shard_plans]
+        self._host_slot = np.asarray(index.layout.doc_slot)
 
     # -- scoring -------------------------------------------------------------
+    def _score_slots(self, padded: jnp.ndarray, L: jnp.ndarray) -> np.ndarray:
+        if not self._paged:
+            # tiles.get(0) caches the device copy for every backend
+            # (a single-shard MappedArena would otherwise re-upload here)
+            return np.asarray(self._score(
+                self.tiles.get(0), self.index.row_offset,
+                self.index.block_width, padded, L))
+        parts = [np.asarray(self._score(self.tiles.get(s), offs, widths,
+                                        padded, L))
+                 for s, offs, widths in self._shard_args]
+        return np.concatenate(parts)
+
+    def _score_slots_batch(self, terms: jnp.ndarray, n_valid: jnp.ndarray
+                           ) -> np.ndarray:
+        if not self._paged:
+            return np.asarray(self._score_batch(
+                self.tiles.get(0), self.index.row_offset,
+                self.index.block_width, terms, n_valid))
+        parts = [np.asarray(self._score_batch(self.tiles.get(s), offs,
+                                              widths, terms, n_valid))
+                 for s, offs, widths in self._shard_args]
+        return np.concatenate(parts, axis=1)
+
     def score_terms(self, terms: np.ndarray) -> np.ndarray:
         """Distinct packed terms [L, 2] -> int32 scores [n_docs] (original
         document order)."""
         padded, L = pad_terms(terms, self.term_pad)
-        slots = self._score(self.index.arena, self.index.row_offset,
-                            self.index.block_width, jnp.asarray(padded),
-                            jnp.int32(L))
-        return np.asarray(slots)[np.asarray(self.index.doc_slot)]
+        slots = self._score_slots(jnp.asarray(padded), jnp.int32(L))
+        return slots[self._host_slot]
 
     def score_terms_batch(self, terms: np.ndarray, n_valid: np.ndarray
                           ) -> np.ndarray:
         """terms [Q, L, 2], n_valid [Q] -> scores [Q, n_docs]."""
-        slots = self._score_batch(self.index.arena, self.index.row_offset,
-                                  self.index.block_width, jnp.asarray(terms),
-                                  jnp.asarray(n_valid, dtype=jnp.int32))
-        return np.asarray(slots)[:, np.asarray(self.index.doc_slot)]
+        slots = self._score_slots_batch(
+            jnp.asarray(terms), jnp.asarray(n_valid, dtype=jnp.int32))
+        return slots[:, self._host_slot]
 
     # -- search --------------------------------------------------------------
     def search(self, pattern, threshold: float = 0.8) -> SearchResult:

@@ -1,0 +1,278 @@
+"""cobs-jax-v2: the out-of-core, shard-per-block-group index directory.
+
+Layout on disk::
+
+    <path>/
+      manifest.json            format, params, layout metadata, shard table
+      meta.npz                 row_offset / block_width / doc_slot / doc_n_terms
+      shard-000000.npy         raw (uncompressed) .npy — mmap-able
+      shard-000001.npy         ...
+
+Each shard holds the arena rows of one *block group* (``blocks_per_shard``
+consecutive blocks; 1 by default, i.e. shard-per-block). The manifest's
+shard table records, per shard, the file name, block range, row range, and
+a blake2b content hash — so an opened store can verify integrity shard by
+shard and a query can address exactly the shards its blocks live in.
+
+Because shards are raw ``.npy`` files, ``np.load(..., mmap_mode='r')``
+maps them without reading: opening a v2 index costs metadata only, and
+arena bytes are paged in by the OS as queries touch rows (and staged to
+device per shard by the DeviceTileCache). This is the representation that
+delivers the paper's "does not need the complete index in RAM", and it is
+the unit the multi-host placement (repro.index.distributed /
+repro.index.placement) will schedule: a host serves the shard files its
+manifest rows assign to it.
+
+Writers stream: ``ShardStoreWriter.write_shard`` persists one finished
+block group and forgets it, so building an index of any size needs host
+memory for one block group at a time (see
+repro.index.build_parallel.build_compact_streaming).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .arena import ArenaLayout, MappedArena
+from .index import BitSlicedIndex, IndexParams
+
+FORMAT_V2 = "cobs-jax-v2"
+
+
+def _hash_array(a: np.ndarray) -> str:
+    return hashlib.blake2b(np.ascontiguousarray(a).tobytes(),
+                           digest_size=16).hexdigest()
+
+
+def shard_row_bounds(layout: ArenaLayout, blocks_per_shard: int = 1
+                     ) -> np.ndarray:
+    """Shard boundaries (int64 [n_shards+1]) grouping ``blocks_per_shard``
+    consecutive blocks per shard — always on block edges."""
+    if blocks_per_shard < 1:
+        raise ValueError("blocks_per_shard must be >= 1")
+    bounds = [0]
+    for b0 in range(0, layout.n_blocks, blocks_per_shard):
+        b1 = min(b0 + blocks_per_shard, layout.n_blocks) - 1
+        bounds.append(int(layout.row_offset[b1]) + int(layout.block_width[b1]))
+    return np.asarray(bounds, dtype=np.int64)
+
+
+def _shard_name(s: int) -> str:
+    return f"shard-{s:06d}.npy"
+
+
+class ShardStoreWriter:
+    """Streaming writer for a v2 store.
+
+    The layout (known up front from term counts alone) fixes the shard
+    table; block-group matrices are then written one at a time in any
+    order. ``finalize`` persists metadata + manifest and fails if shards
+    are missing. Re-running over an existing directory resumes: shards
+    whose file already matches the expected shape (and hash, if a partial
+    manifest is present) are skipped by the builder via ``have_shard``.
+    """
+
+    def __init__(self, path: str | Path, layout: ArenaLayout,
+                 params: IndexParams, blocks_per_shard: int = 1):
+        self.path = Path(path)
+        self.path.mkdir(parents=True, exist_ok=True)
+        self.layout = layout
+        self.params = params
+        self.blocks_per_shard = int(blocks_per_shard)
+        self.row_starts = shard_row_bounds(layout, blocks_per_shard)
+        self.block_ranges = layout.shard_blocks(self.row_starts)
+        self._hashes: dict[int, str] = {}
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.row_starts) - 1
+
+    def shard_shape(self, s: int) -> tuple[int, int]:
+        rows = int(self.row_starts[s + 1] - self.row_starts[s])
+        return rows, self.layout.doc_words
+
+    def shard_blocks(self, s: int) -> tuple[int, int]:
+        return self.block_ranges[s]
+
+    def have_shard(self, s: int) -> bool:
+        """A resumable shard: file exists with the expected shape/dtype."""
+        f = self.path / _shard_name(s)
+        if not f.exists():
+            return False
+        try:
+            a = np.load(f, mmap_mode="r")
+        except (ValueError, OSError):
+            return False
+        return a.shape == self.shard_shape(s) and a.dtype == np.uint32
+
+    def write_shard(self, s: int, matrix: np.ndarray) -> None:
+        if matrix.shape != self.shard_shape(s) or matrix.dtype != np.uint32:
+            raise ValueError(
+                f"shard {s}: got {matrix.dtype}{matrix.shape}, want "
+                f"uint32{self.shard_shape(s)}")
+        np.save(self.path / _shard_name(s), matrix)
+        self._hashes[s] = _hash_array(matrix)
+
+    def finalize(self) -> Path:
+        shards = []
+        for s in range(self.n_shards):
+            f = self.path / _shard_name(s)
+            if not f.exists():
+                raise FileNotFoundError(f"missing shard file {f}")
+            h = self._hashes.get(s)
+            if h is None:                      # resumed shard: hash from disk
+                h = _hash_array(np.load(f, mmap_mode="r"))
+            b0, b1 = self.block_ranges[s]
+            shards.append({
+                "file": _shard_name(s),
+                "blocks": [b0, b1],
+                "rows": [int(self.row_starts[s]), int(self.row_starts[s + 1])],
+                "hash": h,
+            })
+        np.savez(self.path / "meta.npz",
+                 row_offset=self.layout.row_offset,
+                 block_width=self.layout.block_width,
+                 doc_slot=self.layout.doc_slot,
+                 doc_n_terms=self.layout.doc_n_terms)
+        manifest = {
+            "format": FORMAT_V2,
+            "block_docs": self.layout.block_docs,
+            "n_docs": self.layout.n_docs,
+            "params": self.params.to_json(),
+            "shards": shards,
+        }
+        out = self.path / "manifest.json"
+        tmp = self.path / "manifest.json.tmp"
+        tmp.write_text(json.dumps(manifest, indent=2))
+        tmp.rename(out)                        # manifest commit is atomic
+        return out
+
+
+def open_store(path: str | Path, *, verify: bool = False
+               ) -> tuple[ArenaLayout, MappedArena, IndexParams]:
+    """Open a v2 store as (layout, mmap-backed storage, params) without
+    reading arena bytes (``verify=True`` additionally checks every shard's
+    content hash, which does read them)."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    if manifest.get("format") != FORMAT_V2:
+        raise ValueError(f"not a {FORMAT_V2} store: {path}")
+    with np.load(path / "meta.npz") as z:
+        layout = ArenaLayout.make(
+            z["row_offset"], z["block_width"], z["doc_slot"],
+            z["doc_n_terms"], int(manifest["block_docs"]),
+            int(manifest["n_docs"]))
+    shards = manifest["shards"]
+    starts = np.asarray([s["rows"][0] for s in shards]
+                        + [shards[-1]["rows"][1]], dtype=np.int64)
+    sources = [path / s["file"] for s in shards]
+    storage = MappedArena(sources, starts, doc_words=layout.doc_words)
+    if verify:
+        for i, s in enumerate(shards):
+            got = _hash_array(storage.shard_host(i))
+            if got != s["hash"]:
+                raise IOError(f"shard {s['file']} content hash mismatch")
+    params = IndexParams.from_json(manifest["params"])
+    return layout, storage, params
+
+
+def load_index_v2(path: str | Path, *, verify: bool = False
+                  ) -> BitSlicedIndex:
+    layout, storage, params = open_store(path, verify=verify)
+    return BitSlicedIndex(layout=layout, storage=storage, params=params)
+
+
+def save_index_v2(index: BitSlicedIndex, path: str | Path, *,
+                  blocks_per_shard: int = 1) -> None:
+    """Write any index (whatever its storage backend) as a v2 store, one
+    block group at a time — host memory stays bounded by one shard."""
+    writer = ShardStoreWriter(path, index.layout, index.params,
+                              blocks_per_shard)
+    starts = writer.row_starts
+    for s in range(writer.n_shards):
+        rows = np.arange(starts[s], starts[s + 1], dtype=np.int64)
+        writer.write_shard(
+            s, np.ascontiguousarray(
+                index.storage.read_rows_host(rows).astype(np.uint32)))
+    writer.finalize()
+
+
+def migrate_v1_to_v2(src: str | Path, dst: str | Path, *,
+                     blocks_per_shard: int = 1) -> None:
+    """Rewrite a legacy v1 monolith directory as a v2 shard store. The v1
+    npz must be decompressed once (that is the format's flaw); shards are
+    then written group by group."""
+    src = Path(src)
+    manifest = json.loads((src / "manifest.json").read_text())
+    if manifest.get("format") != "cobs-jax-v1":
+        raise ValueError(f"not a cobs-jax-v1 index: {src}")
+    with np.load(src / "index.npz") as z:
+        layout = ArenaLayout.make(
+            z["row_offset"], z["block_width"], z["doc_slot"],
+            z["doc_n_terms"], int(manifest["block_docs"]),
+            int(manifest["n_docs"]))
+        params = IndexParams.from_json(manifest["params"])
+        writer = ShardStoreWriter(dst, layout, params, blocks_per_shard)
+        arena = z["arena"]
+        for s in range(writer.n_shards):
+            r0, r1 = int(writer.row_starts[s]), int(writer.row_starts[s + 1])
+            writer.write_shard(s, np.ascontiguousarray(arena[r0:r1]))
+    writer.finalize()
+
+
+def merge_stores(a: str | Path, b: str | Path, out: str | Path) -> None:
+    """Merge two v2 COMPACT stores into a third by manifest concatenation:
+    shard files are hard-linked (copied if the filesystem refuses links)
+    and never read — the paper's section 2.3 concatenation as an
+    O(metadata + n_shards) directory operation."""
+    import shutil
+
+    la, sa, pa = open_store(a)
+    lb, sb, pb = open_store(b)
+    if pa != pb:
+        raise ValueError("parameter mismatch")
+    from .index import merge_compact_layout
+    layout = merge_compact_layout(la, lb)
+
+    out = Path(out)
+    out.mkdir(parents=True, exist_ok=True)
+    man_a = json.loads((Path(a) / "manifest.json").read_text())
+    man_b = json.loads((Path(b) / "manifest.json").read_text())
+    shards, row_base, block_base = [], 0, 0
+    for src_dir, man in ((Path(a), man_a), (Path(b), man_b)):
+        for s in man["shards"]:
+            i = len(shards)
+            name = _shard_name(i)
+            target = out / name
+            if target.exists():
+                target.unlink()
+            try:
+                import os
+                os.link(src_dir / s["file"], target)
+            except OSError:
+                shutil.copyfile(src_dir / s["file"], target)
+            shards.append({
+                "file": name,
+                "blocks": [s["blocks"][0] + block_base,
+                           s["blocks"][1] + block_base],
+                "rows": [s["rows"][0] + row_base, s["rows"][1] + row_base],
+                "hash": s["hash"],
+            })
+        row_base += int(man["shards"][-1]["rows"][1])
+        block_base += int(man["shards"][-1]["blocks"][1])
+    np.savez(out / "meta.npz",
+             row_offset=layout.row_offset, block_width=layout.block_width,
+             doc_slot=layout.doc_slot, doc_n_terms=layout.doc_n_terms)
+    manifest = {
+        "format": FORMAT_V2,
+        "block_docs": layout.block_docs,
+        "n_docs": layout.n_docs,
+        "params": pa.to_json(),
+        "shards": shards,
+    }
+    tmp = out / "manifest.json.tmp"
+    tmp.write_text(json.dumps(manifest, indent=2))
+    tmp.rename(out / "manifest.json")

@@ -4,7 +4,9 @@ construction and query processing', built on shard_map + lax collectives."""
 from .distributed import DistributedIndex
 from .placement import BlockPlacement
 from .hedge import HedgedExecutor, SimClock, ShardSim
-from .build_parallel import build_compact_parallel
+from .build_parallel import (StreamingBuildStats, build_compact_parallel,
+                             build_compact_streaming)
 
 __all__ = ["DistributedIndex", "BlockPlacement", "HedgedExecutor", "SimClock",
-           "ShardSim", "build_compact_parallel"]
+           "ShardSim", "StreamingBuildStats", "build_compact_parallel",
+           "build_compact_streaming"]

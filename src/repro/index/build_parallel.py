@@ -1,4 +1,4 @@
-"""Parallel / fault-tolerant compact-index construction.
+"""Parallel / fault-tolerant / out-of-core compact-index construction.
 
 The paper parallelizes compact construction over sub-indexes ('for compact
 index construction we parallelized construction of the subindices'). Blocks
@@ -6,18 +6,29 @@ are independent, so we (1) build them in a worker pool, (2) checkpoint each
 finished block to disk, and (3) on restart resume from the completed-block
 manifest — a node loss during a 100k-document build costs only the blocks
 in flight, not hours of work.
+
+``build_compact_streaming`` is the out-of-core variant: finished block
+groups are written straight to a cobs-jax-v2 shard store (repro.core.store)
+and dropped from host memory, so peak host usage is one block group — the
+full arena is never concatenated anywhere. The returned index is backed by
+an np.memmap MappedArena over the store just written, and resuming an
+interrupted build skips every shard already on disk.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import bloom, theory
-from ..core.index import BitSlicedIndex, IndexParams, _pad32
+from ..core import bloom
+from ..core.arena import DeviceArena
+from ..core.index import BitSlicedIndex, IndexParams, plan_compact_layout
+from ..core.store import ShardStoreWriter, load_index_v2
 
 
 def build_compact_parallel(
@@ -34,20 +45,10 @@ def build_compact_parallel(
     n_docs = len(doc_terms)
     if n_docs == 0:
         raise ValueError("empty document set")
-    block_docs = _pad32(block_docs)
     counts = np.array([t.shape[0] for t in doc_terms], dtype=np.int64)
-    order = np.argsort(counts, kind="stable")
-    doc_slot = np.empty(n_docs, dtype=np.int32)
-    doc_slot[order] = np.arange(n_docs, dtype=np.int32)
-    n_blocks = (n_docs + block_docs - 1) // block_docs
-
-    widths = []
-    for b in range(n_blocks):
-        ids = order[b * block_docs:(b + 1) * block_docs]
-        v_max = int(counts[ids].max()) if ids.size else 0
-        widths.append(bloom.aligned_width(
-            theory.bloom_size(max(v_max, 1), params.fpr, params.n_hashes),
-            row_align))
+    layout, order = plan_compact_layout(counts, params, block_docs, row_align)
+    block_docs = layout.block_docs
+    n_blocks = layout.n_blocks
 
     ckpt = Path(checkpoint_dir) if checkpoint_dir else None
     done: dict[int, np.ndarray] = {}
@@ -64,33 +65,123 @@ def build_compact_parallel(
         if b in done:
             return b, done[b]
         ids = order[b * block_docs:(b + 1) * block_docs]
-        m = bloom.build_block_matrix([doc_terms[i] for i in ids], widths[b],
-                                     params.n_hashes, block_docs)
+        m = bloom.build_block_matrix(
+            [doc_terms[i] for i in ids], int(layout.block_width[b]),
+            params.n_hashes, block_docs)
         if ckpt is not None:
             np.save(ckpt / f"block{b:06d}.npy", m)
         return b, m
+
+    def checkpoint_manifest(results: dict[int, np.ndarray]) -> None:
+        if ckpt is not None:
+            (ckpt / "blocks.json").write_text(
+                json.dumps({"done": sorted(results.keys())}))
 
     results: dict[int, np.ndarray] = {}
     if workers <= 1:
         for b in range(n_blocks):
             results.update([build_one(b)])
+            checkpoint_manifest(results)
     else:
         with ThreadPoolExecutor(max_workers=workers) as pool:
             for b, m in pool.map(build_one, range(n_blocks)):
                 results[b] = m
-                if ckpt is not None:
-                    (ckpt / "blocks.json").write_text(
-                        json.dumps({"done": sorted(results.keys())}))
+                checkpoint_manifest(results)
 
-    offsets = np.concatenate([[0], np.cumsum(widths)[:-1]]).astype(np.int32)
     return BitSlicedIndex(
-        arena=jnp.asarray(np.concatenate([results[b] for b in range(n_blocks)],
-                                         axis=0)),
-        row_offset=jnp.asarray(offsets),
-        block_width=jnp.asarray(np.array(widths, dtype=np.int32)),
-        doc_slot=jnp.asarray(doc_slot),
-        doc_n_terms=jnp.asarray(counts.astype(np.int32)),
-        block_docs=block_docs,
-        n_docs=n_docs,
+        layout=layout,
+        storage=DeviceArena(jnp.asarray(
+            np.concatenate([results[b] for b in range(n_blocks)], axis=0))),
         params=params,
     )
+
+
+@dataclasses.dataclass
+class StreamingBuildStats:
+    """Host-memory accounting for a streaming build (the out-of-core
+    acceptance evidence): ``peak_block_bytes`` is the high-water mark of
+    simultaneously-live block-group matrices inside the builder, and
+    ``max_shard_bytes``/``total_arena_bytes`` give the shard-size
+    arithmetic it must stay proportional to."""
+    n_shards: int
+    n_resumed: int
+    max_shard_bytes: int
+    total_arena_bytes: int
+    peak_block_bytes: int
+
+
+def build_compact_streaming(
+    doc_terms: list[np.ndarray],
+    store_path: str | Path,
+    params: IndexParams = IndexParams(),
+    block_docs: int = 1024,
+    row_align: int = bloom.ROW_ALIGN,
+    blocks_per_shard: int = 1,
+    workers: int = 1,
+) -> tuple[BitSlicedIndex, StreamingBuildStats]:
+    """Build a compact index straight into a cobs-jax-v2 store.
+
+    Bit-identical to ``core.build_compact`` (same plan_compact_layout, same
+    block matrices) but never holds more than ``workers`` block groups in
+    host memory: each finished group is written as one shard and released.
+    Shards already present in ``store_path`` (from an interrupted run) are
+    skipped. Returns the mmap-backed index plus allocation accounting."""
+    n_docs = len(doc_terms)
+    if n_docs == 0:
+        raise ValueError("empty document set")
+    counts = np.array([t.shape[0] for t in doc_terms], dtype=np.int64)
+    layout, order = plan_compact_layout(counts, params, block_docs, row_align)
+    writer = ShardStoreWriter(store_path, layout, params, blocks_per_shard)
+
+    lock = threading.Lock()
+    live_bytes = 0
+    peak_bytes = 0
+    n_resumed = 0
+
+    def account(delta: int) -> None:
+        nonlocal live_bytes, peak_bytes
+        with lock:
+            live_bytes += delta
+            peak_bytes = max(peak_bytes, live_bytes)
+
+    def build_shard(s: int) -> None:
+        nonlocal n_resumed
+        if writer.have_shard(s):
+            with lock:
+                n_resumed += 1
+            return
+        b0, b1 = writer.shard_blocks(s)
+        nbytes = writer.shard_shape(s)[0] * layout.doc_words * 4
+        account(+nbytes)
+        try:
+            groups = []
+            for b in range(b0, b1):
+                ids = order[b * layout.block_docs:(b + 1) * layout.block_docs]
+                groups.append(bloom.build_block_matrix(
+                    [doc_terms[i] for i in ids], int(layout.block_width[b]),
+                    params.n_hashes, layout.block_docs))
+            matrix = groups[0] if len(groups) == 1 else \
+                np.concatenate(groups, axis=0)
+            writer.write_shard(s, matrix)
+        finally:
+            account(-nbytes)
+
+    if workers <= 1:
+        for s in range(writer.n_shards):
+            build_shard(s)
+    else:
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            list(pool.map(build_shard, range(writer.n_shards)))
+    writer.finalize()
+
+    index = load_index_v2(store_path)
+    shard_bytes = [index.storage.shard_nbytes(s)
+                   for s in range(index.storage.n_shards)]
+    stats = StreamingBuildStats(
+        n_shards=writer.n_shards,
+        n_resumed=n_resumed,
+        max_shard_bytes=max(shard_bytes),
+        total_arena_bytes=sum(shard_bytes),
+        peak_block_bytes=peak_bytes,
+    )
+    return index, stats

@@ -73,7 +73,9 @@ class DistributedIndex:
         n_doc_shards = math.prod(mesh.shape[a] for a in self.doc_axes)
         n_row_shards = mesh.shape[row_axis] if row_axis else 1
 
-        arena = np.asarray(index.arena)
+        # full_host reads mmap'd shards directly — index.arena would first
+        # concatenate an out-of-core index dense in device memory
+        arena = index.storage.full_host()
         arena = _pad_to(arena, 1, n_doc_shards)       # pad doc words
         arena = _pad_to(arena, 0, n_row_shards)       # pad rows (zeros, never
         self.doc_words = arena.shape[1]               # addressed by queries)

@@ -33,22 +33,35 @@ from ..serve import QueryServer, ServerConfig, Status
 def build_or_load(args):
     corpus = make_corpus(args.n_docs, k=15, mean_length=2000, sigma=1.0,
                          seed=0)
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
     index = None
     if args.index_dir:
         try:
             index = load_index(args.index_dir)
-            print(f"loaded index from {args.index_dir}")
+            print(f"loaded index from {args.index_dir} "
+                  f"({index.storage.n_shards} shard(s))")
         except FileNotFoundError:
             pass
     if index is None:
         t0 = time.time()
-        index = build_compact(corpus.doc_terms,
-                              IndexParams(n_hashes=1, fpr=0.3, kmer=15),
-                              block_docs=64)
-        print(f"built compact index: {index.n_docs} docs, "
-              f"{index.size_bytes() / 2**20:.1f} MiB in {time.time()-t0:.1f}s")
-        if args.index_dir:
-            save_index(index, args.index_dir)
+        if args.store_format == "v2" and args.index_dir:
+            # out-of-core path: stream shards to disk, serve via mmap
+            from ..index import build_compact_streaming
+            index, stats = build_compact_streaming(
+                corpus.doc_terms, args.index_dir, params, block_docs=64)
+            print(f"streamed v2 store: {index.n_docs} docs, "
+                  f"{stats.n_shards} shards, peak build host "
+                  f"{stats.peak_block_bytes / 2**20:.2f} MiB "
+                  f"in {time.time()-t0:.1f}s")
+        else:
+            # (store_format is necessarily v1 here: v2 + index_dir took the
+            # streaming branch, and v2 without index_dir errors at parse)
+            index = build_compact(corpus.doc_terms, params, block_docs=64)
+            print(f"built compact index: {index.n_docs} docs, "
+                  f"{index.size_bytes() / 2**20:.1f} MiB "
+                  f"in {time.time()-t0:.1f}s")
+            if args.index_dir:
+                save_index(index, args.index_dir)
     return corpus, index
 
 
@@ -114,16 +127,27 @@ def main() -> None:
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--index-dir", default=None,
                     help="load/save the index here")
+    ap.add_argument("--store-format", default="v1", choices=["v1", "v2"],
+                    help="on-disk format when building with --index-dir: "
+                         "v2 streams shards and serves out-of-core (mmap)")
+    ap.add_argument("--tile-cache-mib", type=float, default=None,
+                    help="HBM budget for shard tiles when serving a "
+                         "sharded (v2) index; default unbounded")
     ap.add_argument("--no-warmup", action="store_true")
     args = ap.parse_args()
     if args.mode == "open" and args.qps <= 0:
         ap.error("--qps must be > 0 in open-loop mode")
+    if args.store_format == "v2" and not args.index_dir:
+        ap.error("--store-format v2 requires --index-dir (the store is "
+                 "the on-disk shard directory)")
     if args.concurrency < 1:
         ap.error("--concurrency must be >= 1")
 
     corpus, index = build_or_load(args)
     server = QueryServer(index, ServerConfig(
-        max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3))
+        max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
+        tile_cache_bytes=(None if args.tile_cache_mib is None
+                          else int(args.tile_cache_mib * 2**20))))
     queries, origin = make_workload(corpus, args.queries)
 
     if args.mode == "closed":

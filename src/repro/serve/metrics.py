@@ -25,6 +25,11 @@ class MetricsSnapshot:
     mean_occupancy: float
     cache_hit_rate: float
     methods: dict[str, int]
+    # out-of-core arena paging (0 / empty for dense single-shard indexes)
+    page_faults: int = 0
+    tile_hits: int = 0
+    resident_tiles: int = 0
+    tile_hit_rate: float = 0.0
 
     def report(self) -> str:
         meth = " ".join(f"{m}={n}" for m, n in sorted(self.methods.items()))
@@ -33,6 +38,9 @@ class MetricsSnapshot:
                 f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
                 f"occupancy={self.mean_occupancy:.2f} "
                 f"cache_hit_rate={self.cache_hit_rate:.2f} "
+                f"tiles[resident={self.resident_tiles} "
+                f"faults={self.page_faults} "
+                f"hit_rate={self.tile_hit_rate:.2f}] "
                 f"dispatch[{meth}]")
 
 
@@ -53,6 +61,9 @@ class ServingMetrics:
         self.dropped = 0
         self.cache_hits = 0
         self.n_batches = 0
+        self.page_faults = 0
+        self.tile_hits = 0
+        self.resident_tiles = 0
 
     # -- recording ---------------------------------------------------------
     def record_request(self, *, wait_s: float, service_s: float,
@@ -76,6 +87,14 @@ class ServingMetrics:
     def record_dropped(self) -> None:
         self.dropped += 1
 
+    def record_tiles(self, *, hits: int, faults: int, resident: int) -> None:
+        """Device-tile cache activity for one scoring pass: cache hits,
+        page faults (host->device shard stages), and the resident-tile
+        gauge after the pass."""
+        self.tile_hits += hits
+        self.page_faults += faults
+        self.resident_tiles = resident
+
     # -- reading -----------------------------------------------------------
     def percentile_ms(self, p: float) -> float:
         if not self.latencies_s:
@@ -85,7 +104,12 @@ class ServingMetrics:
 
     def snapshot(self) -> MetricsSnapshot:
         n_cacheable = self.served
+        n_tiles = self.tile_hits + self.page_faults
         return MetricsSnapshot(
+            page_faults=self.page_faults,
+            tile_hits=self.tile_hits,
+            resident_tiles=self.resident_tiles,
+            tile_hit_rate=(self.tile_hits / n_tiles if n_tiles else 0.0),
             served=self.served,
             rejected=self.rejected,
             dropped=self.dropped,

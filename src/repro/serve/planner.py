@@ -19,6 +19,13 @@ size) and per batch sees only (bucket = padded term length, batch size),
 so a plan is a pure function of a small key — score functions are built
 lazily per method and memoized, keeping the jit cache bounded by the
 bucket set times the method set.
+
+Layout awareness (out-of-core arenas): when the index storage is sharded
+(MappedArena over a cobs-jax-v2 store), the plan is marked ``paged`` and
+carries the per-shard addressing (repro.core.query.plan_shards) — the
+server then dispatches the planned kernel once per shard tile resident in
+the device tile cache and combines slot scores, instead of one call
+against a dense arena.
 """
 from __future__ import annotations
 
@@ -26,7 +33,8 @@ import dataclasses
 from collections import Counter
 
 from ..core.index import BitSlicedIndex
-from ..core.query import make_batch_score_fn, make_score_fn
+from ..core.query import (ShardPlan, make_batch_score_fn, make_score_fn,
+                          plan_shards)
 
 # Below this many (padded) terms the fixed costs dominate and the simple
 # unpack expansion is fastest; at/above it Harley–Seal / fused lookup win.
@@ -42,11 +50,14 @@ class QueryPlan:
     bucket: int        # padded term length (jit-cache shape key)
     batch_size: int    # live queries in the batch
     fused: bool        # True = single pallas_call for the whole batch
+    paged: bool = False  # True = dispatch per shard tile, then combine
+    n_shards: int = 1
 
 
 class QueryPlanner:
     """Chooses the kernel for each (bucket, batch-size) micro-batch and
-    owns the memoized score functions for the methods it dispatches."""
+    owns the memoized score functions for the methods it dispatches, plus
+    the per-shard addressing when the arena storage is sharded."""
 
     def __init__(self, index: BitSlicedIndex, *,
                  short_query_terms: int = SHORT_QUERY_TERMS):
@@ -56,10 +67,14 @@ class QueryPlanner:
         self._single_fns: dict[str, object] = {}
         self._batch_fns: dict[str, object] = {}
         self.dispatch_counts: Counter[str] = Counter()
+        self.n_shards = index.storage.n_shards
+        self.shard_plans: list[ShardPlan] = plan_shards(
+            index.layout, index.storage.shard_row_starts)
 
     # -- planning ----------------------------------------------------------
     def plan(self, bucket: int, batch_size: int) -> QueryPlan:
         """Pure dispatch decision; records nothing."""
+        paged = self.n_shards > 1
         if batch_size > 1:
             # Batched: the fused multi-query kernel whenever it applies
             # (k=1 — the paper's default); otherwise the gather path, with
@@ -70,7 +85,8 @@ class QueryPlanner:
                 method = ("unpack" if bucket < self.short_query_terms
                           else "vertical")
             return QueryPlan(method, bucket, batch_size,
-                             fused=(method == "lookup"))
+                             fused=(method == "lookup"),
+                             paged=paged, n_shards=self.n_shards)
         # Singletons: short queries take the cheap expansion; long ones the
         # fused gather (k=1) or vertical counters.
         if bucket < self.short_query_terms:
@@ -79,7 +95,8 @@ class QueryPlanner:
             method = "lookup"
         else:
             method = "vertical"
-        return QueryPlan(method, bucket, batch_size, fused=False)
+        return QueryPlan(method, bucket, batch_size, fused=False,
+                         paged=paged, n_shards=self.n_shards)
 
     # -- score-function cache ---------------------------------------------
     def batch_score_fn(self, plan: QueryPlan):

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import hashing
+from ..core.arena import DeviceTileCache, common_tile_rows
 from ..core.index import BitSlicedIndex
 from ..core.query import (SearchResult, compile_pattern, select_hits)
 from .batcher import MicroBatch, MicroBatcher
@@ -45,6 +46,10 @@ class ServerConfig:
     result_cache: int = 1024    # whole-query LRU entries (0 disables)
     row_cache: int = 4096       # single-term row LRU entries (0 disables)
     default_threshold: float = 0.8
+    # HBM budget for arena shard tiles when serving an out-of-core
+    # (sharded/mmapped) index; None = unbounded, every touched shard stays
+    # resident. Ignored for dense single-shard storage.
+    tile_cache_bytes: Optional[int] = None
 
 
 def _next_pow2(n: int) -> int:
@@ -67,11 +72,17 @@ class QueryServer:
         self.rows_cache = LRUCache(config.row_cache)
         self._responses: dict[int, QueryResponse] = {}
         self._next_id = 0
-        self._host_slot = np.asarray(index.doc_slot)
-        # Host arena copy for the row-cache point-query path, built on
-        # first use: eager np.asarray(arena) would double resident memory
-        # for large indexes even with the point-query path disabled.
-        self._host_arena: Optional[np.ndarray] = None
+        self._host_slot = np.asarray(index.layout.doc_slot)
+        # Out-of-core serving state: shard tiles are paged into HBM through
+        # a bounded LRU; with dense storage there is exactly one "shard"
+        # (the resident arena) and the cache is a pass-through.
+        self.tiles = DeviceTileCache(index.storage,
+                                     capacity_bytes=config.tile_cache_bytes,
+                                     pad_rows_to=common_tile_rows(
+                                         index.storage))
+        self._shard_args = [(sp.shard, jnp.asarray(sp.row_offset),
+                             jnp.asarray(sp.block_width))
+                            for sp in self.planner.shard_plans]
 
     # -- submission ---------------------------------------------------------
     def submit(self, pattern=None, *, terms: Optional[np.ndarray] = None,
@@ -129,15 +140,16 @@ class QueryServer:
     # -- point queries (COBS single-k-mer lookups) via the row cache --------
     def _gather_host_row(self, term: np.ndarray) -> np.ndarray:
         """ANDed arena row for one term, host-side: uint32 [nb * W] in
-        slot-word order (mirrors plan_rows + gather exactly)."""
-        if self._host_arena is None:
-            self._host_arena = np.asarray(self.index.arena)
+        slot-word order (mirrors plan_rows + gather exactly). Reads rows
+        through the storage backend, so an mmapped index pages in only the
+        touched shards — the dense arena is never materialized here."""
         h = hashing.hash_terms_np(term[None, :],
                                   self.index.params.n_hashes)[0]  # [k]
-        rows = (h[:, None] % np.asarray(self.index.block_width, np.uint32)
-                + np.asarray(self.index.row_offset, np.uint32))   # [k, nb]
-        g = self._host_arena[rows.astype(np.int64)]               # [k, nb, W]
-        anded = g[0]
+        layout = self.index.layout
+        rows = (h[:, None] % layout.block_width.astype(np.uint32)
+                + layout.row_offset.astype(np.uint32))            # [k, nb]
+        g = self.index.storage.read_rows_host(rows.astype(np.int64))
+        anded = g[0]                                              # [nb, W]
         for i in range(1, g.shape[0]):
             anded = anded & g[i]
         return anded.reshape(-1)                                  # [nb * W]
@@ -156,19 +168,34 @@ class QueryServer:
         return select_hits(scores, 1, threshold), hit
 
     # -- batch scoring -------------------------------------------------------
+    def _run_plan(self, plan, fn, terms_dev, valid_dev) -> np.ndarray:
+        """Dispatch ``fn`` once against the dense arena, or — for a paged
+        plan — once per shard tile (staged through the LRU tile cache),
+        concatenating per-shard slot scores along the slot axis."""
+        if not plan.paged:
+            # tiles.get(0) caches the device copy for every backend (a
+            # single-shard MappedArena would otherwise re-upload per batch)
+            out = fn(self.tiles.get(0), self.index.row_offset,
+                     self.index.block_width, terms_dev, valid_dev)
+            return np.asarray(out)
+        parts = [np.asarray(fn(self.tiles.get(s), offs, widths,
+                               terms_dev, valid_dev))
+                 for s, offs, widths in self._shard_args]
+        return np.concatenate(parts, axis=-1)
+
     def _score_batch(self, batch: MicroBatch) -> None:
         t0 = self.clock()
         Q, B = batch.size, batch.bucket
         plan = self.planner.plan(B, Q)
         ells = np.array([r.n_terms for r in batch.requests], dtype=np.int32)
+        tiles0 = (self.tiles.hits, self.tiles.faults)
         if Q == 1:
             buf = np.zeros((B, 2), dtype=np.uint32)
             buf[: ells[0]] = batch.requests[0].terms
             fn = self.planner.single_score_fn(plan)
-            slots = fn(self.index.arena, self.index.row_offset,
-                       self.index.block_width, jnp.asarray(buf),
-                       jnp.int32(ells[0]))
-            scores = np.asarray(slots)[None, self._host_slot]
+            slots = self._run_plan(plan, fn, jnp.asarray(buf),
+                                   jnp.int32(ells[0]))
+            scores = slots[None, self._host_slot]
         else:
             # Pad the query axis to a power of two so jit entries stay
             # bounded at (buckets x log2 max_batch) rather than one per
@@ -180,16 +207,20 @@ class QueryServer:
             n_valid = np.zeros(q_pad, dtype=np.int32)
             n_valid[:Q] = ells
             fn = self.planner.batch_score_fn(plan)
-            slots = fn(self.index.arena, self.index.row_offset,
-                       self.index.block_width, jnp.asarray(buf),
-                       jnp.asarray(n_valid))
-            scores = np.asarray(slots)[:Q][:, self._host_slot]
+            slots = self._run_plan(plan, fn, jnp.asarray(buf),
+                                   jnp.asarray(n_valid))
+            scores = slots[:Q][:, self._host_slot]
         t1 = self.clock()
         service = t1 - t0
 
         self.planner.record(plan)
         self.metrics.record_batch(Q, self.batcher.occupancy(batch),
                                   plan.method)
+        if plan.paged:
+            self.metrics.record_tiles(
+                hits=self.tiles.hits - tiles0[0],
+                faults=self.tiles.faults - tiles0[1],
+                resident=len(self.tiles))
         for i, r in enumerate(batch.requests):
             result = select_hits(scores[i], r.n_terms, r.threshold)
             wait = max(0.0, t0 - r.submitted_at)

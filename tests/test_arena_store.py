@@ -1,0 +1,342 @@
+"""Out-of-core arena tests: layout/storage split, the cobs-jax-v2 shard
+store, streaming construction, paged query execution, O(metadata) merges,
+and the device tile cache.
+
+The load-bearing invariant throughout: an index built streaming to a v2
+store and queried via MappedArena is BIT-IDENTICAL — arena bytes, scores,
+hit sets, top-k — to build_compact + DeviceArena."""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (DeviceArena, DeviceTileCache, IndexParams,
+                        MappedArena, QueryEngine, build_compact, load_index,
+                        load_index_v2, merge_compact, merge_stores,
+                        migrate_v1_to_v2, save_index)
+from repro.core.query import plan_shards, select_top_k
+from repro.data import make_corpus, make_queries
+from repro.index import build_compact_streaming
+
+
+PARAMS = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+
+
+def _corpus(n=64, seed=7, mean=400):
+    return make_corpus(n, k=15, mean_length=mean, sigma=1.0, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    c = _corpus(96)
+    dense = build_compact(c.doc_terms, PARAMS, block_docs=32, row_align=64)
+    store = tmp_path_factory.mktemp("store") / "v2"
+    mapped, stats = build_compact_streaming(
+        c.doc_terms, store, PARAMS, block_docs=32, row_align=64)
+    return c, dense, mapped, stats, store
+
+
+# --------------------------------------------------------------------------
+# Streaming build == dense build (the acceptance criterion)
+# --------------------------------------------------------------------------
+
+def test_streaming_build_bit_identical(built):
+    _, dense, mapped, stats, _ = built
+    assert mapped.storage.n_shards == dense.n_blocks > 1
+    np.testing.assert_array_equal(mapped.storage.full_host(),
+                                  np.asarray(dense.arena))
+    np.testing.assert_array_equal(mapped.layout.row_offset,
+                                  dense.layout.row_offset)
+    np.testing.assert_array_equal(mapped.layout.doc_slot,
+                                  dense.layout.doc_slot)
+    assert mapped.params == dense.params
+
+
+def test_streaming_build_peak_memory_is_one_block_group(built):
+    """The out-of-core guarantee: the streaming builder's allocation
+    accounting must show peak host usage == the largest single shard, not
+    the arena (which is several shards big)."""
+    _, _, _, stats, _ = built
+    assert stats.n_shards > 1
+    assert stats.peak_block_bytes == stats.max_shard_bytes
+    assert stats.peak_block_bytes < stats.total_arena_bytes
+
+
+def test_streaming_build_resumes_from_shards(built, tmp_path):
+    c, _, mapped, _, _ = built
+    store = tmp_path / "v2r"
+    full, s1 = build_compact_streaming(c.doc_terms, store, PARAMS,
+                                       block_docs=32, row_align=64)
+    # simulate crash after some shards: drop the manifest and one shard
+    (store / "manifest.json").unlink()
+    victims = sorted(store.glob("shard-*.npy"))[1:2]
+    for v in victims:
+        v.unlink()
+    resumed, s2 = build_compact_streaming(c.doc_terms, store, PARAMS,
+                                          block_docs=32, row_align=64)
+    assert s2.n_resumed == s1.n_shards - 1
+    np.testing.assert_array_equal(resumed.storage.full_host(),
+                                  mapped.storage.full_host())
+
+
+def test_mapped_arena_pages_not_loads(built):
+    """Opening a v2 store must not read arena bytes: shards stay closed
+    until touched, and touched shards come back as read-only memmaps."""
+    _, _, _, _, store = built
+    idx = load_index(store)                 # dispatches on the v2 manifest
+    assert isinstance(idx.storage, MappedArena)
+    assert not idx.storage._open            # nothing mapped yet
+    a = idx.storage.shard_host(0)
+    assert isinstance(a, np.memmap)
+    assert len(idx.storage._open) == 1      # only the touched shard
+
+
+# --------------------------------------------------------------------------
+# Paged query == dense query
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["lookup", "vertical", "unpack"])
+def test_paged_query_bit_identical(built, method):
+    c, dense, mapped, _, _ = built
+    ed = QueryEngine(dense, method=method)
+    em = QueryEngine(mapped, method=method)
+    qs, _ = make_queries(c, n_pos=4, n_neg=2, length=120, seed=3)
+    for q in qs:
+        rd, rm = ed.search(q, 0.7), em.search(q, 0.7)
+        np.testing.assert_array_equal(rd.doc_ids, rm.doc_ids)
+        np.testing.assert_array_equal(rd.scores, rm.scores)
+        assert rd.threshold == rm.threshold
+    # every shard was touched: a COBS query gathers one row per block
+    assert em.tiles.faults == mapped.storage.n_shards
+    assert em.tiles.hits > 0                # later queries hit the cache
+
+
+def test_paged_batch_query_bit_identical(built):
+    c, dense, mapped, _, _ = built
+    ed, em = QueryEngine(dense), QueryEngine(mapped)
+    qs, _ = make_queries(c, n_pos=3, n_neg=3, length=90, seed=5)
+    ra = ed.search_batch(list(qs), threshold=0.6)
+    rb = em.search_batch(list(qs), threshold=0.6)
+    for x, y in zip(ra, rb):
+        np.testing.assert_array_equal(x.doc_ids, y.doc_ids)
+        np.testing.assert_array_equal(x.scores, y.scores)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(24, 80), st.integers(0, 10**6), st.integers(40, 200),
+       st.sampled_from(["lookup", "vertical"]))
+def test_property_mapped_equals_device(n_docs, seed, qlen, method):
+    """Property sweep: random corpora/queries, shard-per-block stores —
+    MappedArena and DeviceArena return byte-identical scores and top-k.
+    block_docs=32 on up to 80 docs gives up to 3 blocks, so query terms
+    always address rows across shard boundaries."""
+    import tempfile
+    c = _corpus(n_docs, seed=seed % 1000, mean=300)
+    dense = build_compact(c.doc_terms, PARAMS, block_docs=32, row_align=64)
+    store = Path(tempfile.mkdtemp()) / "store"
+    mapped, _ = build_compact_streaming(c.doc_terms, store, PARAMS,
+                                        block_docs=32, row_align=64)
+    qs, _ = make_queries(c, n_pos=2, n_neg=1, length=qlen,
+                         seed=seed % 97)
+    ed = QueryEngine(dense, method=method)
+    em = QueryEngine(mapped, method=method)
+    for q in qs:
+        import repro.core.dna as dna
+        terms = dna.unique_terms(dna.pack_kmers(q, 15))
+        sd, sm = ed.score_terms(terms), em.score_terms(terms)
+        np.testing.assert_array_equal(sd, sm)
+        td = select_top_k(sd, terms.shape[0], 5)
+        tm = select_top_k(sm, terms.shape[0], 5)
+        np.testing.assert_array_equal(td.doc_ids, tm.doc_ids)
+        np.testing.assert_array_equal(td.scores, tm.scores)
+
+
+# --------------------------------------------------------------------------
+# Persistence: v2 round trip, v1 compat, migration, integrity
+# --------------------------------------------------------------------------
+
+def test_save_index_v2_roundtrip(built, tmp_path):
+    _, dense, _, _, _ = built
+    save_index(dense, tmp_path / "v2", version=2, blocks_per_shard=2)
+    idx = load_index(tmp_path / "v2")
+    assert isinstance(idx.storage, MappedArena)
+    assert idx.storage.n_shards == (dense.n_blocks + 1) // 2
+    np.testing.assert_array_equal(idx.storage.full_host(),
+                                  np.asarray(dense.arena))
+
+
+def test_v1_indexes_still_load(built, tmp_path):
+    _, dense, _, _, _ = built
+    save_index(dense, tmp_path / "v1")            # default stays v1
+    man = json.loads((tmp_path / "v1" / "manifest.json").read_text())
+    assert man["format"] == "cobs-jax-v1"
+    idx = load_index(tmp_path / "v1")
+    np.testing.assert_array_equal(np.asarray(idx.arena),
+                                  np.asarray(dense.arena))
+    assert idx.params == dense.params
+
+
+def test_migrate_v1_to_v2(built, tmp_path):
+    c, dense, _, _, _ = built
+    save_index(dense, tmp_path / "v1")
+    migrate_v1_to_v2(tmp_path / "v1", tmp_path / "v2", blocks_per_shard=1)
+    idx = load_index(tmp_path / "v2")
+    assert isinstance(idx.storage, MappedArena)
+    np.testing.assert_array_equal(idx.storage.full_host(),
+                                  np.asarray(dense.arena))
+    # queries agree end to end
+    q, _ = make_queries(c, n_pos=1, n_neg=0, length=100, seed=11)
+    ra = QueryEngine(dense).search(q[0], 0.7)
+    rb = QueryEngine(idx).search(q[0], 0.7)
+    np.testing.assert_array_equal(ra.doc_ids, rb.doc_ids)
+
+
+def test_v2_verify_detects_corruption(built, tmp_path):
+    c, _, _, _, _ = built
+    store = tmp_path / "v2c"
+    build_compact_streaming(c.doc_terms, store, PARAMS, block_docs=32,
+                            row_align=64)
+    f = sorted(store.glob("shard-*.npy"))[0]
+    a = np.load(f)
+    a[0, 0] ^= np.uint32(1)
+    np.save(f, a)
+    load_index_v2(store)                          # lazy open: fine
+    with pytest.raises(IOError):
+        load_index_v2(store, verify=True)
+
+
+# --------------------------------------------------------------------------
+# Merges on the new layout
+# --------------------------------------------------------------------------
+
+def test_merge_mapped_is_metadata_only(tmp_path):
+    ca, cb = _corpus(40, seed=31), _corpus(24, seed=32)
+    a, _ = build_compact_streaming(ca.doc_terms, tmp_path / "a", PARAMS,
+                                   block_docs=32, row_align=64)
+    b, _ = build_compact_streaming(cb.doc_terms, tmp_path / "b", PARAMS,
+                                   block_docs=32, row_align=64)
+    m = merge_compact(a, b)
+    # shard-list concatenation: same sources, nothing materialized
+    assert isinstance(m.storage, MappedArena)
+    assert m.storage.n_shards == a.storage.n_shards + b.storage.n_shards
+    assert m.storage.sources[:a.storage.n_shards] == a.storage.sources
+    # merged-then-query == query-then-union (b's ids shift by a.n_docs)
+    ea, eb, em = QueryEngine(a), QueryEngine(b), QueryEngine(m)
+    for src, seed in ((ca, 33), (cb, 34)):
+        qs, _ = make_queries(src, n_pos=3, n_neg=1, length=80, seed=seed)
+        for q in qs:
+            ra, rb, rm = (e.search(q, 0.8) for e in (ea, eb, em))
+            want = set(ra.doc_ids.tolist()) | {
+                int(d) + a.n_docs for d in rb.doc_ids}
+            assert set(rm.doc_ids.tolist()) == want
+
+
+def test_merge_stores_links_shards(tmp_path):
+    ca, cb = _corpus(40, seed=41), _corpus(24, seed=42)
+    a, _ = build_compact_streaming(ca.doc_terms, tmp_path / "a", PARAMS,
+                                   block_docs=32, row_align=64)
+    b, _ = build_compact_streaming(cb.doc_terms, tmp_path / "b", PARAMS,
+                                   block_docs=32, row_align=64)
+    merge_stores(tmp_path / "a", tmp_path / "b", tmp_path / "m")
+    m = load_index(tmp_path / "m")
+    ref = merge_compact(a, b)
+    np.testing.assert_array_equal(m.storage.full_host(),
+                                  ref.storage.full_host())
+    np.testing.assert_array_equal(m.layout.doc_slot, ref.layout.doc_slot)
+    np.testing.assert_array_equal(m.layout.row_offset, ref.layout.row_offset)
+    # linked, not copied (same inode) — skip silently if the fs can't link
+    src = tmp_path / "a" / "shard-000000.npy"
+    dst = tmp_path / "m" / "shard-000000.npy"
+    if src.stat().st_ino == dst.stat().st_ino:
+        assert src.stat().st_nlink >= 2
+    # query equivalence through the merged store
+    qs, _ = make_queries(cb, n_pos=2, n_neg=0, length=80, seed=44)
+    for q in qs:
+        rb = QueryEngine(b).search(q, 0.8)
+        rm = QueryEngine(m).search(q, 0.8)
+        assert set(rm.doc_ids.tolist()) >= {
+            int(d) + a.n_docs for d in rb.doc_ids}
+
+
+def test_merge_stores_rejects_mismatch(tmp_path):
+    c = _corpus(24, seed=51)
+    build_compact_streaming(c.doc_terms, tmp_path / "a", PARAMS,
+                            block_docs=32, row_align=64)
+    build_compact_streaming(c.doc_terms, tmp_path / "b",
+                            IndexParams(n_hashes=1, fpr=0.1, kmer=15),
+                            block_docs=32, row_align=64)
+    with pytest.raises(ValueError):
+        merge_stores(tmp_path / "a", tmp_path / "b", tmp_path / "m")
+
+
+# --------------------------------------------------------------------------
+# Device tile cache
+# --------------------------------------------------------------------------
+
+def test_tile_cache_lru_eviction(built):
+    _, _, mapped, stats, _ = built
+    # room for exactly one shard: every distinct access is a page fault
+    cache = DeviceTileCache(mapped.storage,
+                            capacity_bytes=stats.max_shard_bytes)
+    n = mapped.storage.n_shards
+    for s in range(n):
+        cache.get(s)
+    assert cache.faults == n and len(cache) == 1
+    assert cache.resident_bytes <= stats.max_shard_bytes
+    cache.get(n - 1)                        # still resident
+    assert cache.hits == 1
+    cache.get(0)                            # evicted earlier -> fault again
+    assert cache.faults == n + 1
+
+
+def test_tile_cache_unbounded_keeps_all(built):
+    _, _, mapped, _, _ = built
+    cache = DeviceTileCache(mapped.storage)
+    n = mapped.storage.n_shards
+    for _ in range(3):
+        for s in range(n):
+            cache.get(s)
+    assert cache.faults == n and cache.hits == 2 * n
+    assert cache.resident_shards == tuple(range(n))
+
+
+# --------------------------------------------------------------------------
+# Paged serving
+# --------------------------------------------------------------------------
+
+def test_server_paged_results_and_metrics(built):
+    from repro.serve import QueryServer, ServerConfig
+    c, dense, mapped, stats, _ = built
+    eng = QueryEngine(dense)
+    qs, _ = make_queries(c, n_pos=4, n_neg=2, length=100, seed=61)
+    # HBM budget of ONE tile: every batch must re-page each shard in turn
+    server = QueryServer(mapped, ServerConfig(
+        max_batch=4, max_wait_s=0.0, result_cache=0, row_cache=0,
+        tile_cache_bytes=stats.max_shard_bytes))
+    ids = [server.submit(q, threshold=0.7) for q in qs]
+    server.drain()
+    resp = server.pop_responses()
+    for rid, q in zip(ids, qs):
+        want = eng.search(q, threshold=0.7)
+        np.testing.assert_array_equal(resp[rid].result.doc_ids, want.doc_ids)
+        np.testing.assert_array_equal(resp[rid].result.scores, want.scores)
+    snap = server.metrics.snapshot()
+    n_shards = mapped.storage.n_shards
+    assert snap.page_faults >= n_shards     # cold start pages every shard
+    assert snap.resident_tiles == 1         # the HBM budget held
+    assert "tiles[" in snap.report()
+    assert server.tiles.resident_bytes <= stats.max_shard_bytes
+
+
+def test_plan_shards_blocks_partition(built):
+    _, _, mapped, _, _ = built
+    plans = plan_shards(mapped.layout, mapped.storage.shard_row_starts)
+    assert plans[0].block_start == 0
+    assert plans[-1].block_end == mapped.n_blocks
+    for p, q in zip(plans, plans[1:]):
+        assert p.block_end == q.block_start
+    for p in plans:
+        assert int(p.row_offset[0]) == 0    # rebased to the shard tile

@@ -36,6 +36,34 @@ def test_checkpoint_resume(tmp_path):
                                   np.asarray(resumed.arena))
 
 
+def test_serial_build_writes_resume_manifest(tmp_path):
+    """Regression: the workers<=1 path checkpointed block .npy files but
+    never wrote blocks.json, so a restart resumed nothing."""
+    import json
+    c = _corpus()
+    p = IndexParams(kmer=15)
+    ck = tmp_path / "ck"
+    build_compact_parallel(c.doc_terms, p, block_docs=32, row_align=64,
+                           workers=1, checkpoint_dir=ck)
+    manifest = ck / "blocks.json"
+    assert manifest.exists()
+    done = json.loads(manifest.read_text())["done"]
+    assert done == sorted(done)
+    assert len(done) == len(list(ck.glob("block*.npy")))
+    # a restart must actually reuse the checkpoints: poison one block file
+    # on disk; if resume reads it (instead of rebuilding), the arena drifts
+    victim = ck / "block000001.npy"
+    m = np.load(victim)
+    m[0, 0] ^= np.uint32(1)
+    np.save(victim, m)
+    resumed = build_compact_parallel(c.doc_terms, p, block_docs=32,
+                                     row_align=64, workers=1,
+                                     checkpoint_dir=ck)
+    ref = build_compact(c.doc_terms, p, block_docs=32, row_align=64)
+    assert not np.array_equal(np.asarray(resumed.arena),
+                              np.asarray(ref.arena))
+
+
 def test_partial_checkpoint_resume(tmp_path):
     """Delete some block files (simulating blocks lost mid-build): resume
     must rebuild exactly those and produce the same index."""
