@@ -42,6 +42,10 @@ def main() -> None:
         "hedging": hedging.run,
         "serving": lambda: serving.run(64 if args.quick else 256,
                                        n_queries=48 if args.quick else 96),
+        "serving_multihost": lambda: serving.run_multihost(
+            96 if args.quick else 256,
+            n_queries=24 if args.quick else 64,
+            max_hosts=2 if args.quick else 3),
         "outofcore": lambda: outofcore.run(64 if args.quick else 256,
                                            n_queries=8 if args.quick else 16),
     }

@@ -6,7 +6,18 @@ open-loop replays Poisson arrivals at increasing qps until the measured
 latency shows queueing. Also reports the batched fused-lookup kernel
 against the old per-query path (the regression the multi-query kernel
 exists to fix: batched compact-index lookups used to fall back to the
-pure-jnp ref scorer)."""
+pure-jnp ref scorer).
+
+``run_multihost`` drives the sharded data plane (ShardWorker + Frontend
+over a v2 store): wall-clock scale-out 1 -> N fake hosts, plus the
+deterministic-clock tail-latency scenario — one worker straggles 20x and
+the hedged dispatch path must pull p99 back to the hedge bound ('The
+Tail at Scale' win, measured end to end through the serving stack rather
+than in pure simulation like benchmarks/hedging.py).
+
+    PYTHONPATH=src python -m benchmarks.serving --hosts 3 \\
+        --json results/serving_multihost.json
+"""
 from __future__ import annotations
 
 import time
@@ -15,10 +26,13 @@ import numpy as np
 
 from repro.core import QueryEngine
 from repro.data import make_queries
-from repro.launch.serve import make_workload, run_closed, run_open
+from repro.index.hedge import ShardSim
+from repro.launch.serve import (make_multihost_frontend, make_workload,
+                                run_closed, run_open)
+
 from repro.serve import QueryServer, ServerConfig
 
-from .common import built_indexes, emit
+from .common import built_indexes, corpus, emit
 
 
 def _fresh_server(index, max_batch: int = 32) -> QueryServer:
@@ -84,3 +98,117 @@ def run(n_docs: int = 256, n_queries: int = 96) -> dict:
              f"n_q={len(batch)}")
         out[("batch", method)] = per_q
     return out
+
+
+def _build_store(n_docs: int, root):
+    """A v2 shard store for the multi-host benches (shard-per-block),
+    written under the caller-owned ``root`` directory."""
+    from pathlib import Path
+
+    from repro.core import IndexParams
+    from repro.index import build_compact_streaming
+
+    c = corpus(n_docs)
+    store = Path(root) / "v2"
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+    build_compact_streaming(c.doc_terms, store, params, block_docs=32,
+                            row_align=64)
+    return c, store
+
+
+def run_multihost(n_docs: int = 256, n_queries: int = 64,
+                  max_hosts: int = 3) -> dict:
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        return _run_multihost(td, n_docs, n_queries, max_hosts)
+
+
+def _run_multihost(tmp_root, n_docs: int, n_queries: int,
+                   max_hosts: int) -> dict:
+    c, store = _build_store(n_docs, tmp_root)
+    queries, _ = make_workload(c, n_queries, seed=73)
+    out = {}
+
+    # -- wall-clock scale-out: 1 -> N fake hosts ----------------------------
+    for hosts in range(1, max_hosts + 1):
+        fe = make_multihost_frontend(
+            store, hosts=hosts, replication=min(2, hosts),
+            max_batch=32, max_wait_s=0.0,
+            hedge_after_s=1e9)                # capacity run: no hedges
+        _warm(fe, lambda: run_closed(fe, queries, 0.8, 32))
+        t0 = time.perf_counter()
+        run_closed(fe, queries, 0.8, 32)
+        wall = time.perf_counter() - t0
+        snap = fe.metrics.snapshot()
+        qps = snap.served / wall
+        emit(f"serving/multihost/hosts{hosts}", wall / snap.served * 1e6,
+             f"qps={qps:.0f};p50_ms={snap.p50_ms:.2f};"
+             f"p99_ms={snap.p99_ms:.2f};shards={fe.placement.n_shards};"
+             f"prefetch_hit_rate={snap.prefetch_hit_rate:.2f}")
+        out[("hosts", hosts)] = qps
+
+    # -- deterministic-clock tail latency: one straggling worker ------------
+    # Every dispatch latency is simulated (injected SimClock), so the p99
+    # numbers are exact policy outcomes, not host noise: without hedging a
+    # query whose shard lands on the straggler eats the 20x latency; with
+    # hedging the backup replica answers at hedge_after + base.
+    base, straggle = 1e-3, 20.0
+    for label, hedge_after in (("hedge_off", 1e9), ("hedge_on", 2e-3)):
+        nodes = [f"host{i}" for i in range(max(3, max_hosts))]
+        models = {n: ShardSim(n, base_latency=base) for n in nodes}
+        fe = make_multihost_frontend(
+            store, hosts=len(nodes), replication=2,
+            max_batch=8, max_wait_s=0.0, hedge_after_s=hedge_after,
+            latency_models=models)
+        # straggle a node that actually OWNS a shard (the executor shares
+        # the ShardSim objects, so mutating the model after wiring works)
+        victim = fe.placement.owner(0)
+        models[victim].straggle_until = 1e9
+        models[victim].straggle_factor = straggle
+        run_closed(fe, queries, 0.8, 8)       # results real, time simulated
+        snap = fe.metrics.snapshot()
+        emit(f"serving/multihost/{label}/p99", snap.p99_ms * 1e3,
+             f"p50_ms={snap.p50_ms:.3f};p99_ms={snap.p99_ms:.3f};"
+             f"hedge_rate={snap.hedge_fire_rate:.3f};"
+             f"hedges_won={snap.hedges_won}")
+        out[label] = (snap.p50_ms, snap.p99_ms)
+    p99_off, p99_on = out["hedge_off"][1], out["hedge_on"][1]
+    if p99_on > 0:
+        emit("serving/multihost/hedge_p99_improvement", p99_off / p99_on,
+             f"off={p99_off:.3f}ms;on={p99_on:.3f}ms")
+    return out
+
+
+def main() -> None:
+    """CLI for CI artifacts: run the multi-host scale-out + hedging bench
+    and dump the emitted rows as a BENCH json."""
+    import argparse
+    import json
+    from pathlib import Path
+
+    from . import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hosts", type=int, default=3,
+                    help="scale-out sweep upper bound (1..N fake hosts)")
+    ap.add_argument("--n-docs", type=int, default=128)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--json", default=None,
+                    help="write emitted rows as a json artifact here")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    run_multihost(args.n_docs, args.queries, max_hosts=args.hosts)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        rows = [{"name": n, "us_per_call": v, "derived": d}
+                for n, v, d in common.ROWS]
+        out.write_text(json.dumps({"bench": "serving_multihost",
+                                   "hosts": args.hosts,
+                                   "rows": rows}, indent=2))
+        print(f"# wrote {out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -67,3 +67,37 @@ print(f"paged query matches in-memory: doc{res2.doc_ids[0]} "
 # (with many documents the store splits into one shard per block group and
 #  QueryEngine pages shard tiles through paged.tiles, an LRU device cache —
 #  see tests/test_arena_store.py and benchmarks/outofcore.py)
+
+# --- multi-host serving: place the shards over 3 fake hosts -----------------
+# The v2 manifest row (shard file) is the placement unit: rendezvous
+# hashing assigns each shard to `replication` hosts, every host opens a
+# sub-store view of ONLY its shards (ShardWorker), and a Frontend scatters
+# each micro-batch shard by shard — with hedged backup requests against
+# stragglers — then gathers the per-host candidates into the exact same
+# top-k the single-host engine would return. Killing a host just flips its
+# shards to the surviving replicas.
+from repro.index import ShardPlacement
+from repro.serve import Frontend, FrontendConfig, ShardWorker
+
+hosts = ["host0", "host1", "host2"]
+place = ShardPlacement.for_store(store, hosts, replication=2)
+held = place.replica_assignment()
+workers = {h: ShardWorker(h, store, held[h], verify=True)  # hash-checked open
+           for h in hosts if held[h]}
+frontend = Frontend(workers, place,
+                    FrontendConfig(max_batch=8, max_wait_s=0.0))
+rid = frontend.submit(genomes[1][200:320], threshold=0.8)
+frontend.drain()
+res3 = frontend.pop_responses()[rid].result
+assert res3.doc_ids[0] == 1 and np.array_equal(res3.scores, res2.scores)
+print(f"sharded frontend over {place.n_shards} shard(s) x {len(hosts)} "
+      f"hosts matches: doc{res3.doc_ids[0]} score {res3.scores[0]}")
+
+down = place.owner(0)
+frontend.fail_worker(down)                 # one host dies ...
+rid = frontend.submit(genomes[1][200:320], top_k=3)
+frontend.drain()
+res4 = frontend.pop_responses()[rid].result
+assert res4.doc_ids[0] == 1
+print(f"with {down} down, replicas still answer: top-k doc{res4.doc_ids[0]} "
+      f"(failovers={frontend.metrics.snapshot().failovers})")

@@ -7,16 +7,18 @@ from .index import (BitSlicedIndex, IndexParams, build_classic, build_compact,
 from .multi import MultiHit, MultiIndexEngine
 from .query import (QueryEngine, SearchResult, make_batch_score_fn,
                     make_score_fn)
-from .store import (load_index_v2, merge_stores, migrate_v1_to_v2,
-                    save_index_v2)
+from .store import (SubStore, load_index_v2, merge_stores, migrate_v1_to_v2,
+                    open_store, open_substore, save_index_v2)
 
 __all__ = [
     "ArenaLayout", "ArenaStorage", "BitSlicedIndex", "DeviceArena",
     "DeviceTileCache", "HostArena", "IndexParams", "MappedArena",
     "QueryEngine", "SearchResult",
+    "SubStore",
     "build_classic", "build_compact", "load_index", "load_index_v2",
     "merge_classic",
-    "merge_compact", "merge_stores", "migrate_v1_to_v2", "save_index",
+    "merge_compact", "merge_stores", "migrate_v1_to_v2",
+    "open_store", "open_substore", "save_index",
     "save_index_v2", "make_score_fn", "make_batch_score_fn",
     "MultiHit",
     "MultiIndexEngine", "bloom", "dna",

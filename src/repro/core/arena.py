@@ -304,29 +304,53 @@ class DeviceTileCache:
     and the scoring kernels compile ONCE per (bucket, method) instead of
     once per distinct shard height — compile time would otherwise dominate
     cold out-of-core serving on stores with many block groups.
+
+    ``prefetch`` is the double-buffering hook: it stages a tile WITHOUT
+    blocking the caller's compute stream (device transfers are dispatched
+    asynchronously), so paged scoring loops can overlap the next shard's
+    host->device copy with the current shard's kernel. ``faults`` counts
+    every staging (demand or prefetch — each is one H2D transfer);
+    ``prefetch_hits`` counts gets served by a previously prefetched tile,
+    so prefetch_hits / prefetched is the prefetch usefulness rate exported
+    by the serving metrics.
+
+    ``device`` optionally pins staged tiles to a specific jax device — the
+    multi-host serving path gives each fake-host worker its own device.
     """
 
     def __init__(self, storage: ArenaStorage,
                  capacity_bytes: int | None = None,
-                 pad_rows_to: int | None = None):
+                 pad_rows_to: int | None = None,
+                 device=None):
         self.storage = storage
         self.capacity_bytes = capacity_bytes
         self.pad_rows_to = pad_rows_to
+        self.device = device
         self._tiles: "OrderedDict[int, jnp.ndarray]" = OrderedDict()
+        self._prefetched: set[int] = set()
         self.resident_bytes = 0
         self.hits = 0
         self.faults = 0
+        self.prefetched = 0
+        self.prefetch_hits = 0
+
+    def _put(self, host: np.ndarray) -> jnp.ndarray:
+        if self.device is None:
+            return jnp.asarray(host)
+        import jax
+        return jax.device_put(host, self.device)
 
     def _stage(self, s: int) -> jnp.ndarray:
         if not self.pad_rows_to:
-            return self.storage.shard_device(s)
+            return (self.storage.shard_device(s) if self.device is None
+                    else self._put(self.storage.shard_host(s)))
         host = self.storage.shard_host(s)
         pad = self.pad_rows_to - host.shape[0]
         if pad < 0:
             raise ValueError(f"shard {s} taller than pad_rows_to")
-        if pad == 0:
+        if pad == 0 and self.device is None:
             return self.storage.shard_device(s)
-        return jnp.asarray(np.pad(host, ((0, pad), (0, 0))))
+        return self._put(np.pad(host, ((0, pad), (0, 0))))
 
     def _tile_nbytes(self, s: int) -> int:
         if not self.pad_rows_to:
@@ -341,13 +365,7 @@ class DeviceTileCache:
     def resident_shards(self) -> tuple[int, ...]:
         return tuple(self._tiles)
 
-    def get(self, s: int) -> jnp.ndarray:
-        tile = self._tiles.get(s)
-        if tile is not None:
-            self._tiles.move_to_end(s)
-            self.hits += 1
-            return tile
-        self.faults += 1
+    def _insert(self, s: int) -> jnp.ndarray:
         tile = self._stage(s)
         need = self._tile_nbytes(s)
         if self.capacity_bytes is not None:
@@ -355,10 +373,38 @@ class DeviceTileCache:
                    and self.resident_bytes + need > self.capacity_bytes):
                 old, _ = self._tiles.popitem(last=False)
                 self.resident_bytes -= self._tile_nbytes(old)
+                self._prefetched.discard(old)
         self._tiles[s] = tile
         self.resident_bytes += need
         return tile
 
+    def get(self, s: int) -> jnp.ndarray:
+        tile = self._tiles.get(s)
+        if tile is not None:
+            self._tiles.move_to_end(s)
+            self.hits += 1
+            if s in self._prefetched:
+                self._prefetched.discard(s)
+                self.prefetch_hits += 1
+            return tile
+        self.faults += 1
+        return self._insert(s)
+
+    def prefetch(self, s: int) -> bool:
+        """Stage shard ``s`` ahead of use (double buffering). The transfer
+        is dispatched without blocking, so it overlaps with whatever the
+        caller computes next; a later ``get(s)`` finds the tile resident.
+        Counts as a fault (it IS one H2D staging); returns True if a
+        transfer was started, False if the tile was already resident."""
+        if s in self._tiles:
+            return False
+        self.faults += 1
+        self.prefetched += 1
+        self._prefetched.add(s)
+        self._insert(s)
+        return True
+
     def clear(self) -> None:
         self._tiles.clear()
+        self._prefetched.clear()
         self.resident_bytes = 0

@@ -72,13 +72,30 @@ class ShardPlan:
 def plan_shards(layout: ArenaLayout, shard_row_starts: np.ndarray
                 ) -> list[ShardPlan]:
     """Map every storage shard to the blocks it holds (pure; shared by the
-    QueryEngine and the serving planner)."""
-    ranges = layout.shard_blocks(np.asarray(shard_row_starts, np.int64))
+    QueryEngine and the serving planner). The all-shards special case of
+    ``plan_shards_subset`` — one copy of the rebasing arithmetic."""
+    return plan_shards_subset(layout, shard_row_starts,
+                              range(len(shard_row_starts) - 1))
+
+
+def plan_shards_subset(layout: ArenaLayout, global_row_starts: np.ndarray,
+                       shard_ids) -> list[ShardPlan]:
+    """Per-placement variant of ``plan_shards``: addressing for a SUBSET of
+    a store's shards, as held by one host's sub-store view.
+
+    ``global_row_starts`` are the parent store's shard boundaries and
+    ``shard_ids`` the (sorted) global manifest rows this host holds.
+    ``ShardPlan.shard`` is the LOCAL tile index into the sub-store's
+    storage; block ranges stay GLOBAL, so a worker's per-shard slot scores
+    land at global slots [block_start * block_docs, block_end * block_docs)
+    — the frontend's gather is exact by construction."""
+    ranges = layout.shard_blocks(np.asarray(global_row_starts, np.int64))
     plans = []
-    for s, (b0, b1) in enumerate(ranges):
-        base = np.int32(shard_row_starts[s])
+    for local, g in enumerate(shard_ids):
+        b0, b1 = ranges[g]
+        base = np.int32(global_row_starts[g])
         plans.append(ShardPlan(
-            shard=s, block_start=b0, block_end=b1,
+            shard=local, block_start=b0, block_end=b1,
             row_offset=layout.row_offset[b0:b1] - base,
             block_width=layout.block_width[b0:b1]))
     return plans
@@ -152,6 +169,25 @@ def select_top_k(scores: np.ndarray, n_terms: int, k: int) -> "SearchResult":
     order = np.argsort(-scores, kind="stable")[:k]
     top = scores[order].astype(np.int32)
     return SearchResult(order.astype(np.int32), top, n_terms, int(top[-1]))
+
+
+def run_paged(tiles, shard_args, fn, *args) -> list[np.ndarray]:
+    """Dispatch ``fn`` once per shard tile with double-buffered prefetch,
+    shared by the QueryEngine and the serving QueryServer.
+
+    While shard i's scoring call is in flight (jax dispatch is async),
+    shard i+1 stages host->device through ``tiles.prefetch`` — transfer
+    overlaps compute. Results are forced to host only after every dispatch
+    is issued. ``shard_args`` is [(shard, row_offset_dev, block_width_dev)]
+    and ``fn(tile, offs, widths, *args)`` the planned scorer."""
+    parts = []
+    for i, (s, offs, widths) in enumerate(shard_args):
+        tile = tiles.get(s)
+        out = fn(tile, offs, widths, *args)
+        if i + 1 < len(shard_args):
+            tiles.prefetch(shard_args[i + 1][0])
+        parts.append(out)
+    return [np.asarray(p) for p in parts]
 
 
 def gather_rows(arena: jnp.ndarray, rows: jnp.ndarray, valid: jnp.ndarray
@@ -293,10 +329,8 @@ class QueryEngine:
             return np.asarray(self._score(
                 self.tiles.get(0), self.index.row_offset,
                 self.index.block_width, padded, L))
-        parts = [np.asarray(self._score(self.tiles.get(s), offs, widths,
-                                        padded, L))
-                 for s, offs, widths in self._shard_args]
-        return np.concatenate(parts)
+        return np.concatenate(
+            run_paged(self.tiles, self._shard_args, self._score, padded, L))
 
     def _score_slots_batch(self, terms: jnp.ndarray, n_valid: jnp.ndarray
                            ) -> np.ndarray:
@@ -304,10 +338,9 @@ class QueryEngine:
             return np.asarray(self._score_batch(
                 self.tiles.get(0), self.index.row_offset,
                 self.index.block_width, terms, n_valid))
-        parts = [np.asarray(self._score_batch(self.tiles.get(s), offs,
-                                              widths, terms, n_valid))
-                 for s, offs, widths in self._shard_args]
-        return np.concatenate(parts, axis=1)
+        return np.concatenate(
+            run_paged(self.tiles, self._shard_args, self._score_batch,
+                      terms, n_valid), axis=1)
 
     def score_terms(self, terms: np.ndarray) -> np.ndarray:
         """Distinct packed terms [L, 2] -> int32 scores [n_docs] (original

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+from dataclasses import dataclass
 from pathlib import Path
 
 import numpy as np
@@ -151,12 +152,8 @@ class ShardStoreWriter:
         return out
 
 
-def open_store(path: str | Path, *, verify: bool = False
-               ) -> tuple[ArenaLayout, MappedArena, IndexParams]:
-    """Open a v2 store as (layout, mmap-backed storage, params) without
-    reading arena bytes (``verify=True`` additionally checks every shard's
-    content hash, which does read them)."""
-    path = Path(path)
+def _read_store_meta(path: Path) -> tuple[dict, ArenaLayout, IndexParams]:
+    """Manifest + layout + params of a v2 store (metadata only)."""
     manifest = json.loads((path / "manifest.json").read_text())
     if manifest.get("format") != FORMAT_V2:
         raise ValueError(f"not a {FORMAT_V2} store: {path}")
@@ -165,18 +162,85 @@ def open_store(path: str | Path, *, verify: bool = False
             z["row_offset"], z["block_width"], z["doc_slot"],
             z["doc_n_terms"], int(manifest["block_docs"]),
             int(manifest["n_docs"]))
+    params = IndexParams.from_json(manifest["params"])
+    return manifest, layout, params
+
+
+def _verify_shards(storage: MappedArena, shards: list[dict],
+                   which: range | list[int] | None = None) -> None:
+    """Check content hashes of the storage's shards against the manifest
+    rows ``shards`` (local index i holds manifest row shards[i])."""
+    for i in (range(len(shards)) if which is None else which):
+        got = _hash_array(storage.shard_host(i))
+        if got != shards[i]["hash"]:
+            raise IOError(f"shard {shards[i]['file']} content hash mismatch")
+
+
+def open_store(path: str | Path, *, verify: bool = False
+               ) -> tuple[ArenaLayout, MappedArena, IndexParams]:
+    """Open a v2 store as (layout, mmap-backed storage, params) without
+    reading arena bytes (``verify=True`` additionally checks every shard's
+    content hash, which does read them)."""
+    path = Path(path)
+    manifest, layout, params = _read_store_meta(path)
     shards = manifest["shards"]
     starts = np.asarray([s["rows"][0] for s in shards]
                         + [shards[-1]["rows"][1]], dtype=np.int64)
     sources = [path / s["file"] for s in shards]
     storage = MappedArena(sources, starts, doc_words=layout.doc_words)
     if verify:
-        for i, s in enumerate(shards):
-            got = _hash_array(storage.shard_host(i))
-            if got != s["hash"]:
-                raise IOError(f"shard {s['file']} content hash mismatch")
-    params = IndexParams.from_json(manifest["params"])
+        _verify_shards(storage, shards)
     return layout, storage, params
+
+
+@dataclass(frozen=True)
+class SubStore:
+    """A per-host view of a v2 store: only the assigned manifest rows.
+
+    ``layout`` stays the FULL store layout (query addressing needs global
+    block geometry), while ``storage`` maps only the selected shard files,
+    re-indexed locally (local shard i is global manifest row
+    ``shard_ids[i]``). ``global_row_starts`` gives the parent store's shard
+    boundaries so per-shard addressing can be rebased against the global
+    arena (see repro.core.query.plan_shards_subset).
+    """
+
+    layout: ArenaLayout
+    storage: MappedArena
+    params: IndexParams
+    shard_ids: tuple[int, ...]
+    global_row_starts: np.ndarray   # int64 [n_shards_total + 1]
+
+    @property
+    def n_shards_total(self) -> int:
+        return len(self.global_row_starts) - 1
+
+
+def open_substore(path: str | Path, shard_ids, *, verify: bool = False
+                  ) -> SubStore:
+    """Open a manifest-subset view of a v2 store: a host materializes (as
+    lazily-mmapped sources) only the shard files its placement assigns to
+    it. Metadata cost only; ``verify=True`` hash-checks exactly the
+    selected shards (the host's integrity gate at open)."""
+    path = Path(path)
+    manifest, layout, params = _read_store_meta(path)
+    shards = manifest["shards"]
+    ids = sorted(dict.fromkeys(int(s) for s in shard_ids))
+    if not ids:
+        raise ValueError("open_substore needs at least one shard id")
+    if ids[0] < 0 or ids[-1] >= len(shards):
+        raise ValueError(f"shard ids {ids} out of range "
+                         f"[0, {len(shards)})")
+    global_starts = np.asarray([s["rows"][0] for s in shards]
+                               + [shards[-1]["rows"][1]], dtype=np.int64)
+    heights = [shards[g]["rows"][1] - shards[g]["rows"][0] for g in ids]
+    local_starts = np.concatenate([[0], np.cumsum(heights)]).astype(np.int64)
+    storage = MappedArena([path / shards[g]["file"] for g in ids],
+                          local_starts, doc_words=layout.doc_words)
+    if verify:
+        _verify_shards(storage, [shards[g] for g in ids])
+    return SubStore(layout=layout, storage=storage, params=params,
+                    shard_ids=tuple(ids), global_row_starts=global_starts)
 
 
 def load_index_v2(path: str | Path, *, verify: bool = False

@@ -2,11 +2,12 @@
 mitigation, elastic scaling — the paper's 'future work: distributed index
 construction and query processing', built on shard_map + lax collectives."""
 from .distributed import DistributedIndex
-from .placement import BlockPlacement
-from .hedge import HedgedExecutor, SimClock, ShardSim
+from .placement import BlockPlacement, RendezvousPlacement, ShardPlacement
+from .hedge import AttemptFailed, HedgedExecutor, SimClock, ShardSim
 from .build_parallel import (StreamingBuildStats, build_compact_parallel,
                              build_compact_streaming)
 
-__all__ = ["DistributedIndex", "BlockPlacement", "HedgedExecutor", "SimClock",
+__all__ = ["DistributedIndex", "BlockPlacement", "RendezvousPlacement",
+           "ShardPlacement", "AttemptFailed", "HedgedExecutor", "SimClock",
            "ShardSim", "StreamingBuildStats", "build_compact_parallel",
            "build_compact_streaming"]

@@ -6,15 +6,47 @@ directly applicable: issue to the primary replica; if no completion within
 the hedge deadline (e.g. p95 latency), issue a backup request to the next
 replica and take whichever finishes first.
 
-The executor is written against an injected clock + shard-latency model so
-the policy is unit-testable and deterministic on one host; on a real
-deployment the same class drives per-pod RPCs. Tail-latency statistics are
-recorded so benchmarks can show the p99 win.
+The executor drives BOTH pure simulation and the serving frontend's real
+dispatch path:
+
+* ``run_query(query_id, replicas)`` — simulation only: per-attempt latency
+  comes from the ``ShardSim`` latency model of the chosen node (injected
+  clock, fully deterministic; the original surface).
+* ``run(query_id, replicas, call)`` — real dispatch: ``call(node)``
+  actually executes the work (a ShardWorker scoring a shard) and returns
+  its result. Latency per attempt still comes from the node's ShardSim
+  model when one is registered (deterministic tests/benchmarks) and from
+  the wall clock otherwise (production). An attempt whose ``call`` raises
+  ``AttemptFailed`` is treated as a dead replica and the executor fails
+  over to the next one.
+
+  Hedges are only issued against backup nodes that HAVE a latency model:
+  in-process calls are synchronous, so once a wall-clock primary has
+  returned, duplicating the work on a replica can never finish earlier —
+  pure wall-clock mode therefore applies failover but no backup requests
+  (an async transport is the seam where real-world hedging plugs in;
+  until then hedging semantics live in the simulated-latency mode).
+
+Tail-latency statistics plus hedge-fire/failover counters are recorded so
+benchmarks can show the p99 win and the serving metrics can export them.
 """
 from __future__ import annotations
 
 import heapq
+import time
+from collections import deque
 from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class AttemptFailed(Exception):
+    """Raised by a dispatch ``call`` to signal a dead/unreachable replica."""
+
+
+class AllReplicasFailed(RuntimeError):
+    """Every replica of a dispatch target is down — the caller's failure
+    domain (distinct type so serving code can tell replica loss apart from
+    unrelated runtime errors, e.g. a kernel crash)."""
 
 
 class SimClock:
@@ -51,61 +83,133 @@ class _Attempt:
     shard: str
     query_id: int
     hedged: bool
+    result: object = None
+
+    def __lt__(self, other: "_Attempt") -> bool:
+        return self.done_at < other.done_at
 
 
 @dataclass
 class HedgedExecutor:
-    """Executes (simulated) shard requests with hedging + failover.
+    """Executes shard requests with hedging + failover.
 
-    shards: name -> ShardSim
-    replicas_of: query placement, e.g. BlockPlacement.replicas
-    hedge_after: backup request deadline (same unit as ShardSim latency)
+    shards: node name -> ShardSim latency model. In real-dispatch mode a
+        node without a model is timed on the wall clock instead.
+    replicas: query placement ranking, e.g. ShardPlacement.replicas
+    hedge_after: backup request deadline (same unit as ShardSim latency /
+        seconds in wall-clock mode)
     """
     shards: dict[str, ShardSim]
     hedge_after: float = 2.0
     max_hedges: int = 1
     clock: SimClock = field(default_factory=SimClock)
-    completions: list[tuple[int, str, float, bool]] = field(default_factory=list)
+    # bounded history for the percentile stats (a long-lived frontend would
+    # otherwise grow this forever); the integer counters stay exact totals
+    completions: "deque[tuple[int, str, float, bool]]" = field(
+        default_factory=lambda: deque(maxlen=65536))
+    hedges_fired: int = 0
+    hedges_won: int = 0
+    failovers: int = 0
 
-    def run_query(self, query_id: int, replicas: list[str]) -> tuple[str, float]:
-        """Returns (serving_shard, completion_latency). Raises if every
-        replica is failed."""
+    # -- dispatch ------------------------------------------------------------
+    def run_query(self, query_id: int, replicas: list[str]
+                  ) -> tuple[str, float]:
+        """Pure simulation: returns (serving_shard, completion_latency).
+        Raises if every replica is failed."""
+        shard, latency, _ = self._run(query_id, replicas, call=None)
+        return shard, latency
+
+    def run(self, query_id: int, replicas: list[str],
+            call: Callable[[str], object]) -> tuple[str, float, object]:
+        """Real dispatch: executes ``call(node)`` per attempt and returns
+        (serving_node, completion_latency, result) of the winning attempt.
+        Hedge/failover policy is identical to the simulation."""
+        return self._run(query_id, replicas, call=call)
+
+    def _attempt_latency(self, node: str, at: float,
+                         call: Optional[Callable[[str], object]]
+                         ) -> tuple[float | None, object]:
+        """(latency, result) of one attempt; latency None = replica dead.
+        With a registered model the latency is simulated (the call, when
+        present, still executes so the result is real); without one the
+        call is timed on the wall clock."""
+        model = self.shards.get(node)
+        if model is not None:
+            lat = model.latency(at)
+            if lat is None:
+                return None, None
+            if call is None:
+                return lat, None
+            try:
+                return lat, call(node)
+            except AttemptFailed:
+                return None, None
+        if call is None:
+            raise KeyError(f"no latency model for simulated node {node!r}")
+        t0 = time.perf_counter()
+        try:
+            result = call(node)
+        except AttemptFailed:
+            return None, None
+        return time.perf_counter() - t0, result
+
+    def _run(self, query_id: int, replicas: list[str],
+             call: Optional[Callable[[str], object]]
+             ) -> tuple[str, float, object]:
         start = self.clock.now
-        events: list[tuple[float, _Attempt]] = []
+        events: list[_Attempt] = []
 
         def issue(shard_name: str, at: float, hedged: bool) -> bool:
-            lat = self.shards[shard_name].latency(at)
+            lat, result = self._attempt_latency(shard_name, at, call)
             if lat is None:
                 return False
-            a = _Attempt(at + lat, shard_name, query_id, hedged)
-            heapq.heappush(events, (a.done_at, a))
+            heapq.heappush(events, _Attempt(at + lat, shard_name, query_id,
+                                            hedged, result))
             return True
 
-        live = [r for r in replicas if not self.shards[r].failed]
-        if not live:
-            raise RuntimeError(f"query {query_id}: all replicas failed")
-        issue(live[0], start, hedged=False)
+        # known-dead replicas (model.failed) are skipped up front; a replica
+        # that turns out dead at call time fails over to the next one here.
+        live = [r for r in replicas
+                if not (r in self.shards and self.shards[r].failed)]
+        primary_i = 0
+        while primary_i < len(live) and not issue(live[primary_i], start,
+                                                  hedged=False):
+            primary_i += 1
+        if primary_i >= len(live):
+            raise AllReplicasFailed(
+                f"query {query_id}: all replicas failed")
+        # how far down the preference ranking the primary had to move
+        self.failovers += replicas.index(live[primary_i])
+        live = live[primary_i:]
 
         hedges_issued = 0
         next_hedge_at = start + self.hedge_after
         while events:
-            done_at, attempt = events[0]
+            attempt = events[0]
             # hedge fires before the fastest outstanding attempt completes?
             while (hedges_issued < self.max_hedges
-                   and next_hedge_at < done_at
+                   and next_hedge_at < attempt.done_at
                    and hedges_issued + 1 < len(live) + 1):
                 backup = live[(hedges_issued + 1) % len(live)]
-                if backup != attempt.shard or len(live) == 1:
-                    issue(backup, next_hedge_at, hedged=True)
+                # only hedge nodes with a latency model: a synchronous
+                # wall-clock backup finishes AFTER the already-returned
+                # primary by construction — it could never win (see
+                # module docstring), so issuing it is pure waste
+                if ((backup != attempt.shard or len(live) == 1)
+                        and (call is None or backup in self.shards)):
+                    if issue(backup, next_hedge_at, hedged=True):
+                        self.hedges_fired += 1
                 hedges_issued += 1
                 next_hedge_at += self.hedge_after
-                done_at, attempt = events[0]
+                attempt = events[0]
             heapq.heappop(events)
             self.clock.now = max(self.clock.now, attempt.done_at)
             latency = attempt.done_at - start
+            if attempt.hedged:
+                self.hedges_won += 1
             self.completions.append((query_id, attempt.shard, latency,
                                      attempt.hedged))
-            return attempt.shard, latency
+            return attempt.shard, latency, attempt.result
         raise RuntimeError("no attempt completed")
 
     # -- statistics ----------------------------------------------------------

@@ -4,6 +4,8 @@ latency/throughput.
 
     PYTHONPATH=src python -m repro.launch.serve --n-docs 256 --queries 200
     PYTHONPATH=src python -m repro.launch.serve --mode open --qps 500
+    PYTHONPATH=src python -m repro.launch.serve --store-format v2 \\
+        --index-dir /tmp/store --hosts 3 --replication 2 --fail-host host1
 
 Two load models:
 
@@ -14,9 +16,18 @@ Two load models:
   each arrival instant, ``step`` the server in between so flush timers
   fire. Measures latency under a fixed offered load, queueing included.
 
+``--hosts N`` switches from the single-host QueryServer to the sharded
+data plane: the v2 store's manifest rows are HRW-placed over N in-process
+fake hosts (``--replication`` replicas each), every host opens a sub-store
+of only its shards (a ShardWorker), and a Frontend scatters micro-batches
+with hedged dispatch (``--hedge-after-ms``) and gathers the final top-k.
+``--fail-host`` marks hosts down before the measured run to demo replica
+failover.
+
 Results are validated against the ground-truth origin labels of the
 synthetic query set, and the report includes the planner's kernel mix and
-cache hit rate alongside p50/p99.
+cache hit rate alongside p50/p99 (plus per-worker latency, hedge-fire
+rate, and failover counts in multi-host mode).
 """
 from __future__ import annotations
 
@@ -27,7 +38,8 @@ import numpy as np
 
 from ..core import IndexParams, build_compact, load_index, save_index
 from ..data import make_corpus, make_queries
-from ..serve import QueryServer, ServerConfig, Status
+from ..serve import (Frontend, FrontendConfig, QueryServer, ServerConfig,
+                     ShardWorker, Status)
 
 
 def build_or_load(args):
@@ -113,6 +125,34 @@ def run_open(server: QueryServer, queries, threshold: float, qps: float
     return ids
 
 
+def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
+                            max_batch: int, max_wait_s: float,
+                            hedge_after_s: float,
+                            tile_cache_bytes=None,
+                            fail_hosts=(), latency_models=None) -> Frontend:
+    """Sharded data plane over in-process fake hosts: HRW-place the v2
+    manifest rows, open each host's sub-store, wire the hedging frontend,
+    and optionally mark hosts down (their shards fail over to replicas)."""
+    from ..index import ShardPlacement
+
+    nodes = [f"host{i}" for i in range(hosts)]
+    placement = ShardPlacement.for_store(store_dir, nodes,
+                                         replication=min(replication, hosts))
+    held = placement.replica_assignment()
+    workers = {n: ShardWorker(n, store_dir, held[n],
+                              tile_cache_bytes=tile_cache_bytes)
+               for n in nodes if held[n]}
+    frontend = Frontend(workers, placement, FrontendConfig(
+        max_batch=max_batch, max_wait_s=max_wait_s,
+        hedge_after_s=hedge_after_s), latency_models=latency_models)
+    for n in fail_hosts:
+        frontend.fail_worker(n)
+    if not placement.is_covered():
+        raise SystemExit("placement lost coverage: too many failed hosts "
+                         "for the replication factor")
+    return frontend
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-docs", type=int, default=256)
@@ -132,7 +172,22 @@ def main() -> None:
                          "v2 streams shards and serves out-of-core (mmap)")
     ap.add_argument("--tile-cache-mib", type=float, default=None,
                     help="HBM budget for shard tiles when serving a "
-                         "sharded (v2) index; default unbounded")
+                         "sharded (v2) index; default unbounded (per host "
+                         "in multi-host mode)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="> 1 serves the v2 store through N in-process "
+                         "fake hosts (ShardWorker + Frontend)")
+    ap.add_argument("--replication", type=int, default=2,
+                    help="replicas per shard in multi-host mode")
+    ap.add_argument("--hedge-after-ms", type=float, default=50.0,
+                    help="backup-request deadline per shard dispatch. "
+                         "In-process dispatch is synchronous, so wall-"
+                         "clock runs apply failover only; backup requests "
+                         "fire in the simulated-latency benches "
+                         "(benchmarks/serving.py run_multihost)")
+    ap.add_argument("--fail-host", action="append", default=[],
+                    help="mark a host down before the run (repeatable), "
+                         "e.g. --fail-host host1")
     ap.add_argument("--no-warmup", action="store_true")
     args = ap.parse_args()
     if args.mode == "open" and args.qps <= 0:
@@ -142,12 +197,28 @@ def main() -> None:
                  "the on-disk shard directory)")
     if args.concurrency < 1:
         ap.error("--concurrency must be >= 1")
+    if args.hosts > 1 and not (args.store_format == "v2" and args.index_dir):
+        ap.error("--hosts > 1 requires --store-format v2 --index-dir (the "
+                 "shard files are the placement unit)")
 
     corpus, index = build_or_load(args)
-    server = QueryServer(index, ServerConfig(
-        max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
-        tile_cache_bytes=(None if args.tile_cache_mib is None
-                          else int(args.tile_cache_mib * 2**20))))
+    tile_bytes = (None if args.tile_cache_mib is None
+                  else int(args.tile_cache_mib * 2**20))
+    if args.hosts > 1:
+        server = make_multihost_frontend(
+            args.index_dir, hosts=args.hosts, replication=args.replication,
+            max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
+            hedge_after_s=args.hedge_after_ms / 1e3,
+            tile_cache_bytes=tile_bytes, fail_hosts=args.fail_host)
+        down = sorted(set(server.placement.nodes)
+                      - set(server.placement.live_nodes))
+        print(f"multi-host frontend: {args.hosts} hosts, "
+              f"replication {min(args.replication, args.hosts)}, "
+              f"{server.placement.n_shards} shards, down={down or 'none'}")
+    else:
+        server = QueryServer(index, ServerConfig(
+            max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
+            tile_cache_bytes=tile_bytes))
     queries, origin = make_workload(corpus, args.queries)
 
     if args.mode == "closed":

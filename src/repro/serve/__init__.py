@@ -7,20 +7,26 @@ Two serving surfaces live here:
   (`cache`), latency/occupancy metrics (`metrics`), and the `QueryServer`
   front-end (`server`). Driven by `repro.launch.serve` and
   `benchmarks.serving`.
+* the multi-host sharded data plane: per-host `ShardWorker`s over
+  placement-assigned v2 manifest shards (`worker`) and the scatter/gather
+  `Frontend` with hedged dispatch and replica failover (`frontend`).
 * LM inference steps (`step`) for the model substrate: prefill/decode and
   the greedy generation driver.
 """
 from .batcher import MicroBatch, MicroBatcher
 from .cache import LRUCache, result_key, term_key
+from .frontend import Frontend, FrontendConfig
 from .metrics import MetricsSnapshot, ServingMetrics
 from .planner import QueryPlan, QueryPlanner
 from .request import QueryRequest, QueryResponse, Status
 from .server import QueryServer, ServerConfig
 from .step import make_prefill_step, make_decode_step, greedy_generate
+from .worker import ShardWorker
 
 __all__ = [
     "MicroBatch", "MicroBatcher", "LRUCache", "result_key", "term_key",
     "MetricsSnapshot", "ServingMetrics", "QueryPlan", "QueryPlanner",
     "QueryRequest", "QueryResponse", "Status", "QueryServer", "ServerConfig",
+    "Frontend", "FrontendConfig", "ShardWorker",
     "make_prefill_step", "make_decode_step", "greedy_generate",
 ]

@@ -1,0 +1,311 @@
+"""Frontend: the scatter/gather half of the sharded serving data plane.
+
+Life of a request (compare QueryServer, the single-host engine):
+
+1. ``submit`` compiles the pattern, answers empty queries immediately, and
+   otherwise lands the request in the same shape-bucketed micro-batcher.
+2. ``step`` polls the batcher; each due micro-batch is SCATTERED shard by
+   shard: for every v2 manifest shard, the ``ShardPlacement`` names the
+   replica ranking and the ``HedgedExecutor`` dispatches the batch to the
+   preferred live ``ShardWorker`` — firing a backup request at the next
+   replica if the primary dawdles past the hedge deadline ('The Tail at
+   Scale'), and failing over entirely when a worker is down. While shard
+   i scores, shard i+1's owner prefetches its tile (double buffering
+   across hosts).
+3. Workers return per-query CANDIDATES (doc, score pairs already cut to
+   the coverage threshold or local top-k); the frontend GATHERS them and
+   runs the final selection under the engine's exact total order
+   (descending score, ties ascending doc id) — the same score-combine as
+   ``index/distributed.py``'s distributed top-k, so results are
+   bit-identical to the single-host QueryEngine.
+
+Clocking: with ``latency_models`` (node -> ShardSim) every dispatch
+latency is simulated on the executor's injected SimClock and the frontend
+reads request timestamps off that same clock — tests and benchmarks are
+fully deterministic, straggler/hedge behavior included. Without models,
+dispatch is timed on the wall clock (production mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core.query import (SearchResult, compile_pattern, coverage_cutoff)
+from ..index.hedge import AllReplicasFailed, HedgedExecutor, ShardSim
+from ..index.placement import ShardPlacement
+from .batcher import MicroBatch, MicroBatcher
+from .metrics import ServingMetrics
+from .request import QueryRequest, QueryResponse, Status
+from .worker import ShardWorker
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    term_pad: int = 64          # bucket granularity (multiples of this)
+    max_batch: int = 32         # micro-batch cap per bucket
+    max_wait_s: float = 0.002   # flush timer for partially-filled buckets
+    max_queued: int = 1024      # backpressure cap across all buckets
+    default_threshold: float = 0.8
+    default_top_k: int = 10     # k for top_k() convenience calls
+    hedge_after_s: float = 0.05  # backup-request deadline per shard dispatch
+    max_hedges: int = 1
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+class Frontend:
+    def __init__(self, workers: dict[str, ShardWorker],
+                 placement: ShardPlacement,
+                 config: FrontendConfig = FrontendConfig(), *,
+                 clock: Optional[Callable[[], float]] = None,
+                 latency_models: Optional[dict[str, ShardSim]] = None):
+        # a node holding zero shards (more hosts than shard replicas) needs
+        # no worker; every replicating node must hold its full replica set
+        for node, held in placement.replica_assignment().items():
+            if not held:
+                continue
+            if node not in workers:
+                raise ValueError(f"placement node {node} replicates shards "
+                                 f"{held} but has no worker")
+            gaps = [g for g in held if not workers[node].holds(g)]
+            if gaps:
+                raise ValueError(
+                    f"worker {node} missing replica shards {gaps}")
+        self.workers = workers
+        self.placement = placement
+        self.config = config
+        self.executor = HedgedExecutor(
+            shards=dict(latency_models) if latency_models else {},
+            hedge_after=config.hedge_after_s, max_hedges=config.max_hedges)
+        self._simulated = bool(latency_models)
+        if clock is None:
+            clock = ((lambda: self.executor.clock.now) if self._simulated
+                     else time.monotonic)
+        self.clock = clock
+        self.batcher = MicroBatcher(
+            term_pad=config.term_pad, max_batch=config.max_batch,
+            max_wait_s=config.max_wait_s, max_queued=config.max_queued)
+        self.metrics = ServingMetrics()
+        self._responses: dict[int, QueryResponse] = {}
+        self._topk: dict[int, int] = {}      # rid -> k (absent = threshold)
+        self._next_id = 0
+        self._dispatch_seq = 0
+        self.n_docs = next(iter(workers.values())).layout.n_docs
+
+    # -- control plane -------------------------------------------------------
+    def fail_worker(self, node: str) -> list[int]:
+        """Mark a host down (placement failover + dead dispatch). Returns
+        the shards whose primary moved to a replica."""
+        moved = self.placement.fail(node)
+        if node in self.workers:
+            self.workers[node].fail()
+        if node in self.executor.shards:
+            self.executor.shards[node].failed = True
+        return moved
+
+    def recover_worker(self, node: str) -> list[int]:
+        restored = self.placement.recover(node)
+        if node in self.workers:
+            self.workers[node].recover()
+        if node in self.executor.shards:
+            self.executor.shards[node].failed = False
+        return restored
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, pattern=None, *, terms: Optional[np.ndarray] = None,
+               threshold: Optional[float] = None,
+               top_k: Optional[int] = None,
+               deadline: Optional[float] = None) -> int:
+        """Accept one query; ``top_k`` switches the request from coverage-
+        threshold selection to exact global top-k."""
+        if (pattern is None) == (terms is None):
+            raise ValueError("pass exactly one of pattern / terms")
+        if terms is None:
+            terms = compile_pattern(pattern,
+                                    next(iter(self.workers.values())).params)
+        threshold = (self.config.default_threshold if threshold is None
+                     else threshold)
+        now = self.clock()
+        rid = self._next_id
+        self._next_id += 1
+        if terms.shape[0] == 0:
+            empty = SearchResult(np.zeros(0, np.int32),
+                                 np.zeros(0, np.int32), 0, 0)
+            self.metrics.record_request(wait_s=0.0, service_s=0.0)
+            self._responses[rid] = QueryResponse(rid, Status.OK, empty)
+            return rid
+        if top_k is not None:
+            self._topk[rid] = int(top_k)
+        req = QueryRequest(rid, terms, terms.shape[0], threshold,
+                           submitted_at=now, deadline=deadline)
+        if not self.batcher.submit(req):
+            self.metrics.record_rejected()
+            self._responses[rid] = QueryResponse(rid, Status.REJECTED)
+            self._topk.pop(rid, None)
+        return rid
+
+    # -- scatter/gather ------------------------------------------------------
+    def _staged(self, cache: dict, worker: ShardWorker, buf, n_valid):
+        key = worker.device
+        hit = cache.get(key)
+        if hit is None:
+            hit = cache[key] = worker.stage_batch(buf, n_valid)
+        return hit
+
+    def _score_batch(self, batch: MicroBatch) -> None:
+        t0 = self.clock()
+        Q, B = batch.size, batch.bucket
+        q_pad = _next_pow2(Q)
+        buf = np.zeros((q_pad, B, 2), dtype=np.uint32)
+        n_valid = np.zeros(q_pad, dtype=np.int32)
+        cutoffs = np.zeros(q_pad, dtype=np.int32)
+        topks = np.zeros(q_pad, dtype=np.int32)
+        for i, r in enumerate(batch.requests):
+            buf[i, : r.n_terms] = r.terms
+            n_valid[i] = r.n_terms
+            k = self._topk.get(r.request_id, 0)
+            topks[i] = k
+            if not k:
+                cutoffs[i] = coverage_cutoff(r.threshold, r.n_terms)
+
+        staged: dict = {}
+        gathered: list[list[tuple[np.ndarray, np.ndarray]]] = \
+            [[] for _ in range(Q)]
+        ex = self.executor
+        fired0, won0, fo0 = ex.hedges_fired, ex.hedges_won, ex.failovers
+        tiles0 = self._tile_counters()
+        t_base = ex.clock.now
+        max_done = 0.0
+        method = ""
+        n_shards = self.placement.n_shards
+        try:
+            for g in range(n_shards):
+                if g + 1 < n_shards:
+                    # double buffering across hosts: stage shard g+1's tile
+                    # on its owner while shard g scores (wherever it lands)
+                    try:
+                        nxt = self.placement.owner(g + 1)
+                        self.workers[nxt].prefetch_shard(g + 1)
+                    except RuntimeError:
+                        pass
+
+                def call(node, g=g):
+                    w = self.workers[node]
+                    terms_dev, nvalid_dev = self._staged(staged, w, buf,
+                                                         n_valid)
+                    return w.score_candidates(g, terms_dev, nvalid_dev,
+                                              cutoffs, topks, Q)
+
+                self._dispatch_seq += 1
+                # every shard scatters at the same instant: rewind the
+                # event clock to the batch start, track the slowest
+                # completion
+                ex.clock.now = t_base
+                node, lat, (cands, method) = ex.run(
+                    self._dispatch_seq, self.placement.replicas(g), call)
+                max_done = max(max_done, lat)
+                self.metrics.record_worker(node, lat)
+                for i in range(Q):
+                    gathered[i].append(cands[i])
+        except AllReplicasFailed:
+            # a shard lost every replica mid-flight: the batch is already
+            # out of the batcher, so answer every request FAILED instead of
+            # raising it into the serving loop and losing the rids
+            # (only this failure domain — kernel/device errors propagate)
+            for r in batch.requests:
+                self.metrics.record_failed()
+                self._responses[r.request_id] = QueryResponse(
+                    r.request_id, Status.FAILED,
+                    wait_s=max(0.0, t0 - r.submitted_at))
+                self._topk.pop(r.request_id, None)
+            return
+        ex.clock.now = t_base + max_done
+        service = max_done if self._simulated else self.clock() - t0
+
+        self.metrics.record_hedges(fired=ex.hedges_fired - fired0,
+                                   won=ex.hedges_won - won0)
+        self.metrics.record_failovers(ex.failovers - fo0)
+        self.metrics.record_batch(Q, self.batcher.occupancy(batch), method)
+        th, tf, tp, tph = self._tile_counters()
+        self.metrics.record_tiles(
+            hits=th - tiles0[0], faults=tf - tiles0[1],
+            resident=sum(len(w.tiles) for w in self.workers.values()),
+            prefetched=tp - tiles0[2], prefetch_hits=tph - tiles0[3])
+
+        for i, r in enumerate(batch.requests):
+            result = self._gather(gathered[i], r, int(topks[i]),
+                                  int(cutoffs[i]))
+            wait = max(0.0, t0 - r.submitted_at)
+            self.metrics.record_request(wait_s=wait, service_s=service)
+            self._responses[r.request_id] = QueryResponse(
+                r.request_id, Status.OK, result, method=method,
+                batch_size=Q, wait_s=wait, service_s=service)
+            self._topk.pop(r.request_id, None)
+
+    def _tile_counters(self) -> tuple[int, int, int, int]:
+        ws = self.workers.values()
+        return (sum(w.tiles.hits for w in ws),
+                sum(w.tiles.faults for w in ws),
+                sum(w.tiles.prefetched for w in ws),
+                sum(w.tiles.prefetch_hits for w in ws))
+
+    def _gather(self, parts: list[tuple[np.ndarray, np.ndarray]],
+                req: QueryRequest, top_k: int, cutoff: int) -> SearchResult:
+        """Final selection over gathered candidates — the distributed
+        score-combine. Blocks partition documents, so each doc appears in
+        exactly one shard's candidates and the global sort under
+        (-score, doc id) reproduces the single-host engine exactly."""
+        docs = np.concatenate([p[0] for p in parts]) if parts else \
+            np.zeros(0, np.int64)
+        scores = np.concatenate([p[1] for p in parts]) if parts else \
+            np.zeros(0, np.int32)
+        order = np.lexsort((docs, -scores))
+        if top_k:
+            order = order[: min(top_k, self.n_docs)]
+            cut = int(scores[order[-1]]) if order.size else 0
+        else:
+            cut = cutoff
+        return SearchResult(docs[order].astype(np.int32),
+                            scores[order].astype(np.int32),
+                            req.n_terms, cut)
+
+    # -- serving loop --------------------------------------------------------
+    def step(self, now: Optional[float] = None, *, force: bool = False
+             ) -> int:
+        now = self.clock() if now is None else now
+        batches, expired = self.batcher.poll(now, force=force)
+        for r in expired:
+            self.metrics.record_dropped()
+            self._topk.pop(r.request_id, None)
+            self._responses[r.request_id] = QueryResponse(
+                r.request_id, Status.DROPPED,
+                wait_s=max(0.0, now - r.submitted_at))
+        n = len(expired)
+        for batch in batches:
+            self._score_batch(batch)
+            n += batch.size
+        return n
+
+    def drain(self) -> None:
+        while len(self.batcher):
+            self.step(force=True)
+
+    def reset_metrics(self, *, clear_caches: bool = False) -> None:
+        """Fresh counters (drivers call this after jit warmup). The
+        frontend holds no result caches — ``clear_caches`` is accepted for
+        driver compatibility with QueryServer and ignored."""
+        self.metrics = ServingMetrics()
+        self.executor.completions.clear()
+        self.executor.hedges_fired = 0
+        self.executor.hedges_won = 0
+        self.executor.failovers = 0
+
+    def pop_responses(self) -> dict[int, QueryResponse]:
+        out = self._responses
+        self._responses = {}
+        return out

@@ -4,6 +4,12 @@ Plain in-process counters — the aggregation a production exporter would
 scrape. Latencies are recorded per REQUEST (queue wait + service), batch
 stats per micro-batch, so occupancy weighs each flush equally while the
 percentiles weigh each query.
+
+The multi-host frontend additionally records per-worker dispatch
+latencies, hedge fires (backup requests issued by the HedgedExecutor),
+hedge wins (backups that beat the primary), and failovers (dispatches
+served by a non-primary replica because the primary was down); the tile
+counters grew prefetch accounting for the double-buffered shard staging.
 """
 from __future__ import annotations
 
@@ -30,18 +36,40 @@ class MetricsSnapshot:
     tile_hits: int = 0
     resident_tiles: int = 0
     tile_hit_rate: float = 0.0
+    # double-buffered prefetch (0 when paging is demand-only)
+    prefetched_tiles: int = 0
+    prefetch_hits: int = 0
+    prefetch_hit_rate: float = 0.0
+    # multi-host dispatch (0 / empty for the single-host QueryServer)
+    failed: int = 0          # requests unservable (shard lost all replicas)
+    dispatches: int = 0
+    hedges_fired: int = 0
+    hedges_won: int = 0
+    hedge_fire_rate: float = 0.0
+    failovers: int = 0
+    worker_p99_ms: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def report(self) -> str:
         meth = " ".join(f"{m}={n}" for m, n in sorted(self.methods.items()))
-        return (f"served={self.served} rejected={self.rejected} "
-                f"dropped={self.dropped} batches={self.batches} "
-                f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
-                f"occupancy={self.mean_occupancy:.2f} "
-                f"cache_hit_rate={self.cache_hit_rate:.2f} "
-                f"tiles[resident={self.resident_tiles} "
-                f"faults={self.page_faults} "
-                f"hit_rate={self.tile_hit_rate:.2f}] "
-                f"dispatch[{meth}]")
+        s = (f"served={self.served} rejected={self.rejected} "
+             f"dropped={self.dropped} batches={self.batches} "
+             f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
+             f"occupancy={self.mean_occupancy:.2f} "
+             f"cache_hit_rate={self.cache_hit_rate:.2f} "
+             f"tiles[resident={self.resident_tiles} "
+             f"faults={self.page_faults} "
+             f"hit_rate={self.tile_hit_rate:.2f} "
+             f"prefetch_hit_rate={self.prefetch_hit_rate:.2f}] "
+             f"dispatch[{meth}]")
+        if self.dispatches:
+            workers = " ".join(f"{w}={p:.2f}ms"
+                               for w, p in sorted(self.worker_p99_ms.items()))
+            s += (f" shard_rpcs[n={self.dispatches} "
+                  f"hedge_rate={self.hedge_fire_rate:.3f} "
+                  f"hedges_won={self.hedges_won} "
+                  f"failovers={self.failovers} failed={self.failed}] "
+                  f"workers_p99[{workers}]")
+        return s
 
 
 class ServingMetrics:
@@ -64,6 +92,15 @@ class ServingMetrics:
         self.page_faults = 0
         self.tile_hits = 0
         self.resident_tiles = 0
+        self.prefetched_tiles = 0
+        self.prefetch_hits = 0
+        self.failed = 0
+        self.dispatches = 0
+        self.hedges_fired = 0
+        self.hedges_won = 0
+        self.failovers = 0
+        self._window = window
+        self.worker_lat_s: dict[str, "deque[float]"] = {}
 
     # -- recording ---------------------------------------------------------
     def record_request(self, *, wait_s: float, service_s: float,
@@ -87,13 +124,36 @@ class ServingMetrics:
     def record_dropped(self) -> None:
         self.dropped += 1
 
-    def record_tiles(self, *, hits: int, faults: int, resident: int) -> None:
+    def record_failed(self) -> None:
+        """A request that could not be served: some shard it needs has no
+        live replica left."""
+        self.failed += 1
+
+    def record_tiles(self, *, hits: int, faults: int, resident: int,
+                     prefetched: int = 0, prefetch_hits: int = 0) -> None:
         """Device-tile cache activity for one scoring pass: cache hits,
-        page faults (host->device shard stages), and the resident-tile
-        gauge after the pass."""
+        page faults (host->device shard stages, prefetches included), the
+        resident-tile gauge after the pass, and the prefetch counters."""
         self.tile_hits += hits
         self.page_faults += faults
         self.resident_tiles = resident
+        self.prefetched_tiles += prefetched
+        self.prefetch_hits += prefetch_hits
+
+    def record_worker(self, worker: str, latency_s: float) -> None:
+        """One shard dispatch served by ``worker`` (hedged or not)."""
+        self.dispatches += 1
+        q = self.worker_lat_s.get(worker)
+        if q is None:
+            q = self.worker_lat_s[worker] = deque(maxlen=self._window)
+        q.append(latency_s)
+
+    def record_hedges(self, *, fired: int, won: int) -> None:
+        self.hedges_fired += fired
+        self.hedges_won += won
+
+    def record_failovers(self, n: int) -> None:
+        self.failovers += n
 
     # -- reading -----------------------------------------------------------
     def percentile_ms(self, p: float) -> float:
@@ -110,6 +170,20 @@ class ServingMetrics:
             tile_hits=self.tile_hits,
             resident_tiles=self.resident_tiles,
             tile_hit_rate=(self.tile_hits / n_tiles if n_tiles else 0.0),
+            prefetched_tiles=self.prefetched_tiles,
+            prefetch_hits=self.prefetch_hits,
+            prefetch_hit_rate=(self.prefetch_hits / self.prefetched_tiles
+                               if self.prefetched_tiles else 0.0),
+            failed=self.failed,
+            dispatches=self.dispatches,
+            hedges_fired=self.hedges_fired,
+            hedges_won=self.hedges_won,
+            hedge_fire_rate=(self.hedges_fired / self.dispatches
+                             if self.dispatches else 0.0),
+            failovers=self.failovers,
+            worker_p99_ms={
+                w: float(np.percentile(np.fromiter(q, float), 99) * 1e3)
+                for w, q in sorted(self.worker_lat_s.items()) if q},
             served=self.served,
             rejected=self.rejected,
             dropped=self.dropped,

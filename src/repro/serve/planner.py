@@ -54,6 +54,25 @@ class QueryPlan:
     n_shards: int = 1
 
 
+def choose_method(n_hashes: int, bucket: int, batch_size: int,
+                  short_query_terms: int = SHORT_QUERY_TERMS) -> str:
+    """The pure kernel-choice rule, shared by the single-host QueryPlanner
+    and the multi-host ShardWorker (both must pick the same kernel for the
+    same batch shape so dispatch-mix metrics stay comparable)."""
+    if batch_size > 1:
+        # Batched: the fused multi-query kernel whenever it applies (k=1 —
+        # the paper's default); otherwise the gather path, with the ADD
+        # kernel picked by query length.
+        if n_hashes == 1:
+            return "lookup"
+        return "unpack" if bucket < short_query_terms else "vertical"
+    # Singletons: short queries take the cheap expansion; long ones the
+    # fused gather (k=1) or vertical counters.
+    if bucket < short_query_terms:
+        return "unpack"
+    return "lookup" if n_hashes == 1 else "vertical"
+
+
 class QueryPlanner:
     """Chooses the kernel for each (bucket, batch-size) micro-batch and
     owns the memoized score functions for the methods it dispatches, plus
@@ -74,29 +93,11 @@ class QueryPlanner:
     # -- planning ----------------------------------------------------------
     def plan(self, bucket: int, batch_size: int) -> QueryPlan:
         """Pure dispatch decision; records nothing."""
-        paged = self.n_shards > 1
-        if batch_size > 1:
-            # Batched: the fused multi-query kernel whenever it applies
-            # (k=1 — the paper's default); otherwise the gather path, with
-            # the ADD kernel picked by query length.
-            if self._k == 1:
-                method = "lookup"
-            else:
-                method = ("unpack" if bucket < self.short_query_terms
-                          else "vertical")
-            return QueryPlan(method, bucket, batch_size,
-                             fused=(method == "lookup"),
-                             paged=paged, n_shards=self.n_shards)
-        # Singletons: short queries take the cheap expansion; long ones the
-        # fused gather (k=1) or vertical counters.
-        if bucket < self.short_query_terms:
-            method = "unpack"
-        elif self._k == 1:
-            method = "lookup"
-        else:
-            method = "vertical"
-        return QueryPlan(method, bucket, batch_size, fused=False,
-                         paged=paged, n_shards=self.n_shards)
+        method = choose_method(self._k, bucket, batch_size,
+                               self.short_query_terms)
+        return QueryPlan(method, bucket, batch_size,
+                         fused=(batch_size > 1 and method == "lookup"),
+                         paged=self.n_shards > 1, n_shards=self.n_shards)
 
     # -- score-function cache ---------------------------------------------
     def batch_score_fn(self, plan: QueryPlan):

@@ -23,6 +23,7 @@ class Status(str, enum.Enum):
     OK = "ok"                    # scored, result attached
     REJECTED = "rejected"        # backpressure: queue full at submit
     DROPPED = "dropped_deadline"  # deadline expired before scoring
+    FAILED = "failed"            # unservable: a shard lost every replica
 
 
 @dataclasses.dataclass

@@ -29,7 +29,8 @@ import numpy as np
 from ..core import hashing
 from ..core.arena import DeviceTileCache, common_tile_rows
 from ..core.index import BitSlicedIndex
-from ..core.query import (SearchResult, compile_pattern, select_hits)
+from ..core.query import (SearchResult, compile_pattern, run_paged,
+                          select_hits)
 from .batcher import MicroBatch, MicroBatcher
 from .cache import LRUCache, result_key, term_key
 from .metrics import ServingMetrics
@@ -178,17 +179,17 @@ class QueryServer:
             out = fn(self.tiles.get(0), self.index.row_offset,
                      self.index.block_width, terms_dev, valid_dev)
             return np.asarray(out)
-        parts = [np.asarray(fn(self.tiles.get(s), offs, widths,
-                               terms_dev, valid_dev))
-                 for s, offs, widths in self._shard_args]
-        return np.concatenate(parts, axis=-1)
+        return np.concatenate(
+            run_paged(self.tiles, self._shard_args, fn, terms_dev,
+                      valid_dev), axis=-1)
 
     def _score_batch(self, batch: MicroBatch) -> None:
         t0 = self.clock()
         Q, B = batch.size, batch.bucket
         plan = self.planner.plan(B, Q)
         ells = np.array([r.n_terms for r in batch.requests], dtype=np.int32)
-        tiles0 = (self.tiles.hits, self.tiles.faults)
+        tiles0 = (self.tiles.hits, self.tiles.faults,
+                  self.tiles.prefetched, self.tiles.prefetch_hits)
         if Q == 1:
             buf = np.zeros((B, 2), dtype=np.uint32)
             buf[: ells[0]] = batch.requests[0].terms
@@ -220,7 +221,9 @@ class QueryServer:
             self.metrics.record_tiles(
                 hits=self.tiles.hits - tiles0[0],
                 faults=self.tiles.faults - tiles0[1],
-                resident=len(self.tiles))
+                resident=len(self.tiles),
+                prefetched=self.tiles.prefetched - tiles0[2],
+                prefetch_hits=self.tiles.prefetch_hits - tiles0[3])
         for i, r in enumerate(batch.requests):
             result = select_hits(scores[i], r.n_terms, r.threshold)
             wait = max(0.0, t0 - r.submitted_at)

@@ -1,0 +1,172 @@
+"""ShardWorker: the per-host half of the sharded serving data plane.
+
+A worker owns a sub-store view (``repro.core.store.open_substore``) of the
+shard files its ``ShardPlacement`` replica set assigns to it — it never
+maps, stages, or scores any other part of the index. Per dispatch it
+receives one micro-batch (padded term buffer + validity counts) and one
+GLOBAL shard id from its replica set, scores that shard's tile through the
+same Pallas kernels as the single-host engine (kernel choice =
+``repro.serve.planner.choose_method``, so the dispatch mix matches), and
+compresses the [Q, shard_slots] score plane into per-query CANDIDATES:
+
+* threshold mode — every (doc, score) of its blocks with
+  score >= ceil(K * ell) (the paper's coverage cutoff);
+* top-k mode    — its k best documents under the engine's exact total
+  order (descending score, ties ascending doc id).
+
+Candidate sets are what crosses the host boundary: the frontend gathers
+them and runs the final selection exactly like ``index/distributed.py``'s
+score-combine, so the gathered result is bit-identical to the single-host
+QueryEngine (property-tested in tests/test_multihost.py).
+
+Tiles page through a per-worker ``DeviceTileCache`` (HBM budget per host)
+padded to the PARENT store's tallest shard, so every worker shares one
+compiled kernel per (bucket, method); ``prefetch_shard`` lets the frontend
+double-buffer the next planned shard while another worker scores.
+
+``fail()``/``recover()`` flip a liveness flag: a dead worker raises
+``AttemptFailed`` on dispatch, which the frontend's HedgedExecutor turns
+into failover to the next replica.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.query import (ShardPlan, make_batch_score_fn, plan_shards_subset)
+from ..core.store import open_substore
+from ..core.arena import DeviceTileCache
+from ..index.hedge import AttemptFailed
+from .planner import SHORT_QUERY_TERMS, choose_method
+
+# One compiled scorer per (n_hashes, method), shared by EVERY worker in the
+# process: fake hosts pad tiles to the parent store's tallest shard, so
+# their dispatch shapes coincide and recompiling per worker would only
+# burn startup time (noticeable across the elasticity property sweeps).
+_SCORE_FNS: dict[tuple[int, str], object] = {}
+
+
+def _shared_score_fn(n_hashes: int, method: str):
+    fn = _SCORE_FNS.get((n_hashes, method))
+    if fn is None:
+        fn = make_batch_score_fn(n_hashes, method)
+        _SCORE_FNS[(n_hashes, method)] = fn
+    return fn
+
+
+class ShardWorker:
+    """One fake/real host serving a subset of a v2 store's shards."""
+
+    def __init__(self, name: str, store, shard_ids, *,
+                 tile_cache_bytes: Optional[int] = None,
+                 verify: bool = False, device=None,
+                 short_query_terms: int = SHORT_QUERY_TERMS):
+        sub = open_substore(store, shard_ids, verify=verify)
+        self.name = name
+        self.layout = sub.layout            # FULL store layout (metadata)
+        self.storage = sub.storage          # only this host's shard files
+        self.params = sub.params
+        self.shard_ids = sub.shard_ids
+        self.device = device
+        self.short_query_terms = short_query_terms
+        self._local = {g: i for i, g in enumerate(self.shard_ids)}
+        self.plans: list[ShardPlan] = plan_shards_subset(
+            sub.layout, sub.global_row_starts, sub.shard_ids)
+        # pad tiles to the PARENT store's tallest shard: one kernel shape
+        # across every worker, not one per host's local maximum
+        pad_rows = (int(np.max(np.diff(sub.global_row_starts)))
+                    if sub.n_shards_total > 1 else None)
+        self.tiles = DeviceTileCache(self.storage,
+                                     capacity_bytes=tile_cache_bytes,
+                                     pad_rows_to=pad_rows, device=device)
+        # global slot -> original doc id (-1 for padding slots); workers
+        # translate their slot planes to doc candidates host-side
+        n_slots = self.layout.n_blocks * self.layout.block_docs
+        self._slot_doc = np.full(n_slots, -1, dtype=np.int64)
+        self._slot_doc[self.layout.doc_slot] = np.arange(self.layout.n_docs)
+        # per-local-shard device-staged addressing
+        self._args = [(p.shard, self._dev(p.row_offset),
+                       self._dev(p.block_width)) for p in self.plans]
+        self.failed = False
+        self.dispatches = 0
+
+    def _dev(self, a: np.ndarray):
+        x = jnp.asarray(a)
+        return x if self.device is None else jax.device_put(x, self.device)
+
+    # -- liveness (control plane / test hook) -------------------------------
+    def fail(self) -> None:
+        self.failed = True
+
+    def recover(self) -> None:
+        self.failed = False
+
+    def holds(self, gshard: int) -> bool:
+        return gshard in self._local
+
+    # -- staging -------------------------------------------------------------
+    def stage_batch(self, terms: np.ndarray, n_valid: np.ndarray):
+        """Place one micro-batch's buffers on this worker's device. The
+        frontend calls this once per (batch, device) and reuses the result
+        across every shard dispatch that lands here."""
+        return (self._dev(np.asarray(terms)),
+                self._dev(np.asarray(n_valid, dtype=np.int32)))
+
+    def prefetch_shard(self, gshard: int) -> bool:
+        """Double-buffering hook: stage the tile of global shard
+        ``gshard`` host->device without blocking (no-op when resident)."""
+        if self.failed or gshard not in self._local:
+            return False
+        return self.tiles.prefetch(self._local[gshard])
+
+    # -- scoring -------------------------------------------------------------
+    def _score_fn(self, method: str):
+        return _shared_score_fn(self.params.n_hashes, method)
+
+    def score_shard(self, gshard: int, terms_dev, n_valid_dev
+                    ) -> tuple[np.ndarray, ShardPlan, str]:
+        """Score one held shard against a staged micro-batch. Returns
+        (slot scores int32 [Q, shard_slots], the shard's plan, method)."""
+        if self.failed:
+            raise AttemptFailed(f"worker {self.name} is down")
+        local = self._local.get(gshard)
+        if local is None:
+            raise AttemptFailed(
+                f"worker {self.name} does not hold shard {gshard}")
+        self.dispatches += 1
+        plan = self.plans[local]
+        _, offs, widths = self._args[local]
+        q, bucket = int(terms_dev.shape[0]), int(terms_dev.shape[1])
+        method = choose_method(self.params.n_hashes, bucket, q,
+                               self.short_query_terms)
+        slots = self._score_fn(method)(self.tiles.get(local), offs, widths,
+                                       terms_dev, n_valid_dev)
+        return np.asarray(slots), plan, method
+
+    def score_candidates(self, gshard: int, terms_dev, n_valid_dev,
+                         cutoffs: np.ndarray, topks: np.ndarray,
+                         n_live: int
+                         ) -> tuple[list[tuple[np.ndarray, np.ndarray]], str]:
+        """Score + select: per live query, the (doc_ids, scores) candidate
+        arrays of this shard's documents — hits >= cutoffs[i] when
+        topks[i] == 0, else the local top-k under (-score, doc id). Only
+        candidates cross the host boundary, O(hits + k) per query instead
+        of O(n_docs) — the scatter/gather contract of the frontend."""
+        slots, plan, method = self.score_shard(gshard, terms_dev, n_valid_dev)
+        slot0 = plan.block_start * self.layout.block_docs
+        docs = self._slot_doc[slot0: slot0 + slots.shape[1]]
+        real = docs >= 0
+        docs = docs[real]
+        out = []
+        for i in range(n_live):
+            sc = slots[i][real]
+            if topks[i] > 0:
+                order = np.lexsort((docs, -sc))[: int(topks[i])]
+                out.append((docs[order], sc[order].astype(np.int32)))
+            else:
+                m = sc >= cutoffs[i]
+                out.append((docs[m], sc[m].astype(np.int32)))
+        return out, method

@@ -1,0 +1,24 @@
+"""Runs the multi-DEVICE sharded-serving checks in a subprocess (the rest
+of the suite must see exactly ONE device, so the 4-device run is isolated
+— same mechanism as test_distributed.py)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+_SCRIPT = Path(__file__).parent / "multihost_check.py"
+_SRC = str(Path(__file__).parent.parent / "src")
+
+
+@pytest.mark.slow
+def test_multihost_frontend_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, str(_SCRIPT)], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL-MULTIHOST-OK" in proc.stdout
