@@ -1,23 +1,74 @@
 """Kernel microbenchmarks: scoring methods across (terms x doc-words)
-tiles. On CPU the Pallas kernels execute in interpret mode (correctness
-path); the jnp oracle ('ref') is the XLA-compiled CPU path, so it is the
+tiles, the fused lookup paths, and the batched row-dedup pair under a
+row-overlap sweep.
+
+On CPU the Pallas kernels execute in interpret mode (correctness path);
+the jnp oracle ('ref') is the XLA-compiled CPU path, so it is the
 meaningful CPU wall-clock datum, while the interpret numbers track kernel-
-body overhead. On TPU the same harness times compiled Mosaic kernels."""
+body overhead. On TPU the same harness times compiled Mosaic kernels.
+
+The overlap sweep is the PR-4 acceptance datum: batches whose queries
+share rows (overlapping k-mers) re-stream the same arena rows under the
+fused multi-query kernel, while the dedup pair streams each unique row
+once. ``arena_row_dmas`` counts the arena row-tile transfers each path
+issues per word-tile column — exact from the kernel grids, not sampled:
+fused = Q*nb*L cells, dedup = the padded unique-row count. At 90% batch
+overlap the ratio is >= 2x (typically ~8x at these shapes).
+
+    PYTHONPATH=src python -m benchmarks.kernel_micro [--quick] \\
+        [--json results/BENCH_kernels.json]
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# the REAL padding rule: the benchmark's DMA accounting must stay
+# bit-consistent with what plan_dedup_batch pads for the serving path
+from repro.core.query import _pad_unique
 from repro.kernels import ops
 
 from .common import emit, timeit
 
 
-def run() -> dict:
+def overlap_batch(rng: np.random.Generator, Q: int, L: int, n_rows: int,
+                  overlap: float) -> np.ndarray:
+    """Row indices [Q, 1, L] whose gathers share ~``overlap`` of their
+    rows: 0.0 draws every cell a distinct row (fully disjoint batch),
+    otherwise cells draw from a pool sized (1-overlap) * Q * L."""
+    n = Q * L
+    if overlap <= 0.0:
+        idx = rng.choice(n_rows, size=min(n, n_rows), replace=False)
+        if idx.size < n:                      # tiny arena: wrap around
+            idx = np.resize(idx, n)
+        return idx.reshape(Q, 1, L).astype(np.int32)
+    pool = max(1, int(round(n * (1.0 - overlap))))
+    pool_rows = rng.choice(n_rows, size=min(pool, n_rows), replace=False)
+    return rng.choice(pool_rows, size=(Q, 1, L)).astype(np.int32)
+
+
+def dedup_traffic(idx: np.ndarray) -> tuple[int, int, np.ndarray, np.ndarray]:
+    """(fused arena-row DMAs, dedup arena-row DMAs, uniq_pad, indir) for a
+    row-index batch — the exact per-word-tile transfer counts of the two
+    kernel paths (dedup counts the PADDED unique buffer it really
+    streams)."""
+    uniq, inv = np.unique(idx, return_inverse=True)
+    indir = inv.reshape(idx.shape).astype(np.int32)
+    uniq_pad = np.zeros(_pad_unique(uniq.size), dtype=np.int32)
+    uniq_pad[: uniq.size] = uniq
+    return int(idx.size), int(uniq_pad.size), uniq_pad, indir
+
+
+def run(quick: bool = False) -> dict:
     rng = np.random.default_rng(0)
-    out = {}
-    for L, W in ((64, 128), (256, 512), (1024, 1024)):
+    report: dict = {"bench": "kernel_micro", "add_step": [], "lookup": [],
+                    "batch_overlap": []}
+
+    # -- ADD-step methods over materialized gathers -------------------------
+    shapes = ((64, 128), (256, 512)) if quick else \
+        ((64, 128), (256, 512), (1024, 1024))
+    for L, W in shapes:
         rows = jnp.asarray(rng.integers(0, 2 ** 32, size=(L, W),
                                         dtype=np.uint32))
         for method in ("ref", "unpack", "vertical"):
@@ -27,5 +78,71 @@ def run() -> dict:
             docs_per_s = (W * 32 * L) / t
             emit(f"kernel/{method}/L{L}xW{W}", t * 1e6,
                  f"term_doc_pairs_per_s={docs_per_s:.2e}")
-            out[(method, L, W)] = t
-    return out
+            report["add_step"].append(
+                {"method": method, "L": L, "W": W, "us": t * 1e6})
+
+    # -- fused single-query lookup (gather inside the kernel) ---------------
+    R = 2048 if quick else 8192
+    for L, W in ((64, 128),) if quick else ((64, 128), (256, 256)):
+        arena = jnp.asarray(rng.integers(0, 2 ** 32, size=(R, W),
+                                         dtype=np.uint32))
+        idx = jnp.asarray(rng.integers(0, R, size=L).astype(np.int32))
+        msk = jnp.ones(L, dtype=jnp.int32)
+        t = timeit(lambda: ops.bitslice_lookup_score(
+            arena, idx, msk).block_until_ready(), repeats=3)
+        emit(f"kernel/lookup/L{L}xW{W}", t * 1e6, f"arena_row_dmas={L}")
+        report["lookup"].append({"L": L, "W": W, "us": t * 1e6,
+                                 "arena_row_dmas": L})
+
+    # -- batched fused multi vs row-dedup under an overlap sweep ------------
+    Q, L, W = (4, 32, 64) if quick else (8, 64, 128)
+    arena = jnp.asarray(rng.integers(0, 2 ** 32, size=(R, W),
+                                     dtype=np.uint32))
+    mask = jnp.ones((Q, 1, L), dtype=jnp.int32)
+    for overlap in (0.0, 0.5, 0.9):
+        idx = overlap_batch(rng, Q, L, R, overlap)
+        fused_dmas, dedup_dmas, uniq_pad, indir = dedup_traffic(idx)
+        idx_d = jnp.asarray(idx)
+        t_multi = timeit(lambda: ops.bitslice_lookup_score_multi(
+            arena, idx_d, mask).block_until_ready(), repeats=3)
+        u_d, i_d = jnp.asarray(uniq_pad), jnp.asarray(indir)
+        t_dedup = timeit(lambda: ops.bitslice_lookup_score_dedup(
+            arena, u_d, i_d, mask).block_until_ready(), repeats=3)
+        ratio = fused_dmas / dedup_dmas
+        pct = int(overlap * 100)
+        emit(f"kernel/lookup_multi/Q{Q}xL{L}/ov{pct}", t_multi * 1e6,
+             f"arena_row_dmas={fused_dmas}")
+        emit(f"kernel/dedup/Q{Q}xL{L}/ov{pct}", t_dedup * 1e6,
+             f"arena_row_dmas={dedup_dmas} traffic_ratio={ratio:.1f}x")
+        report["batch_overlap"].append({
+            "overlap": overlap, "Q": Q, "L": L, "W": W,
+            "fused_us": t_multi * 1e6, "dedup_us": t_dedup * 1e6,
+            "fused_arena_row_dmas": fused_dmas,
+            "dedup_arena_row_dmas": dedup_dmas,
+            "traffic_ratio": ratio})
+    return report
+
+
+def main() -> None:
+    """CLI for CI artifacts: run the sweep, dump a BENCH json."""
+    import argparse
+    import json
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized shapes")
+    ap.add_argument("--json", default=None,
+                    help="write the report as a json artifact here")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    report = run(quick=args.quick)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=2))
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

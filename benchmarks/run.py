@@ -38,7 +38,7 @@ def main() -> None:
         "scaling": lambda: scaling.run((64, 128) if args.quick
                                        else (64, 128, 256, 512)),
         "compaction": lambda: compaction.run(64 if args.quick else 256),
-        "kernel": kernel_micro.run,
+        "kernel": lambda: kernel_micro.run(quick=args.quick),
         "hedging": hedging.run,
         "serving": lambda: serving.run(64 if args.quick else 256,
                                        n_queries=48 if args.quick else 96),
@@ -50,10 +50,13 @@ def main() -> None:
                                            n_queries=8 if args.quick else 16),
     }
     print("name,us_per_call,derived")
+    kernel_report = None
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue
-        fn()
+        res = fn()
+        if name == "kernel":
+            kernel_report = res
 
     out = Path("results")
     out.mkdir(exist_ok=True)
@@ -63,6 +66,12 @@ def main() -> None:
             f.write(f"{row[0]},{row[1]:.1f},{row[2]}\n")
     print(f"# wrote results/benchmarks.csv ({len(common.ROWS)} rows)",
           file=sys.stderr)
+    if kernel_report is not None:
+        import json
+        kernel_json = out / "BENCH_kernels.json"
+        kernel_json.write_text(json.dumps(kernel_report, indent=2))
+        print(f"# wrote {kernel_json} (overlap sweep + DMA accounting)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

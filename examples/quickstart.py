@@ -101,3 +101,32 @@ res4 = frontend.pop_responses()[rid].result
 assert res4.doc_ids[0] == 1
 print(f"with {down} down, replicas still answer: top-k doc{res4.doc_ids[0]} "
       f"(failovers={frontend.metrics.snapshot().failovers})")
+
+# --- tune, then serve: measured kernel configs + the row-dedup path ---------
+# The autotuner benchmarks word_block / term_block / grid order per batch
+# shape and persists the winners in tuning.json BESIDE the store manifest;
+# for the fused lookup kernel it also measures the dedup-rate break-even.
+# Reopening the store serves straight from the cache — no re-tuning. Real
+# query batches share rows heavily (overlapping k-mers), so when a batch's
+# measured dedup rate clears the threshold the server swaps the fused
+# multi-query kernel for the dedup pair: each unique arena row is streamed
+# from HBM exactly ONCE, and every query scores against the resident copy.
+from repro.core.store import tuning_path
+from repro.serve import QueryServer, ServerConfig
+
+server = QueryServer(load_index(store), ServerConfig(
+    max_batch=8, max_wait_s=0.0,
+    autotune=True,                          # measure misses on demand ...
+    tuning_cache=str(tuning_path(store)),   # ... persist beside the manifest
+    dedup_min_rate=0.5))                    # fallback threshold (untuned)
+dup_batch = [genomes[1][200:320]] * 6       # heavy row overlap
+rids = [server.submit(q, threshold=0.8) for q in dup_batch]
+server.drain()
+resp = server.pop_responses()
+assert all(resp[r].result.doc_ids[0] == 1 for r in rids)
+print(f"tuned server: dispatch mix {dict(server.planner.dispatch_counts)}, "
+      f"tuning cache at {tuning_path(store).name} "
+      f"({'exists' if tuning_path(store).exists() else 'missing'})")
+# a reopened server consults the same cache and never re-measures:
+#   QueryServer(load_index(store),
+#               ServerConfig(tuning_cache=str(tuning_path(store))))

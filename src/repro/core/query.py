@@ -190,6 +190,111 @@ def run_paged(tiles, shard_args, fn, *args) -> list[np.ndarray]:
     return [np.asarray(p) for p in parts]
 
 
+# --------------------------------------------------------------------------
+# Batched row dedup (the serving hot-path bandwidth optimization)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DedupBatchPlan:
+    """Unique-row addressing for one micro-batch (k=1 lookup path).
+
+    Queries in a batch share rows heavily (overlapping k-mers), but the
+    fused multi-query kernel re-streams an arena row per (query, block,
+    term) cell. This plan collapses the batch's (block, row) pairs into
+    ``uniq_rows`` (each arena row listed ONCE, padded to a power of two so
+    jit entries stay bounded) plus the ``indir`` indirection that maps
+    every cell back to its unique row — the kernels then gather U rows
+    from the arena instead of Q*nb*L.
+    """
+    uniq_rows: np.ndarray   # int32 [U_pad] unique arena rows (0-padded)
+    indir: np.ndarray       # int32 [Q, nb, L] -> index into uniq_rows
+    mask: np.ndarray        # int32 [Q, nb, L] (1 = live term)
+    n_unique: int           # live unique rows (<= U_pad)
+    n_gathers: int          # live (query, block, term) cells
+
+    @property
+    def dedup_rate(self) -> float:
+        """Fraction of the fused path's row gathers the dedup path saves:
+        1 - unique/total. 0 = fully disjoint batch, ->1 = heavy sharing."""
+        if self.n_gathers == 0:
+            return 0.0
+        return 1.0 - self.n_unique / self.n_gathers
+
+
+def _pad_unique(n: int) -> int:
+    """Unique-row count -> padded buffer length: power of two (bounds the
+    jit cache at log2(max U) entries per bucket), floor 8 (sublane)."""
+    return max(8, 1 << max(0, int(n) - 1).bit_length())
+
+
+def plan_dedup_batch(terms: np.ndarray, n_valid: np.ndarray,
+                     row_offset: np.ndarray, block_width: np.ndarray,
+                     n_hashes: int = 1) -> DedupBatchPlan:
+    """Host-side dedup planning for one padded micro-batch.
+
+    terms uint32 [Q, L, 2]; n_valid int32 [Q]; (row_offset, block_width)
+    the addressing of the arena (or of ONE shard, already rebased — the
+    paged path plans per shard). Pure numpy: hashing reuses the
+    bit-identical host mirror of the device hash, so the rows the fused
+    kernel would gather and the rows planned here are the same set.
+    """
+    if n_hashes != 1:
+        raise ValueError("dedup planning applies to the k=1 lookup path")
+    terms = np.asarray(terms)
+    n_valid = np.asarray(n_valid, dtype=np.int32)
+    Q, L = terms.shape[0], terms.shape[1]
+    h = hashing.hash_terms_np(terms, 1)[..., 0]               # [Q, L]
+    w = np.asarray(block_width).astype(np.uint32)
+    rows = (h[..., None] % w[None, None, :]
+            + np.asarray(row_offset).astype(np.uint32))       # [Q, L, nb]
+    rows = np.swapaxes(rows, 1, 2).astype(np.int64)           # [Q, nb, L]
+    nb = rows.shape[1]
+    valid = np.arange(L, dtype=np.int32)[None, :] < n_valid[:, None]
+    mask = np.broadcast_to(valid[:, None, :], rows.shape)
+    live = rows[mask]
+    uniq = np.unique(live)                                    # sorted
+    indir = np.zeros(rows.shape, dtype=np.int32)
+    indir[mask] = np.searchsorted(uniq, live).astype(np.int32)
+    uniq_pad = np.zeros(_pad_unique(uniq.size), dtype=np.int32)
+    uniq_pad[: uniq.size] = uniq
+    return DedupBatchPlan(uniq_rows=uniq_pad, indir=indir,
+                          mask=mask.astype(np.int32),
+                          n_unique=int(uniq.size), n_gathers=int(live.size))
+
+
+def make_dedup_score_fn(word_block: int | None = None):
+    """Returns score(arena, uniq_rows [U], indir [Q,nb,L], mask [Q,nb,L])
+    -> int32 [Q, n_slots] — the two-kernel dedup path (unique-row gather +
+    indirected Harley-Seal accumulate). Bit-identical to the fused
+    multi-query kernel on the expanded indices."""
+
+    def score(arena, uniq_rows, indir, mask):
+        return ops.bitslice_lookup_score_dedup(arena, uniq_rows, indir,
+                                               mask, word_block=word_block)
+
+    return score
+
+
+def run_paged_dedup(tiles, shard_plans: list[ShardPlan], fn,
+                    terms: np.ndarray, n_valid: np.ndarray) -> np.ndarray:
+    """Dedup-scored batch across shard tiles (one tile = the whole arena
+    for dense storage): per shard, plan the unique-row set against the
+    shard's REBASED addressing, score through ``fn`` (from
+    ``make_dedup_score_fn``), prefetch the next tile while the dispatch is
+    in flight, and concatenate per-shard slot scores — the dedup analogue
+    of ``run_paged``."""
+    parts = []
+    for i, sp in enumerate(shard_plans):
+        dp = plan_dedup_batch(terms, n_valid, sp.row_offset, sp.block_width)
+        tile = tiles.get(sp.shard)
+        out = fn(tile, jnp.asarray(dp.uniq_rows), jnp.asarray(dp.indir),
+                 jnp.asarray(dp.mask))
+        if i + 1 < len(shard_plans):
+            tiles.prefetch(shard_plans[i + 1].shard)
+        parts.append(out)
+    return np.concatenate([np.asarray(p) for p in parts], axis=1)
+
+
 def gather_rows(arena: jnp.ndarray, rows: jnp.ndarray, valid: jnp.ndarray
                 ) -> jnp.ndarray:
     """Gather + AND + mask: (arena [R, Wb], rows int32 [L, k, nb],
@@ -208,9 +313,13 @@ def gather_rows(arena: jnp.ndarray, rows: jnp.ndarray, valid: jnp.ndarray
 # jit cache tidy)
 # --------------------------------------------------------------------------
 
-def make_score_fn(n_hashes: int, method: str = "vertical"):
+def make_score_fn(n_hashes: int, method: str = "vertical",
+                  word_block: int | None = None,
+                  term_block: int | None = None):
     """Returns score(arena, row_offset, block_width, terms [L,2], n_valid)
-    -> int32 [n_slots] scores in slot order."""
+    -> int32 [n_slots] scores in slot order. ``word_block``/``term_block``
+    override the kernel tile defaults (autotuner choices thread through
+    here); None keeps the kernel defaults."""
 
     @jax.jit
     def score(arena, row_offset, block_width, terms, n_valid):
@@ -222,19 +331,25 @@ def make_score_fn(n_hashes: int, method: str = "vertical"):
             # fused path (k=1): the gather happens inside the kernel.
             if row_offset.shape[0] == 1:
                 return ops.bitslice_lookup_score(
-                    arena, rows[:, 0, 0], valid.astype(jnp.int32))
+                    arena, rows[:, 0, 0], valid.astype(jnp.int32),
+                    word_block=word_block)
             idx = rows[:, 0, :].T                          # [nb, L]
             msk = jnp.broadcast_to(valid.astype(jnp.int32)[None, :],
                                    idx.shape)
-            return ops.bitslice_lookup_score_blocks(arena, idx, msk)
+            return ops.bitslice_lookup_score_blocks(arena, idx, msk,
+                                                    word_block=word_block)
         flat = gather_rows(arena, rows, valid)             # [L, nb*Wb]
         return ops.bitslice_score(flat, method=method if method != "lookup"
-                                  else "vertical")
+                                  else "vertical", word_block=word_block,
+                                  term_block=term_block)
 
     return score
 
 
-def make_batch_score_fn(n_hashes: int, method: str = "vertical"):
+def make_batch_score_fn(n_hashes: int, method: str = "vertical",
+                        word_block: int | None = None,
+                        term_block: int | None = None,
+                        grid_order: str = "wq"):
     """Returns score(arena, row_offset, block_width, terms [Q,L,2],
     n_valid [Q]) -> int32 [Q, n_slots].
 
@@ -244,6 +359,9 @@ def make_batch_score_fn(n_hashes: int, method: str = "vertical"):
     the old engine silently fell back to the jnp ref scorer here. Other
     methods vmap the single-query scorer; 'lookup' with k>1 degrades to
     'vertical' (the AND over hash rows needs the materialized gather).
+
+    ``word_block``/``term_block``/``grid_order`` are the autotuner's tile
+    and grid knobs; defaults match the untuned kernels exactly.
     """
     if method == "lookup" and n_hashes == 1:
         @jax.jit
@@ -256,11 +374,14 @@ def make_batch_score_fn(n_hashes: int, method: str = "vertical"):
                      < n_valid[:, None])                   # [Q, L]
             msk = jnp.broadcast_to(valid.astype(jnp.int32)[:, None, :],
                                    idx.shape)
-            return ops.bitslice_lookup_score_multi(arena, idx, msk)
+            return ops.bitslice_lookup_score_multi(arena, idx, msk,
+                                                   word_block=word_block,
+                                                   grid_order=grid_order)
         return score_batch
 
     inner = make_score_fn(
-        n_hashes, "vertical" if method == "lookup" else method)
+        n_hashes, "vertical" if method == "lookup" else method,
+        word_block=word_block, term_block=term_block)
     return jax.jit(jax.vmap(inner, in_axes=(None, None, None, 0, 0)))
 
 

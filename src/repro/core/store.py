@@ -41,6 +41,16 @@ from .arena import ArenaLayout, MappedArena
 from .index import BitSlicedIndex, IndexParams
 
 FORMAT_V2 = "cobs-jax-v2"
+TUNING_CACHE_NAME = "tuning.json"
+
+
+def tuning_path(path: str | Path) -> Path:
+    """The kernel-tuning cache persisted BESIDE a v2 store's manifest:
+    tuned tile/grid configs key on the arena geometry the store fixes, so
+    the cache travels with the shards it was measured for (reopening the
+    store serves with measured choices, no re-tuning — see
+    repro.kernels.autotune.TuningCache)."""
+    return Path(path) / TUNING_CACHE_NAME
 
 
 def _hash_array(a: np.ndarray) -> str:

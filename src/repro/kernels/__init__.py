@@ -1,5 +1,6 @@
 """Pallas TPU kernels for the query hot loop (ops.py = jit wrappers,
-ref.py = pure-jnp oracles, bitslice_score.py = the kernels)."""
-from . import ops, ref
+ref.py = pure-jnp oracles, bitslice_score.py = the kernels, autotune.py =
+measured tile/grid configs + the persisted tuning cache)."""
+from . import autotune, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["autotune", "ops", "ref"]

@@ -1,0 +1,378 @@
+"""Kernel autotuner: measured tile/grid configs per (arena, batch) shape,
+with a persisted on-disk cache.
+
+The scoring kernels expose three knobs whose best setting depends on the
+hardware and the shapes in flight — ``word_block`` (lane tile width),
+``term_block`` (sublane tile height of the materialized-gather kernels)
+and ``grid_order`` (outer grid permutation of the fused multi-query
+kernel). The ROADMAP's open item asked for exactly this: tune
+``lookup_score_multi``'s grid order / word_block and measure arena-tile
+reuse across queries. Instead of baking in per-backend constants, the
+tuner:
+
+1. benchmarks each candidate config against a synthetic arena of the
+   index's dtype/width (row count capped — gather cost is row-count
+   independent once past cache sizes, and keys still carry the REAL
+   shape);
+2. for the fused ``lookup`` method additionally measures the row-dedup
+   path at two unique-row fractions and derives the **dedup-rate
+   break-even threshold** — the planner compares each live batch's
+   measured dedup rate against it to decide fused-multi vs dedup;
+3. persists every tuned entry to a JSON ``TuningCache`` (stored beside a
+   v2 store's manifest by convention, see ``repro.core.store.
+   tuning_path``), so a reopened index serves with measured choices and
+   never re-tunes.
+
+Layering: this module sits with the kernels (imports ``ops`` only); the
+serving planner (``repro.serve.planner``) consults it, and
+``repro.core.query``'s score-fn factories accept its choices as plain
+keyword arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitslice_score as _k
+from . import ops
+
+CACHE_VERSION = 1
+DEFAULT_WORD_BLOCKS = (64, 128, 256)
+DEFAULT_TERM_BLOCKS = (8, 16)
+
+# Methods the tuner knows how to measure for a batch dispatch.
+TUNABLE_METHODS = ("lookup", "vertical", "unpack")
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedEntry:
+    """The measured best config for one (method, shape) key.
+
+    ``cost_us`` is the measured per-dispatch cost at the chosen config.
+    ``dedup_threshold`` (lookup only) is the minimum batch dedup rate at
+    which the row-dedup path beats the fused multi-query kernel: None =
+    never measured (heuristics apply), 0.0 = dedup wins even for fully
+    disjoint batches, 2.0 = MEASURED and dedup never won (no real batch
+    reaches rate 2, so the planner keeps the fused kernel).
+    """
+    method: str
+    word_block: int
+    term_block: int
+    grid_order: str
+    cost_us: float
+    dedup_threshold: float | None = None
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "TunedEntry":
+        return TunedEntry(
+            method=str(d["method"]), word_block=int(d["word_block"]),
+            term_block=int(d["term_block"]),
+            grid_order=str(d["grid_order"]), cost_us=float(d["cost_us"]),
+            dedup_threshold=(None if d.get("dedup_threshold") is None
+                             else float(d["dedup_threshold"])))
+
+
+def tuning_key(n_rows: int, doc_words: int, n_hashes: int, n_blocks: int,
+               method: str, bucket: int, batch: int) -> str:
+    """Cache key: arena shape x index addressing x batch shape x method.
+    Everything that changes the dispatched kernel's shape is in the key;
+    nothing else is (so a rebuilt index of the same geometry hits)."""
+    return (f"r{n_rows}.w{doc_words}.k{n_hashes}.b{n_blocks}"
+            f".{method}.L{bucket}.Q{batch}")
+
+
+class TuningCache:
+    """JSON-backed map of tuning key -> TunedEntry.
+
+    ``path=None`` keeps the cache in memory only. ``save`` writes
+    atomically (tmp + rename, like the store manifest); ``hits`` /
+    ``misses`` counters let callers (and tests) observe that a reopened
+    cache serves without re-tuning.
+    """
+
+    def __init__(self, path: str | Path | None = None):
+        self.path = None if path is None else Path(path)
+        self.entries: dict[str, TunedEntry] = {}
+        self.hits = 0
+        self.misses = 0
+        if self.path is not None and self.path.exists():
+            data = json.loads(self.path.read_text())
+            if data.get("version") != CACHE_VERSION:
+                raise ValueError(
+                    f"tuning cache {self.path}: version "
+                    f"{data.get('version')!r} != {CACHE_VERSION}")
+            self.entries = {k: TunedEntry.from_json(v)
+                            for k, v in data["entries"].items()}
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def get(self, key: str) -> TunedEntry | None:
+        e = self.entries.get(key)
+        if e is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return e
+
+    def put(self, key: str, entry: TunedEntry) -> None:
+        self.entries[key] = entry
+
+    def save(self) -> None:
+        if self.path is None:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"version": CACHE_VERSION,
+                   "entries": {k: e.to_json()
+                               for k, e in sorted(self.entries.items())}}
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(payload, indent=2))
+        tmp.rename(self.path)
+
+
+def _timeit(fn, repeats: int) -> float:
+    """Median wall-clock seconds per call (1 warmup = the compile)."""
+    fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _pad_unique(n: int) -> int:
+    """Mirror of repro.core.query._pad_unique (kernels must not import
+    core): unique count -> power-of-two buffer length, floor 8."""
+    return max(8, 1 << max(0, int(n) - 1).bit_length())
+
+
+class KernelTuner:
+    """On-demand per-shape tuning bound to one index geometry.
+
+    ``entry(method, bucket, batch)`` returns the cached TunedEntry, or —
+    when ``enabled`` and the key is absent — measures the candidate
+    configs, persists the winner, and returns it. With ``enabled=False``
+    the tuner is read-only: cache hits inform the planner, misses return
+    None (heuristics apply), nothing is ever measured in the serving
+    path.
+
+    Measurement runs against a SYNTHETIC arena of the index's word width
+    with rows capped at ``max_tune_rows`` (row count only changes gather
+    address ranges, not per-row cost), and block count capped at
+    ``max_tune_blocks`` (costs scale ~linearly in nb; method comparisons
+    are unaffected). Keys always carry the real geometry.
+    """
+
+    def __init__(self, n_rows: int, doc_words: int, n_hashes: int,
+                 n_blocks: int, cache: TuningCache | None = None, *,
+                 enabled: bool = True,
+                 word_blocks: tuple[int, ...] = DEFAULT_WORD_BLOCKS,
+                 term_blocks: tuple[int, ...] = DEFAULT_TERM_BLOCKS,
+                 grid_orders: tuple[str, ...] = _k.GRID_ORDERS,
+                 repeats: int = 2, max_tune_rows: int = 2048,
+                 max_tune_blocks: int = 4, seed: int = 0):
+        self.n_rows = int(n_rows)
+        self.doc_words = int(doc_words)
+        self.n_hashes = int(n_hashes)
+        self.n_blocks = int(n_blocks)
+        self.cache = cache if cache is not None else TuningCache()
+        self.enabled = enabled
+        self.word_blocks = tuple(word_blocks)
+        self.term_blocks = tuple(term_blocks)
+        self.grid_orders = tuple(grid_orders)
+        self.repeats = int(repeats)
+        self.max_tune_rows = int(max_tune_rows)
+        self.max_tune_blocks = int(max_tune_blocks)
+        self.seed = int(seed)
+        self.tunes = 0              # measurement runs (tests assert 0 on reopen)
+        self._arena = None
+
+    @classmethod
+    def for_index(cls, index, cache: TuningCache | None = None, **kw
+                  ) -> "KernelTuner":
+        return cls(index.storage.shape[0], index.storage.shape[1],
+                   index.params.n_hashes, index.layout.n_blocks,
+                   cache, **kw)
+
+    # -- synthetic measurement fixture --------------------------------------
+    def _tune_arena(self) -> jnp.ndarray:
+        if self._arena is None:
+            rng = np.random.default_rng(self.seed)
+            rows = max(8, min(self.n_rows, self.max_tune_rows))
+            self._arena = jnp.asarray(rng.integers(
+                0, 2 ** 32, size=(rows, self.doc_words), dtype=np.uint32))
+        return self._arena
+
+    def _batch_fixture(self, bucket: int, batch: int, n_unique: int | None
+                       ) -> tuple:
+        """(idx [Q, nb, L], mask) drawing rows from ``n_unique`` distinct
+        values (None = unconstrained, the fused kernel's fixture)."""
+        rng = np.random.default_rng(self.seed + bucket * 31 + batch)
+        nb = max(1, min(self.n_blocks, self.max_tune_blocks))
+        R = int(self._tune_arena().shape[0])
+        n = batch * nb * bucket
+        if n_unique is None:
+            idx = rng.integers(0, R, size=(batch, nb, bucket))
+        elif n_unique >= min(n, R):
+            # as-disjoint-as-the-arena-allows: every cell a distinct row
+            # (wrapping only when the batch outsizes the tuning arena)
+            idx = np.resize(rng.permutation(R), n).reshape(
+                batch, nb, bucket)
+        else:
+            pool = rng.choice(R, size=n_unique, replace=False)
+            idx = rng.choice(pool, size=(batch, nb, bucket))
+        mask = np.ones((batch, nb, bucket), dtype=np.int32)
+        return idx.astype(np.int32), mask
+
+    # -- measurement --------------------------------------------------------
+    def _measure_fused(self, bucket: int, batch: int, word_block: int,
+                       grid_order: str) -> float:
+        arena = self._tune_arena()
+        idx, mask = self._batch_fixture(bucket, batch, None)
+        idx_d, mask_d = jnp.asarray(idx), jnp.asarray(mask)
+        return _timeit(
+            lambda: ops.bitslice_lookup_score_multi(
+                arena, idx_d, mask_d, word_block=word_block,
+                grid_order=grid_order).block_until_ready(),
+            self.repeats)
+
+    def _measure_dedup(self, bucket: int, batch: int, word_block: int,
+                       n_unique: int) -> tuple[float, int]:
+        """(seconds, ACTUAL padded unique-row count). The fixture's real
+        unique count is capped by the tuning arena height and reduced by
+        with-replacement draws, so the break-even fit must use the U the
+        kernel really gathered, not the requested target."""
+        arena = self._tune_arena()
+        idx, mask = self._batch_fixture(bucket, batch, n_unique)
+        uniq, inv = np.unique(idx, return_inverse=True)
+        indir = inv.reshape(idx.shape).astype(np.int32)
+        uniq_pad = np.zeros(_pad_unique(uniq.size), dtype=np.int32)
+        uniq_pad[: uniq.size] = uniq
+        u_d, i_d, m_d = (jnp.asarray(uniq_pad), jnp.asarray(indir),
+                         jnp.asarray(mask))
+        t = _timeit(
+            lambda: ops.bitslice_lookup_score_dedup(
+                arena, u_d, i_d, m_d,
+                word_block=word_block).block_until_ready(),
+            self.repeats)
+        return t, int(uniq_pad.size)
+
+    def _measure_add(self, method: str, bucket: int, batch: int,
+                     word_block: int, term_block: int) -> float:
+        """unpack/vertical dispatch cost INCLUDING the arena gather the
+        serving path performs before the ADD step (make_score_fn
+        materializes arena[rows] then scores) — the fused lookup's cost
+        has its gather in-kernel, so comparing add-only numbers against
+        it would systematically favor the materialized path. k>1's AND
+        is omitted (one extra vector op per word; negligible next to the
+        gather + expansion)."""
+        import jax
+        arena = self._tune_arena()
+        R = int(arena.shape[0])
+        nb = max(1, min(self.n_blocks, self.max_tune_blocks))
+        rng = np.random.default_rng(self.seed + 1)
+        idx = jnp.asarray(rng.integers(
+            0, R, size=(batch, bucket, nb)).astype(np.int32))
+
+        def one(idx_q):
+            flat = arena[idx_q].reshape(bucket, nb * self.doc_words)
+            return ops.bitslice_score(flat, method=method,
+                                      word_block=word_block,
+                                      term_block=term_block)
+
+        fn = jax.jit(jax.vmap(one))
+        return _timeit(lambda: fn(idx).block_until_ready(), self.repeats)
+
+    def _dedup_threshold(self, bucket: int, batch: int, word_block: int,
+                         fused_s: float) -> float | None:
+        """Break-even dedup rate from two measured unique fractions.
+
+        The dedup cost is ~linear in the unique-row count U (the gather
+        streams U rows; the indirected score is U-independent): measure a
+        near-disjoint fixture and a ~90%-shared one, fit cost(U) = a + b*U
+        through the ACTUAL padded unique counts each fixture produced
+        (targets are capped by the tuning arena height and shrunk by
+        with-replacement draws — fitting at the requested targets would
+        flatten the slope and poison the cached threshold), and solve
+        cost(U*) == fused. threshold = 1 - U*/N. Returns 2.0 (unreachable
+        rate = measured, never wins) when even the heavily-shared
+        measurement loses to the fused kernel."""
+        n = batch * max(1, min(self.n_blocks, self.max_tune_blocks)) * bucket
+        d_hi, u_hi = self._measure_dedup(bucket, batch, word_block, n)
+        d_lo, u_lo = self._measure_dedup(bucket, batch, word_block,
+                                         max(8, n // 10))
+        if u_lo >= u_hi:
+            return None                       # fixtures indistinguishable
+        if d_lo >= fused_s:
+            return 2.0                        # measured: dedup never wins
+        if d_hi <= fused_s:
+            return 0.0                        # dedup wins even disjoint
+        b = (d_hi - d_lo) / (u_hi - u_lo)
+        if b <= 0:
+            return 0.0
+        a = d_hi - b * u_hi
+        u_star = (fused_s - a) / b
+        return float(min(1.0, max(0.0, 1.0 - u_star / n)))
+
+    def _tune(self, method: str, bucket: int, batch: int) -> TunedEntry:
+        self.tunes += 1
+        best = None
+        if method == "lookup":
+            for wb in self.word_blocks:
+                for go in self.grid_orders:
+                    t = self._measure_fused(bucket, batch, wb, go)
+                    if best is None or t < best[0]:
+                        best = (t, wb, _k.DEFAULT_TERM_BLOCK, go)
+            t, wb, tb, go = best
+            thr = self._dedup_threshold(bucket, batch, wb, t)
+            return TunedEntry(method, wb, tb, go, t * 1e6,
+                              dedup_threshold=thr)
+        for wb in self.word_blocks:
+            for tb in self.term_blocks:
+                t = self._measure_add(method, bucket, batch, wb, tb)
+                if best is None or t < best[0]:
+                    best = (t, wb, tb, "wq")
+        t, wb, tb, go = best
+        return TunedEntry(method, wb, tb, go, t * 1e6)
+
+    # -- public surface ------------------------------------------------------
+    def key(self, method: str, bucket: int, batch: int) -> str:
+        return tuning_key(self.n_rows, self.doc_words, self.n_hashes,
+                          self.n_blocks, method, bucket, batch)
+
+    def entry(self, method: str, bucket: int, batch: int
+              ) -> TunedEntry | None:
+        """Cached entry for (method, bucket, batch); tunes + persists on a
+        miss when enabled, else returns None (caller falls back to
+        heuristics)."""
+        if method == "lookup" and self.n_hashes != 1:
+            return None
+        key = self.key(method, bucket, batch)
+        e = self.cache.get(key)
+        if e is not None or not self.enabled:
+            return e
+        e = self._tune(method, bucket, batch)
+        self.cache.put(key, e)
+        self.cache.save()
+        return e
+
+    def costs(self, bucket: int, batch: int,
+              methods: tuple[str, ...] = TUNABLE_METHODS
+              ) -> dict[str, TunedEntry]:
+        """Entries for every applicable method of a batch shape (the
+        planner's cost table)."""
+        out = {}
+        for m in methods:
+            e = self.entry(m, bucket, batch)
+            if e is not None:
+                out[m] = e
+        return out

@@ -245,7 +245,7 @@ def lookup_score_blocks(
 
 
 def _lookup_multi_kernel(idx_ref, mask_ref, arena_ref, out_ref, planes_ref,
-                         *, n_planes: int):
+                         *, n_planes: int, q_axis: int = 1, b_axis: int = 2):
     il = pl.program_id(3)
     n_l = pl.num_programs(3)
 
@@ -253,8 +253,8 @@ def _lookup_multi_kernel(idx_ref, mask_ref, arena_ref, out_ref, planes_ref,
     def _init():
         planes_ref[...] = jnp.zeros_like(planes_ref)
 
-    iq = pl.program_id(1)
-    ib = pl.program_id(2)
+    iq = pl.program_id(q_axis)
+    ib = pl.program_id(b_axis)
     row = arena_ref[0, :] * mask_ref[iq, ib, il].astype(jnp.uint32)
     carry = row
     for j in range(n_planes):
@@ -272,12 +272,16 @@ def _lookup_multi_kernel(idx_ref, mask_ref, arena_ref, out_ref, planes_ref,
         out_ref[0, 0] = acc
 
 
+GRID_ORDERS = ("wq", "qw")
+
+
 def lookup_score_multi(
     arena: jnp.ndarray,
     rows_idx: jnp.ndarray,
     mask: jnp.ndarray,
     *,
     word_block: int = DEFAULT_WORD_BLOCK,
+    grid_order: str = "wq",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Fused MULTI-QUERY gather+score (the batched-serving hot loop).
@@ -292,28 +296,174 @@ def lookup_score_multi(
     tiles through the same BlockSpec pipeline, so a batch never
     materializes the [Q, L, W] gather that forces the unfused path to the
     pure-jnp ref scorer under vmap.
+
+    ``grid_order`` permutes the outer grid axes (autotuner knob):
+    'wq' = (word, query, block, term) — word tiles outermost, so one
+    query's whole accumulation streams before the next word tile; 'qw' =
+    (query, block, word, term) — queries outermost, so a query's term rows
+    stream word-tile by word-tile. Term stays innermost either way (the
+    counter-plane scratch accumulates over it); both orders are
+    bit-identical and differ only in DMA locality.
     """
     R, W = arena.shape
     Q, nb, L = rows_idx.shape
     n_planes = _num_planes(L)
+    if grid_order == "wq":
+        grid = (W // word_block, Q, nb, L)
+        arena_map = lambda iw, iq, ib, il, idx, msk: (idx[iq, ib, il], iw)
+        out_map = lambda iw, iq, ib, il, idx, msk: (iq, ib, iw, 0)
+        q_axis, b_axis = 1, 2
+    elif grid_order == "qw":
+        grid = (Q, nb, W // word_block, L)
+        arena_map = lambda iq, ib, iw, il, idx, msk: (idx[iq, ib, il], iw)
+        out_map = lambda iq, ib, iw, il, idx, msk: (iq, ib, iw, 0)
+        q_axis, b_axis = 0, 1
+    else:
+        raise ValueError(f"unknown grid_order {grid_order!r}; "
+                         f"one of {GRID_ORDERS}")
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(W // word_block, Q, nb, L),
-        in_specs=[
-            pl.BlockSpec((1, word_block),
-                         lambda iw, iq, ib, il, idx, msk: (idx[iq, ib, il], iw)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, word_block, 32),
-                               lambda iw, iq, ib, il, idx, msk: (iq, ib, iw, 0)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, word_block), arena_map)],
+        out_specs=pl.BlockSpec((1, 1, word_block, 32), out_map),
         scratch_shapes=[pltpu.VMEM((n_planes, word_block), jnp.uint32)],
     )
-    kernel = functools.partial(_lookup_multi_kernel, n_planes=n_planes)
+    kernel = functools.partial(_lookup_multi_kernel, n_planes=n_planes,
+                               q_axis=q_axis, b_axis=b_axis)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Q, nb, W, 32), jnp.int32),
         interpret=interpret,
     )(rows_idx, mask, arena)
+
+
+# --------------------------------------------------------------------------
+# 4. batched row-dedup pair: unique-row gather + indirected score
+# --------------------------------------------------------------------------
+#
+# Real serving batches share rows heavily (overlapping k-mers between
+# queries), but the fused multi-query kernel re-DMAs an arena tile from HBM
+# for every (query, block, term) grid cell. The dedup pair makes arena
+# traffic scale with UNIQUE rows instead:
+#
+#   gather_rows   — streams each unique arena row HBM->VMEM exactly ONCE
+#                   and writes the compact [U, W] unique-row matrix.
+#   dedup_score   — scores every (query, block) cell against that compact
+#                   matrix: the [U_pad, word_block] tile is one pipeline
+#                   block whose index map depends only on the word axis, so
+#                   it stays resident in VMEM across all (query, block)
+#                   steps of a word tile; per term the kernel reads the
+#                   indirection index from scalar memory and ripple-carries
+#                   the VMEM row into Harley-Seal counter planes.
+#
+# Host-side planning (repro.core.query.plan_dedup_batch) builds the unique
+# row list and the [Q, nb, L] indirection.
+
+
+def _gather_kernel(idx_ref, arena_ref, out_ref):
+    out_ref[...] = arena_ref[...]
+
+
+def gather_rows(
+    arena: jnp.ndarray,
+    uniq_idx: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Unique-row gather: (arena uint32 [R, W], uniq_idx int32 [U]) ->
+    uint32 [U, W]. Each arena row tile is DMA'd HBM->VMEM exactly once —
+    U * (W / word_block) row-tile transfers total, however many query
+    cells reference the row downstream."""
+    R, W = arena.shape
+    U = uniq_idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(W // word_block, U),
+        in_specs=[
+            pl.BlockSpec((1, word_block), lambda iw, iu, idx: (idx[iu], iw)),
+        ],
+        out_specs=pl.BlockSpec((1, word_block), lambda iw, iu, idx: (iu, iw)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((U, W), jnp.uint32),
+        interpret=interpret,
+    )(uniq_idx, arena)
+
+
+def _dedup_score_kernel(indir_ref, mask_ref, uniq_ref, out_ref, *,
+                        n_planes: int, n_terms: int):
+    iq = pl.program_id(1)
+    ib = pl.program_id(2)
+    wb = uniq_ref.shape[1]
+
+    def add_term(il, planes):
+        u = indir_ref[iq, ib, il]
+        row = (uniq_ref[pl.ds(u, 1), :][0]
+               * mask_ref[iq, ib, il].astype(jnp.uint32))
+        carry = row
+        nxt = []
+        for j in range(n_planes):
+            new_carry = planes[j] & carry
+            nxt.append(planes[j] ^ carry)
+            carry = new_carry
+        return tuple(nxt)
+
+    planes = tuple(jnp.zeros((wb,), jnp.uint32) for _ in range(n_planes))
+    planes = jax.lax.fori_loop(0, n_terms, add_term, planes)
+
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+    acc = jnp.zeros((wb, 32), jnp.int32)
+    for j in range(n_planes):
+        bits = ((planes[j][:, None] >> shifts) & jnp.uint32(1))
+        acc += bits.astype(jnp.int32) << j
+    out_ref[0, 0] = acc
+
+
+def dedup_score(
+    uniq: jnp.ndarray,
+    indir: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Indirected multi-query score over a gathered unique-row matrix.
+
+    uniq uint32 [U, W] (from ``gather_rows``); indir int32 [Q, nb, L]
+    (index into uniq per term); mask int32 [Q, nb, L] -> int32
+    [Q, nb, W, 32].
+
+    The [U, word_block] block's index map depends only on the word axis,
+    so the Pallas pipeline re-DMAs it ONLY when the word tile changes —
+    every (query, block) cell of a word tile scores against the same
+    resident VMEM copy, which is where the cross-query arena-tile reuse
+    the fused kernel lacks comes from.
+    """
+    U, W = uniq.shape
+    Q, nb, L = indir.shape
+    n_planes = _num_planes(L)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W // word_block, Q, nb),
+        in_specs=[
+            pl.BlockSpec((U, word_block),
+                         lambda iw, iq, ib, ind, msk: (0, iw)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, word_block, 32),
+                               lambda iw, iq, ib, ind, msk: (iq, ib, iw, 0)),
+    )
+    kernel = functools.partial(_dedup_score_kernel, n_planes=n_planes,
+                               n_terms=L)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, nb, W, 32), jnp.int32),
+        interpret=interpret,
+    )(indir, mask, uniq)
 
 
 def lookup_score(

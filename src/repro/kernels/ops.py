@@ -5,6 +5,11 @@ on a CPU backend the kernels run under ``interpret=True`` (bit-exact
 execution of the kernel body); on TPU they compile to Mosaic. ``method=
 'ref'`` bypasses Pallas entirely (pure jnp oracle) — useful under vmap-heavy
 query batching and as the ground truth in tests.
+
+Tile-shape knobs (``word_block``, ``term_block``, ``grid_order``) default
+to ``None`` = the kernel defaults; the serving planner threads measured
+choices from ``repro.kernels.autotune`` through these parameters, so a
+tuned configuration reaches every call site without baked-in constants.
 """
 from __future__ import annotations
 
@@ -33,9 +38,16 @@ def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("method", "interpret"))
+def _word_block(W: int, word_block: int | None) -> int:
+    wb = _k.DEFAULT_WORD_BLOCK if word_block is None else int(word_block)
+    return min(wb, max(8, W))  # small-index friendliness
+
+
+@functools.partial(jax.jit, static_argnames=("method", "interpret",
+                                             "word_block", "term_block"))
 def bitslice_score(
-    rows: jnp.ndarray, method: str = "vertical", interpret: bool | None = None
+    rows: jnp.ndarray, method: str = "vertical", interpret: bool | None = None,
+    word_block: int | None = None, term_block: int | None = None,
 ) -> jnp.ndarray:
     """Score ADD step: uint32 [L, W] (masked rows) -> int32 [W * 32].
 
@@ -46,8 +58,8 @@ def bitslice_score(
     L, W = rows.shape
     if method == "ref":
         return _ref.bitslice_score_ref(rows)
-    tb, wb = _k.DEFAULT_TERM_BLOCK, _k.DEFAULT_WORD_BLOCK
-    wb = min(wb, max(8, W))  # small-index friendliness
+    tb = _k.DEFAULT_TERM_BLOCK if term_block is None else int(term_block)
+    wb = _word_block(W, word_block)
     padded = _pad_axis(_pad_axis(rows, 0, tb), 1, wb)
     if method == "unpack":
         out = _k.unpack_score(padded, term_block=tb, word_block=wb,
@@ -60,18 +72,19 @@ def bitslice_score(
     return out[:W].reshape(-1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block"))
 def bitslice_lookup_score(
     arena: jnp.ndarray,
     rows_idx: jnp.ndarray,
     mask: jnp.ndarray,
     interpret: bool | None = None,
+    word_block: int | None = None,
 ) -> jnp.ndarray:
     """Fused gather+score from the arena: -> int32 [W * 32]."""
     if interpret is None:
         interpret = _use_interpret()
     R, W = arena.shape
-    wb = min(_k.DEFAULT_WORD_BLOCK, max(8, W))
+    wb = _word_block(W, word_block)
     arena_p = _pad_axis(arena, 1, wb)
     out = _k.lookup_score(
         arena_p, rows_idx.astype(jnp.int32), mask.astype(jnp.int32),
@@ -79,19 +92,20 @@ def bitslice_lookup_score(
     return out[:W].reshape(-1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block"))
 def bitslice_lookup_score_blocks(
     arena: jnp.ndarray,
     rows_idx: jnp.ndarray,
     mask: jnp.ndarray,
     interpret: bool | None = None,
+    word_block: int | None = None,
 ) -> jnp.ndarray:
     """Multi-block fused gather+score: (arena [R, W], rows_idx [nb, L],
     mask [nb, L]) -> int32 [nb * W * 32] in (block, word, bit) slot order."""
     if interpret is None:
         interpret = _use_interpret()
     R, W = arena.shape
-    wb = min(_k.DEFAULT_WORD_BLOCK, max(8, W))
+    wb = _word_block(W, word_block)
     arena_p = _pad_axis(arena, 1, wb)
     out = _k.lookup_score_blocks(
         arena_p, rows_idx.astype(jnp.int32), mask.astype(jnp.int32),
@@ -99,12 +113,15 @@ def bitslice_lookup_score_blocks(
     return out[:, :W].reshape(-1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block",
+                                             "grid_order"))
 def bitslice_lookup_score_multi(
     arena: jnp.ndarray,
     rows_idx: jnp.ndarray,
     mask: jnp.ndarray,
     interpret: bool | None = None,
+    word_block: int | None = None,
+    grid_order: str = "wq",
 ) -> jnp.ndarray:
     """Multi-query multi-block fused gather+score: (arena [R, W], rows_idx
     [Q, nb, L], mask [Q, nb, L]) -> int32 [Q, nb * W * 32], each query in
@@ -113,11 +130,45 @@ def bitslice_lookup_score_multi(
         interpret = _use_interpret()
     R, W = arena.shape
     Q = rows_idx.shape[0]
-    wb = min(_k.DEFAULT_WORD_BLOCK, max(8, W))
+    wb = _word_block(W, word_block)
     arena_p = _pad_axis(arena, 1, wb)
     out = _k.lookup_score_multi(
         arena_p, rows_idx.astype(jnp.int32), mask.astype(jnp.int32),
-        word_block=wb, interpret=interpret)
+        word_block=wb, grid_order=grid_order, interpret=interpret)
+    return out[:, :, :W].reshape(Q, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block"))
+def bitslice_lookup_score_dedup(
+    arena: jnp.ndarray,
+    uniq_rows: jnp.ndarray,
+    indir: jnp.ndarray,
+    mask: jnp.ndarray,
+    interpret: bool | None = None,
+    word_block: int | None = None,
+) -> jnp.ndarray:
+    """Row-dedup batched gather+score: (arena [R, W], uniq_rows [U],
+    indir [Q, nb, L], mask [Q, nb, L]) -> int32 [Q, nb * W * 32].
+
+    Two kernels: ``gather_rows`` streams each unique arena row from HBM
+    exactly once into a compact [U, W] matrix; ``dedup_score`` accumulates
+    every query through the indirection against that matrix (resident in
+    VMEM per word tile). Arena DMA traffic is U row tiles instead of the
+    fused path's Q*nb*L — the win scales with batch row overlap. Semantics
+    == ``bitslice_lookup_score_multi(arena, uniq_rows[indir], mask)``,
+    property-tested bit-identical.
+    """
+    if interpret is None:
+        interpret = _use_interpret()
+    R, W = arena.shape
+    Q = indir.shape[0]
+    wb = _word_block(W, word_block)
+    arena_p = _pad_axis(arena, 1, wb)
+    uniq = _k.gather_rows(arena_p, uniq_rows.astype(jnp.int32),
+                          word_block=wb, interpret=interpret)
+    out = _k.dedup_score(uniq, indir.astype(jnp.int32),
+                         mask.astype(jnp.int32), word_block=wb,
+                         interpret=interpret)
     return out[:, :, :W].reshape(Q, -1)
 
 

@@ -69,6 +69,21 @@ def bitslice_lookup_score_multi_ref(
     return bits.sum(axis=2).reshape(Q, -1)            # sum over L
 
 
+def bitslice_lookup_score_dedup_ref(
+    arena: jnp.ndarray, uniq_rows: jnp.ndarray, indir: jnp.ndarray,
+    mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Row-dedup GATHER + indirected ADD oracle.
+
+    arena uint32 [R, W]; uniq_rows int32 [U] (each arena row listed once);
+    indir int32 [Q, nb, L] (index into uniq_rows per term); mask int32
+    [Q, nb, L] -> int32 [Q, nb * W * 32]. Identical to
+    ``bitslice_lookup_score_multi_ref(arena, uniq_rows[indir], mask)`` —
+    the dedup path is pure re-addressing, never a semantic change.
+    """
+    return bitslice_lookup_score_multi_ref(arena, uniq_rows[indir], mask)
+
+
 def and_rows_ref(rows: jnp.ndarray) -> jnp.ndarray:
     """AND step over the k hash functions: uint32 [L, k, W] -> [L, W]."""
     out = rows[:, 0]

@@ -6,6 +6,10 @@ latency/throughput.
     PYTHONPATH=src python -m repro.launch.serve --mode open --qps 500
     PYTHONPATH=src python -m repro.launch.serve --store-format v2 \\
         --index-dir /tmp/store --hosts 3 --replication 2 --fail-host host1
+    PYTHONPATH=src python -m repro.launch.serve --store-format v2 \\
+        --index-dir /tmp/store --autotune      # tune-then-serve; measured
+                                               # configs persist in
+                                               # /tmp/store/tuning.json
 
 Two load models:
 
@@ -128,11 +132,14 @@ def run_open(server: QueryServer, queries, threshold: float, qps: float
 def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
                             max_batch: int, max_wait_s: float,
                             hedge_after_s: float,
-                            tile_cache_bytes=None,
+                            tile_cache_bytes=None, word_block=None,
+                            scatter_threads: int = 4,
                             fail_hosts=(), latency_models=None) -> Frontend:
     """Sharded data plane over in-process fake hosts: HRW-place the v2
-    manifest rows, open each host's sub-store, wire the hedging frontend,
-    and optionally mark hosts down (their shards fail over to replicas)."""
+    manifest rows, open each host's sub-store, wire the hedging frontend
+    (per-shard dispatches overlap through ``scatter_threads`` in
+    wall-clock mode), and optionally mark hosts down (their shards fail
+    over to replicas)."""
     from ..index import ShardPlacement
 
     nodes = [f"host{i}" for i in range(hosts)]
@@ -140,11 +147,13 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
                                          replication=min(replication, hosts))
     held = placement.replica_assignment()
     workers = {n: ShardWorker(n, store_dir, held[n],
-                              tile_cache_bytes=tile_cache_bytes)
+                              tile_cache_bytes=tile_cache_bytes,
+                              word_block=word_block)
                for n in nodes if held[n]}
     frontend = Frontend(workers, placement, FrontendConfig(
         max_batch=max_batch, max_wait_s=max_wait_s,
-        hedge_after_s=hedge_after_s), latency_models=latency_models)
+        hedge_after_s=hedge_after_s, scatter_threads=scatter_threads),
+        latency_models=latency_models)
     for n in fail_hosts:
         frontend.fail_worker(n)
     if not placement.is_covered():
@@ -188,6 +197,30 @@ def main() -> None:
     ap.add_argument("--fail-host", action="append", default=[],
                     help="mark a host down before the run (repeatable), "
                          "e.g. --fail-host host1")
+    ap.add_argument("--word-block", type=int, default=None,
+                    help="kernel tile width for every scoring dispatch; "
+                         "default: the autotuner's measured choice (with "
+                         "--autotune / a tuning cache) else the kernel "
+                         "default")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure kernel configs per batch shape on "
+                         "demand and drive the planner from measured "
+                         "costs; entries persist in the tuning cache "
+                         "(tuning.json beside a v2 store's manifest). "
+                         "Single-host mode only")
+    ap.add_argument("--tuning-cache", default=None,
+                    help="explicit tuning-cache path; default: "
+                         "<index-dir>/tuning.json for v2 stores, "
+                         "in-memory otherwise")
+    ap.add_argument("--dedup-min-rate", type=float, default=0.5,
+                    help="minimum batch row-dedup rate before the "
+                         "unique-row scoring path replaces the fused "
+                         "multi-query kernel; negative disables dedup "
+                         "(a tuner-measured break-even overrides this). "
+                         "Single-host mode only")
+    ap.add_argument("--scatter-threads", type=int, default=4,
+                    help="multi-host concurrent scatter pool size "
+                         "(<= 1 = sequential per-shard dispatch)")
     ap.add_argument("--no-warmup", action="store_true")
     args = ap.parse_args()
     if args.mode == "open" and args.qps <= 0:
@@ -204,12 +237,23 @@ def main() -> None:
     corpus, index = build_or_load(args)
     tile_bytes = (None if args.tile_cache_mib is None
                   else int(args.tile_cache_mib * 2**20))
+    tuning_cache = args.tuning_cache
+    if tuning_cache is None and args.store_format == "v2" and args.index_dir:
+        from ..core.store import tuning_path
+        tuning_cache = str(tuning_path(args.index_dir))
     if args.hosts > 1:
+        if args.autotune or args.tuning_cache or args.dedup_min_rate != 0.5:
+            print("note: --autotune/--tuning-cache/--dedup-min-rate apply "
+                  "to the single-host QueryServer only; the multi-host "
+                  "ShardWorkers take --word-block but keep heuristic "
+                  "kernel choice (see ROADMAP open items)")
         server = make_multihost_frontend(
             args.index_dir, hosts=args.hosts, replication=args.replication,
             max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
             hedge_after_s=args.hedge_after_ms / 1e3,
-            tile_cache_bytes=tile_bytes, fail_hosts=args.fail_host)
+            tile_cache_bytes=tile_bytes, word_block=args.word_block,
+            scatter_threads=args.scatter_threads,
+            fail_hosts=args.fail_host)
         down = sorted(set(server.placement.nodes)
                       - set(server.placement.live_nodes))
         print(f"multi-host frontend: {args.hosts} hosts, "
@@ -218,7 +262,15 @@ def main() -> None:
     else:
         server = QueryServer(index, ServerConfig(
             max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
-            tile_cache_bytes=tile_bytes))
+            tile_cache_bytes=tile_bytes, word_block=args.word_block,
+            dedup_min_rate=(None if args.dedup_min_rate < 0
+                            else args.dedup_min_rate),
+            autotune=args.autotune,
+            tuning_cache=tuning_cache if args.autotune or args.tuning_cache
+            else None))
+        if args.autotune:
+            print(f"autotune on: cache="
+                  f"{tuning_cache or 'in-memory'}")
     queries, origin = make_workload(corpus, args.queries)
 
     if args.mode == "closed":

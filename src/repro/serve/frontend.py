@@ -29,12 +29,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Optional
 
 import numpy as np
 
 from ..core.query import (SearchResult, compile_pattern, coverage_cutoff)
-from ..index.hedge import AllReplicasFailed, HedgedExecutor, ShardSim
+from ..index.hedge import (AllReplicasFailed, AttemptFailed, HedgedExecutor,
+                           ShardSim)
 from ..index.placement import ShardPlacement
 from .batcher import MicroBatch, MicroBatcher
 from .metrics import ServingMetrics
@@ -52,6 +54,11 @@ class FrontendConfig:
     default_top_k: int = 10     # k for top_k() convenience calls
     hedge_after_s: float = 0.05  # backup-request deadline per shard dispatch
     max_hedges: int = 1
+    # Concurrent scatter: per-shard dispatches are issued through a thread
+    # pool of this size so worker compute overlaps across hosts (<= 1 =
+    # sequential). Only active in wall-clock mode — simulated-latency runs
+    # share one deterministic event clock and stay sequential regardless.
+    scatter_threads: int = 4
 
 
 def _next_pow2(n: int) -> int:
@@ -96,6 +103,14 @@ class Frontend:
         self._next_id = 0
         self._dispatch_seq = 0
         self.n_docs = next(iter(workers.values())).layout.n_docs
+        # Concurrent scatter pool (wall-clock mode only: simulated runs
+        # share one deterministic event clock, so their dispatches stay
+        # sequential and bit-reproducible).
+        self._pool: Optional[ThreadPoolExecutor] = None
+        if not self._simulated and config.scatter_threads > 1:
+            self._pool = ThreadPoolExecutor(
+                max_workers=config.scatter_threads,
+                thread_name_prefix="scatter")
 
     # -- control plane -------------------------------------------------------
     def fail_worker(self, node: str) -> list[int]:
@@ -157,6 +172,106 @@ class Frontend:
             hit = cache[key] = worker.stage_batch(buf, n_valid)
         return hit
 
+    def _scatter_sequential(self, staged, buf, n_valid, cutoffs, topks,
+                            Q: int):
+        """Shard-by-shard hedged dispatch on one (possibly simulated)
+        clock: every shard scatters at the same event instant, the slowest
+        completion bounds the batch. Returns ([(node, latency, result)]
+        in shard order, max completion latency)."""
+        ex = self.executor
+        t_base = ex.clock.now
+        max_done = 0.0
+        out = []
+        n_shards = self.placement.n_shards
+        for g in range(n_shards):
+            if g + 1 < n_shards:
+                # double buffering across hosts: stage shard g+1's tile
+                # on its owner while shard g scores (wherever it lands)
+                try:
+                    nxt = self.placement.owner(g + 1)
+                    self.workers[nxt].prefetch_shard(g + 1)
+                except RuntimeError:
+                    pass
+
+            def call(node, g=g):
+                w = self.workers[node]
+                terms_dev, nvalid_dev = self._staged(staged, w, buf,
+                                                     n_valid)
+                return w.score_candidates(g, terms_dev, nvalid_dev,
+                                          cutoffs, topks, Q)
+
+            self._dispatch_seq += 1
+            # rewind the event clock to the batch start per shard, track
+            # the slowest completion
+            ex.clock.now = t_base
+            node, lat, res = ex.run(
+                self._dispatch_seq, self.placement.replicas(g), call)
+            max_done = max(max_done, lat)
+            out.append((node, lat, res))
+        ex.clock.now = t_base + max_done
+        return out, max_done
+
+    def _scatter_concurrent(self, staged, buf, n_valid, cutoffs, topks,
+                            Q: int):
+        """Concurrent scatter: every shard's dispatch runs on the thread
+        pool so worker compute overlaps ACROSS hosts (each worker still
+        serializes its own dispatches — one device per host).
+
+        Wall-clock mode only. Semantics match sequential wall-clock
+        dispatch exactly: hedging stays off (a synchronous in-process
+        backup can never win — see index/hedge.py), failover walks the
+        replica ranking inline, and the executor's failover/completion
+        stats are aggregated in the submitting thread so the executor is
+        never shared across threads. Gather order stays deterministic:
+        futures are consumed in shard order, and the final per-query sort
+        under (-score, doc) is order-independent anyway."""
+        ex = self.executor
+        n_shards = self.placement.n_shards
+        replica_sets = [self.placement.replicas(g) for g in range(n_shards)]
+        # stage the batch once per device up front: worker staging caches
+        # are plain dicts (not thread-safe) and staging is cheap
+        for replicas in replica_sets:
+            for node in replicas:
+                self._staged(staged, self.workers[node], buf, n_valid)
+        # prefetch every shard tile on its owner before the dispatch wave:
+        # transfers are issued asynchronously, so by the time a pool
+        # thread's kernel asks for the tile it is (being) staged — the
+        # all-at-once analogue of the sequential path's double buffering
+        for g in range(n_shards):
+            try:
+                self.workers[self.placement.owner(g)].prefetch_shard(g)
+            except RuntimeError:
+                pass
+
+        def dispatch(g: int):
+            for rank, node in enumerate(replica_sets[g]):
+                w = self.workers[node]
+                terms_dev, nvalid_dev = staged[w.device]
+                t0 = time.perf_counter()
+                try:
+                    res = w.score_candidates(g, terms_dev, nvalid_dev,
+                                             cutoffs, topks, Q)
+                except AttemptFailed:
+                    continue
+                return node, time.perf_counter() - t0, res, rank
+            raise AllReplicasFailed(f"shard {g}: all replicas failed")
+
+        futures = [self._pool.submit(dispatch, g) for g in range(n_shards)]
+        out, failed = [], None
+        for fut in futures:
+            try:
+                node, lat, res, rank = fut.result()
+            except AllReplicasFailed as e:
+                failed = e          # keep draining so the pool is clean
+                continue
+            self._dispatch_seq += 1
+            ex.failovers += rank
+            ex.completions.append((self._dispatch_seq, node, lat, False))
+            out.append((node, lat, res))
+        if failed is not None:
+            raise failed
+        return out
+
     def _score_batch(self, batch: MicroBatch) -> None:
         t0 = self.clock()
         Q, B = batch.size, batch.bucket
@@ -179,39 +294,15 @@ class Frontend:
         ex = self.executor
         fired0, won0, fo0 = ex.hedges_fired, ex.hedges_won, ex.failovers
         tiles0 = self._tile_counters()
-        t_base = ex.clock.now
-        max_done = 0.0
         method = ""
-        n_shards = self.placement.n_shards
         try:
-            for g in range(n_shards):
-                if g + 1 < n_shards:
-                    # double buffering across hosts: stage shard g+1's tile
-                    # on its owner while shard g scores (wherever it lands)
-                    try:
-                        nxt = self.placement.owner(g + 1)
-                        self.workers[nxt].prefetch_shard(g + 1)
-                    except RuntimeError:
-                        pass
-
-                def call(node, g=g):
-                    w = self.workers[node]
-                    terms_dev, nvalid_dev = self._staged(staged, w, buf,
-                                                         n_valid)
-                    return w.score_candidates(g, terms_dev, nvalid_dev,
-                                              cutoffs, topks, Q)
-
-                self._dispatch_seq += 1
-                # every shard scatters at the same instant: rewind the
-                # event clock to the batch start, track the slowest
-                # completion
-                ex.clock.now = t_base
-                node, lat, (cands, method) = ex.run(
-                    self._dispatch_seq, self.placement.replicas(g), call)
-                max_done = max(max_done, lat)
-                self.metrics.record_worker(node, lat)
-                for i in range(Q):
-                    gathered[i].append(cands[i])
+            if self._pool is not None and self.placement.n_shards > 1:
+                results = self._scatter_concurrent(staged, buf, n_valid,
+                                                   cutoffs, topks, Q)
+                max_done = max((lat for _, lat, _ in results), default=0.0)
+            else:
+                results, max_done = self._scatter_sequential(
+                    staged, buf, n_valid, cutoffs, topks, Q)
         except AllReplicasFailed:
             # a shard lost every replica mid-flight: the batch is already
             # out of the batcher, so answer every request FAILED instead of
@@ -224,7 +315,11 @@ class Frontend:
                     wait_s=max(0.0, t0 - r.submitted_at))
                 self._topk.pop(r.request_id, None)
             return
-        ex.clock.now = t_base + max_done
+        # gather in shard order — deterministic however dispatch ran
+        for node, lat, (cands, method) in results:
+            self.metrics.record_worker(node, lat)
+            for i in range(Q):
+                gathered[i].append(cands[i])
         service = max_done if self._simulated else self.clock() - t0
 
         self.metrics.record_hedges(fired=ex.hedges_fired - fired0,

@@ -1,12 +1,17 @@
 """Query planner: pick the scoring kernel per micro-batch.
 
-The repo has four scoring methods with very different cost shapes (see
+The repo has five scoring paths with very different cost shapes (see
 repro.kernels.bitslice_score):
 
 * ``lookup``   — fused gather+score with scalar-prefetched row indices;
   k=1 only. For batches this is the multi-query kernel: one pallas_call
   for the whole [Q, nb, L] batch, shared arena tiles, and no [Q, L, W]
-  gathered intermediate. The preferred path whenever it applies.
+  gathered intermediate.
+* ``dedup``    — the batched row-dedup pair riding on ``lookup`` plans:
+  unique (block, row) gather + indirected Harley–Seal accumulate, so
+  arena DMA traffic scales with UNIQUE rows instead of Q*nb*L. Chosen
+  per batch by comparing the batch's measured dedup rate against the
+  plan's break-even threshold.
 * ``vertical`` — Harley–Seal bit-sliced counters over a materialized
   gather; O(2 log2 L) vector ops per word. Wins for long queries.
 * ``unpack``   — paper-faithful 32-way expansion; O(32) ops per word but
@@ -14,11 +19,19 @@ repro.kernels.bitslice_score):
   per-row DMA pipeline and the vertical plane expansion dominate.
 * ``ref``      — pure-jnp oracle; never planned, test/debug only.
 
+Method choice consults MEASURED costs when a ``KernelTuner`` is wired in
+(``repro.kernels.autotune``): per (bucket, batch) key the tuner returns
+per-method dispatch costs plus the tuned ``word_block`` / ``term_block``
+/ ``grid_order`` and the dedup-rate break-even threshold, all persisted
+in the on-disk tuning cache (reopening a store never re-tunes). Without
+a tuner (or on a cache miss with tuning disabled) the original shape
+heuristics apply, so the planner degrades gracefully.
+
 The planner inspects the index layout ONCE (n_hashes, block count, arena
 size) and per batch sees only (bucket = padded term length, batch size),
 so a plan is a pure function of a small key — score functions are built
-lazily per method and memoized, keeping the jit cache bounded by the
-bucket set times the method set.
+lazily per (method, tile config) and memoized, keeping the jit cache
+bounded by the bucket set times the config set.
 
 Layout awareness (out-of-core arenas): when the index storage is sharded
 (MappedArena over a cobs-jax-v2 store), the plan is marked ``paged`` and
@@ -31,16 +44,23 @@ from __future__ import annotations
 
 import dataclasses
 from collections import Counter
+from typing import Optional
 
 from ..core.index import BitSlicedIndex
-from ..core.query import (ShardPlan, make_batch_score_fn, make_score_fn,
-                          plan_shards)
+from ..core.query import (ShardPlan, make_batch_score_fn,
+                          make_dedup_score_fn, make_score_fn, plan_shards)
+from ..kernels.autotune import KernelTuner
 
 # Below this many (padded) terms the fixed costs dominate and the simple
 # unpack expansion is fastest; at/above it Harley–Seal / fused lookup win.
 # The crossover in kernels/bitslice_score.py's measurements is ell ~100;
 # buckets are multiples of term_pad so the default bites at 64-term pads.
 SHORT_QUERY_TERMS = 96
+
+# Without measured costs, the dedup path fires when at least this fraction
+# of the batch's row gathers are duplicates (a measured break-even from the
+# tuner overrides it).
+DEFAULT_DEDUP_MIN_RATE = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,13 +72,31 @@ class QueryPlan:
     fused: bool        # True = single pallas_call for the whole batch
     paged: bool = False  # True = dispatch per shard tile, then combine
     n_shards: int = 1
+    # tuned kernel knobs (None = kernel defaults; see kernels.autotune)
+    word_block: Optional[int] = None
+    term_block: Optional[int] = None
+    grid_order: str = "wq"
+    # minimum batch dedup rate for the row-dedup path (fused lookup plans
+    # only); None disables dedup for this plan
+    dedup_threshold: Optional[float] = None
 
 
 def choose_method(n_hashes: int, bucket: int, batch_size: int,
-                  short_query_terms: int = SHORT_QUERY_TERMS) -> str:
-    """The pure kernel-choice rule, shared by the single-host QueryPlanner
-    and the multi-host ShardWorker (both must pick the same kernel for the
-    same batch shape so dispatch-mix metrics stay comparable)."""
+                  short_query_terms: int = SHORT_QUERY_TERMS,
+                  costs: Optional[dict] = None) -> str:
+    """The kernel-choice rule, shared by the single-host QueryPlanner and
+    the multi-host ShardWorker (both must pick the same kernel for the
+    same batch shape so dispatch-mix metrics stay comparable).
+
+    ``costs`` (method -> measured cost, e.g. the tuner's ``cost_us``)
+    switches the rule from shape heuristics to measured argmin; methods
+    that do not apply to the index (lookup with k>1) are ignored. Ties
+    break to the alphabetically first method, deterministically."""
+    if costs:
+        ok = {m: c for m, c in costs.items()
+              if m != "lookup" or n_hashes == 1}
+        if ok:
+            return min(sorted(ok), key=ok.get)
     if batch_size > 1:
         # Batched: the fused multi-query kernel whenever it applies (k=1 —
         # the paper's default); otherwise the gather path, with the ADD
@@ -76,15 +114,28 @@ def choose_method(n_hashes: int, bucket: int, batch_size: int,
 class QueryPlanner:
     """Chooses the kernel for each (bucket, batch-size) micro-batch and
     owns the memoized score functions for the methods it dispatches, plus
-    the per-shard addressing when the arena storage is sharded."""
+    the per-shard addressing when the arena storage is sharded.
+
+    ``tuner`` wires in measured method costs + tile configs (see module
+    docstring); ``word_block`` force-overrides the tile width everywhere
+    (ServerConfig surface); ``dedup_min_rate`` sets the fallback dedup
+    threshold when no measured break-even exists (None disables the
+    dedup path outright)."""
 
     def __init__(self, index: BitSlicedIndex, *,
-                 short_query_terms: int = SHORT_QUERY_TERMS):
+                 short_query_terms: int = SHORT_QUERY_TERMS,
+                 tuner: Optional[KernelTuner] = None,
+                 word_block: Optional[int] = None,
+                 dedup_min_rate: Optional[float] = DEFAULT_DEDUP_MIN_RATE):
         self.index = index
         self.short_query_terms = short_query_terms
+        self.tuner = tuner
+        self.word_block = word_block
+        self.dedup_min_rate = dedup_min_rate
         self._k = index.params.n_hashes
-        self._single_fns: dict[str, object] = {}
-        self._batch_fns: dict[str, object] = {}
+        self._single_fns: dict[tuple, object] = {}
+        self._batch_fns: dict[tuple, object] = {}
+        self._dedup_fns: dict[Optional[int], object] = {}
         self.dispatch_counts: Counter[str] = Counter()
         self.n_shards = index.storage.n_shards
         self.shard_plans: list[ShardPlan] = plan_shards(
@@ -92,32 +143,74 @@ class QueryPlanner:
 
     # -- planning ----------------------------------------------------------
     def plan(self, bucket: int, batch_size: int) -> QueryPlan:
-        """Pure dispatch decision; records nothing."""
+        """Dispatch decision; records nothing. Consults the tuner's
+        measured costs when present, falling back to shape heuristics on
+        misses (read-only tuners never measure in the serving path)."""
+        entries = (self.tuner.costs(bucket, batch_size)
+                   if self.tuner is not None else {})
+        costs = {m: e.cost_us for m, e in entries.items()}
         method = choose_method(self._k, bucket, batch_size,
-                               self.short_query_terms)
-        return QueryPlan(method, bucket, batch_size,
-                         fused=(batch_size > 1 and method == "lookup"),
-                         paged=self.n_shards > 1, n_shards=self.n_shards)
+                               self.short_query_terms, costs=costs)
+        tuned = entries.get(method)
+        word_block = (self.word_block if self.word_block is not None
+                      else (tuned.word_block if tuned else None))
+        term_block = tuned.term_block if tuned else None
+        grid_order = tuned.grid_order if tuned else "wq"
+        fused = batch_size > 1 and method == "lookup"
+        threshold = None
+        if fused:
+            threshold = (tuned.dedup_threshold
+                         if tuned is not None and
+                         tuned.dedup_threshold is not None
+                         else self.dedup_min_rate)
+            if threshold is not None and threshold >= 1.0:
+                # unreachable (incl. the tuner's 2.0 "measured, never
+                # wins" sentinel): disable outright so the server never
+                # pays the per-batch host-side dedup planning
+                threshold = None
+        return QueryPlan(method, bucket, batch_size, fused=fused,
+                         paged=self.n_shards > 1, n_shards=self.n_shards,
+                         word_block=word_block, term_block=term_block,
+                         grid_order=grid_order, dedup_threshold=threshold)
 
     # -- score-function cache ---------------------------------------------
     def batch_score_fn(self, plan: QueryPlan):
         """score(arena, row_offset, block_width, terms [Q,L,2], n_valid [Q])
-        -> [Q, n_slots] for this plan's method."""
-        fn = self._batch_fns.get(plan.method)
+        -> [Q, n_slots] for this plan's method + tile config."""
+        key = (plan.method, plan.word_block, plan.term_block,
+               plan.grid_order)
+        fn = self._batch_fns.get(key)
         if fn is None:
-            fn = make_batch_score_fn(self._k, plan.method)
-            self._batch_fns[plan.method] = fn
+            fn = make_batch_score_fn(self._k, plan.method,
+                                     word_block=plan.word_block,
+                                     term_block=plan.term_block,
+                                     grid_order=plan.grid_order)
+            self._batch_fns[key] = fn
+        return fn
+
+    def dedup_score_fn(self, plan: QueryPlan):
+        """score(arena, uniq_rows, indir, mask) -> [Q, n_slots]: the
+        row-dedup pair at this plan's tile width."""
+        fn = self._dedup_fns.get(plan.word_block)
+        if fn is None:
+            fn = make_dedup_score_fn(word_block=plan.word_block)
+            self._dedup_fns[plan.word_block] = fn
         return fn
 
     def single_score_fn(self, plan: QueryPlan):
-        fn = self._single_fns.get(plan.method)
+        key = (plan.method, plan.word_block, plan.term_block)
+        fn = self._single_fns.get(key)
         if fn is None:
-            fn = make_score_fn(self._k, plan.method)
-            self._single_fns[plan.method] = fn
+            fn = make_score_fn(self._k, plan.method,
+                               word_block=plan.word_block,
+                               term_block=plan.term_block)
+            self._single_fns[key] = fn
         return fn
 
-    def record(self, plan: QueryPlan) -> None:
-        self.dispatch_counts[plan.method] += plan.batch_size
+    def record(self, plan: QueryPlan, method: Optional[str] = None) -> None:
+        """Count a dispatch; ``method`` overrides the plan's label (the
+        server reports 'dedup' when the row-dedup path actually ran)."""
+        self.dispatch_counts[method or plan.method] += plan.batch_size
 
     @property
     def methods_used(self) -> tuple[str, ...]:

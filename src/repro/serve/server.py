@@ -29,12 +29,13 @@ import numpy as np
 from ..core import hashing
 from ..core.arena import DeviceTileCache, common_tile_rows
 from ..core.index import BitSlicedIndex
-from ..core.query import (SearchResult, compile_pattern, run_paged,
-                          select_hits)
+from ..core.query import (SearchResult, compile_pattern, plan_dedup_batch,
+                          run_paged, run_paged_dedup, select_hits)
+from ..kernels.autotune import KernelTuner, TuningCache
 from .batcher import MicroBatch, MicroBatcher
 from .cache import LRUCache, result_key, term_key
 from .metrics import ServingMetrics
-from .planner import QueryPlanner
+from .planner import DEFAULT_DEDUP_MIN_RATE, QueryPlanner
 from .request import QueryRequest, QueryResponse, Status
 
 
@@ -51,6 +52,24 @@ class ServerConfig:
     # (sharded/mmapped) index; None = unbounded, every touched shard stays
     # resident. Ignored for dense single-shard storage.
     tile_cache_bytes: Optional[int] = None
+    # Kernel tile width for every dispatched scoring kernel. None = the
+    # autotuner's measured choice when tuning is wired in, else the kernel
+    # default (kernels.bitslice_score.DEFAULT_WORD_BLOCK).
+    word_block: Optional[int] = None
+    # Row-dedup path: minimum fraction of a batch's row gathers that must
+    # be duplicates before the dedup pair replaces the fused multi-query
+    # kernel. None disables dedup; a tuner-measured break-even overrides
+    # this default.
+    dedup_min_rate: Optional[float] = DEFAULT_DEDUP_MIN_RATE
+    # Autotune kernel configs on demand per batch shape (measured costs
+    # drive the planner; entries persist in tuning_cache). False with a
+    # tuning_cache still CONSULTS existing entries — it just never
+    # measures in the serving path.
+    autotune: bool = False
+    # Path of the persisted tuning cache (JSON; by convention
+    # repro.core.store.tuning_path(store_dir) = beside the v2 manifest).
+    # None keeps tuned entries in memory only.
+    tuning_cache: Optional[str] = None
 
 
 def _next_pow2(n: int) -> int:
@@ -64,7 +83,17 @@ class QueryServer:
         self.index = index
         self.config = config
         self.clock = clock
-        self.planner = QueryPlanner(index)
+        # Tuned kernel configs: with a cache path wired in, entries load
+        # from disk and serving never re-tunes what is already measured;
+        # autotune=True additionally measures misses on demand.
+        self.tuner: Optional[KernelTuner] = None
+        if config.autotune or config.tuning_cache:
+            self.tuner = KernelTuner.for_index(
+                index, TuningCache(config.tuning_cache),
+                enabled=config.autotune)
+        self.planner = QueryPlanner(index, tuner=self.tuner,
+                                    word_block=config.word_block,
+                                    dedup_min_rate=config.dedup_min_rate)
         self.batcher = MicroBatcher(
             term_pad=config.term_pad, max_batch=config.max_batch,
             max_wait_s=config.max_wait_s, max_queued=config.max_queued)
@@ -183,10 +212,31 @@ class QueryServer:
             run_paged(self.tiles, self._shard_args, fn, terms_dev,
                       valid_dev), axis=-1)
 
+    def _score_dedup(self, buf: np.ndarray, n_valid: np.ndarray, plan
+                     ) -> Optional[np.ndarray]:
+        """Row-dedup dispatch, or None when the batch's measured dedup
+        rate is below the plan's break-even threshold. The global-layout
+        plan decides; dense execution reuses it directly, paged execution
+        re-plans per shard against the rebased addressing."""
+        layout = self.index.layout
+        dp = plan_dedup_batch(buf, n_valid, layout.row_offset,
+                              layout.block_width)
+        if dp.dedup_rate < plan.dedup_threshold:
+            return None
+        fn = self.planner.dedup_score_fn(plan)
+        if not plan.paged:
+            return np.asarray(fn(self.tiles.get(0),
+                                 jnp.asarray(dp.uniq_rows),
+                                 jnp.asarray(dp.indir),
+                                 jnp.asarray(dp.mask)))
+        return run_paged_dedup(self.tiles, self.planner.shard_plans, fn,
+                               buf, n_valid)
+
     def _score_batch(self, batch: MicroBatch) -> None:
         t0 = self.clock()
         Q, B = batch.size, batch.bucket
         plan = self.planner.plan(B, Q)
+        method = plan.method
         ells = np.array([r.n_terms for r in batch.requests], dtype=np.int32)
         tiles0 = (self.tiles.hits, self.tiles.faults,
                   self.tiles.prefetched, self.tiles.prefetch_hits)
@@ -207,16 +257,21 @@ class QueryServer:
                 buf[i, : r.n_terms] = r.terms
             n_valid = np.zeros(q_pad, dtype=np.int32)
             n_valid[:Q] = ells
-            fn = self.planner.batch_score_fn(plan)
-            slots = self._run_plan(plan, fn, jnp.asarray(buf),
-                                   jnp.asarray(n_valid))
+            slots = None
+            if plan.fused and plan.dedup_threshold is not None:
+                slots = self._score_dedup(buf, n_valid, plan)
+                if slots is not None:
+                    method = "dedup"
+            if slots is None:
+                fn = self.planner.batch_score_fn(plan)
+                slots = self._run_plan(plan, fn, jnp.asarray(buf),
+                                       jnp.asarray(n_valid))
             scores = slots[:Q][:, self._host_slot]
         t1 = self.clock()
         service = t1 - t0
 
-        self.planner.record(plan)
-        self.metrics.record_batch(Q, self.batcher.occupancy(batch),
-                                  plan.method)
+        self.planner.record(plan, method)
+        self.metrics.record_batch(Q, self.batcher.occupancy(batch), method)
         if plan.paged:
             self.metrics.record_tiles(
                 hits=self.tiles.hits - tiles0[0],
@@ -229,7 +284,7 @@ class QueryServer:
             wait = max(0.0, t0 - r.submitted_at)
             self.metrics.record_request(wait_s=wait, service_s=service)
             self._responses[r.request_id] = QueryResponse(
-                r.request_id, Status.OK, result, method=plan.method,
+                r.request_id, Status.OK, result, method=method,
                 batch_size=Q, wait_s=wait, service_s=service)
             self.results_cache.put(result_key(r.terms, r.threshold), result)
 

@@ -30,6 +30,7 @@ into failover to the next replica.
 """
 from __future__ import annotations
 
+import threading
 from typing import Optional
 
 import jax
@@ -42,18 +43,19 @@ from ..core.arena import DeviceTileCache
 from ..index.hedge import AttemptFailed
 from .planner import SHORT_QUERY_TERMS, choose_method
 
-# One compiled scorer per (n_hashes, method), shared by EVERY worker in the
-# process: fake hosts pad tiles to the parent store's tallest shard, so
-# their dispatch shapes coincide and recompiling per worker would only
-# burn startup time (noticeable across the elasticity property sweeps).
-_SCORE_FNS: dict[tuple[int, str], object] = {}
+# One compiled scorer per (n_hashes, method, word_block), shared by EVERY
+# worker in the process: fake hosts pad tiles to the parent store's tallest
+# shard, so their dispatch shapes coincide and recompiling per worker would
+# only burn startup time (noticeable across the elasticity property sweeps).
+_SCORE_FNS: dict[tuple[int, str, Optional[int]], object] = {}
 
 
-def _shared_score_fn(n_hashes: int, method: str):
-    fn = _SCORE_FNS.get((n_hashes, method))
+def _shared_score_fn(n_hashes: int, method: str,
+                     word_block: Optional[int] = None):
+    fn = _SCORE_FNS.get((n_hashes, method, word_block))
     if fn is None:
-        fn = make_batch_score_fn(n_hashes, method)
-        _SCORE_FNS[(n_hashes, method)] = fn
+        fn = make_batch_score_fn(n_hashes, method, word_block=word_block)
+        _SCORE_FNS[(n_hashes, method, word_block)] = fn
     return fn
 
 
@@ -63,7 +65,8 @@ class ShardWorker:
     def __init__(self, name: str, store, shard_ids, *,
                  tile_cache_bytes: Optional[int] = None,
                  verify: bool = False, device=None,
-                 short_query_terms: int = SHORT_QUERY_TERMS):
+                 short_query_terms: int = SHORT_QUERY_TERMS,
+                 word_block: Optional[int] = None):
         sub = open_substore(store, shard_ids, verify=verify)
         self.name = name
         self.layout = sub.layout            # FULL store layout (metadata)
@@ -72,6 +75,10 @@ class ShardWorker:
         self.shard_ids = sub.shard_ids
         self.device = device
         self.short_query_terms = short_query_terms
+        # kernel tile width for every dispatch (ServerConfig.word_block /
+        # the autotuner's choice, threaded from the launcher); None = the
+        # kernel default
+        self.word_block = word_block
         self._local = {g: i for i, g in enumerate(self.shard_ids)}
         self.plans: list[ShardPlan] = plan_shards_subset(
             sub.layout, sub.global_row_starts, sub.shard_ids)
@@ -92,6 +99,12 @@ class ShardWorker:
                        self._dev(p.block_width)) for p in self.plans]
         self.failed = False
         self.dispatches = 0
+        # One dispatch at a time per worker: the frontend's concurrent
+        # scatter may land two shards on the same host in parallel, and
+        # the tile cache / counters are not thread-safe. Serializing per
+        # worker models one host's device anyway — the overlap win is
+        # ACROSS hosts.
+        self._lock = threading.Lock()
 
     def _dev(self, a: np.ndarray):
         x = jnp.asarray(a)
@@ -120,11 +133,13 @@ class ShardWorker:
         ``gshard`` host->device without blocking (no-op when resident)."""
         if self.failed or gshard not in self._local:
             return False
-        return self.tiles.prefetch(self._local[gshard])
+        with self._lock:
+            return self.tiles.prefetch(self._local[gshard])
 
     # -- scoring -------------------------------------------------------------
     def _score_fn(self, method: str):
-        return _shared_score_fn(self.params.n_hashes, method)
+        return _shared_score_fn(self.params.n_hashes, method,
+                                self.word_block)
 
     def score_shard(self, gshard: int, terms_dev, n_valid_dev
                     ) -> tuple[np.ndarray, ShardPlan, str]:
@@ -155,7 +170,9 @@ class ShardWorker:
         topks[i] == 0, else the local top-k under (-score, doc id). Only
         candidates cross the host boundary, O(hits + k) per query instead
         of O(n_docs) — the scatter/gather contract of the frontend."""
-        slots, plan, method = self.score_shard(gshard, terms_dev, n_valid_dev)
+        with self._lock:
+            slots, plan, method = self.score_shard(gshard, terms_dev,
+                                                   n_valid_dev)
         slot0 = plan.block_start * self.layout.block_docs
         docs = self._slot_doc[slot0: slot0 + slots.shape[1]]
         real = docs >= 0

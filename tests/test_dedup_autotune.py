@@ -1,0 +1,424 @@
+"""PR-4 coverage: the batched row-dedup scoring path and the kernel
+autotuner.
+
+Dedup invariants (the acceptance bar): the dedup pair must be BIT-
+identical to the fused multi-query kernel and the jnp ref across shapes,
+including fully-duplicate and fully-disjoint row sets — dedup is pure
+re-addressing, never a semantic change. Tuner invariants: the on-disk
+cache round-trips, a reopened tuner serves without re-measuring, and the
+planner's method choice follows measured costs when present.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IndexParams, build_compact
+from repro.core.query import (QueryEngine, plan_dedup_batch,
+                              make_dedup_score_fn, pad_term_batch,
+                              compile_pattern)
+from repro.core.store import save_index_v2, load_index_v2, tuning_path
+from repro.data import make_corpus, make_queries
+from repro.kernels import ops, ref
+from repro.kernels.autotune import (KernelTuner, TunedEntry, TuningCache,
+                                    tuning_key)
+from repro.serve import QueryServer, ServerConfig
+from repro.serve.planner import QueryPlanner, choose_method
+
+
+# --------------------------------------------------------------------------
+# Dedup kernels == fused multi == oracle
+# --------------------------------------------------------------------------
+
+def _dedup_inputs(rng, Q, nb, L, R, duplication):
+    """Row batch [Q, nb, L] + its dedup addressing. duplication: 'disjoint'
+    = every cell a distinct row, 'dup' = all cells share very few rows,
+    'mixed' = uniform draws."""
+    n = Q * nb * L
+    if duplication == "disjoint":
+        idx = rng.permutation(max(R, n))[:n] % R
+    elif duplication == "dup":
+        idx = rng.choice(rng.integers(0, R, size=max(1, n // 8)), size=n)
+    else:
+        idx = rng.integers(0, R, size=n)
+    idx = idx.reshape(Q, nb, L).astype(np.int32)
+    uniq, inv = np.unique(idx, return_inverse=True)
+    pad = max(8, 1 << max(0, uniq.size - 1).bit_length())
+    uniq_pad = np.zeros(pad, dtype=np.int32)
+    uniq_pad[: uniq.size] = uniq
+    return idx, uniq_pad, inv.reshape(idx.shape).astype(np.int32)
+
+
+@pytest.mark.parametrize("duplication", ["disjoint", "dup", "mixed"])
+@pytest.mark.parametrize("Q,nb,L,W", [(2, 1, 8, 8), (3, 2, 17, 40),
+                                      (4, 1, 33, 130)])
+def test_dedup_matches_multi_and_ref(Q, nb, L, W, duplication):
+    rng = np.random.default_rng(Q * 100 + L + len(duplication))
+    R = 4 * Q * nb * L + 1
+    arena = rng.integers(0, 2 ** 32, size=(R, W), dtype=np.uint32)
+    idx, uniq_pad, indir = _dedup_inputs(rng, Q, nb, L, R, duplication)
+    mask = rng.integers(0, 2, size=(Q, nb, L)).astype(np.int32)
+    want = np.asarray(ref.bitslice_lookup_score_dedup_ref(
+        jnp.asarray(arena), jnp.asarray(uniq_pad), jnp.asarray(indir),
+        jnp.asarray(mask)))
+    got = np.asarray(ops.bitslice_lookup_score_dedup(
+        jnp.asarray(arena), jnp.asarray(uniq_pad), jnp.asarray(indir),
+        jnp.asarray(mask)))
+    np.testing.assert_array_equal(want, got)
+    fused = np.asarray(ops.bitslice_lookup_score_multi(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    np.testing.assert_array_equal(fused, got)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 2), st.integers(1, 24),
+       st.integers(1, 20), st.integers(0, 2 ** 31),
+       st.sampled_from(["disjoint", "dup", "mixed"]))
+def test_property_dedup_equals_fused_and_oracle(Q, nb, L, W, seed,
+                                                duplication):
+    rng = np.random.default_rng(seed)
+    R = 2 * Q * nb * L + 1
+    arena = rng.integers(0, 2 ** 32, size=(R, W), dtype=np.uint32)
+    idx, uniq_pad, indir = _dedup_inputs(rng, Q, nb, L, R, duplication)
+    mask = rng.integers(0, 2, size=(Q, nb, L)).astype(np.int32)
+    want = np.asarray(ref.bitslice_lookup_score_multi_ref(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    got = np.asarray(ops.bitslice_lookup_score_dedup(
+        jnp.asarray(arena), jnp.asarray(uniq_pad), jnp.asarray(indir),
+        jnp.asarray(mask)))
+    np.testing.assert_array_equal(want, got)
+    fused = np.asarray(ops.bitslice_lookup_score_multi(
+        jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)))
+    np.testing.assert_array_equal(want, fused)
+
+
+def test_grid_order_variants_bit_identical():
+    rng = np.random.default_rng(5)
+    Q, nb, L, W = 3, 2, 17, 40
+    arena = rng.integers(0, 2 ** 32, size=(128, W), dtype=np.uint32)
+    idx = rng.integers(0, 128, size=(Q, nb, L)).astype(np.int32)
+    mask = rng.integers(0, 2, size=(Q, nb, L)).astype(np.int32)
+    a, i, m = jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)
+    wq = np.asarray(ops.bitslice_lookup_score_multi(a, i, m,
+                                                    grid_order="wq"))
+    qw = np.asarray(ops.bitslice_lookup_score_multi(a, i, m,
+                                                    grid_order="qw"))
+    np.testing.assert_array_equal(wq, qw)
+
+
+def test_word_block_variants_bit_identical():
+    rng = np.random.default_rng(6)
+    Q, nb, L, W = 2, 1, 16, 96
+    arena = rng.integers(0, 2 ** 32, size=(80, W), dtype=np.uint32)
+    idx = rng.integers(0, 80, size=(Q, nb, L)).astype(np.int32)
+    mask = np.ones((Q, nb, L), dtype=np.int32)
+    a, i, m = jnp.asarray(arena), jnp.asarray(idx), jnp.asarray(mask)
+    base = np.asarray(ops.bitslice_lookup_score_multi(a, i, m))
+    for wb in (8, 32):
+        np.testing.assert_array_equal(
+            base, np.asarray(ops.bitslice_lookup_score_multi(
+                a, i, m, word_block=wb)))
+
+
+# --------------------------------------------------------------------------
+# Host-side dedup planning
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dedup_index():
+    c = make_corpus(48, k=15, mean_length=400, sigma=1.0, seed=7)
+    params = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+    return c, build_compact(c.doc_terms, params, block_docs=32,
+                            row_align=64)
+
+
+def test_plan_dedup_batch_addressing(dedup_index):
+    """uniq_rows[indir] must reproduce the exact rows the fused kernel
+    would gather on every live cell."""
+    c, idx = dedup_index
+    qs, _ = make_queries(c, n_pos=3, n_neg=1, length=100, seed=11)
+    term_sets = [compile_pattern(q, idx.params) for q in qs]
+    buf, ells = pad_term_batch(term_sets, 64)
+    dp = plan_dedup_batch(buf, ells, np.asarray(idx.layout.row_offset),
+                          np.asarray(idx.layout.block_width))
+    from repro.core import hashing
+    h = hashing.hash_terms_np(buf, 1)[..., 0]
+    rows = (h[..., None] % idx.layout.block_width.astype(np.uint32)
+            + idx.layout.row_offset.astype(np.uint32))
+    rows = np.swapaxes(rows, 1, 2).astype(np.int64)        # [Q, nb, L]
+    live = dp.mask.astype(bool)
+    np.testing.assert_array_equal(dp.uniq_rows[dp.indir][live], rows[live])
+    # validity mask matches ells
+    L = buf.shape[1]
+    want_valid = np.arange(L)[None, :] < ells[:, None]
+    np.testing.assert_array_equal(
+        dp.mask[:, 0, :].astype(bool), want_valid)
+
+
+def test_dedup_rate_duplicate_vs_disjoint(dedup_index):
+    """Duplicate queries drive the measured dedup rate up; the traffic
+    accounting shows >= 2x fewer row gathers at ~90% duplication — the
+    acceptance criterion's property at planning level."""
+    c, idx = dedup_index
+    qs, _ = make_queries(c, n_pos=2, n_neg=0, length=120, seed=13)
+    base = compile_pattern(qs[0], idx.params)
+    ro = np.asarray(idx.layout.row_offset)
+    bw = np.asarray(idx.layout.block_width)
+    # 10 copies of one query ~ 90% duplicate gathers
+    buf, ells = pad_term_batch([base] * 10, 64)
+    dp_dup = plan_dedup_batch(buf, ells, ro, bw)
+    assert dp_dup.dedup_rate >= 0.85
+    assert dp_dup.n_gathers >= 2 * dp_dup.n_unique
+    # distinct queries: low duplication
+    term_sets = [compile_pattern(q, idx.params) for q in qs]
+    buf2, ells2 = pad_term_batch(term_sets, 64)
+    dp_dis = plan_dedup_batch(buf2, ells2, ro, bw)
+    assert dp_dis.dedup_rate < dp_dup.dedup_rate
+
+
+def test_dedup_score_fn_matches_engine(dedup_index):
+    c, idx = dedup_index
+    qs, _ = make_queries(c, n_pos=3, n_neg=1, length=100, seed=17)
+    qs = qs + qs[:2]
+    term_sets = [compile_pattern(q, idx.params) for q in qs]
+    buf, ells = pad_term_batch(term_sets, 64)
+    eng = QueryEngine(idx, method="lookup")
+    want = eng.score_terms_batch(buf, ells)
+    dp = plan_dedup_batch(buf, ells, np.asarray(idx.layout.row_offset),
+                          np.asarray(idx.layout.block_width))
+    fn = make_dedup_score_fn()
+    slots = np.asarray(fn(idx.storage.full_device(),
+                          jnp.asarray(dp.uniq_rows), jnp.asarray(dp.indir),
+                          jnp.asarray(dp.mask)))
+    got = slots[:, np.asarray(idx.layout.doc_slot)]
+    np.testing.assert_array_equal(want, got)
+
+
+# --------------------------------------------------------------------------
+# Serving integration: dedup path end-to-end (dense + paged)
+# --------------------------------------------------------------------------
+
+def _serve(index, cfg, queries, threshold=0.8):
+    s = QueryServer(index, cfg)
+    ids = [s.submit(q, threshold=threshold) for q in queries]
+    s.drain()
+    resp = s.pop_responses()
+    out = []
+    for rid in ids:
+        r = resp[rid].result
+        out.append((tuple(r.doc_ids.tolist()), tuple(r.scores.tolist())))
+    return s, out
+
+
+def test_server_dedup_bit_identical_dense(dedup_index):
+    c, idx = dedup_index
+    qs, _ = make_queries(c, n_pos=4, n_neg=2, length=120, seed=19)
+    qs = qs + qs[:3]                      # duplicates -> dedup fires
+    s_on, r_on = _serve(idx, ServerConfig(result_cache=0, row_cache=0,
+                                          dedup_min_rate=0.0), qs)
+    s_off, r_off = _serve(idx, ServerConfig(result_cache=0, row_cache=0,
+                                            dedup_min_rate=None), qs)
+    assert r_on == r_off
+    assert s_on.planner.dispatch_counts.get("dedup", 0) > 0
+    assert "dedup" not in s_off.planner.dispatch_counts
+
+
+def test_server_dedup_bit_identical_paged(dedup_index, tmp_path):
+    c, idx = dedup_index
+    store = tmp_path / "store"
+    save_index_v2(idx, store, blocks_per_shard=1)
+    v2 = load_index_v2(store)
+    assert v2.storage.n_shards > 1        # really paged
+    qs, _ = make_queries(c, n_pos=4, n_neg=2, length=120, seed=23)
+    qs = qs + qs[:3]
+    _, r_on = _serve(v2, ServerConfig(result_cache=0, row_cache=0,
+                                      dedup_min_rate=0.0), qs)
+    _, r_off = _serve(v2, ServerConfig(result_cache=0, row_cache=0,
+                                       dedup_min_rate=None), qs)
+    _, r_dense = _serve(idx, ServerConfig(result_cache=0, row_cache=0,
+                                          dedup_min_rate=None), qs)
+    assert r_on == r_off == r_dense
+
+
+def test_server_dedup_threshold_gates(dedup_index):
+    """A threshold above the batch's measured rate keeps the fused path."""
+    c, idx = dedup_index
+    qs, _ = make_queries(c, n_pos=4, n_neg=0, length=120, seed=29)
+    s, _ = _serve(idx, ServerConfig(result_cache=0, row_cache=0,
+                                    dedup_min_rate=0.99), qs)
+    assert s.planner.dispatch_counts.get("dedup", 0) == 0
+
+
+def test_server_word_block_end_to_end(dedup_index):
+    """ServerConfig.word_block reaches the kernels and never changes
+    results."""
+    c, idx = dedup_index
+    qs, _ = make_queries(c, n_pos=3, n_neg=1, length=100, seed=31)
+    _, base = _serve(idx, ServerConfig(result_cache=0, row_cache=0), qs)
+    for wb in (16, 64):
+        s, got = _serve(idx, ServerConfig(result_cache=0, row_cache=0,
+                                          word_block=wb), qs)
+        assert got == base
+        assert s.planner.word_block == wb
+        assert all(p.word_block == wb for p in
+                   [s.planner.plan(64, 4), s.planner.plan(128, 1)])
+
+
+# --------------------------------------------------------------------------
+# Autotuner + tuning cache
+# --------------------------------------------------------------------------
+
+def test_tuning_cache_round_trip(tmp_path):
+    path = tmp_path / "tuning.json"
+    cache = TuningCache(path)
+    e1 = TunedEntry("lookup", 128, 8, "qw", 123.4, dedup_threshold=0.4)
+    e2 = TunedEntry("vertical", 64, 16, "wq", 56.7)
+    cache.put("k1", e1)
+    cache.put("k2", e2)
+    cache.save()
+    reopened = TuningCache(path)
+    assert len(reopened) == 2
+    assert reopened.get("k1") == e1
+    assert reopened.get("k2") == e2
+    assert reopened.hits == 2 and reopened.misses == 0
+    # the payload is versioned json beside the manifest
+    data = json.loads(path.read_text())
+    assert data["version"] == 1 and "k1" in data["entries"]
+
+
+def test_tuning_cache_version_mismatch(tmp_path):
+    path = tmp_path / "tuning.json"
+    path.write_text(json.dumps({"version": 999, "entries": {}}))
+    with pytest.raises(ValueError):
+        TuningCache(path)
+
+
+def test_tuner_persists_and_reopens_without_retuning(dedup_index, tmp_path):
+    _, idx = dedup_index
+    path = tmp_path / "tuning.json"
+    tuner = KernelTuner.for_index(idx, TuningCache(path), word_blocks=(8,),
+                                  term_blocks=(8,), repeats=1,
+                                  max_tune_rows=64, max_tune_blocks=1)
+    e = tuner.entry("lookup", 64, 4)
+    assert e is not None and tuner.tunes == 1
+    assert e.word_block == 8
+    # same tuner: cache hit, no second measurement
+    assert tuner.entry("lookup", 64, 4) == e and tuner.tunes == 1
+    # reopened tuner (fresh process analogue): disk hit, zero measurements
+    tuner2 = KernelTuner.for_index(idx, TuningCache(path))
+    assert tuner2.entry("lookup", 64, 4) == e
+    assert tuner2.tunes == 0
+
+
+def test_tuner_disabled_never_measures(dedup_index):
+    _, idx = dedup_index
+    tuner = KernelTuner.for_index(idx, enabled=False)
+    assert tuner.entry("lookup", 64, 4) is None
+    assert tuner.tunes == 0
+
+
+def test_tuning_key_shape_sensitivity():
+    k1 = tuning_key(100, 4, 1, 3, "lookup", 64, 4)
+    assert k1 != tuning_key(101, 4, 1, 3, "lookup", 64, 4)
+    assert k1 != tuning_key(100, 4, 1, 3, "lookup", 64, 8)
+    assert k1 == tuning_key(100, 4, 1, 3, "lookup", 64, 4)
+
+
+def test_choose_method_consults_costs():
+    # heuristic: batched k=1 -> lookup
+    assert choose_method(1, 64, 8) == "lookup"
+    # measured costs flip it
+    costs = {"lookup": 100.0, "unpack": 10.0, "vertical": 50.0}
+    assert choose_method(1, 64, 8, costs=costs) == "unpack"
+    # lookup cost ignored when k > 1 (method does not apply)
+    assert choose_method(2, 64, 8, costs={"lookup": 1.0, "vertical": 9.0}) \
+        == "vertical"
+    # deterministic tie-break
+    assert choose_method(1, 64, 8, costs={"vertical": 5.0, "unpack": 5.0}) \
+        == "unpack"
+
+
+def test_planner_uses_cached_measurements(dedup_index):
+    """Pre-seeded cache entries drive method, tile config, and the dedup
+    threshold without any measurement in the serving path."""
+    _, idx = dedup_index
+    cache = TuningCache()
+    tuner = KernelTuner.for_index(idx, cache, enabled=False)
+    cache.put(tuner.key("lookup", 64, 4),
+              TunedEntry("lookup", 32, 8, "qw", 20.0, dedup_threshold=0.25))
+    cache.put(tuner.key("vertical", 64, 4),
+              TunedEntry("vertical", 64, 16, "wq", 90.0))
+    cache.put(tuner.key("unpack", 64, 4),
+              TunedEntry("unpack", 64, 8, "wq", 80.0))
+    planner = QueryPlanner(idx, tuner=tuner)
+    plan = planner.plan(64, 4)
+    assert plan.method == "lookup"
+    assert plan.word_block == 32 and plan.grid_order == "qw"
+    assert plan.dedup_threshold == 0.25
+    assert tuner.tunes == 0
+    # flip the measurements: vertical now cheapest
+    cache.put(tuner.key("vertical", 64, 4),
+              TunedEntry("vertical", 128, 16, "wq", 5.0))
+    plan2 = planner.plan(64, 4)
+    assert plan2.method == "vertical"
+    assert plan2.word_block == 128 and plan2.term_block == 16
+
+
+def test_planner_sentinel_threshold_disables_dedup(dedup_index):
+    """The tuner's 2.0 'measured, dedup never wins' sentinel must turn
+    the plan's threshold OFF entirely — the server then skips the
+    per-batch host-side dedup planning instead of computing a rate that
+    can never clear the bar."""
+    _, idx = dedup_index
+    cache = TuningCache()
+    tuner = KernelTuner.for_index(idx, cache, enabled=False)
+    cache.put(tuner.key("lookup", 64, 4),
+              TunedEntry("lookup", 32, 8, "wq", 20.0, dedup_threshold=2.0))
+    planner = QueryPlanner(idx, tuner=tuner)
+    assert planner.plan(64, 4).dedup_threshold is None
+    # an explicit config threshold >= 1 is equally unreachable
+    planner2 = QueryPlanner(idx, dedup_min_rate=1.0)
+    assert planner2.plan(64, 4).dedup_threshold is None
+
+
+def test_tuned_server_serves_measured_config(dedup_index, tmp_path):
+    """End-to-end: autotune once against a store-side cache, reopen the
+    server read-only, verify it plans from disk without re-tuning and
+    answers bit-identically to the untuned server."""
+    c, idx = dedup_index
+    path = tmp_path / "tuning.json"
+    qs, _ = make_queries(c, n_pos=3, n_neg=1, length=100, seed=37)
+    s1 = QueryServer(idx, ServerConfig(result_cache=0, row_cache=0,
+                                       autotune=True,
+                                       tuning_cache=str(path)))
+    # tiny tuning space so interpret-mode measurement stays fast
+    s1.tuner.word_blocks = (8,)
+    s1.tuner.term_blocks = (8,)
+    s1.tuner.grid_orders = ("wq",)
+    s1.tuner.repeats = 1
+    s1.tuner.max_tune_rows = 64
+    s1.tuner.max_tune_blocks = 1
+    ids = [s1.submit(q, threshold=0.8) for q in qs]
+    s1.drain()
+    resp1 = s1.pop_responses()
+    r1 = [resp1[i].result for i in ids]
+    assert s1.tuner.tunes > 0 and path.exists()
+    # reopen: tuning disabled, cache consulted, zero measurements
+    s2 = QueryServer(idx, ServerConfig(result_cache=0, row_cache=0,
+                                       tuning_cache=str(path)))
+    ids2 = [s2.submit(q, threshold=0.8) for q in qs]
+    s2.drain()
+    resp2 = s2.pop_responses()
+    r2 = [resp2[i].result for i in ids2]
+    assert s2.tuner.tunes == 0 and s2.tuner.cache.hits > 0
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_store_tuning_path_beside_manifest(tmp_path):
+    p = tuning_path(tmp_path / "store")
+    assert p.parent == tmp_path / "store"
+    assert p.name == "tuning.json"

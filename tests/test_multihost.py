@@ -354,3 +354,50 @@ def test_frontend_prefetches_across_hosts(built):
     snap = fe.metrics.snapshot()
     assert snap.prefetched_tiles > 0
     assert snap.prefetch_hit_rate > 0
+
+
+def test_frontend_concurrent_scatter_matches_sequential(built):
+    """Wall-clock dispatch through the scatter thread pool must gather
+    bit-identically to sequential dispatch — same candidates, same shard
+    order, failover included (one dead primary)."""
+    c, _, _, store = built
+
+    def run(threads):
+        nodes = ["h0", "h1", "h2"]
+        place = ShardPlacement.for_store(store, nodes, replication=2)
+        held = place.replica_assignment()
+        workers = {n: ShardWorker(n, store, held[n])
+                   for n in nodes if held[n]}
+        fe = Frontend(workers, place,
+                      FrontendConfig(max_batch=8, max_wait_s=0.0,
+                                     scatter_threads=threads))
+        assert (fe._pool is not None) == (threads > 1)
+        fe.fail_worker(place.owner(0))       # failover mid-scatter
+        qs, _ = make_queries(c, n_pos=3, n_neg=2, length=100, seed=93)
+        ids = [fe.submit(q, threshold=0.7) for q in qs]
+        ids += [fe.submit(q, top_k=3) for q in qs]
+        fe.drain()
+        resp = fe.pop_responses()
+        snap = fe.metrics.snapshot()
+        return [(tuple(resp[i].result.doc_ids.tolist()),
+                 tuple(resp[i].result.scores.tolist())) for i in ids], snap
+
+    seq, snap_seq = run(1)
+    con, snap_con = run(4)
+    assert seq == con
+    assert snap_con.failovers == snap_seq.failovers > 0
+
+
+def test_frontend_concurrent_total_loss_answers_failed(built):
+    """Every replica of a shard down -> the batch answers FAILED through
+    the concurrent path too (no exception escapes the pool)."""
+    c, _, _, store = built
+    fe = _frontend(store, 2, 1)              # replication 1: no failover
+    assert fe._pool is not None
+    victim = fe.placement.owner(0)
+    fe.workers[victim].fail()                # dead at call time
+    qs, _ = make_queries(c, n_pos=2, n_neg=0, length=100, seed=95)
+    ids = [fe.submit(q, threshold=0.7) for q in qs]
+    fe.drain()
+    resp = fe.pop_responses()
+    assert all(resp[i].status == Status.FAILED for i in ids)
