@@ -15,11 +15,24 @@ the hedged dispatch path must pull p99 back to the hedge bound ('The
 Tail at Scale' win, measured end to end through the serving stack rather
 than in pure simulation like benchmarks/hedging.py).
 
+``run_net`` measures the NETWORK path: an in-process NetServer (active
+ServingLoop + wire protocol on an ephemeral TCP port) under N concurrent
+NetClient sessions. Closed loop: every client pipelines a window of
+queries — concurrent independent clients must coalesce into shared
+micro-batches (coalesce rate > 1 is the acceptance datum). Overload: a
+small-queue-cap server takes a burst several times its cap, and every
+single request must come back with SOME status (OK or the 429-style
+REJECTED) — nothing silently lost, nothing hung. Open loop: Poisson
+arrivals across the client fleet.
+
     PYTHONPATH=src python -m benchmarks.serving --hosts 3 \\
         --json results/serving_multihost.json
+    PYTHONPATH=src python -m benchmarks.serving --listen \\
+        --json results/BENCH_net_serving.json
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -179,9 +192,182 @@ def _run_multihost(tmp_root, n_docs: int, n_queries: int,
     return out
 
 
+# --------------------------------------------------------------------------
+# Network serving: real sockets, concurrent clients
+# --------------------------------------------------------------------------
+
+def _drive_clients(address, per_client_queries, *, window: int = 16,
+                   threshold: float = 0.8, topk_every: int = 0,
+                   deadline_s=None, arrival_gaps=None):
+    """N concurrent NetClient sessions, one thread each, pipelining their
+    query stream through the socket in ``window``-sized flights (or
+    following ``arrival_gaps`` seconds between submissions — open loop).
+    Returns per-status counts summed over clients; every submitted query
+    is awaited, so a hang would fail loudly rather than undercount."""
+    from collections import Counter
+
+    from repro.serve import NetClient
+
+    counts: Counter = Counter()
+    errors: list = []
+    lock = threading.Lock()
+
+    def one_client(ci: int, queries) -> None:
+        try:
+            local: Counter = Counter()
+            with NetClient(*address, timeout_s=120.0) as c:
+                gaps = (arrival_gaps[ci] if arrival_gaps is not None
+                        else None)
+                pending = []
+                for qi, q in enumerate(queries):
+                    k = 3 if topk_every and qi % topk_every == 0 else None
+                    pending.append(c.submit(
+                        q, threshold=None if k else threshold, top_k=k,
+                        deadline_s=deadline_s))
+                    if gaps is not None:
+                        time.sleep(gaps[qi])
+                    elif len(pending) >= window:
+                        for f in pending:
+                            local[f.result(120.0).status.value] += 1
+                        pending = []
+                for f in pending:
+                    local[f.result(120.0).status.value] += 1
+            with lock:
+                counts.update(local)
+        except Exception as e:
+            with lock:
+                errors.append((ci, e))
+
+    threads = [threading.Thread(target=one_client, args=(i, qs))
+               for i, qs in enumerate(per_client_queries)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        # loud, not a quietly-short count: a wedged or kicked session is
+        # exactly the regression this bench exists to catch
+        raise RuntimeError(f"client failures: {errors}")
+    return counts
+
+
+def run_net(n_docs: int = 256, n_queries: int = 96, clients: int = 4
+            ) -> dict:
+    """End-to-end socket serving: closed-loop capacity, queue-cap
+    overload accounting, and open-loop latency, all through real TCP
+    round trips."""
+    from repro.serve import (NetServer, QueryServer, ServerConfig,
+                             ServingLoop, Status)
+
+    c, _, compact = built_indexes(n_docs)
+    queries, _ = make_workload(c, n_queries, seed=77)
+    split = [queries[i::clients] for i in range(clients)]
+    out = {}
+
+    # -- closed loop: concurrent pipelined clients --------------------------
+    server = QueryServer(compact, ServerConfig(
+        max_batch=32, max_wait_s=0.002, result_cache=0, row_cache=0))
+    net = NetServer(ServingLoop(server)).start()
+    try:
+        _drive_clients(net.address, split)        # jit warmup
+        server.reset_metrics(clear_caches=True)
+        t0 = time.perf_counter()
+        counts = _drive_clients(net.address, split, topk_every=7)
+        wall = time.perf_counter() - t0
+        snap = server.metrics.snapshot()
+        qps = snap.served / wall
+        emit(f"serving/net/closed/clients{clients}",
+             wall / max(1, snap.served) * 1e6,
+             f"qps={qps:.0f};p50_ms={snap.p50_ms:.2f};"
+             f"p99_ms={snap.p99_ms:.2f};coalesce={snap.coalesce_rate:.2f};"
+             f"max_depth={snap.max_queue_depth};"
+             f"conns={snap.total_connections}")
+        out["closed_qps"] = qps
+        out["coalesce_rate"] = snap.coalesce_rate
+        out["closed_counts"] = dict(counts)
+        base_qps = qps
+    finally:
+        net.close()
+
+    # -- overload: queue cap must refuse, never lose ------------------------
+    cap = 32
+    server = QueryServer(compact, ServerConfig(
+        max_batch=8, max_wait_s=0.05, max_queued=cap,
+        result_cache=0, row_cache=0))
+    net = NetServer(ServingLoop(server)).start()
+    try:
+        burst = [queries[i % len(queries)] for i in range(6 * cap)]
+        bsplit = [burst[i::clients] for i in range(clients)]
+        counts = _drive_clients(net.address, bsplit, window=6 * cap)
+        total = sum(counts.values())
+        lost = len(burst) - total
+        emit("serving/net/overload", 0.0,
+             f"sent={len(burst)};answered={total};lost={lost};"
+             f"ok={counts.get(Status.OK.value, 0)};"
+             f"rejected={counts.get(Status.REJECTED.value, 0)}")
+        out["overload_lost"] = lost
+        out["overload_rejected"] = counts.get(Status.REJECTED.value, 0)
+    finally:
+        net.close()
+
+    # -- open loop: Poisson arrivals across the fleet -----------------------
+    server = QueryServer(compact, ServerConfig(
+        max_batch=32, max_wait_s=0.002, result_cache=0, row_cache=0))
+    net = NetServer(ServingLoop(server)).start()
+    try:
+        _drive_clients(net.address, split)        # jit warmup
+        server.reset_metrics(clear_caches=True)
+        offered = max(20.0, base_qps * 0.5)
+        rng = np.random.default_rng(1)
+        gaps = [rng.exponential(clients / offered, size=len(s))
+                for s in split]
+        t0 = time.perf_counter()
+        _drive_clients(net.address, split, arrival_gaps=gaps)
+        wall = time.perf_counter() - t0
+        snap = server.metrics.snapshot()
+        emit("serving/net/open/load50", wall / max(1, snap.served) * 1e6,
+             f"offered_qps={offered:.0f};"
+             f"achieved_qps={snap.served / wall:.0f};"
+             f"p50_ms={snap.p50_ms:.2f};p99_ms={snap.p99_ms:.2f};"
+             f"coalesce={snap.coalesce_rate:.2f}")
+        out["open_qps"] = snap.served / wall
+    finally:
+        net.close()
+    return out
+
+
+def run_net_connect(address, n_queries: int = 96, clients: int = 4) -> dict:
+    """Client-only load against an EXTERNAL server (e.g. `python -m
+    repro.launch.serve --listen PORT`): random DNA compiled with the
+    HELLO-announced index params, pipelined from N sessions. Only
+    client-side numbers are reported — the server's metrics live in its
+    own process."""
+    import time as _time
+
+    from repro.serve import NetClient, Status
+
+    with NetClient(*address) as probe:
+        kmer = probe.params.kmer
+    rng = np.random.default_rng(3)
+    queries = [rng.integers(0, 4, size=int(n), dtype=np.uint8)
+               for n in rng.integers(kmer + 25, 320, size=n_queries)]
+    split = [queries[i::clients] for i in range(clients)]
+    t0 = _time.perf_counter()
+    counts = _drive_clients(address, split)
+    wall = _time.perf_counter() - t0
+    total = sum(counts.values())
+    emit(f"serving/net/connect/clients{clients}",
+         wall / max(1, total) * 1e6,
+         f"qps={total / wall:.0f};answered={total};"
+         f"ok={counts.get(Status.OK.value, 0)};"
+         f"rejected={counts.get(Status.REJECTED.value, 0)}")
+    return {"qps": total / wall, "counts": dict(counts)}
+
+
 def main() -> None:
     """CLI for CI artifacts: run the multi-host scale-out + hedging bench
-    and dump the emitted rows as a BENCH json."""
+    (default) or the socket serving bench (--listen) and dump the emitted
+    rows as a BENCH json."""
     import argparse
     import json
     from pathlib import Path
@@ -193,19 +379,41 @@ def main() -> None:
                     help="scale-out sweep upper bound (1..N fake hosts)")
     ap.add_argument("--n-docs", type=int, default=128)
     ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--listen", action="store_true",
+                    help="run the network serving bench (in-process "
+                         "NetServer on an ephemeral port, concurrent "
+                         "NetClient load) instead of the multi-host one")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="with --listen: drive the load against an "
+                         "EXTERNAL server (repro.launch.serve --listen) "
+                         "instead of an in-process one")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent client sessions in --listen mode")
     ap.add_argument("--json", default=None,
                     help="write emitted rows as a json artifact here")
     args = ap.parse_args()
+    if args.connect and not args.listen:
+        ap.error("--connect requires --listen (it selects the socket "
+                 "bench and points it at an external server)")
 
     print("name,us_per_call,derived")
-    run_multihost(args.n_docs, args.queries, max_hosts=args.hosts)
+    if args.listen:
+        bench, extra = "net_serving", {"clients": args.clients}
+        if args.connect:
+            host, port = args.connect.rsplit(":", 1)
+            run_net_connect((host, int(port)), args.queries,
+                            clients=args.clients)
+        else:
+            run_net(args.n_docs, args.queries, clients=args.clients)
+    else:
+        bench, extra = "serving_multihost", {"hosts": args.hosts}
+        run_multihost(args.n_docs, args.queries, max_hosts=args.hosts)
     if args.json:
         out = Path(args.json)
         out.parent.mkdir(parents=True, exist_ok=True)
         rows = [{"name": n, "us_per_call": v, "derived": d}
                 for n, v, d in common.ROWS]
-        out.write_text(json.dumps({"bench": "serving_multihost",
-                                   "hosts": args.hosts,
+        out.write_text(json.dumps({"bench": bench, **extra,
                                    "rows": rows}, indent=2))
         print(f"# wrote {out} ({len(rows)} rows)")
 

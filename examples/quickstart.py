@@ -130,3 +130,36 @@ print(f"tuned server: dispatch mix {dict(server.planner.dispatch_counts)}, "
 # a reopened server consults the same cache and never re-measures:
 #   QueryServer(load_index(store),
 #               ServerConfig(tuning_cache=str(tuning_path(store))))
+
+# --- serve it over the network ----------------------------------------------
+# Everything above was in-process. The ServingLoop wraps the same server
+# in an active dispatcher (flushes the micro-batcher on fill/wait-timer)
+# plus scoring workers, and NetServer puts a length-prefixed binary wire
+# protocol on a TCP port — so CONCURRENT independent clients coalesce
+# into shared micro-batches, queue overflow answers a 429-style REJECTED
+# instead of hanging, and close(drain=True) scores everything in flight
+# before the socket goes down. NetClient learns the index parameters from
+# the server's HELLO frame and compiles DNA patterns itself, so only
+# packed terms cross the wire; results are bit-identical to the
+# in-process engine, threshold and top-k alike.
+from repro.serve import NetClient, NetServer, ServingLoop
+
+net = NetServer(ServingLoop(QueryServer(load_index(store), ServerConfig(
+    max_batch=8, max_wait_s=0.002)))).start()        # port 0 = ephemeral
+host, port = net.address
+with NetClient(host, port) as client:
+    hit = client.search(genomes[1][200:320], threshold=0.8)
+    top = client.top_k(genomes[1][200:320], k=2)
+assert hit.result.doc_ids[0] == 1 and np.array_equal(hit.result.scores,
+                                                     res2.scores)
+assert top.result.doc_ids[0] == 1
+net.close()                                           # graceful drain
+print(f"network serving on {host}:{port}: doc{hit.result.doc_ids[0]} "
+      f"score {hit.result.scores[0]}/{hit.result.n_terms} "
+      f"(served by '{hit.method}' in a batch of {hit.batch_size}; "
+      f"same bytes as the in-process engine)")
+# a standalone server is one command:
+#   python -m repro.launch.serve --listen 7070 --store-format v2 \
+#       --index-dir /path/to/store
+# and load against it:
+#   python -m benchmarks.serving --listen --connect 127.0.0.1:7070

@@ -96,6 +96,15 @@ class TuningCache:
     atomically (tmp + rename, like the store manifest); ``hits`` /
     ``misses`` counters let callers (and tests) observe that a reopened
     cache serves without re-tuning.
+
+    An unreadable cache file — truncated/corrupt JSON, a version from a
+    different build, malformed entries — must never take serving down:
+    tuned configs are an optimization, not state. Such a file is treated
+    as empty (``invalid`` is set so callers/tests can observe it), the
+    planner falls back to heuristics, and the next ``save`` rewrites the
+    file in the current format. Stale-GEOMETRY entries need no special
+    casing: the tuning key carries the full arena shape, so an entry
+    measured for a different arena can never be served — it just misses.
     """
 
     def __init__(self, path: str | Path | None = None):
@@ -103,14 +112,23 @@ class TuningCache:
         self.entries: dict[str, TunedEntry] = {}
         self.hits = 0
         self.misses = 0
+        self.invalid = False      # file existed but could not be used
         if self.path is not None and self.path.exists():
-            data = json.loads(self.path.read_text())
-            if data.get("version") != CACHE_VERSION:
-                raise ValueError(
-                    f"tuning cache {self.path}: version "
-                    f"{data.get('version')!r} != {CACHE_VERSION}")
-            self.entries = {k: TunedEntry.from_json(v)
-                            for k, v in data["entries"].items()}
+            try:
+                data = json.loads(self.path.read_text())
+                if data.get("version") != CACHE_VERSION:
+                    raise ValueError(
+                        f"version {data.get('version')!r} != "
+                        f"{CACHE_VERSION}")
+                self.entries = {k: TunedEntry.from_json(v)
+                                for k, v in data["entries"].items()}
+            except (OSError, ValueError, KeyError, TypeError,
+                    AttributeError):
+                # json.JSONDecodeError is a ValueError; missing/mistyped
+                # fields raise KeyError/TypeError/ValueError from
+                # from_json; a non-dict payload raises AttributeError
+                self.entries = {}
+                self.invalid = True
 
     def __len__(self) -> int:
         return len(self.entries)

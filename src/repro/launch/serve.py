@@ -10,6 +10,16 @@ latency/throughput.
         --index-dir /tmp/store --autotune      # tune-then-serve; measured
                                                # configs persist in
                                                # /tmp/store/tuning.json
+    PYTHONPATH=src python -m repro.launch.serve --listen 7070
+                                               # network mode: TCP wire
+                                               # protocol, active loop
+
+``--listen PORT`` swaps load generation for real serving: the chosen
+backend (QueryServer, or the sharded Frontend with --hosts) is wrapped
+in a ServingLoop (dispatcher + scoring workers) behind the binary wire
+protocol — concurrent clients coalesce into shared micro-batches, queue
+overflow answers 429-style REJECTED, Ctrl-C drains and exits. Query it
+with ``repro.serve.NetClient`` or ``benchmarks/serving.py --listen``.
 
 Two load models:
 
@@ -131,7 +141,7 @@ def run_open(server: QueryServer, queries, threshold: float, qps: float
 
 def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
                             max_batch: int, max_wait_s: float,
-                            hedge_after_s: float,
+                            hedge_after_s: float, hedge_auto: bool = False,
                             tile_cache_bytes=None, word_block=None,
                             scatter_threads: int = 4,
                             fail_hosts=(), latency_models=None) -> Frontend:
@@ -152,7 +162,8 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
                for n in nodes if held[n]}
     frontend = Frontend(workers, placement, FrontendConfig(
         max_batch=max_batch, max_wait_s=max_wait_s,
-        hedge_after_s=hedge_after_s, scatter_threads=scatter_threads),
+        hedge_after_s=hedge_after_s, hedge_auto=hedge_auto,
+        scatter_threads=scatter_threads),
         latency_models=latency_models)
     for n in fail_hosts:
         frontend.fail_worker(n)
@@ -188,12 +199,15 @@ def main() -> None:
                          "fake hosts (ShardWorker + Frontend)")
     ap.add_argument("--replication", type=int, default=2,
                     help="replicas per shard in multi-host mode")
-    ap.add_argument("--hedge-after-ms", type=float, default=50.0,
-                    help="backup-request deadline per shard dispatch. "
-                         "In-process dispatch is synchronous, so wall-"
-                         "clock runs apply failover only; backup requests "
-                         "fire in the simulated-latency benches "
-                         "(benchmarks/serving.py run_multihost)")
+    ap.add_argument("--hedge-after-ms", default="50",
+                    help="backup-request deadline per shard dispatch (ms),"
+                         " or 'auto' to derive it from the observed "
+                         "per-worker latency histogram p95 (adapts as "
+                         "traffic flows). In-process dispatch is "
+                         "synchronous, so wall-clock runs apply failover "
+                         "only; backup requests fire in the simulated-"
+                         "latency benches (benchmarks/serving.py "
+                         "run_multihost)")
     ap.add_argument("--fail-host", action="append", default=[],
                     help="mark a host down before the run (repeatable), "
                          "e.g. --fail-host host1")
@@ -221,8 +235,27 @@ def main() -> None:
     ap.add_argument("--scatter-threads", type=int, default=4,
                     help="multi-host concurrent scatter pool size "
                          "(<= 1 = sequential per-shard dispatch)")
+    ap.add_argument("--listen", type=int, default=None, metavar="PORT",
+                    help="serve over TCP instead of generating load: "
+                         "active ServingLoop + wire protocol on this "
+                         "port (0 = ephemeral). Query with "
+                         "repro.serve.NetClient or benchmarks/serving.py "
+                         "--listen. Ctrl-C drains in-flight batches and "
+                         "exits")
+    ap.add_argument("--listen-host", default="127.0.0.1",
+                    help="bind address for --listen")
+    ap.add_argument("--loop-workers", type=int, default=1,
+                    help="scoring worker threads in the serving loop "
+                         "(--listen mode)")
     ap.add_argument("--no-warmup", action="store_true")
     args = ap.parse_args()
+    if args.hedge_after_ms == "auto":
+        hedge_after_ms, hedge_auto = 50.0, True
+    else:
+        try:
+            hedge_after_ms, hedge_auto = float(args.hedge_after_ms), False
+        except ValueError:
+            ap.error("--hedge-after-ms takes a number of ms or 'auto'")
     if args.mode == "open" and args.qps <= 0:
         ap.error("--qps must be > 0 in open-loop mode")
     if args.store_format == "v2" and not args.index_dir:
@@ -250,7 +283,7 @@ def main() -> None:
         server = make_multihost_frontend(
             args.index_dir, hosts=args.hosts, replication=args.replication,
             max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3,
-            hedge_after_s=args.hedge_after_ms / 1e3,
+            hedge_after_s=hedge_after_ms / 1e3, hedge_auto=hedge_auto,
             tile_cache_bytes=tile_bytes, word_block=args.word_block,
             scatter_threads=args.scatter_threads,
             fail_hosts=args.fail_host)
@@ -271,6 +304,30 @@ def main() -> None:
         if args.autotune:
             print(f"autotune on: cache="
                   f"{tuning_cache or 'in-memory'}")
+    if args.listen is not None:
+        # network serving mode: no local load generation — stand up the
+        # active loop + wire protocol and serve until interrupted.
+        from ..serve import NetServer, ServingLoop
+        loop = ServingLoop(server, workers=args.loop_workers)
+        net = NetServer(loop, host=args.listen_host,
+                        port=args.listen).start()
+        host, port = net.address
+        print(f"serving on {host}:{port} (wire protocol "
+              f"v1; query with repro.serve.NetClient, or drive load with "
+              f"python -m benchmarks.serving --listen --connect "
+              f"{host}:{port})")
+        try:
+            while True:
+                time.sleep(10.0)
+                # snapshot under the loop lock: workers are appending to
+                # the metric deques while this thread reads them
+                print(loop.metrics_snapshot().report())
+        except KeyboardInterrupt:
+            print("draining in-flight batches ...")
+        net.close(drain=True)
+        print(server.metrics.snapshot().report())
+        return
+
     queries, origin = make_workload(corpus, args.queries)
 
     if args.mode == "closed":

@@ -10,13 +10,19 @@ Two serving surfaces live here:
 * the multi-host sharded data plane: per-host `ShardWorker`s over
   placement-assigned v2 manifest shards (`worker`) and the scatter/gather
   `Frontend` with hedged dispatch and replica failover (`frontend`).
+* the network front-end: `ServingLoop` (`loop`) wraps either backend in
+  an active dispatcher + scoring workers, and `NetServer`/`NetClient`
+  (`net`) speak the length-prefixed binary wire protocol over TCP —
+  pipelined sessions, 429-style backpressure replies, graceful drain.
 * LM inference steps (`step`) for the model substrate: prefill/decode and
   the greedy generation driver.
 """
 from .batcher import MicroBatch, MicroBatcher
 from .cache import LRUCache, result_key, term_key
 from .frontend import Frontend, FrontendConfig
+from .loop import LoopClosed, ServingLoop
 from .metrics import MetricsSnapshot, ServingMetrics
+from .net import NetClient, NetResult, NetServer
 from .planner import QueryPlan, QueryPlanner
 from .request import QueryRequest, QueryResponse, Status
 from .server import QueryServer, ServerConfig
@@ -28,5 +34,6 @@ __all__ = [
     "MetricsSnapshot", "ServingMetrics", "QueryPlan", "QueryPlanner",
     "QueryRequest", "QueryResponse", "Status", "QueryServer", "ServerConfig",
     "Frontend", "FrontendConfig", "ShardWorker",
+    "LoopClosed", "ServingLoop", "NetClient", "NetResult", "NetServer",
     "make_prefill_step", "make_decode_step", "greedy_generate",
 ]

@@ -14,11 +14,18 @@ count.
 Backpressure is a hard cap on queued requests: ``submit`` refuses beyond
 ``max_queued`` and the caller answers the client with Status.REJECTED
 instead of letting the queue grow without bound. Deadline handling is at
-flush time: expired requests are returned separately and never scored.
+poll time: every poll sweeps EXPIRED requests out of their buckets —
+wherever they sit in the queue, not just at the head — returns them
+separately, and never scores them; ``next_due_at`` accounts for every
+queued deadline so an active dispatcher wakes in time to answer the
+drop.
 
 The batcher is passive (no threads): a driver calls ``submit`` and then
 ``poll``/``drain`` from its own loop, which keeps it deterministic for
-tests and embeddable under any async runtime.
+tests and embeddable under any async runtime. ``repro.serve.loop`` wraps
+it in exactly such a runtime — an active dispatcher thread that sleeps
+until ``next_due_at`` and wakes on submission — so network clients get
+fill/wait-timer flushes without any caller poking the server.
 """
 from __future__ import annotations
 
@@ -75,6 +82,41 @@ class MicroBatcher:
         self._queued += 1
         return True
 
+    def retract_last(self, rid: int) -> bool:
+        """Remove a JUST-submitted request (still the tail of its bucket)
+        — the serving loop's outstanding-work cap uses this to bounce an
+        enqueue it only recognizes as over-budget after the backend's
+        fast paths have had their chance."""
+        for b, q in self._buckets.items():
+            if q and q[-1].request_id == rid:
+                q.pop()
+                self._queued -= 1
+                if not q:
+                    del self._buckets[b]
+                return True
+        return False
+
+    def next_due_at(self) -> float | None:
+        """Earliest server-clock instant at which some queued request
+        becomes due: immediately for a full bucket, else the oldest
+        entry's wait-timer expiry or ANY queued member's deadline,
+        whichever is first. None = nothing queued. The active dispatcher
+        (repro.serve.loop) sleeps until this instant instead of polling
+        on a fixed tick — deadlines of non-head requests count, so their
+        DROPPED replies are never delayed behind a long wait timer."""
+        due = None
+        for q in self._buckets.values():
+            if not q:
+                continue
+            head = q[0]
+            t = (head.submitted_at if len(q) >= self.max_batch
+                 else head.submitted_at + self.max_wait_s)
+            for r in q:
+                if r.deadline is not None:
+                    t = min(t, r.deadline)
+            due = t if due is None else min(due, t)
+        return due
+
     # -- flush -------------------------------------------------------------
     def _take(self, q: "deque[QueryRequest]", now: float, limit: int,
               expired: list[QueryRequest]) -> list[QueryRequest]:
@@ -97,10 +139,18 @@ class MicroBatcher:
         batches: list[MicroBatch] = []
         expired: list[QueryRequest] = []
         for b, q in list(self._buckets.items()):
+            if any(r.expired(now) for r in q):
+                # deadline sweep: expired members ANYWHERE in the bucket
+                # answer DROPPED now — the live ones keep waiting for
+                # fill/timer rather than flushing early on their account
+                keep: "deque[QueryRequest]" = deque()
+                for r in q:
+                    (keep if not r.expired(now) else expired).append(r)
+                self._queued -= len(q) - len(keep)
+                self._buckets[b] = q = keep
             while q:
                 due = (force or len(q) >= self.max_batch
-                       or now - q[0].submitted_at >= self.max_wait_s
-                       or q[0].expired(now))
+                       or now - q[0].submitted_at >= self.max_wait_s)
                 if not due:
                     break
                 live = self._take(q, now, self.max_batch, expired)

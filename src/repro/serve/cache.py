@@ -61,12 +61,12 @@ class LRUCache:
         return self.hits / n if n else 0.0
 
 
-def result_key(terms: np.ndarray, threshold: float) -> tuple:
+def result_key(terms: np.ndarray, threshold: float, top_k: int = 0) -> tuple:
     """Cache key for a whole query: digest of the distinct packed terms
-    plus the coverage threshold (the two inputs scoring depends on)."""
+    plus the selection inputs (coverage threshold, or top-k when > 0)."""
     digest = hashlib.blake2b(np.ascontiguousarray(terms).tobytes(),
                              digest_size=16).digest()
-    return (digest, terms.shape[0], float(threshold))
+    return (digest, terms.shape[0], float(threshold), int(top_k))
 
 
 def term_key(term: np.ndarray) -> int:

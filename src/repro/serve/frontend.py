@@ -38,6 +38,7 @@ from ..core.query import (SearchResult, compile_pattern, coverage_cutoff)
 from ..index.hedge import (AllReplicasFailed, AttemptFailed, HedgedExecutor,
                            ShardSim)
 from ..index.placement import ShardPlacement
+from .base import ServingBackend
 from .batcher import MicroBatch, MicroBatcher
 from .metrics import ServingMetrics
 from .request import QueryRequest, QueryResponse, Status
@@ -54,6 +55,18 @@ class FrontendConfig:
     default_top_k: int = 10     # k for top_k() convenience calls
     hedge_after_s: float = 0.05  # backup-request deadline per shard dispatch
     max_hedges: int = 1
+    # Adaptive hedging (ROADMAP open item): derive hedge_after from the
+    # OBSERVED per-worker latency histogram instead of the fixed config
+    # value. After every scored batch the frontend takes each worker's
+    # dispatch-latency p95 (workers with >= hedge_auto_min_samples
+    # samples) and sets the executor's hedge deadline to the MEDIAN of
+    # those p95s: with one straggler among >= 3 workers the median tracks
+    # a *healthy* worker's p95, so backups fire exactly against dispatches
+    # that exceed what the fleet normally achieves. hedge_after_s is the
+    # initial value until enough samples accumulate.
+    hedge_auto: bool = False
+    hedge_auto_min_samples: int = 16
+    hedge_auto_floor_s: float = 1e-5   # sanity floor (never hedge-at-zero)
     # Concurrent scatter: per-shard dispatches are issued through a thread
     # pool of this size so worker compute overlaps across hosts (<= 1 =
     # sequential). Only active in wall-clock mode — simulated-latency runs
@@ -65,7 +78,7 @@ def _next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
-class Frontend:
+class Frontend(ServingBackend):
     def __init__(self, workers: dict[str, ShardWorker],
                  placement: ShardPlacement,
                  config: FrontendConfig = FrontendConfig(), *,
@@ -99,7 +112,6 @@ class Frontend:
             max_wait_s=config.max_wait_s, max_queued=config.max_queued)
         self.metrics = ServingMetrics()
         self._responses: dict[int, QueryResponse] = {}
-        self._topk: dict[int, int] = {}      # rid -> k (absent = threshold)
         self._next_id = 0
         self._dispatch_seq = 0
         self.n_docs = next(iter(workers.values())).layout.n_docs
@@ -154,14 +166,12 @@ class Frontend:
             self.metrics.record_request(wait_s=0.0, service_s=0.0)
             self._responses[rid] = QueryResponse(rid, Status.OK, empty)
             return rid
-        if top_k is not None:
-            self._topk[rid] = int(top_k)
         req = QueryRequest(rid, terms, terms.shape[0], threshold,
-                           submitted_at=now, deadline=deadline)
+                           submitted_at=now, deadline=deadline,
+                           top_k=int(top_k) if top_k else 0)
         if not self.batcher.submit(req):
             self.metrics.record_rejected()
             self._responses[rid] = QueryResponse(rid, Status.REJECTED)
-            self._topk.pop(rid, None)
         return rid
 
     # -- scatter/gather ------------------------------------------------------
@@ -272,7 +282,10 @@ class Frontend:
             raise failed
         return out
 
-    def _score_batch(self, batch: MicroBatch) -> None:
+    def score_batch(self, batch: MicroBatch) -> None:
+        """Scatter/score/gather one flushed micro-batch. Public so an
+        active serving loop (repro.serve.loop) can pull batches off
+        ``poll_batches`` and score them from worker threads."""
         t0 = self.clock()
         Q, B = batch.size, batch.bucket
         q_pad = _next_pow2(Q)
@@ -283,7 +296,7 @@ class Frontend:
         for i, r in enumerate(batch.requests):
             buf[i, : r.n_terms] = r.terms
             n_valid[i] = r.n_terms
-            k = self._topk.get(r.request_id, 0)
+            k = r.top_k
             topks[i] = k
             if not k:
                 cutoffs[i] = coverage_cutoff(r.threshold, r.n_terms)
@@ -313,7 +326,6 @@ class Frontend:
                 self._responses[r.request_id] = QueryResponse(
                     r.request_id, Status.FAILED,
                     wait_s=max(0.0, t0 - r.submitted_at))
-                self._topk.pop(r.request_id, None)
             return
         # gather in shard order — deterministic however dispatch ran
         for node, lat, (cands, method) in results:
@@ -325,6 +337,8 @@ class Frontend:
         self.metrics.record_hedges(fired=ex.hedges_fired - fired0,
                                    won=ex.hedges_won - won0)
         self.metrics.record_failovers(ex.failovers - fo0)
+        if self.config.hedge_auto:
+            self._adapt_hedge_after()
         self.metrics.record_batch(Q, self.batcher.occupancy(batch), method)
         th, tf, tp, tph = self._tile_counters()
         self.metrics.record_tiles(
@@ -340,7 +354,30 @@ class Frontend:
             self._responses[r.request_id] = QueryResponse(
                 r.request_id, Status.OK, result, method=method,
                 batch_size=Q, wait_s=wait, service_s=service)
-            self._topk.pop(r.request_id, None)
+
+    def _adapt_hedge_after(self) -> None:
+        """hedge_after from the observed per-worker latency histograms:
+        the median across workers of each worker's dispatch-latency p95
+        (see FrontendConfig.hedge_auto). Median, not pooled p95 — with a
+        straggler holding 1/n of the dispatches, the POOLED p95 rises to
+        the straggler's latency and hedging would never fire; the
+        cross-worker median keeps tracking the healthy fleet. Runs after
+        every batch, so the p95 is taken over the RECENT sample window
+        (metrics.worker_recent_s), not the full percentile history."""
+        per_worker = [
+            float(np.percentile(np.fromiter(q, float), 95))
+            for q in self.metrics.worker_recent_s.values()
+            if len(q) >= self.config.hedge_auto_min_samples]
+        if not per_worker:
+            return
+        self.executor.hedge_after = max(self.config.hedge_auto_floor_s,
+                                        float(np.median(per_worker)))
+
+    @property
+    def hedge_after_s(self) -> float:
+        """The hedge deadline currently in force (adapted when
+        ``hedge_auto`` is on, else the configured value)."""
+        return self.executor.hedge_after
 
     def _tile_counters(self) -> tuple[int, int, int, int]:
         ws = self.workers.values()
@@ -369,27 +406,8 @@ class Frontend:
                             scores[order].astype(np.int32),
                             req.n_terms, cut)
 
-    # -- serving loop --------------------------------------------------------
-    def step(self, now: Optional[float] = None, *, force: bool = False
-             ) -> int:
-        now = self.clock() if now is None else now
-        batches, expired = self.batcher.poll(now, force=force)
-        for r in expired:
-            self.metrics.record_dropped()
-            self._topk.pop(r.request_id, None)
-            self._responses[r.request_id] = QueryResponse(
-                r.request_id, Status.DROPPED,
-                wait_s=max(0.0, now - r.submitted_at))
-        n = len(expired)
-        for batch in batches:
-            self._score_batch(batch)
-            n += batch.size
-        return n
-
-    def drain(self) -> None:
-        while len(self.batcher):
-            self.step(force=True)
-
+    # -- serving loop (poll_batches / step / drain / take_response /
+    # retract / pop_responses come from ServingBackend) ----------------------
     def reset_metrics(self, *, clear_caches: bool = False) -> None:
         """Fresh counters (drivers call this after jit warmup). The
         frontend holds no result caches — ``clear_caches`` is accepted for
@@ -399,8 +417,3 @@ class Frontend:
         self.executor.hedges_fired = 0
         self.executor.hedges_won = 0
         self.executor.failovers = 0
-
-    def pop_responses(self) -> dict[int, QueryResponse]:
-        out = self._responses
-        self._responses = {}
-        return out

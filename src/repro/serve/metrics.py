@@ -10,10 +10,19 @@ latencies, hedge fires (backup requests issued by the HedgedExecutor),
 hedge wins (backups that beat the primary), and failovers (dispatches
 served by a non-primary replica because the primary was down); the tile
 counters grew prefetch accounting for the double-buffered shard staging.
+
+The network front-end (repro.serve.loop / repro.serve.net) adds three
+gauges: ``queue_depth`` (batcher backlog, sampled by the dispatcher each
+loop iteration, plus the high-water mark), ``connections`` (open client
+sessions + the lifetime total), and the coalescing rate — batched
+requests per kernel dispatch, the number that tells whether concurrent
+independent clients actually share micro-batches (the bit-sliced
+design's one-kernel-per-batch economics depend on it being > 1).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import Counter, deque
 
 import numpy as np
@@ -40,6 +49,12 @@ class MetricsSnapshot:
     prefetched_tiles: int = 0
     prefetch_hits: int = 0
     prefetch_hit_rate: float = 0.0
+    # serving-loop / network front-end gauges
+    queue_depth: int = 0          # batcher backlog at the last sample
+    max_queue_depth: int = 0      # backlog high-water mark
+    connections: int = 0          # open client sessions
+    total_connections: int = 0    # sessions ever accepted
+    coalesce_rate: float = 0.0    # batched requests per kernel dispatch
     # multi-host dispatch (0 / empty for the single-host QueryServer)
     failed: int = 0          # requests unservable (shard lost all replicas)
     dispatches: int = 0
@@ -61,6 +76,12 @@ class MetricsSnapshot:
              f"hit_rate={self.tile_hit_rate:.2f} "
              f"prefetch_hit_rate={self.prefetch_hit_rate:.2f}] "
              f"dispatch[{meth}]")
+        if self.total_connections or self.max_queue_depth:
+            s += (f" net[conns={self.connections}/"
+                  f"{self.total_connections} "
+                  f"queue_depth={self.queue_depth} "
+                  f"max_depth={self.max_queue_depth} "
+                  f"coalesce={self.coalesce_rate:.2f}]")
         if self.dispatches:
             workers = " ".join(f"{w}={p:.2f}ms"
                                for w, p in sorted(self.worker_p99_ms.items()))
@@ -99,8 +120,18 @@ class ServingMetrics:
         self.hedges_fired = 0
         self.hedges_won = 0
         self.failovers = 0
+        self.batched_requests = 0   # requests served through a micro-batch
+        self.queue_depth = 0
+        self.max_queue_depth = 0
+        self.connections = 0
+        self.total_connections = 0
         self._window = window
+        self._conn_lock = threading.Lock()
         self.worker_lat_s: dict[str, "deque[float]"] = {}
+        # small recent-sample window per worker, for consumers that
+        # re-derive statistics on the hot path (adaptive hedging computes
+        # a p95 per batch — over 128 recent samples, not the full window)
+        self.worker_recent_s: dict[str, "deque[float]"] = {}
 
     # -- recording ---------------------------------------------------------
     def record_request(self, *, wait_s: float, service_s: float,
@@ -117,6 +148,21 @@ class ServingMetrics:
         self.occupancies.append(occupancy)
         self.method_counts[method] += size
         self.n_batches += 1
+        self.batched_requests += size
+
+    def set_queue_depth(self, depth: int) -> None:
+        """Gauge: batcher backlog (sampled by the serving loop)."""
+        self.queue_depth = depth
+        self.max_queue_depth = max(self.max_queue_depth, depth)
+
+    def record_connection(self, delta: int) -> None:
+        """Gauge: a client session opened (+1) or closed (-1). Called
+        from per-connection threads — unlike every other recorder (which
+        the serving loop serializes), this one locks its own counters."""
+        with self._conn_lock:
+            self.connections += delta
+            if delta > 0:
+                self.total_connections += delta
 
     def record_rejected(self) -> None:
         self.rejected += 1
@@ -146,7 +192,9 @@ class ServingMetrics:
         q = self.worker_lat_s.get(worker)
         if q is None:
             q = self.worker_lat_s[worker] = deque(maxlen=self._window)
+            self.worker_recent_s[worker] = deque(maxlen=128)
         q.append(latency_s)
+        self.worker_recent_s[worker].append(latency_s)
 
     def record_hedges(self, *, fired: int, won: int) -> None:
         self.hedges_fired += fired
@@ -174,6 +222,12 @@ class ServingMetrics:
             prefetch_hits=self.prefetch_hits,
             prefetch_hit_rate=(self.prefetch_hits / self.prefetched_tiles
                                if self.prefetched_tiles else 0.0),
+            queue_depth=self.queue_depth,
+            max_queue_depth=self.max_queue_depth,
+            connections=self.connections,
+            total_connections=self.total_connections,
+            coalesce_rate=(self.batched_requests / self.n_batches
+                           if self.n_batches else 0.0),
             failed=self.failed,
             dispatches=self.dispatches,
             hedges_fired=self.hedges_fired,

@@ -1,0 +1,498 @@
+"""Network serving: a length-prefixed binary wire protocol over TCP.
+
+This is the seam that turns the in-process serving library into a real
+multi-user system: any number of client processes connect, pipeline
+queries, and the ServingLoop coalesces them into shared micro-batches —
+the cross-client batching the bit-sliced design's one-kernel-per-batch
+economics depend on.
+
+Framing is deliberately primitive (stdlib ``struct``, no schema
+compiler): every frame is a 4-byte big-endian payload length followed by
+the payload, whose first byte is the message type.
+
+* ``HELLO``  (server -> client, once per connection): protocol version +
+  the index parameters (n_hashes, kmer, canonical, fpr) and document
+  count, so clients can compile DNA patterns to packed terms themselves —
+  the wire carries compiled terms, never raw sequences.
+* ``QUERY``  (client -> server): client-chosen request id (u64, echoed
+  back — ids only need to be unique per connection), threshold (f64, NaN
+  = server default), top_k (u32, 0 = threshold mode), deadline (f64
+  RELATIVE seconds, <= 0 = none; the server rebases it onto its own
+  clock, so client/server clock skew never drops a request), term count,
+  then the packed uint32 little-endian term pairs.
+* ``RESULT`` (server -> client): echoed request id, status byte
+  (OK / REJECTED / DROPPED / FAILED — REJECTED is the 429-style
+  backpressure reply, sent immediately when the queue cap refuses the
+  request), the serving method + batch size, server-side wait/service
+  seconds, and the SearchResult fields (n_terms, cutoff, doc ids,
+  scores) as little-endian int32 arrays. A client reconstructs the exact
+  SearchResult the in-process server produced — bit-identical, which the
+  end-to-end property test asserts against a QueryEngine oracle.
+
+Sessions are pipelined: a client may have any number of queries in
+flight; responses come back in completion order (batch flushes), matched
+by request id. Shutdown is graceful: ``NetServer.close(drain=True)``
+stops accepting, lets the loop drain every queued request, writes every
+response, then closes the sockets — clients see their answers, then EOF.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import queue
+import socket
+import struct
+import threading
+from concurrent.futures import Future
+from typing import Optional
+
+import numpy as np
+
+from ..core.index import IndexParams
+from ..core.query import SearchResult, compile_pattern
+from .loop import LoopClosed, ServingLoop
+from .request import QueryResponse, Status
+
+PROTO_VERSION = 1
+
+MSG_HELLO = 1
+MSG_QUERY = 2
+MSG_RESULT = 3
+
+_LEN = struct.Struct("!I")
+# type, version, n_docs, n_hashes, kmer, canonical, fpr
+_HELLO = struct.Struct("!BHIBBBd")
+# type, rid, threshold, top_k, deadline_rel_s, n_terms
+_QUERY = struct.Struct("!BQdIdI")
+# type, rid, status, batch_size, wait_s, service_s, n_terms, cutoff,
+# n_hits, method_len
+_RESULT = struct.Struct("!BQBIddIiIB")
+
+# wire status byte <-> Status (order is the protocol, do not reorder)
+_STATUS_CODES = (Status.OK, Status.REJECTED, Status.DROPPED, Status.FAILED)
+_STATUS_TO_CODE = {s: i for i, s in enumerate(_STATUS_CODES)}
+
+MAX_FRAME = 64 * 2**20          # sanity bound on a declared payload length
+
+
+# -- framing helpers ---------------------------------------------------------
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """n bytes or None on clean EOF at a frame boundary; raises
+    ConnectionError on EOF mid-frame."""
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if not buf:
+                return None
+            raise ConnectionError("EOF mid-frame")
+        buf += chunk
+    return bytes(buf)
+
+
+def read_frame(sock: socket.socket) -> Optional[bytes]:
+    head = _recv_exact(sock, _LEN.size)
+    if head is None:
+        return None
+    (n,) = _LEN.unpack(head)
+    if n > MAX_FRAME:
+        raise ConnectionError(f"frame length {n} exceeds {MAX_FRAME}")
+    payload = _recv_exact(sock, n)
+    if payload is None:
+        raise ConnectionError("EOF before frame payload")
+    return payload
+
+
+def write_frame(sock: socket.socket, payload: bytes) -> None:
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+# -- message encode/decode ----------------------------------------------------
+
+def encode_hello(params: IndexParams, n_docs: int) -> bytes:
+    return _HELLO.pack(MSG_HELLO, PROTO_VERSION, n_docs, params.n_hashes,
+                       params.kmer, int(params.canonical), params.fpr)
+
+
+def decode_hello(payload: bytes) -> tuple[IndexParams, int, int]:
+    (_, version, n_docs, n_hashes, kmer, canonical,
+     fpr) = _HELLO.unpack(payload)
+    return (IndexParams(n_hashes=n_hashes, fpr=fpr, kmer=kmer,
+                        canonical=bool(canonical)), n_docs, version)
+
+
+def encode_query(rid: int, terms: np.ndarray, threshold: Optional[float],
+                 top_k: int, deadline_s: Optional[float]) -> bytes:
+    th = float("nan") if threshold is None else float(threshold)
+    dl = 0.0 if deadline_s is None else float(deadline_s)
+    body = np.ascontiguousarray(terms, dtype="<u4").tobytes()
+    return _QUERY.pack(MSG_QUERY, rid, th, int(top_k), dl,
+                       terms.shape[0]) + body
+
+
+def decode_query(payload: bytes) -> tuple[int, np.ndarray, Optional[float],
+                                          int, Optional[float]]:
+    (_, rid, th, top_k, dl, n_terms) = _QUERY.unpack_from(payload)
+    body = payload[_QUERY.size:]
+    if len(body) != n_terms * 8:
+        raise ConnectionError(
+            f"QUERY rid={rid}: {len(body)} term bytes != {n_terms} terms")
+    terms = np.frombuffer(body, dtype="<u4").reshape(n_terms, 2)
+    terms = terms.astype(np.uint32)          # native, writable
+    return (rid, terms, None if math.isnan(th) else th, top_k,
+            dl if dl > 0 else None)
+
+
+def encode_result(rid: int, resp: QueryResponse) -> bytes:
+    res = resp.result
+    method = resp.method.encode()[:255]
+    if res is None:
+        head = _RESULT.pack(MSG_RESULT, rid, _STATUS_TO_CODE[resp.status],
+                            resp.batch_size, resp.wait_s, resp.service_s,
+                            0, 0, 0, len(method))
+        return head + method
+    head = _RESULT.pack(MSG_RESULT, rid, _STATUS_TO_CODE[resp.status],
+                        resp.batch_size, resp.wait_s, resp.service_s,
+                        res.n_terms, int(res.threshold),
+                        res.doc_ids.shape[0], len(method))
+    return (head + method
+            + np.ascontiguousarray(res.doc_ids, dtype="<i4").tobytes()
+            + np.ascontiguousarray(res.scores, dtype="<i4").tobytes())
+
+
+def decode_result(payload: bytes) -> tuple[int, "NetResult"]:
+    (_, rid, code, batch_size, wait_s, service_s, n_terms, cutoff,
+     n_hits, mlen) = _RESULT.unpack_from(payload)
+    off = _RESULT.size
+    method = payload[off: off + mlen].decode()
+    off += mlen
+    status = _STATUS_CODES[code]
+    result = None
+    if status == Status.OK:
+        docs = np.frombuffer(payload, dtype="<i4", count=n_hits,
+                             offset=off).astype(np.int32)
+        scores = np.frombuffer(payload, dtype="<i4", count=n_hits,
+                               offset=off + 4 * n_hits).astype(np.int32)
+        result = SearchResult(docs, scores, n_terms, cutoff)
+    return rid, NetResult(status, result, method, batch_size, wait_s,
+                          service_s)
+
+
+# -- server -------------------------------------------------------------------
+
+def _backend_info(backend) -> tuple[IndexParams, int]:
+    """(index params, n_docs) of either serving backend."""
+    index = getattr(backend, "index", None)
+    if index is not None:
+        return index.params, index.n_docs
+    worker = next(iter(backend.workers.values()))
+    return worker.params, backend.n_docs
+
+
+# Per-connection reply backlog (frames) before a client that stopped
+# reading is kicked. Bounded so a stalled session can never hold memory
+# or threads hostage.
+OUTBOX_FRAMES = 1024
+
+
+class _Session:
+    """One accepted connection: the socket plus a bounded reply outbox
+    drained by a dedicated writer thread. Loop threads enqueue replies
+    and NEVER touch the socket — a client that stops reading fills its
+    own outbox and gets kicked, instead of wedging a scoring worker in a
+    blocking sendall and stalling every other client."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.outbox: "queue.Queue[Optional[bytes]]" = queue.Queue(
+            maxsize=OUTBOX_FRAMES)
+        self.writer = threading.Thread(target=self._write_loop,
+                                       name="serve-write", daemon=True)
+        self.writer.start()
+
+    def send(self, payload: bytes) -> None:
+        try:
+            self.outbox.put_nowait(payload)
+        except queue.Full:
+            self.kick()                       # slow reader: drop the session
+
+    def _write_loop(self) -> None:
+        while True:
+            p = self.outbox.get()
+            if p is None:
+                return
+            try:
+                write_frame(self.sock, p)
+            except OSError:
+                return                        # client went away
+
+    def kick(self) -> None:
+        """Force both directions down (unblocks reader AND writer)."""
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+
+    def finish(self, timeout_s: float = 5.0) -> None:
+        """Flush queued replies, stop the writer, close the socket."""
+        try:
+            self.outbox.put(None, timeout=timeout_s)
+        except queue.Full:
+            pass
+        self.writer.join(timeout=timeout_s)
+        self.kick()
+        self.sock.close()
+
+
+class NetServer:
+    """TCP front door over a ServingLoop.
+
+    One accept thread plus one reader thread per connection; responses
+    are enqueued by the loop's completion callbacks into the session's
+    bounded outbox and written by the session's writer thread, so a
+    session is fully pipelined — the reader never waits for scoring, and
+    the scorer never waits for any client's socket."""
+
+    def __init__(self, loop: ServingLoop, *, host: str = "127.0.0.1",
+                 port: int = 0, backlog: int = 128):
+        self.loop = loop
+        self.params, self.n_docs = _backend_info(loop.backend)
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(backlog)
+        self.address: tuple[str, int] = self._listener.getsockname()
+        self._conns: set[_Session] = set()
+        self._conns_lock = threading.Lock()
+        self._accept_thread: Optional[threading.Thread] = None
+        self._closing = False
+
+    @property
+    def metrics(self):
+        return self.loop.backend.metrics
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "NetServer":
+        if not self.loop.running:
+            self.loop.start()
+        self._accept_thread = threading.Thread(
+            target=self._accept, name="serve-accept", daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def close(self, *, drain: bool = True, stop_loop: bool = True) -> None:
+        """Graceful shutdown: stop accepting, drain the loop (every
+        queued request scored and its response enqueued), flush each
+        session's outbox, then close the sockets — clients receive all
+        their answers, then EOF."""
+        self._closing = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+            self._accept_thread = None
+        if stop_loop:
+            self.loop.stop(drain=drain)
+        with self._conns_lock:
+            sessions, self._conns = list(self._conns), set()
+        for s in sessions:
+            s.finish()
+
+    # -- connection handling -------------------------------------------------
+    def _accept(self) -> None:
+        while True:
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return                        # listener closed
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conns_lock:
+                if self._closing:
+                    conn.close()
+                    continue
+                session = _Session(conn)
+                self._conns.add(session)
+            threading.Thread(target=self._serve_conn, args=(session,),
+                             name="serve-conn", daemon=True).start()
+
+    def _serve_conn(self, session: _Session) -> None:
+        conn = session.sock
+        self.metrics.record_connection(+1)
+        owned = True                          # close() may take ownership
+        try:
+            session.send(encode_hello(self.params, self.n_docs))
+            while True:
+                payload = read_frame(conn)
+                if payload is None:
+                    return                    # client closed its session
+                if not payload or payload[0] != MSG_QUERY:
+                    raise ConnectionError(
+                        f"unexpected message "
+                        f"{payload[:1].hex() or 'empty'}")
+                rid, terms, th, top_k, dl = decode_query(payload)
+                deadline = (None if dl is None
+                            else self.loop.clock() + dl)
+
+                def on_done(resp: QueryResponse, rid=rid) -> None:
+                    session.send(encode_result(rid, resp))
+
+                try:
+                    self.loop.submit(terms=terms, threshold=th,
+                                     top_k=top_k or None,
+                                     deadline=deadline, on_done=on_done)
+                except LoopClosed:
+                    # shutting down: 429-style refusal, session stays up
+                    # until the client closes or the server finishes
+                    session.send(encode_result(
+                        rid, QueryResponse(-1, Status.REJECTED)))
+        except (ConnectionError, OSError, struct.error):
+            pass                      # torn/malformed session: drop it
+        finally:
+            self.metrics.record_connection(-1)
+            with self._conns_lock:
+                owned = session in self._conns
+                self._conns.discard(session)
+            if owned:
+                # flush replies already enqueued (e.g. for requests still
+                # in flight when the client half-closed), then close
+                session.finish()
+
+
+# -- client -------------------------------------------------------------------
+
+@dataclasses.dataclass
+class NetResult:
+    """One wire response: status + the reconstructed SearchResult (None
+    unless status == OK) plus the server-side timing split."""
+    status: Status
+    result: Optional[SearchResult]
+    method: str = ""
+    batch_size: int = 0
+    wait_s: float = 0.0
+    service_s: float = 0.0
+
+
+class NetClient:
+    """Pipelined client session.
+
+    ``submit`` returns a Future resolved by the reader thread when the
+    matching RESULT frame arrives; ``search``/``top_k`` are the blocking
+    conveniences. Patterns compile client-side with the index parameters
+    announced in the server's HELLO, so the wire only ever carries packed
+    terms. Thread-safe: many threads may submit on one session."""
+
+    def __init__(self, host: str, port: int, *, timeout_s: float = 30.0):
+        self.timeout_s = timeout_s
+        self._sock = socket.create_connection((host, port),
+                                              timeout=timeout_s)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        hello = read_frame(self._sock)
+        if hello is None or hello[0] != MSG_HELLO:
+            raise ConnectionError("no HELLO from server")
+        self.params, self.n_docs, self.proto_version = decode_hello(hello)
+        if self.proto_version != PROTO_VERSION:
+            raise ConnectionError(
+                f"protocol version {self.proto_version} != {PROTO_VERSION}")
+        self._sock.settimeout(None)           # reader blocks until frames
+        self._wlock = threading.Lock()
+        self._flock = threading.Lock()
+        self._futs: dict[int, Future] = {}
+        self._next_rid = 0
+        self._closed = False
+        self._reader = threading.Thread(target=self._read_loop,
+                                        name="netclient-read", daemon=True)
+        self._reader.start()
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, pattern=None, *, terms: Optional[np.ndarray] = None,
+               threshold: Optional[float] = None,
+               top_k: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> "Future[NetResult]":
+        """Send one query; deadline_s is RELATIVE (server rebases it)."""
+        if (pattern is None) == (terms is None):
+            raise ValueError("pass exactly one of pattern / terms")
+        if terms is None:
+            terms = compile_pattern(pattern, self.params)
+        fut: Future = Future()
+        with self._flock:
+            if self._closed:
+                raise ConnectionError("client is closed")
+            rid = self._next_rid
+            self._next_rid += 1
+            self._futs[rid] = fut
+        payload = encode_query(rid, terms, threshold, int(top_k or 0),
+                               deadline_s)
+        try:
+            with self._wlock:
+                write_frame(self._sock, payload)
+        except OSError as e:
+            with self._flock:
+                self._futs.pop(rid, None)
+            raise ConnectionError(f"send failed: {e}") from e
+        return fut
+
+    def search(self, pattern=None, *, terms: Optional[np.ndarray] = None,
+               threshold: Optional[float] = None,
+               deadline_s: Optional[float] = None,
+               timeout_s: Optional[float] = None) -> NetResult:
+        return self.submit(pattern, terms=terms, threshold=threshold,
+                           deadline_s=deadline_s).result(
+                               timeout_s or self.timeout_s)
+
+    def top_k(self, pattern=None, *, terms: Optional[np.ndarray] = None,
+              k: int = 10, deadline_s: Optional[float] = None,
+              timeout_s: Optional[float] = None) -> NetResult:
+        return self.submit(pattern, terms=terms, top_k=k,
+                           deadline_s=deadline_s).result(
+                               timeout_s or self.timeout_s)
+
+    # -- reader --------------------------------------------------------------
+    def _read_loop(self) -> None:
+        err: Optional[Exception] = None
+        try:
+            while True:
+                payload = read_frame(self._sock)
+                if payload is None:
+                    break
+                if not payload or payload[0] != MSG_RESULT:
+                    raise ConnectionError(
+                        f"unexpected message "
+                        f"{payload[:1].hex() or 'empty'}")
+                rid, res = decode_result(payload)
+                with self._flock:
+                    fut = self._futs.pop(rid, None)
+                if fut is not None:
+                    fut.set_result(res)
+        except Exception as e:
+            # broad on purpose: ANY reader death (torn socket, malformed
+            # frame, decode error like an unknown status byte) must reach
+            # the sweep below, or in-flight futures hang until their
+            # callers' timeouts
+            err = e
+        with self._flock:
+            # mark the session dead BEFORE sweeping, so a submit racing
+            # this sweep either registers early enough to be swept here
+            # or sees _closed and raises — never a forever-pending Future
+            self._closed = True
+            futs, self._futs = list(self._futs.values()), {}
+        for fut in futs:
+            fut.set_exception(err or ConnectionError("session closed"))
+
+    def close(self) -> None:
+        with self._flock:
+            self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_WR)   # polite half-close
+        except OSError:
+            pass
+        self._reader.join(timeout=self.timeout_s)
+        self._sock.close()
+
+    def __enter__(self) -> "NetClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

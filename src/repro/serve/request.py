@@ -37,6 +37,8 @@ class QueryRequest:
     submitted_at: float          # server-clock seconds
     deadline: Optional[float] = None   # absolute; None = never drop
     bucket: int = 0              # padded term length (set by the batcher)
+    top_k: int = 0               # > 0 = exact top-k selection instead of
+    #                              the coverage threshold
 
     def expired(self, now: float) -> bool:
         return self.deadline is not None and now > self.deadline

@@ -30,8 +30,10 @@ from ..core import hashing
 from ..core.arena import DeviceTileCache, common_tile_rows
 from ..core.index import BitSlicedIndex
 from ..core.query import (SearchResult, compile_pattern, plan_dedup_batch,
-                          run_paged, run_paged_dedup, select_hits)
+                          run_paged, run_paged_dedup, select_hits,
+                          select_top_k)
 from ..kernels.autotune import KernelTuner, TuningCache
+from .base import ServingBackend
 from .batcher import MicroBatch, MicroBatcher
 from .cache import LRUCache, result_key, term_key
 from .metrics import ServingMetrics
@@ -76,7 +78,7 @@ def _next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
-class QueryServer:
+class QueryServer(ServingBackend):
     def __init__(self, index: BitSlicedIndex,
                  config: ServerConfig = ServerConfig(), *,
                  clock: Callable[[], float] = time.monotonic):
@@ -117,16 +119,20 @@ class QueryServer:
     # -- submission ---------------------------------------------------------
     def submit(self, pattern=None, *, terms: Optional[np.ndarray] = None,
                threshold: Optional[float] = None,
+               top_k: Optional[int] = None,
                deadline: Optional[float] = None) -> int:
         """Accept one query (pattern or precompiled terms); returns the
-        request id. Fast paths answer immediately; everything else lands
-        in the micro-batcher until the next ``step``/``drain``."""
+        request id. ``top_k`` switches the request from coverage-threshold
+        selection to exact top-k (same total order as QueryEngine.top_k).
+        Fast paths answer immediately; everything else lands in the
+        micro-batcher until the next ``step``/``drain``."""
         if (pattern is None) == (terms is None):
             raise ValueError("pass exactly one of pattern / terms")
         if terms is None:
             terms = compile_pattern(pattern, self.index.params)
         threshold = (self.config.default_threshold if threshold is None
                      else threshold)
+        top_k = int(top_k) if top_k else 0
         now = self.clock()
         rid = self._next_id
         self._next_id += 1
@@ -138,7 +144,7 @@ class QueryServer:
             self._answer(rid, Status.OK, empty, wait=0.0, service=0.0)
             return rid
 
-        key = result_key(terms, threshold)
+        key = result_key(terms, threshold, top_k)
         hit = self.results_cache.get(key)
         if hit is not None:
             self.metrics.record_request(wait_s=0.0, service_s=0.0,
@@ -149,7 +155,7 @@ class QueryServer:
             return rid
 
         if ell == 1 and self.rows_cache.capacity:
-            result, row_hit = self._point_query(terms, threshold)
+            result, row_hit = self._point_query(terms, threshold, top_k)
             service = self.clock() - now
             self.metrics.record_request(wait_s=0.0, service_s=service,
                                         cached=row_hit)
@@ -160,7 +166,8 @@ class QueryServer:
             return rid
 
         req = QueryRequest(rid, terms, ell, threshold,
-                           submitted_at=now, deadline=deadline)
+                           submitted_at=now, deadline=deadline,
+                           top_k=top_k)
         if not self.batcher.submit(req):
             self.metrics.record_rejected()
             self._responses[rid] = QueryResponse(rid, Status.REJECTED)
@@ -184,8 +191,8 @@ class QueryServer:
             anded = anded & g[i]
         return anded.reshape(-1)                                  # [nb * W]
 
-    def _point_query(self, terms: np.ndarray, threshold: float
-                     ) -> tuple[SearchResult, bool]:
+    def _point_query(self, terms: np.ndarray, threshold: float,
+                     top_k: int = 0) -> tuple[SearchResult, bool]:
         """Returns (result, served-from-row-cache)."""
         k = term_key(terms[0])
         row = self.rows_cache.get(k)
@@ -195,7 +202,16 @@ class QueryServer:
             self.rows_cache.put(k, row)
         bits = ((row[:, None] >> np.arange(32, dtype=np.uint32)) & 1)
         scores = bits.astype(np.int32).reshape(-1)[self._host_slot]
-        return select_hits(scores, 1, threshold), hit
+        return self._select(scores, 1, threshold, top_k), hit
+
+    @staticmethod
+    def _select(scores: np.ndarray, n_terms: int, threshold: float,
+                top_k: int) -> SearchResult:
+        """Per-request selection: coverage threshold, or exact top-k under
+        QueryEngine's (-score, doc id) total order when top_k > 0."""
+        if top_k:
+            return select_top_k(scores, n_terms, top_k)
+        return select_hits(scores, n_terms, threshold)
 
     # -- batch scoring -------------------------------------------------------
     def _run_plan(self, plan, fn, terms_dev, valid_dev) -> np.ndarray:
@@ -232,7 +248,10 @@ class QueryServer:
         return run_paged_dedup(self.tiles, self.planner.shard_plans, fn,
                                buf, n_valid)
 
-    def _score_batch(self, batch: MicroBatch) -> None:
+    def score_batch(self, batch: MicroBatch) -> None:
+        """Plan, dispatch, and answer one flushed micro-batch. Public so
+        an active serving loop (repro.serve.loop) can pull batches off
+        ``poll_batches`` and score them from worker threads."""
         t0 = self.clock()
         Q, B = batch.size, batch.bucket
         plan = self.planner.plan(B, Q)
@@ -280,13 +299,15 @@ class QueryServer:
                 prefetched=self.tiles.prefetched - tiles0[2],
                 prefetch_hits=self.tiles.prefetch_hits - tiles0[3])
         for i, r in enumerate(batch.requests):
-            result = select_hits(scores[i], r.n_terms, r.threshold)
+            result = self._select(scores[i], r.n_terms, r.threshold,
+                                  r.top_k)
             wait = max(0.0, t0 - r.submitted_at)
             self.metrics.record_request(wait_s=wait, service_s=service)
             self._responses[r.request_id] = QueryResponse(
                 r.request_id, Status.OK, result, method=method,
                 batch_size=Q, wait_s=wait, service_s=service)
-            self.results_cache.put(result_key(r.terms, r.threshold), result)
+            self.results_cache.put(
+                result_key(r.terms, r.threshold, r.top_k), result)
 
     def _answer(self, rid: int, status: Status, result, *, wait: float,
                 service: float) -> None:
@@ -294,29 +315,8 @@ class QueryServer:
         self._responses[rid] = QueryResponse(rid, status, result,
                                              wait_s=wait, service_s=service)
 
-    # -- serving loop --------------------------------------------------------
-    def step(self, now: Optional[float] = None, *, force: bool = False
-             ) -> int:
-        """Score every micro-batch due at ``now``; returns requests answered
-        this step (scored + dropped)."""
-        now = self.clock() if now is None else now
-        batches, expired = self.batcher.poll(now, force=force)
-        for r in expired:
-            self.metrics.record_dropped()
-            self._responses[r.request_id] = QueryResponse(
-                r.request_id, Status.DROPPED,
-                wait_s=max(0.0, now - r.submitted_at))
-        n = len(expired)
-        for batch in batches:
-            self._score_batch(batch)
-            n += batch.size
-        return n
-
-    def drain(self) -> None:
-        """Flush every queued request regardless of batch fill or timers."""
-        while len(self.batcher):
-            self.step(force=True)
-
+    # -- serving loop (poll_batches / step / drain / take_response /
+    # retract / pop_responses come from ServingBackend) ----------------------
     def reset_metrics(self, *, clear_caches: bool = False) -> None:
         """Fresh counters (drivers call this after jit warmup so compile
         time does not pollute the latency percentiles). clear_caches=True
@@ -328,8 +328,3 @@ class QueryServer:
         if clear_caches:
             self.results_cache = LRUCache(self.results_cache.capacity)
             self.rows_cache = LRUCache(self.rows_cache.capacity)
-
-    def pop_responses(self) -> dict[int, QueryResponse]:
-        out = self._responses
-        self._responses = {}
-        return out

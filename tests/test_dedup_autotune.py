@@ -288,11 +288,15 @@ def test_tuning_cache_round_trip(tmp_path):
     assert data["version"] == 1 and "k1" in data["entries"]
 
 
-def test_tuning_cache_version_mismatch(tmp_path):
+def test_tuning_cache_version_mismatch_falls_back_empty(tmp_path):
+    """A cache written by a different build must not take serving down:
+    the file is treated as empty (invalid flag set) and heuristics apply
+    until re-tuning rewrites it in the current format."""
     path = tmp_path / "tuning.json"
     path.write_text(json.dumps({"version": 999, "entries": {}}))
-    with pytest.raises(ValueError):
-        TuningCache(path)
+    cache = TuningCache(path)
+    assert cache.invalid and len(cache) == 0
+    assert cache.get("anything") is None          # pure miss, no crash
 
 
 def test_tuner_persists_and_reopens_without_retuning(dedup_index, tmp_path):

@@ -1,0 +1,505 @@
+"""Network serving tests: the active ServingLoop, the TCP wire protocol,
+and the serving-policy satellites that ride on them.
+
+The load-bearing invariant mirrors the rest of the serving stack: any
+result that crosses the socket must be BIT-IDENTICAL to a synchronous
+QueryEngine run — threshold and top-k alike — no matter how concurrent
+clients' queries were coalesced into micro-batches. On top of that, the
+failure paths must be loud, not silent: queue-cap overflow answers the
+CLIENT with a REJECTED reply (never a hang, never a dead server), expired
+deadlines come back DROPPED, and graceful shutdown drains every in-flight
+request before the socket closes.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import IndexParams, QueryEngine, build_compact, load_index
+from repro.core.query import compile_pattern
+from repro.data import make_corpus, make_queries
+from repro.index import ShardPlacement, ShardSim, build_compact_streaming
+from repro.kernels.autotune import (KernelTuner, TunedEntry, TuningCache,
+                                    tuning_key)
+from repro.launch.serve import run_closed
+from repro.serve import (Frontend, FrontendConfig, LoopClosed, NetClient,
+                         NetServer, QueryServer, ServerConfig, ServingLoop,
+                         ShardWorker, Status)
+from repro.serve.net import (decode_query, decode_result, encode_query,
+                             encode_result)
+from repro.serve.request import QueryResponse
+
+PARAMS = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    c = make_corpus(96, k=15, mean_length=400, sigma=1.0, seed=11)
+    index = build_compact(c.doc_terms, PARAMS, block_docs=32, row_align=64)
+    store = tmp_path_factory.mktemp("net-store") / "v2"
+    mapped, _ = build_compact_streaming(c.doc_terms, store, PARAMS,
+                                        block_docs=32, row_align=64)
+    assert mapped.storage.n_shards >= 3    # placements spread over hosts
+    return c, index, store
+
+
+@pytest.fixture(scope="module")
+def oracle(built):
+    _, index, _ = built
+    return QueryEngine(index)
+
+
+def _serve(index, **cfg):
+    """(server, loop, netserver) over an ephemeral localhost port."""
+    server = QueryServer(index, ServerConfig(**cfg))
+    net = NetServer(ServingLoop(server)).start()
+    return server, net
+
+
+def _assert_identical(got, want):
+    assert np.array_equal(got.doc_ids, want.doc_ids)
+    assert np.array_equal(got.scores, want.scores)
+    assert got.n_terms == want.n_terms
+    assert got.threshold == want.threshold
+
+
+# --------------------------------------------------------------------------
+# Wire protocol round trips (no sockets: pure encode/decode)
+# --------------------------------------------------------------------------
+
+def test_wire_query_round_trip():
+    terms = np.array([[1, 2], [3, 4], [5, 6]], dtype=np.uint32)
+    payload = encode_query(42, terms, 0.75, 7, 1.5)
+    rid, t2, th, k, dl = decode_query(payload)
+    assert rid == 42 and th == 0.75 and k == 7 and dl == 1.5
+    assert np.array_equal(t2, terms) and t2.dtype == np.uint32
+    # defaults: NaN threshold -> None, deadline 0 -> None
+    rid, t2, th, k, dl = decode_query(encode_query(0, terms, None, 0, None))
+    assert th is None and dl is None and k == 0
+
+
+def test_wire_result_round_trip():
+    from repro.core.query import SearchResult
+    res = SearchResult(np.array([5, 2, 9], np.int32),
+                       np.array([7, 6, 6], np.int32), 8, 6)
+    resp = QueryResponse(0, Status.OK, res, method="lookup", batch_size=4,
+                         wait_s=0.25, service_s=0.125)
+    rid, out = decode_result(encode_result(3, resp))
+    assert rid == 3 and out.status == Status.OK
+    assert out.method == "lookup" and out.batch_size == 4
+    assert out.wait_s == 0.25 and out.service_s == 0.125
+    _assert_identical(out.result, res)
+    # non-OK statuses carry no result
+    for status in (Status.REJECTED, Status.DROPPED, Status.FAILED):
+        rid, out = decode_result(
+            encode_result(9, QueryResponse(0, status)))
+        assert out.status == status and out.result is None
+
+
+# --------------------------------------------------------------------------
+# End-to-end: concurrent clients, randomized workloads, oracle identity
+# --------------------------------------------------------------------------
+
+def test_net_property_concurrent_clients(built, oracle):
+    """N concurrent fake clients push randomized workloads (mixed term
+    lengths, thresholds, top-k, duplicate queries) through the socket;
+    every response must be bit-identical to the QueryEngine oracle, and
+    the kernel dispatch count must stay below the request count (the
+    whole point of the shared micro-batch loop)."""
+    c, index, _ = built
+    server, net = _serve(index, max_batch=8, max_wait_s=0.02)
+    n_clients, per_client = 4, 18
+    failures: list[str] = []
+    done: list[int] = []
+
+    def client(ci: int) -> None:
+        rng = np.random.default_rng(100 + ci)
+        qs = []
+        for length in (40, 80, 160, 320):
+            got, _ = make_queries(c, n_pos=3, n_neg=2, length=length,
+                                  seed=200 + 7 * ci + length)
+            qs.extend(got)
+        try:
+            with NetClient(*net.address, timeout_s=120.0) as cl:
+                assert cl.params == PARAMS and cl.n_docs == index.n_docs
+                flight = []
+                for i in range(per_client):
+                    q = qs[int(rng.integers(len(qs)))]   # duplicates happen
+                    th = float(rng.choice([0.5, 0.8]))
+                    k = int(rng.choice([0, 3]))
+                    fut = cl.submit(q, threshold=None if k else th,
+                                    top_k=k or None)
+                    flight.append((q, th, k, fut))
+                for q, th, k, fut in flight:
+                    r = fut.result(120.0)
+                    assert r.status == Status.OK
+                    want = (oracle.top_k(q, k=k) if k
+                            else oracle.search(q, threshold=th))
+                    _assert_identical(r.result, want)
+                    done.append(1)
+        except Exception as e:             # pragma: no cover - diagnostics
+            failures.append(f"client {ci}: {e!r}")
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    net.close()
+    assert not failures, failures
+    assert len(done) == n_clients * per_client
+    snap = server.metrics.snapshot()
+    assert snap.served == n_clients * per_client
+    # coalescing really happened: fewer kernel dispatches than requests
+    # (shared micro-batches and/or result-cache hits on duplicates)
+    assert snap.batches < snap.served
+    assert snap.total_connections == n_clients
+    # connection gauge returns to zero once the reader threads wind down
+    deadline = time.monotonic() + 5.0
+    while (server.metrics.connections and time.monotonic() < deadline):
+        time.sleep(0.01)
+    assert server.metrics.connections == 0
+
+
+def test_net_single_client_threshold_and_topk(built, oracle):
+    """Deterministic single-session check of both selection modes plus
+    the empty-query fast path."""
+    c, index, _ = built
+    _, net = _serve(index, max_batch=4, max_wait_s=0.001)
+    q, _ = make_queries(c, n_pos=2, n_neg=1, length=120, seed=5)
+    try:
+        with NetClient(*net.address) as cl:
+            for pattern in q:
+                _assert_identical(
+                    cl.search(pattern, threshold=0.6).result,
+                    oracle.search(pattern, threshold=0.6))
+                _assert_identical(
+                    cl.top_k(pattern, k=5).result,
+                    oracle.top_k(pattern, k=5))
+            # empty pattern (shorter than k) answers OK with zero hits
+            r = cl.search(np.zeros(3, np.uint8))
+            assert r.status == Status.OK and r.result.doc_ids.size == 0
+    finally:
+        net.close()
+
+
+def test_net_multihost_frontend_over_socket(built):
+    """The wire protocol serves the sharded Frontend identically to the
+    single-host path: socket results over 3 fake hosts == QueryEngine."""
+    c, index, store = built
+    eng = QueryEngine(load_index(store))
+    nodes = ["h0", "h1", "h2"]
+    place = ShardPlacement.for_store(store, nodes, replication=2)
+    held = place.replica_assignment()
+    workers = {n: ShardWorker(n, store, held[n]) for n in nodes if held[n]}
+    fe = Frontend(workers, place,
+                  FrontendConfig(max_batch=8, max_wait_s=0.005))
+    net = NetServer(ServingLoop(fe)).start()
+    qs, _ = make_queries(c, n_pos=3, n_neg=2, length=120, seed=9)
+    try:
+        with NetClient(*net.address, timeout_s=120.0) as cl:
+            futs = [cl.submit(q, threshold=0.8) for q in qs]
+            futs += [cl.submit(q, top_k=4) for q in qs]
+            for q, f in zip(qs, futs[: len(qs)]):
+                _assert_identical(f.result(120.0).result,
+                                  eng.search(q, threshold=0.8))
+            for q, f in zip(qs, futs[len(qs):]):
+                _assert_identical(f.result(120.0).result,
+                                  eng.top_k(q, k=4))
+    finally:
+        net.close()
+
+
+# --------------------------------------------------------------------------
+# Backpressure / deadline / drain regressions
+# --------------------------------------------------------------------------
+
+def test_net_backpressure_rejects_do_not_hang(built, oracle):
+    """Queue-cap overflow must answer the CLIENT with a REJECTED reply —
+    no silent hang, no server crash — and the accepted requests must
+    still complete (drained at close)."""
+    c, index, _ = built
+    cap = 4
+    # wait timer far beyond the test: accepted requests SIT in the
+    # batcher, so the cap overflow is deterministic, and close(drain)
+    # must flush them
+    server, net = _serve(index, max_batch=64, max_wait_s=60.0,
+                         max_queued=cap, result_cache=0, row_cache=0)
+    qs, _ = make_queries(c, n_pos=6, n_neg=2, length=120, seed=13)
+    cl = NetClient(*net.address, timeout_s=60.0)
+    futs = [cl.submit(q, threshold=0.8) for q in qs[: cap + 3]]
+    # overflow replies arrive while the accepted 4 are still queued
+    rejected = [f.result(30.0) for f in futs[cap:]]
+    assert [r.status for r in rejected] == [Status.REJECTED] * 3
+    assert all(r.result is None for r in rejected)
+    for f in futs[:cap]:
+        assert not f.done()
+    # graceful close drains the accepted requests: OK + bit-identical
+    net.close(drain=True)
+    for q, f in zip(qs, futs[:cap]):
+        r = f.result(60.0)
+        assert r.status == Status.OK
+        _assert_identical(r.result, oracle.search(q, threshold=0.8))
+    snap = server.metrics.snapshot()
+    assert snap.rejected == 3 and snap.served == cap
+    cl.close()
+
+
+def test_net_deadline_drops_at_flush(built, oracle):
+    """An expired deadline answers DROPPED — the request is never scored
+    and the client is told, not left waiting. Holds even for a deadline
+    QUEUED BEHIND a no-deadline request: the dispatcher wakes on any
+    queued member's deadline, not just the bucket head's timer."""
+    c, index, _ = built
+    server, net = _serve(index, max_batch=64, max_wait_s=60.0,
+                         result_cache=0, row_cache=0)
+    qs, _ = make_queries(c, n_pos=2, n_neg=0, length=120, seed=17)
+    cl = NetClient(*net.address, timeout_s=60.0)
+    # same bucket: the no-deadline head sits on the 60s timer; the
+    # deadlined request behind it must still be answered on time
+    head_fut = cl.submit(qs[0])
+    r = cl.submit(qs[1], deadline_s=0.05).result(30.0)
+    assert r.status == Status.DROPPED and r.result is None
+    assert r.wait_s >= 0.05                   # it queued until the deadline
+    assert not head_fut.done()                # the head keeps waiting
+    net.close(drain=True)                     # ... and still gets scored
+    rh = head_fut.result(60.0)
+    assert rh.status == Status.OK
+    _assert_identical(rh.result, oracle.search(qs[0]))
+    snap = server.metrics.snapshot()
+    assert snap.dropped == 1 and snap.served == 1
+    cl.close()
+
+
+def test_net_graceful_drain_scores_in_flight(built, oracle):
+    """close(drain=True) scores every queued request and writes every
+    response before the socket goes down."""
+    c, index, _ = built
+    server, net = _serve(index, max_batch=64, max_wait_s=60.0,
+                         result_cache=0, row_cache=0)
+    qs, _ = make_queries(c, n_pos=4, n_neg=2, length=80, seed=19)
+    cl = NetClient(*net.address, timeout_s=60.0)
+    futs = [cl.submit(q, threshold=0.7) for q in qs]
+    time.sleep(0.05)                          # all queued, none scored
+    assert server.metrics.snapshot().served == 0
+    net.close(drain=True)
+    for q, f in zip(qs, futs):
+        r = f.result(60.0)
+        assert r.status == Status.OK
+        _assert_identical(r.result, oracle.search(q, threshold=0.7))
+    assert server.metrics.snapshot().served == len(qs)
+    cl.close()
+
+
+def test_loop_rejects_after_stop(built):
+    _, index, _ = built
+    loop = ServingLoop(QueryServer(index, ServerConfig())).start()
+    loop.stop()
+    with pytest.raises(LoopClosed):
+        loop.submit(terms=np.ones((4, 2), np.uint32),
+                    on_done=lambda r: None)
+
+
+def test_loop_stop_without_drain_rejects_queued(built):
+    """drain=False shutdown still fires every callback — queued requests
+    come back REJECTED instead of being scored (or lost)."""
+    _, index, _ = built
+    server = QueryServer(index, ServerConfig(max_batch=64, max_wait_s=60.0,
+                                             result_cache=0, row_cache=0))
+    loop = ServingLoop(server).start()
+    got: dict[int, QueryResponse] = {}
+    terms = compile_pattern(np.full(60, 1, np.uint8), PARAMS)
+    rids = [loop.submit(terms=terms, on_done=lambda r, i=i: got.__setitem__(
+        i, r)) for i in range(3)]
+    assert all(r >= 0 for r in rids)
+    loop.stop(drain=False)
+    assert sorted(got) == [0, 1, 2]
+    assert all(r.status == Status.REJECTED for r in got.values())
+
+
+def test_loop_survives_scoring_failure(built, oracle):
+    """A kernel/device exception mid-batch answers that batch FAILED and
+    the loop keeps serving — the worker must not die with the in-flight
+    accounting leaked (which would wedge every later request)."""
+    c, index, _ = built
+    server = QueryServer(index, ServerConfig(max_batch=4, max_wait_s=0.0,
+                                             result_cache=0, row_cache=0))
+    real, boom = server.score_batch, {"armed": True}
+
+    def flaky(batch):
+        if boom.pop("armed", None):
+            raise RuntimeError("injected kernel failure")
+        return real(batch)
+
+    server.score_batch = flaky
+    loop = ServingLoop(server).start()
+    (q1,), _ = make_queries(c, n_pos=1, n_neg=0, length=120, seed=31)
+    (q2,), _ = make_queries(c, n_pos=1, n_neg=0, length=160, seed=33)
+    got: dict[str, QueryResponse] = {}
+    evs = {k: threading.Event() for k in ("a", "b")}
+
+    def cb(key):
+        return lambda r: (got.__setitem__(key, r), evs[key].set())
+
+    loop.submit(terms=compile_pattern(q1, PARAMS), on_done=cb("a"))
+    assert evs["a"].wait(30) and got["a"].status == Status.FAILED
+    assert server.metrics.failed == 1
+    # the loop is still alive and scoring correctly
+    loop.submit(terms=compile_pattern(q2, PARAMS), threshold=0.8,
+                on_done=cb("b"))
+    assert evs["b"].wait(30) and got["b"].status == Status.OK
+    _assert_identical(got["b"].result, oracle.search(q2, threshold=0.8))
+    loop.stop()
+
+
+def test_overload_still_serves_fast_paths(built):
+    """The outstanding-work cap only rejects requests that would occupy
+    the queue: a result-cache hit costs nothing and stays servable even
+    with the queue full."""
+    c, index, _ = built
+    server = QueryServer(index, ServerConfig(max_batch=64, max_wait_s=60.0,
+                                             max_queued=2, row_cache=0))
+    (hot,), _ = make_queries(c, n_pos=1, n_neg=0, length=120, seed=37)
+    rid = server.submit(hot, threshold=0.8)   # prime the result cache
+    server.drain()
+    want = server.pop_responses()[rid].result
+
+    loop = ServingLoop(server).start()
+    try:
+        got: list[QueryResponse] = []
+        fills, _ = make_queries(c, n_pos=2, n_neg=1, length=160, seed=39)
+        for q in fills[:2]:                   # fill the cap (timer 60s)
+            loop.submit(terms=compile_pattern(q, PARAMS),
+                        on_done=lambda r: None)
+        assert loop.pending() == 2
+        # over cap: an uncached query bounces ...
+        loop.submit(terms=compile_pattern(fills[2], PARAMS),
+                    on_done=got.append)
+        assert got[-1].status == Status.REJECTED
+        # ... but the cached one is served (fast path, no queue space)
+        loop.submit(terms=compile_pattern(hot, PARAMS), threshold=0.8,
+                    on_done=got.append)
+        assert got[-1].status == Status.OK and got[-1].cached
+        _assert_identical(got[-1].result, want)
+    finally:
+        loop.stop()
+
+
+# --------------------------------------------------------------------------
+# Adaptive hedging (hedge_after from observed per-worker p95)
+# --------------------------------------------------------------------------
+
+def test_hedge_auto_adapts_to_straggler(built):
+    """Deterministic SimClock scenario: with hedge_auto the frontend
+    derives hedge_after from the healthy workers' observed p95 and starts
+    firing backups against the straggler — without any configured
+    deadline ever matching the latency model."""
+    c, _, store = built
+    base, straggle = 1e-3, 20.0
+    # these node names HRW-spread the fixture store's 3 shards across 3
+    # distinct owners (asserted below) — the median-of-p95 rule needs the
+    # straggler to be a minority voice among the sampled workers
+    nodes = ["a", "b", "c"]
+
+    def frontend(auto: bool) -> Frontend:
+        place = ShardPlacement.for_store(store, nodes, replication=2)
+        held = place.replica_assignment()
+        workers = {n: ShardWorker(n, store, held[n])
+                   for n in nodes if held[n]}
+        models = {n: ShardSim(n, base_latency=base) for n in nodes}
+        fe = Frontend(workers, place, FrontendConfig(
+            max_batch=8, max_wait_s=0.0,
+            hedge_after_s=1e9,               # initial: effectively off
+            hedge_auto=auto, hedge_auto_min_samples=4),
+            latency_models=models)
+        victim = fe.placement.owner(0)
+        # the median-of-p95 rule needs the victim to be a minority voice
+        assert len({fe.placement.owner(g)
+                    for g in range(fe.placement.n_shards)}) >= 3
+        models[victim].straggle_until = 1e9
+        models[victim].straggle_factor = straggle
+        return fe
+
+    queries, _ = make_queries(c, n_pos=40, n_neg=24, length=120, seed=23)
+
+    fixed = frontend(auto=False)
+    run_closed(fixed, queries, 0.8, 8)
+    assert fixed.metrics.hedges_fired == 0
+    assert fixed.hedge_after_s == 1e9        # never adapted
+
+    auto = frontend(auto=True)
+    run_closed(auto, queries, 0.8, 8)
+    # adapted to the healthy fleet's observed p95: it starts at base and
+    # drifts up a little as hedged wins (hedge_after + base, attributed
+    # to the winning backup) enter the histograms, but stays an order of
+    # magnitude below the straggler's 20x latency
+    assert base <= auto.hedge_after_s <= 5 * base
+    assert auto.hedge_after_s < base * straggle / 4
+    # and the adapted deadline actually fires backups that win
+    assert auto.metrics.hedges_fired > 0
+    assert auto.metrics.hedges_won > 0
+    # latency beats the fixed-deadline (never-hedging) run — p50, since
+    # the pre-adaptation warmup batches still ate the straggler latency
+    assert (auto.metrics.percentile_ms(50)
+            < fixed.metrics.percentile_ms(50))
+
+
+# --------------------------------------------------------------------------
+# Autotune cache invalidation
+# --------------------------------------------------------------------------
+
+def test_tuning_cache_corrupt_file_falls_back(tmp_path, built):
+    """A truncated/corrupt tuning.json must not crash serving: the cache
+    opens empty (invalid flag set) and the planner uses heuristics."""
+    c, index, _ = built
+    path = tmp_path / "tuning.json"
+    path.write_text('{"version": 1, "entries": {"k":')   # truncated json
+    cache = TuningCache(path)
+    assert cache.invalid and len(cache) == 0
+
+    server = QueryServer(index, ServerConfig(
+        max_batch=4, max_wait_s=0.0, tuning_cache=str(path)))
+    plan = server.planner.plan(64, 4)
+    assert plan.word_block is None and plan.grid_order == "wq"  # heuristics
+    (q,), _ = make_queries(c, n_pos=1, n_neg=0, length=120, seed=29)
+    rid = server.submit(q, threshold=0.8)
+    server.drain()
+    assert server.pop_responses()[rid].status == Status.OK
+
+
+def test_tuning_cache_malformed_entries_fall_back(tmp_path):
+    path = tmp_path / "tuning.json"
+    path.write_text(json.dumps(
+        {"version": 1, "entries": {"k": {"method": "lookup"}}}))  # fields
+    cache = TuningCache(path)                                     # missing
+    assert cache.invalid and len(cache) == 0
+    # non-dict payload
+    path.write_text(json.dumps([1, 2, 3]))
+    assert TuningCache(path).invalid
+
+
+def test_tuning_cache_stale_geometry_never_served(tmp_path, built):
+    """An entry measured for a DIFFERENT arena geometry must not be
+    served: the tuning key carries the arena shape, so a mismatched
+    index simply misses and heuristics apply."""
+    _, index, _ = built
+    path = tmp_path / "tuning.json"
+    cache = TuningCache(path)
+    stale_key = tuning_key(999999, 7, 1, 3, "lookup", 64, 4)  # wrong shape
+    cache.put(stale_key, TunedEntry("lookup", 8, 8, "qw", 1.0,
+                                    dedup_threshold=0.0))
+    cache.save()
+
+    reopened = TuningCache(path)
+    assert not reopened.invalid and len(reopened) == 1
+    tuner = KernelTuner.for_index(index, reopened, enabled=False)
+    assert tuner.key("lookup", 64, 4) != stale_key
+    assert tuner.entry("lookup", 64, 4) is None      # miss, not the stale
+    assert reopened.hits == 0 and tuner.tunes == 0
+
+    server = QueryServer(index, ServerConfig(tuning_cache=str(path)))
+    plan = server.planner.plan(64, 4)
+    assert plan.word_block is None and plan.grid_order == "wq"

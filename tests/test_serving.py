@@ -81,6 +81,19 @@ def test_batcher_drops_expired():
     assert [r.request_id for mb in batches for r in mb.requests] == [1]
 
 
+def test_batcher_sweeps_non_head_deadlines():
+    """A deadline BEHIND the bucket head still wakes the poll and is
+    dropped on time — the live head keeps waiting for fill/timer."""
+    b = MicroBatcher(term_pad=64, max_batch=8, max_wait_s=100.0)
+    b.submit(_req(0, 10, now=0.0))                  # no deadline (head)
+    b.submit(_req(1, 10, now=0.0, deadline=1.0))    # queued behind it
+    assert b.next_due_at() == 1.0                   # deadline, not timer
+    batches, expired = b.poll(now=2.0)
+    assert [r.request_id for r in expired] == [1]
+    assert batches == [] and len(b) == 1            # head still queued
+    assert b.next_due_at() == 100.0                 # back to the timer
+
+
 # --------------------------------------------------------------------------
 # LRUCache
 # --------------------------------------------------------------------------
