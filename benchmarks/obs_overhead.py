@@ -1,0 +1,139 @@
+"""Observability overhead smoke: tracing must be (near) free.
+
+Drives the SAME pipelined query stream through two in-process socket
+servers — one with tracing + kernel profiling on (the default), one with
+both off and a non-tracing client — and compares end-to-end wall clock.
+Passes are interleaved (on, off, on, off, ...) and the medians compared,
+so drift in machine load hits both sides equally. The bench FAILS (exit
+code 1) if the traced path is more than ``--max-overhead-pct`` slower.
+
+Along the way it asserts the STATS frame actually parses in both
+formats — the JSON snapshot and the Prometheus text exposition — since
+CI is the only place a format skew between `render_prometheus` and
+`parse_prometheus` would otherwise hide.
+
+    PYTHONPATH=src python -m benchmarks.obs_overhead \\
+        --json results/BENCH_obs_overhead.json
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.launch.serve import make_workload
+from repro.serve import (NetClient, NetServer, QueryServer, ServerConfig,
+                         ServingLoop, Status)
+
+from .common import built_indexes, emit
+
+
+def _drive(address, queries, *, trace: bool, window: int = 16) -> None:
+    """One pipelined closed-loop pass over ``queries``; every response
+    must be OK (a reject would make the comparison meaningless)."""
+    with NetClient(*address, timeout_s=120.0, trace=trace) as cl:
+        pending = []
+        for q in queries:
+            pending.append(cl.submit(q, threshold=0.8))
+            if len(pending) >= window:
+                for f in pending:
+                    assert f.result(120.0).status == Status.OK
+                pending = []
+        for f in pending:
+            assert f.result(120.0).status == Status.OK
+
+
+def run(n_docs: int = 128, n_queries: int = 64, repeats: int = 5) -> dict:
+    c, _, compact = built_indexes(n_docs)
+    queries, _ = make_workload(c, n_queries, seed=79)
+
+    def server(traced: bool):
+        cfg = ServerConfig(max_batch=32, max_wait_s=0.002,
+                           result_cache=0, row_cache=0,
+                           tracing=traced, profile_kernels=traced)
+        return QueryServer(compact, cfg)
+
+    servers = {True: server(True), False: server(False)}
+    nets = {k: NetServer(ServingLoop(s)).start()
+            for k, s in servers.items()}
+    try:
+        # jit warmup on both (the compile cache is process-global, but the
+        # warm pass also populates row plans / sockets / thread pools)
+        for traced, net in nets.items():
+            _drive(net.address, queries, trace=traced)
+            servers[traced].reset_metrics(clear_caches=True)
+
+        walls: dict[bool, list[float]] = {True: [], False: []}
+        for _ in range(repeats):
+            for traced in (True, False):      # interleaved: drift-neutral
+                t0 = time.perf_counter()
+                _drive(nets[traced].address, queries, trace=traced)
+                walls[traced].append(time.perf_counter() - t0)
+        on = float(np.median(walls[True]))
+        off = float(np.median(walls[False]))
+        overhead_pct = (on - off) / off * 100.0
+
+        # the traced server really traced (and the untraced one didn't)
+        assert servers[True].tracer.finished_count >= n_queries
+        assert servers[False].tracer.finished_count == 0
+
+        # STATS parses in both formats over the traced session
+        from repro.obs.export import parse_prometheus
+        with NetClient(*nets[True].address, timeout_s=60.0) as cl:
+            snap = cl.stats()
+            assert isinstance(snap, dict) and snap["served"] >= n_queries
+            parsed = parse_prometheus(cl.stats(prometheus=True))
+            assert parsed.get('serve_requests_total{status="ok"}', 0) >= \
+                n_queries
+        emit("obs/stats_frame", 0.0, "json=ok;prometheus=ok")
+    finally:
+        for net in nets.values():
+            net.close()
+
+    per_q = 1e6 / n_queries
+    emit("obs/traced_on", on * per_q, f"wall_s={on:.4f}")
+    emit("obs/traced_off", off * per_q, f"wall_s={off:.4f}")
+    emit("obs/overhead_pct", overhead_pct,
+         f"on_s={on:.4f};off_s={off:.4f};repeats={repeats}")
+    return {"on_s": on, "off_s": off, "overhead_pct": overhead_pct}
+
+
+def main() -> None:
+    import argparse
+    import json
+    from pathlib import Path
+
+    from . import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=128)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--max-overhead-pct", type=float, default=5.0,
+                    help="fail if tracing costs more than this (<=0 "
+                         "disables the gate)")
+    ap.add_argument("--json", default=None,
+                    help="write emitted rows as a json artifact here")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    out = run(args.n_docs, args.queries, repeats=args.repeats)
+    if args.json:
+        path = Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        rows = [{"name": n, "us_per_call": v, "derived": d}
+                for n, v, d in common.ROWS]
+        path.write_text(json.dumps({"bench": "obs_overhead", **out,
+                                    "rows": rows}, indent=2))
+        print(f"# wrote {path} ({len(rows)} rows)")
+    if args.max_overhead_pct > 0 and out["overhead_pct"] > \
+            args.max_overhead_pct:
+        raise SystemExit(
+            f"tracing overhead {out['overhead_pct']:.2f}% exceeds "
+            f"{args.max_overhead_pct:.1f}% budget")
+    print(f"# tracing overhead {out['overhead_pct']:+.2f}% "
+          f"(budget {args.max_overhead_pct:.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Replay a slow-query trace log (JSONL) into human-readable reports.
+
+The serving stack's Tracer emits every finished trace slower than
+``--trace-slow-ms`` to an EventLog (``launch/serve.py --trace-log``).
+Each event carries the request's FLAT span list — stages run on
+different threads, so the stack never materializes a tree — and this
+tool reconstructs the hierarchy from the span intervals:
+
+    python -m benchmarks.trace_report /tmp/slow.jsonl
+    python -m benchmarks.trace_report /tmp/slow.jsonl --top 5
+    python -m benchmarks.trace_report /tmp/slow.jsonl --summary
+
+* default: the slowest ``--top`` traces rendered as indented span
+  trees (a span nests under the smallest span that encloses it), with
+  per-span duration, self-time, and tags;
+* ``--summary``: per-stage totals across every trace in the log —
+  where did the slow requests actually spend their time?
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+from pathlib import Path
+
+
+def load_traces(path) -> list[dict]:
+    """slow_query events from a JSONL event log (other kinds skipped,
+    torn trailing lines tolerated)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError:
+                continue                    # torn tail from a live writer
+            if ev.get("kind") == "slow_query":
+                out.append(ev)
+    return out
+
+
+def build_tree(spans: list[dict]) -> list[dict]:
+    """Nest each span under the SMALLEST span that encloses it (ties
+    break to the earlier-listed span); returns the forest of roots.
+    Same-name spans never nest — a parallel fan-out stage (hedged
+    ``shard_dispatch``) emits overlapping intervals that are siblings,
+    not ancestry. Every node gains ``children`` and ``self_ms``
+    (duration minus the children's coverage)."""
+    nodes = [dict(s, children=[]) for s in spans]
+    order = sorted(range(len(nodes)),
+                   key=lambda i: (nodes[i]["start_s"], -nodes[i]["end_s"]))
+    roots: list[dict] = []
+    for idx in order:
+        n = nodes[idx]
+        parent = None
+        for jdx in order:
+            if jdx == idx:
+                continue
+            c = nodes[jdx]
+            if c["name"] == n["name"]:
+                continue
+            if c["start_s"] <= n["start_s"] and n["end_s"] <= c["end_s"]:
+                if (c["end_s"] - c["start_s"]) >= (n["end_s"] - n["start_s"]):
+                    if parent is None or (
+                            (c["end_s"] - c["start_s"])
+                            < (parent["end_s"] - parent["start_s"])):
+                        parent = c
+        if parent is not None and parent is not n:
+            parent["children"].append(n)
+        else:
+            roots.append(n)
+    for n in nodes:
+        dur = n["end_s"] - n["start_s"]
+        covered = sum(c["end_s"] - c["start_s"] for c in n["children"])
+        n["self_ms"] = max(0.0, dur - covered) * 1e3
+    return roots
+
+
+def _fmt_tags(tags: dict) -> str:
+    if not tags:
+        return ""
+    body = " ".join(f"{k}={v}" for k, v in tags.items())
+    return f"  [{body}]"
+
+
+def render_tree(trace: dict) -> str:
+    lines = [f"trace {trace['trace_id']} request {trace['request_id']} "
+             f"— {trace['duration_ms']:.3f} ms, "
+             f"{len(trace['spans'])} spans"]
+
+    def walk(node: dict, depth: int) -> None:
+        dur_ms = (node["end_s"] - node["start_s"]) * 1e3
+        off_ms = (node["start_s"] - trace["started_s"]) * 1e3
+        lines.append(f"  {'  ' * depth}{node['name']:<16} "
+                     f"+{off_ms:8.3f} ms  {dur_ms:9.3f} ms "
+                     f"(self {node['self_ms']:.3f})"
+                     f"{_fmt_tags(node.get('tags', {}))}")
+        for c in sorted(node["children"], key=lambda s: s["start_s"]):
+            walk(c, depth + 1)
+
+    for root in sorted(build_tree(trace["spans"]),
+                       key=lambda s: s["start_s"]):
+        walk(root, 0)
+    return "\n".join(lines)
+
+
+def stage_summary(traces: list[dict]) -> str:
+    """Aggregate per-stage attribution across the whole log."""
+    total_ms: dict[str, float] = defaultdict(float)
+    count: dict[str, int] = defaultdict(int)
+    for t in traces:
+        for s in t["spans"]:
+            total_ms[s["name"]] += (s["end_s"] - s["start_s"]) * 1e3
+            count[s["name"]] += 1
+    grand = sum(t["duration_ms"] for t in traces) or 1.0
+    lines = [f"{len(traces)} slow traces, {grand:.1f} ms total",
+             f"{'stage':<18}{'spans':>7}{'total ms':>12}{'mean ms':>10}"
+             f"{'% of wall':>11}"]
+    for name in sorted(total_ms, key=total_ms.get, reverse=True):
+        lines.append(f"{name:<18}{count[name]:>7}{total_ms[name]:>12.3f}"
+                     f"{total_ms[name] / count[name]:>10.3f}"
+                     f"{100.0 * total_ms[name] / grand:>10.1f}%")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("log", type=Path, help="slow-query JSONL event log")
+    ap.add_argument("--top", type=int, default=3,
+                    help="render the N slowest traces (default 3)")
+    ap.add_argument("--summary", action="store_true",
+                    help="per-stage totals across the whole log instead "
+                         "of individual trace trees")
+    args = ap.parse_args()
+    traces = load_traces(args.log)
+    if not traces:
+        raise SystemExit(f"no slow_query events in {args.log}")
+    if args.summary:
+        print(stage_summary(traces))
+        return
+    worst = sorted(traces, key=lambda t: t["duration_ms"],
+                   reverse=True)[: args.top]
+    for i, t in enumerate(worst):
+        if i:
+            print()
+        print(render_tree(t))
+
+
+if __name__ == "__main__":
+    main()

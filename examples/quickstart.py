@@ -163,3 +163,42 @@ print(f"network serving on {host}:{port}: doc{hit.result.doc_ids[0]} "
 #       --index-dir /path/to/store
 # and load against it:
 #   python -m benchmarks.serving --listen --connect 127.0.0.1:7070
+
+# --- observability: traces on the wire, metrics export, slow-query log ------
+# Every admitted query gets a Trace; each serving layer appends spans
+# (queue_wait, plan, kernel_score, shard_dispatch, gather, deliver...).
+# The client mints the trace id, the RESULT frame carries the id + a
+# per-stage timing breakdown back, and traces slower than trace_slow_ms
+# land in a JSONL log that benchmarks/trace_report.py renders as an
+# interval tree. The same registry behind the metrics serves a
+# Prometheus text exposition over the STATS frame (and on SIGUSR1 /
+# --stats-interval for the standalone launcher).
+from repro.obs.events import read_jsonl
+
+slow_log = store.parent / "slow.jsonl"
+traced = QueryServer(load_index(store), ServerConfig(
+    max_batch=8, max_wait_s=0.002,
+    trace_slow_ms=0.001,                     # everything is "slow" here
+    trace_log=str(slow_log)))
+net = NetServer(ServingLoop(traced)).start()
+with NetClient(*net.address) as client:
+    r = client.search(genomes[1][200:320], threshold=0.8)
+    stats = client.stats()                   # JSON snapshot over STATS
+    prom = client.stats(prometheus=True)     # Prometheus text exposition
+net.close()
+stages = " ".join(f"{k}={v * 1e3:.2f}ms" for k, v in r.stages.items())
+print(f"traced query {r.trace_id:#x}: {stages}")
+print(f"stats: served={stats['served']} p99={stats['p99_ms']:.2f}ms; "
+      f"prometheus exposition {len(prom.splitlines())} lines")
+import time
+
+for _ in range(100):                         # the loop seals the trace
+    logged = [e for e in read_jsonl(slow_log)  # after delivering the
+              if e.get("trace_id") == r.trace_id]  # RESULT frame
+    if logged:
+        break
+    time.sleep(0.01)
+assert logged, "the traced query must reach the slow-query log"
+print(f"slow-query log has the matching span tree "
+      f"({len(logged[0]['spans'])} spans) — render it with:\n"
+      f"  python -m benchmarks.trace_report {slow_log}")

@@ -31,6 +31,7 @@ serving subsystem (which exports the counters as metrics).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from pathlib import Path
 
@@ -333,6 +334,24 @@ class DeviceTileCache:
         self.faults = 0
         self.prefetched = 0
         self.prefetch_hits = 0
+        # Per-shard accounting (the global totals above cannot say WHICH
+        # shard keeps faulting when the working set outsizes the cache).
+        self.shard_hits: dict[int, int] = {}
+        self.shard_faults: dict[int, int] = {}
+        self.shard_evictions: dict[int, int] = {}
+        # Optional event hook: observer(shard, event, seconds) with event
+        # in {"hit", "fault", "prefetch", "eviction"}; ``seconds`` is the
+        # staging (dispatch) time for faults/prefetches, 0.0 otherwise.
+        # The serving layer wires this to labeled registry counters and
+        # to trace spans naming the faulted shard.
+        self.observer = None
+
+    def _notify(self, s: int, event: str, seconds: float = 0.0) -> None:
+        if self.observer is not None:
+            try:
+                self.observer(s, event, seconds)
+            except Exception:
+                pass              # accounting must never fail a gather
 
     def _put(self, host: np.ndarray) -> jnp.ndarray:
         if self.device is None:
@@ -365,8 +384,10 @@ class DeviceTileCache:
     def resident_shards(self) -> tuple[int, ...]:
         return tuple(self._tiles)
 
-    def _insert(self, s: int) -> jnp.ndarray:
+    def _insert(self, s: int) -> tuple:
+        t0 = time.perf_counter()
         tile = self._stage(s)
+        staged_s = time.perf_counter() - t0
         need = self._tile_nbytes(s)
         if self.capacity_bytes is not None:
             while (self._tiles
@@ -374,21 +395,29 @@ class DeviceTileCache:
                 old, _ = self._tiles.popitem(last=False)
                 self.resident_bytes -= self._tile_nbytes(old)
                 self._prefetched.discard(old)
+                self.shard_evictions[old] = \
+                    self.shard_evictions.get(old, 0) + 1
+                self._notify(old, "eviction")
         self._tiles[s] = tile
         self.resident_bytes += need
-        return tile
+        return tile, staged_s
 
     def get(self, s: int) -> jnp.ndarray:
         tile = self._tiles.get(s)
         if tile is not None:
             self._tiles.move_to_end(s)
             self.hits += 1
+            self.shard_hits[s] = self.shard_hits.get(s, 0) + 1
             if s in self._prefetched:
                 self._prefetched.discard(s)
                 self.prefetch_hits += 1
+            self._notify(s, "hit")
             return tile
         self.faults += 1
-        return self._insert(s)
+        self.shard_faults[s] = self.shard_faults.get(s, 0) + 1
+        tile, staged_s = self._insert(s)
+        self._notify(s, "fault", staged_s)
+        return tile
 
     def prefetch(self, s: int) -> bool:
         """Stage shard ``s`` ahead of use (double buffering). The transfer
@@ -399,9 +428,11 @@ class DeviceTileCache:
         if s in self._tiles:
             return False
         self.faults += 1
+        self.shard_faults[s] = self.shard_faults.get(s, 0) + 1
         self.prefetched += 1
         self._prefetched.add(s)
-        self._insert(s)
+        _, staged_s = self._insert(s)
+        self._notify(s, "prefetch", staged_s)
         return True
 
     def clear(self) -> None:

@@ -32,7 +32,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
+from collections import deque
 from pathlib import Path
 
 import jax.numpy as jnp
@@ -47,6 +49,10 @@ DEFAULT_TERM_BLOCKS = (8, 16)
 
 # Methods the tuner knows how to measure for a batch dispatch.
 TUNABLE_METHODS = ("lookup", "vertical", "unpack")
+
+# Key prefix for live observed-cost entries (see TunedEntry.observed).
+# tuning_key() output always starts with "r<rows>", so no collision.
+LIVE_PREFIX = "live."
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +72,12 @@ class TunedEntry:
     grid_order: str
     cost_us: float
     dedup_threshold: float | None = None
+    # True for entries derived from LIVE serving measurements (the
+    # KernelProfiler feeding back through ``KernelTuner.observe``) as
+    # opposed to offline synthetic tuning. Live entries are stored under
+    # a "live."-prefixed key so both kinds coexist; ``entry``/``costs``
+    # prefer the live one when present.
+    observed: bool = False
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -77,7 +89,8 @@ class TunedEntry:
             term_block=int(d["term_block"]),
             grid_order=str(d["grid_order"]), cost_us=float(d["cost_us"]),
             dedup_threshold=(None if d.get("dedup_threshold") is None
-                             else float(d["dedup_threshold"])))
+                             else float(d["dedup_threshold"])),
+            observed=bool(d.get("observed", False)))
 
 
 def tuning_key(n_rows: int, doc_words: int, n_hashes: int, n_blocks: int,
@@ -213,6 +226,17 @@ class KernelTuner:
         self.seed = int(seed)
         self.tunes = 0              # measurement runs (tests assert 0 on reopen)
         self._arena = None
+        # -- live observed-cost feedback (KernelProfiler -> observe) --
+        # Rolling per-key sample windows; every ``live_min_samples`` new
+        # observations the median is (re-)promoted to a cache entry
+        # under LIVE_PREFIX so choose_method sees serving-measured costs.
+        self.prefer_observed = True
+        self.live_min_samples = 8
+        self.observations = 0
+        self._live_lock = threading.Lock()
+        self._live_samples: dict[str, "deque[float]"] = {}
+        self._live_cfg: dict[str, tuple[int, int, str]] = {}
+        self._live_new: dict[str, int] = {}
 
     @classmethod
     def for_index(cls, index, cache: TuningCache | None = None, **kw
@@ -371,17 +395,64 @@ class KernelTuner:
               ) -> TunedEntry | None:
         """Cached entry for (method, bucket, batch); tunes + persists on a
         miss when enabled, else returns None (caller falls back to
-        heuristics)."""
+        heuristics).
+
+        A live observed-cost entry (serving-measured, LIVE_PREFIX key)
+        is preferred over the synthetic-tuned one when present — it
+        reflects the REAL arena, cache residency and batch mix rather
+        than the tuning fixture — and also suppresses a synthetic tune
+        on a cold cache (a measurement already exists). The synthetic
+        entry's dedup_threshold is grafted on because live entries never
+        carry one (the profiler sees only dispatched configurations)."""
         if method == "lookup" and self.n_hashes != 1:
             return None
         key = self.key(method, bucket, batch)
+        live = (self.cache.entries.get(LIVE_PREFIX + key)
+                if self.prefer_observed else None)
         e = self.cache.get(key)
-        if e is not None or not self.enabled:
-            return e
-        e = self._tune(method, bucket, batch)
-        self.cache.put(key, e)
-        self.cache.save()
+        if e is None and self.enabled and live is None:
+            e = self._tune(method, bucket, batch)
+            self.cache.put(key, e)
+            self.cache.save()
+        if live is not None:
+            if (e is not None and live.dedup_threshold is None
+                    and e.dedup_threshold is not None):
+                live = dataclasses.replace(
+                    live, dedup_threshold=e.dedup_threshold)
+            return live
         return e
+
+    def observe(self, method: str, bucket: int, batch: int,
+                seconds: float, *, word_block: int,
+                term_block: int = 0, grid_order: str = "wq") -> None:
+        """Feed one LIVE kernel measurement (from the KernelProfiler)
+        into the cost cache. Samples accumulate per tuning key; every
+        ``live_min_samples`` new ones the rolling median is promoted to
+        an ``observed=True`` entry under LIVE_PREFIX and persisted.
+        Non-tunable methods (e.g. the dedup pair, chosen by threshold
+        rather than cost argmin) are ignored."""
+        if method not in TUNABLE_METHODS:
+            return
+        key = self.key(method, bucket, batch)
+        with self._live_lock:
+            q = self._live_samples.get(key)
+            if q is None:
+                q = self._live_samples[key] = deque(maxlen=64)
+            q.append(float(seconds))
+            self._live_cfg[key] = (int(word_block),
+                                   int(term_block) or _k.DEFAULT_TERM_BLOCK,
+                                   str(grid_order))
+            self.observations += 1
+            self._live_new[key] = self._live_new.get(key, 0) + 1
+            if (len(q) < self.live_min_samples
+                    or self._live_new[key] < self.live_min_samples):
+                return
+            self._live_new[key] = 0
+            cost_us = float(np.median(np.fromiter(q, float))) * 1e6
+            wb, tb, go = self._live_cfg[key]
+            entry = TunedEntry(method, wb, tb, go, cost_us, observed=True)
+        self.cache.put(LIVE_PREFIX + key, entry)
+        self.cache.save()
 
     def costs(self, bucket: int, batch: int,
               methods: tuple[str, ...] = TUNABLE_METHODS

@@ -46,6 +46,7 @@ rate, and failover counts in multi-host mode).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -144,7 +145,10 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
                             hedge_after_s: float, hedge_auto: bool = False,
                             tile_cache_bytes=None, word_block=None,
                             scatter_threads: int = 4,
-                            fail_hosts=(), latency_models=None) -> Frontend:
+                            fail_hosts=(), latency_models=None,
+                            tracing: bool = True,
+                            trace_slow_ms: float = 0.0,
+                            trace_log=None) -> Frontend:
     """Sharded data plane over in-process fake hosts: HRW-place the v2
     manifest rows, open each host's sub-store, wire the hedging frontend
     (per-shard dispatches overlap through ``scatter_threads`` in
@@ -163,7 +167,8 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
     frontend = Frontend(workers, placement, FrontendConfig(
         max_batch=max_batch, max_wait_s=max_wait_s,
         hedge_after_s=hedge_after_s, hedge_auto=hedge_auto,
-        scatter_threads=scatter_threads),
+        scatter_threads=scatter_threads, tracing=tracing,
+        trace_slow_ms=trace_slow_ms, trace_log=trace_log),
         latency_models=latency_models)
     for n in fail_hosts:
         frontend.fail_worker(n)
@@ -247,6 +252,21 @@ def main() -> None:
     ap.add_argument("--loop-workers", type=int, default=1,
                     help="scoring worker threads in the serving loop "
                          "(--listen mode)")
+    ap.add_argument("--stats-interval", type=float, default=None,
+                    metavar="SECONDS",
+                    help="in --listen mode, dump the Prometheus text "
+                         "exposition of the whole metrics registry every "
+                         "SECONDS (besides the one-line snapshot report); "
+                         "SIGUSR1 dumps it on demand either way")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable request tracing (spans, trace ids on "
+                         "the wire, the slow-query log)")
+    ap.add_argument("--trace-slow-ms", type=float, default=0.0,
+                    help="emit finished traces slower than this to the "
+                         "slow-query event log (0 = off)")
+    ap.add_argument("--trace-log", default=None, metavar="PATH",
+                    help="append slow-query trace events as JSONL here "
+                         "(replay with benchmarks/trace_report.py)")
     ap.add_argument("--no-warmup", action="store_true")
     args = ap.parse_args()
     if args.hedge_after_ms == "auto":
@@ -286,7 +306,8 @@ def main() -> None:
             hedge_after_s=hedge_after_ms / 1e3, hedge_auto=hedge_auto,
             tile_cache_bytes=tile_bytes, word_block=args.word_block,
             scatter_threads=args.scatter_threads,
-            fail_hosts=args.fail_host)
+            fail_hosts=args.fail_host, tracing=not args.no_trace,
+            trace_slow_ms=args.trace_slow_ms, trace_log=args.trace_log)
         down = sorted(set(server.placement.nodes)
                       - set(server.placement.live_nodes))
         print(f"multi-host frontend: {args.hosts} hosts, "
@@ -300,28 +321,47 @@ def main() -> None:
                             else args.dedup_min_rate),
             autotune=args.autotune,
             tuning_cache=tuning_cache if args.autotune or args.tuning_cache
-            else None))
+            else None,
+            tracing=not args.no_trace, trace_slow_ms=args.trace_slow_ms,
+            trace_log=args.trace_log))
         if args.autotune:
             print(f"autotune on: cache="
                   f"{tuning_cache or 'in-memory'}")
     if args.listen is not None:
         # network serving mode: no local load generation — stand up the
         # active loop + wire protocol and serve until interrupted.
+        import signal
+
+        from ..obs.export import render_prometheus
         from ..serve import NetServer, ServingLoop
+        from ..serve.net import PROTO_VERSION
         loop = ServingLoop(server, workers=args.loop_workers)
         net = NetServer(loop, host=args.listen_host,
                         port=args.listen).start()
         host, port = net.address
+
+        def dump_registry(*_sig) -> None:
+            # registry metrics lock individually, so this is safe from
+            # the signal handler / monitor thread while workers record
+            print(render_prometheus(server.metrics.registry), end="")
+
+        if hasattr(signal, "SIGUSR1"):
+            signal.signal(signal.SIGUSR1, dump_registry)
+            print("SIGUSR1 dumps the metrics registry "
+                  f"(kill -USR1 {os.getpid()})")
         print(f"serving on {host}:{port} (wire protocol "
-              f"v1; query with repro.serve.NetClient, or drive load with "
-              f"python -m benchmarks.serving --listen --connect "
-              f"{host}:{port})")
+              f"v{PROTO_VERSION}; query with repro.serve.NetClient, or "
+              f"drive load with python -m benchmarks.serving --listen "
+              f"--connect {host}:{port})")
+        interval = args.stats_interval or 10.0
         try:
             while True:
-                time.sleep(10.0)
+                time.sleep(interval)
                 # snapshot under the loop lock: workers are appending to
                 # the metric deques while this thread reads them
                 print(loop.metrics_snapshot().report())
+                if args.stats_interval:
+                    dump_registry()
         except KeyboardInterrupt:
             print("draining in-flight batches ...")
         net.close(drain=True)

@@ -14,9 +14,17 @@ Two serving surfaces live here:
   an active dispatcher + scoring workers, and `NetServer`/`NetClient`
   (`net`) speak the length-prefixed binary wire protocol over TCP —
   pipelined sessions, 429-style backpressure replies, graceful drain.
+* the observability plane (`repro.obs`, threaded through every layer):
+  request traces with per-stage spans (trace ids ride the wire protocol
+  end to end), the metrics registry behind `ServingMetrics` with a
+  Prometheus text exporter and a `STATS` frame, kernel profiling that
+  feeds the autotuner live cost observations, and a slow-query JSONL
+  event log replayable by `benchmarks/trace_report.py`.
 * LM inference steps (`step`) for the model substrate: prefill/decode and
   the greedy generation driver.
 """
+from ..obs import (EventLog, KernelProfiler, MetricsRegistry, Span, Trace,
+                   Tracer, render_prometheus)
 from .batcher import MicroBatch, MicroBatcher
 from .cache import LRUCache, result_key, term_key
 from .frontend import Frontend, FrontendConfig
@@ -35,5 +43,7 @@ __all__ = [
     "QueryRequest", "QueryResponse", "Status", "QueryServer", "ServerConfig",
     "Frontend", "FrontendConfig", "ShardWorker",
     "LoopClosed", "ServingLoop", "NetClient", "NetResult", "NetServer",
+    "EventLog", "KernelProfiler", "MetricsRegistry", "Span", "Trace",
+    "Tracer", "render_prometheus",
     "make_prefill_step", "make_decode_step", "greedy_generate",
 ]

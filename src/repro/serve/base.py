@@ -24,6 +24,23 @@ from .request import QueryResponse, Status
 class ServingBackend:
     """Mixin: the driver-facing serving loop over a MicroBatcher."""
 
+    def finalize_trace(self, trace, resp: QueryResponse) -> QueryResponse:
+        """Attach a request's trace to its response: trace id, the
+        per-stage timing breakdown (what the RESULT frame ships), and
+        the Trace itself. The trace is SEALED here for synchronous
+        drivers; under a ServingLoop the loop finishes it after
+        callback delivery instead (``tracer.defer_finish``) so the
+        slow-query log sees a "deliver" span too."""
+        if trace is None:
+            return resp
+        resp.trace_id = trace.trace_id
+        resp.trace = trace
+        resp.stages = trace.stage_totals()
+        tracer = getattr(self, "tracer", None)
+        if tracer is not None and not tracer.defer_finish:
+            tracer.finish(trace)
+        return resp
+
     def poll_batches(self, now: Optional[float] = None, *,
                      force: bool = False) -> list[MicroBatch]:
         """Flush the batcher at ``now``: expired requests are answered
@@ -33,9 +50,13 @@ class ServingBackend:
         batches, expired = self.batcher.poll(now, force=force)
         for r in expired:
             self.metrics.record_dropped()
-            self._responses[r.request_id] = QueryResponse(
-                r.request_id, Status.DROPPED,
-                wait_s=max(0.0, now - r.submitted_at))
+            if r.trace is not None:
+                r.trace.add("queue_wait", r.submitted_at, now,
+                            {"outcome": "dropped"})
+            self._responses[r.request_id] = self.finalize_trace(
+                r.trace, QueryResponse(
+                    r.request_id, Status.DROPPED,
+                    wait_s=max(0.0, now - r.submitted_at)))
         return batches
 
     def step(self, now: Optional[float] = None, *, force: bool = False
@@ -68,5 +89,16 @@ class ServingBackend:
 
     def retract(self, rid: int) -> bool:
         """Un-queue a just-submitted request (serving-loop backpressure:
-        the caller answers it REJECTED itself)."""
-        return self.batcher.retract_last(rid)
+        the caller answers it REJECTED itself). The retracted request's
+        trace is sealed here — the caller's plain REJECTED response
+        never passes back through finalize_trace."""
+        req = self.batcher.retract_last(rid)
+        if req is None:
+            return False
+        if req.trace is not None:
+            tracer = getattr(self, "tracer", None)
+            if tracer is not None:
+                req.trace.add("reject", req.submitted_at, self.clock(),
+                              {"reason": "backpressure"})
+                tracer.finish(req.trace)
+        return True

@@ -41,6 +41,11 @@ class MicroBatch:
     """A dense, same-bucket group of live requests ready to score."""
     bucket: int                       # padded term length of every member
     requests: list[QueryRequest]
+    # why and when the batch flushed ("full" / "timer" / "force") — trace
+    # spans tag the flush reason so a p99 investigation can tell
+    # wait-timer flushes from fill flushes at a glance
+    reason: str = ""
+    flushed_at: float = 0.0
 
     @property
     def size(self) -> int:
@@ -82,19 +87,19 @@ class MicroBatcher:
         self._queued += 1
         return True
 
-    def retract_last(self, rid: int) -> bool:
-        """Remove a JUST-submitted request (still the tail of its bucket)
-        — the serving loop's outstanding-work cap uses this to bounce an
-        enqueue it only recognizes as over-budget after the backend's
-        fast paths have had their chance."""
+    def retract_last(self, rid: int) -> QueryRequest | None:
+        """Remove and return a JUST-submitted request (still the tail of
+        its bucket) — the serving loop's outstanding-work cap uses this
+        to bounce an enqueue it only recognizes as over-budget after the
+        backend's fast paths have had their chance. None = not found."""
         for b, q in self._buckets.items():
             if q and q[-1].request_id == rid:
-                q.pop()
+                req = q.pop()
                 self._queued -= 1
                 if not q:
                     del self._buckets[b]
-                return True
-        return False
+                return req
+        return None
 
     def next_due_at(self) -> float | None:
         """Earliest server-clock instant at which some queued request
@@ -149,13 +154,18 @@ class MicroBatcher:
                 self._queued -= len(q) - len(keep)
                 self._buckets[b] = q = keep
             while q:
-                due = (force or len(q) >= self.max_batch
-                       or now - q[0].submitted_at >= self.max_wait_s)
-                if not due:
+                if len(q) >= self.max_batch:
+                    reason = "full"
+                elif now - q[0].submitted_at >= self.max_wait_s:
+                    reason = "timer"
+                elif force:
+                    reason = "force"
+                else:
                     break
                 live = self._take(q, now, self.max_batch, expired)
                 if live:
-                    batches.append(MicroBatch(b, live))
+                    batches.append(MicroBatch(b, live, reason=reason,
+                                              flushed_at=now))
             if not q:
                 del self._buckets[b]
         return batches, expired

@@ -38,6 +38,7 @@ from ..core.query import (SearchResult, compile_pattern, coverage_cutoff)
 from ..index.hedge import (AllReplicasFailed, AttemptFailed, HedgedExecutor,
                            ShardSim)
 from ..index.placement import ShardPlacement
+from ..obs import EventLog, KernelProfiler, Tracer
 from .base import ServingBackend
 from .batcher import MicroBatch, MicroBatcher
 from .metrics import ServingMetrics
@@ -72,6 +73,12 @@ class FrontendConfig:
     # sequential). Only active in wall-clock mode — simulated-latency runs
     # share one deterministic event clock and stay sequential regardless.
     scatter_threads: int = 4
+    # -- observability (mirrors ServerConfig; see repro.obs) --
+    tracing: bool = True
+    trace_slow_ms: float = 0.0
+    trace_ring: int = 256
+    trace_log: Optional[str] = None
+    profile_kernels: bool = True
 
 
 def _next_pow2(n: int) -> int:
@@ -111,6 +118,20 @@ class Frontend(ServingBackend):
             term_pad=config.term_pad, max_batch=config.max_batch,
             max_wait_s=config.max_wait_s, max_queued=config.max_queued)
         self.metrics = ServingMetrics()
+        # Observability plane (mirrors QueryServer): tracer + slow-query
+        # event log + kernel profiler shared by every worker, all feeding
+        # the one metrics registry.
+        self.events = EventLog(config.trace_log, ring=max(64,
+                                                          config.trace_ring))
+        self.tracer = Tracer(enabled=config.tracing, ring=config.trace_ring,
+                             slow_ms=config.trace_slow_ms, sink=self.events,
+                             clock=self.clock)
+        self.metrics.tracer = self.tracer
+        self.profiler = KernelProfiler(self.metrics.registry, None,
+                                       enabled=config.profile_kernels)
+        for w in workers.values():
+            w.profiler = self.profiler
+            w.tiles.observer = self._tile_observer(w)
         self._responses: dict[int, QueryResponse] = {}
         self._next_id = 0
         self._dispatch_seq = 0
@@ -143,13 +164,27 @@ class Frontend(ServingBackend):
             self.executor.shards[node].failed = False
         return restored
 
+    def _tile_observer(self, w: ShardWorker):
+        """DeviceTileCache observer for one worker: caches index tiles by
+        LOCAL shard slot, so translate back to the GLOBAL shard id before
+        the per-shard fault/eviction counters see it. Workers may fault
+        from scatter-pool threads — the counters lock internally."""
+        def on_event(local: int, event: str, seconds: float) -> None:
+            g = (int(w.shard_ids[local])
+                 if 0 <= local < len(w.shard_ids) else int(local))
+            self.metrics.record_shard_tile(g, event)
+        return on_event
+
     # -- submission ----------------------------------------------------------
     def submit(self, pattern=None, *, terms: Optional[np.ndarray] = None,
                threshold: Optional[float] = None,
                top_k: Optional[int] = None,
-               deadline: Optional[float] = None) -> int:
+               deadline: Optional[float] = None,
+               trace_id: int = 0) -> int:
         """Accept one query; ``top_k`` switches the request from coverage-
-        threshold selection to exact global top-k."""
+        threshold selection to exact global top-k. A nonzero ``trace_id``
+        (e.g. minted by a remote client and carried over the wire) is
+        honored; otherwise the tracer mints one."""
         if (pattern is None) == (terms is None):
             raise ValueError("pass exactly one of pattern / terms")
         if terms is None:
@@ -160,18 +195,27 @@ class Frontend(ServingBackend):
         now = self.clock()
         rid = self._next_id
         self._next_id += 1
+        trace = self.tracer.begin(rid, trace_id=trace_id or None,
+                                  started_s=now)
         if terms.shape[0] == 0:
             empty = SearchResult(np.zeros(0, np.int32),
                                  np.zeros(0, np.int32), 0, 0)
             self.metrics.record_request(wait_s=0.0, service_s=0.0)
-            self._responses[rid] = QueryResponse(rid, Status.OK, empty)
+            resp = QueryResponse(rid, Status.OK, empty)
+            if trace is not None:
+                trace.add("fast_path", now, self.clock(), {"path": "empty"})
+            self._responses[rid] = self.finalize_trace(trace, resp)
             return rid
         req = QueryRequest(rid, terms, terms.shape[0], threshold,
                            submitted_at=now, deadline=deadline,
-                           top_k=int(top_k) if top_k else 0)
+                           top_k=int(top_k) if top_k else 0, trace=trace)
         if not self.batcher.submit(req):
             self.metrics.record_rejected()
-            self._responses[rid] = QueryResponse(rid, Status.REJECTED)
+            resp = QueryResponse(rid, Status.REJECTED)
+            if trace is not None:
+                trace.add("reject", now, self.clock(),
+                          {"reason": "backpressure"})
+            self._responses[rid] = self.finalize_trace(trace, resp)
         return rid
 
     # -- scatter/gather ------------------------------------------------------
@@ -307,7 +351,9 @@ class Frontend(ServingBackend):
         ex = self.executor
         fired0, won0, fo0 = ex.hedges_fired, ex.hedges_won, ex.failovers
         tiles0 = self._tile_counters()
+        traced = any(r.trace is not None for r in batch.requests)
         method = ""
+        t_sc0 = self.clock()
         try:
             if self._pool is not None and self.placement.n_shards > 1:
                 results = self._scatter_concurrent(staged, buf, n_valid,
@@ -321,11 +367,20 @@ class Frontend(ServingBackend):
             # out of the batcher, so answer every request FAILED instead of
             # raising it into the serving loop and losing the rids
             # (only this failure domain — kernel/device errors propagate)
+            t_fail = self.clock()
             for r in batch.requests:
                 self.metrics.record_failed()
-                self._responses[r.request_id] = QueryResponse(
+                resp = QueryResponse(
                     r.request_id, Status.FAILED,
                     wait_s=max(0.0, t0 - r.submitted_at))
+                if r.trace is not None:
+                    r.trace.add("queue_wait", r.submitted_at, t0,
+                                {"flush": batch.reason or "direct",
+                                 "batch_size": Q})
+                    r.trace.add("scatter", t_sc0, t_fail,
+                                {"outcome": "all_replicas_failed"})
+                self._responses[r.request_id] = self.finalize_trace(
+                    r.trace, resp)
             return
         # gather in shard order — deterministic however dispatch ran
         for node, lat, (cands, method) in results:
@@ -346,14 +401,43 @@ class Frontend(ServingBackend):
             resident=sum(len(w.tiles) for w in self.workers.values()),
             prefetched=tp - tiles0[2], prefetch_hits=tph - tiles0[3])
 
+        # Batch-level shard_dispatch marks, replayed into every member
+        # request's trace: one span per shard naming the serving node and
+        # its role — "primary" (the placement's preferred replica),
+        # "backup" (a hedged backup request won the race), or "failover"
+        # (the primary was found dead at dispatch time). The executor
+        # appends exactly one completion per dispatch in shard order, so
+        # the tail of ex.completions lines up with ``results``.
+        marks: list[tuple[str, float, float, dict]] = []
+        if traced:
+            comps = list(ex.completions)[-len(results):]
+            for g, (node, lat, _res) in enumerate(results):
+                hedged = bool(comps[g][3]) if g < len(comps) else False
+                replicas = self.placement.replicas(g)
+                role = ("primary" if replicas and node == replicas[0]
+                        else ("backup" if hedged else "failover"))
+                marks.append(("shard_dispatch", t_sc0, t_sc0 + lat,
+                              {"shard": g, "node": node, "role": role,
+                               "hedged": int(hedged)}))
+
         for i, r in enumerate(batch.requests):
+            ts0 = self.clock()
             result = self._gather(gathered[i], r, int(topks[i]),
                                   int(cutoffs[i]))
             wait = max(0.0, t0 - r.submitted_at)
             self.metrics.record_request(wait_s=wait, service_s=service)
-            self._responses[r.request_id] = QueryResponse(
+            resp = QueryResponse(
                 r.request_id, Status.OK, result, method=method,
                 batch_size=Q, wait_s=wait, service_s=service)
+            if r.trace is not None:
+                r.trace.add("queue_wait", r.submitted_at, t0,
+                            {"flush": batch.reason or "direct",
+                             "batch_size": Q})
+                for name, s, e, tags in marks:
+                    r.trace.add(name, s, e, tags)
+                r.trace.add("gather", ts0, self.clock())
+            self._responses[r.request_id] = self.finalize_trace(
+                r.trace, resp)
 
     def _adapt_hedge_after(self) -> None:
         """hedge_after from the observed per-worker latency histograms:
@@ -365,9 +449,9 @@ class Frontend(ServingBackend):
         every batch, so the p95 is taken over the RECENT sample window
         (metrics.worker_recent_s), not the full percentile history."""
         per_worker = [
-            float(np.percentile(np.fromiter(q, float), 95))
+            float(np.percentile(q, 95))
             for q in self.metrics.worker_recent_s.values()
-            if len(q) >= self.config.hedge_auto_min_samples]
+            if q.size >= self.config.hedge_auto_min_samples]
         if not per_worker:
             return
         self.executor.hedge_after = max(self.config.hedge_auto_floor_s,
@@ -413,6 +497,8 @@ class Frontend(ServingBackend):
         frontend holds no result caches — ``clear_caches`` is accepted for
         driver compatibility with QueryServer and ignored."""
         self.metrics = ServingMetrics()
+        self.metrics.tracer = self.tracer
+        self.profiler.bind_registry(self.metrics.registry)
         self.executor.completions.clear()
         self.executor.hedges_fired = 0
         self.executor.hedges_won = 0

@@ -95,6 +95,13 @@ class ServingLoop:
             raise RuntimeError("loop already started")
         self._accepting = True
         self._stopping = False
+        # The loop owns trace finishing: backends attach trace + stage
+        # breakdown at response creation but leave the trace open so the
+        # callback-delivery time lands in it as a final "deliver" span
+        # (sealed in _deliver, after the callback returns).
+        tracer = getattr(self.backend, "tracer", None)
+        if tracer is not None:
+            tracer.defer_finish = True
         d = threading.Thread(target=self._dispatch, name="serve-dispatch",
                              daemon=True)
         self._threads = [d] + [
@@ -119,12 +126,16 @@ class ServingLoop:
         for t in self._threads:
             t.join(timeout=timeout_s)
         self._threads = []
+        tracer = getattr(self.backend, "tracer", None)
+        if tracer is not None:
+            tracer.defer_finish = False
 
     # -- submission ----------------------------------------------------------
     def submit(self, pattern=None, *, terms: Optional[np.ndarray] = None,
                threshold: Optional[float] = None,
                top_k: Optional[int] = None,
                deadline: Optional[float] = None,
+               trace_id: int = 0,
                on_done: Callable[[QueryResponse], None]) -> int:
         """Thread-safe submit; ``on_done(response)`` fires exactly once —
         synchronously for fast paths (cache hit, point query, REJECTED),
@@ -134,7 +145,8 @@ class ServingLoop:
                 raise LoopClosed("serving loop is shut down")
             rid = self.backend.submit(pattern, terms=terms,
                                       threshold=threshold, top_k=top_k,
-                                      deadline=deadline)
+                                      deadline=deadline,
+                                      trace_id=trace_id)
             resp = self.backend.take_response(rid)
             if resp is None:
                 # END-TO-END backpressure: the batcher's cap only counts
@@ -183,9 +195,10 @@ class ServingLoop:
                 out.append((cb, resp))
         return out
 
-    @staticmethod
-    def _deliver(ready: list[tuple[Callable, QueryResponse]]) -> None:
+    def _deliver(self, ready: list[tuple[Callable, QueryResponse]]) -> None:
+        tracer = getattr(self.backend, "tracer", None)
         for cb, resp in ready:
+            t0 = self.clock()
             try:
                 cb(resp)
             except Exception:
@@ -193,6 +206,9 @@ class ServingLoop:
                 # take the loop thread with it; the result is simply
                 # undeliverable
                 pass
+            if resp.trace is not None and tracer is not None:
+                resp.trace.add("deliver", t0, self.clock())
+                tracer.finish(resp.trace)
 
     def _flush(self, *, force: bool) -> None:
         """Flush due batches into the work queue; deliver any DROPPED."""
@@ -273,8 +289,9 @@ class ServingLoop:
                         resp = self.backend.take_response(r.request_id)
                         if resp is None:
                             self.backend.metrics.record_failed()
-                            resp = QueryResponse(r.request_id,
-                                                 Status.FAILED)
+                            resp = self.backend.finalize_trace(
+                                r.trace, QueryResponse(r.request_id,
+                                                       Status.FAILED))
                         cb = self._cbs.pop(r.request_id, None)
                         if cb is not None:
                             ready.append((cb, resp))

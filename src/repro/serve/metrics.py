@@ -1,31 +1,36 @@
 """Serving metrics: latency percentiles, batch occupancy, cache hit rate.
 
-Plain in-process counters — the aggregation a production exporter would
-scrape. Latencies are recorded per REQUEST (queue wait + service), batch
-stats per micro-batch, so occupancy weighs each flush equally while the
-percentiles weigh each query.
+Since PR 6 this is a facade over a general ``repro.obs.registry.
+MetricsRegistry`` — every counter, gauge and sliding-window histogram
+below is a named, labeled registry metric (rendered by the Prometheus
+exporter and shipped over the STATS frame), and the old attribute
+surface (``metrics.served``, ``metrics.percentile_ms(99)``,
+``metrics.worker_recent_s``...) is preserved as properties so existing
+call sites and tests keep working unchanged.
 
-The multi-host frontend additionally records per-worker dispatch
-latencies, hedge fires (backup requests issued by the HedgedExecutor),
-hedge wins (backups that beat the primary), and failovers (dispatches
-served by a non-primary replica because the primary was down); the tile
-counters grew prefetch accounting for the double-buffered shard staging.
+The move also fixes a real race: the percentile deques used to be bare
+``collections.deque``s appended by scoring workers while a monitoring
+thread iterated them in ``snapshot`` — safe only because the serving
+loop happened to take its backend lock around both. Registry
+histograms own a per-metric lock and copy under it, so ``percentile_ms``
+/ ``snapshot`` are safe from ANY thread (per-connection socket threads
+and the scatter pool included), with or without the loop's lock.
 
-The network front-end (repro.serve.loop / repro.serve.net) adds three
-gauges: ``queue_depth`` (batcher backlog, sampled by the dispatcher each
-loop iteration, plus the high-water mark), ``connections`` (open client
-sessions + the lifetime total), and the coalescing rate — batched
-requests per kernel dispatch, the number that tells whether concurrent
-independent clients actually share micro-batches (the bit-sliced
-design's one-kernel-per-batch economics depend on it being > 1).
+Latencies are recorded per REQUEST (queue wait + service), batch stats
+per micro-batch, so occupancy weighs each flush equally while the
+percentiles weigh each query. The multi-host frontend additionally
+records per-worker dispatch latencies, hedge fires/wins and failovers;
+the tile counters carry prefetch accounting plus (new) per-shard
+fault/eviction labels so a trace span can name WHICH shard faulted.
 """
 from __future__ import annotations
 
 import dataclasses
-import threading
-from collections import Counter, deque
+from collections import Counter as _Counter
 
 import numpy as np
+
+from ..obs.registry import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -63,6 +68,13 @@ class MetricsSnapshot:
     hedge_fire_rate: float = 0.0
     failovers: int = 0
     worker_p99_ms: dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-shard tile-cache activity (empty when paging is off)
+    shard_faults: dict[str, int] = dataclasses.field(default_factory=dict)
+    shard_evictions: dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    # tracing (0 when the tracer is off / absent)
+    traces_finished: int = 0
+    slow_queries: int = 0
 
     def report(self) -> str:
         meth = " ".join(f"{m}={n}" for m, n in sorted(self.methods.items()))
@@ -90,163 +102,313 @@ class MetricsSnapshot:
                   f"hedges_won={self.hedges_won} "
                   f"failovers={self.failovers} failed={self.failed}] "
                   f"workers_p99[{workers}]")
+        if self.traces_finished:
+            s += (f" traces[done={self.traces_finished} "
+                  f"slow={self.slow_queries}]")
         return s
 
 
 class ServingMetrics:
     """``window`` bounds the per-request/per-batch sample history (sliding
     window for the percentiles); the integer counters stay exact totals
-    for the server's whole lifetime."""
+    for the server's whole lifetime. All recorders and readers are
+    thread-safe (each underlying registry metric owns its lock)."""
 
-    def __init__(self, window: int = 65536):
-        self.latencies_s: "deque[float]" = deque(maxlen=window)
-        self.wait_s: "deque[float]" = deque(maxlen=window)
-        self.service_s: "deque[float]" = deque(maxlen=window)
-        self.occupancies: "deque[float]" = deque(maxlen=window)
-        self.batch_sizes: "deque[int]" = deque(maxlen=window)
-        self.method_counts: Counter[str] = Counter()
-        self.served = 0
-        self.rejected = 0
-        self.dropped = 0
-        self.cache_hits = 0
-        self.n_batches = 0
-        self.page_faults = 0
-        self.tile_hits = 0
-        self.resident_tiles = 0
-        self.prefetched_tiles = 0
-        self.prefetch_hits = 0
-        self.failed = 0
-        self.dispatches = 0
-        self.hedges_fired = 0
-        self.hedges_won = 0
-        self.failovers = 0
-        self.batched_requests = 0   # requests served through a micro-batch
-        self.queue_depth = 0
-        self.max_queue_depth = 0
-        self.connections = 0
-        self.total_connections = 0
+    def __init__(self, window: int = 65536,
+                 registry: MetricsRegistry | None = None):
         self._window = window
-        self._conn_lock = threading.Lock()
-        self.worker_lat_s: dict[str, "deque[float]"] = {}
-        # small recent-sample window per worker, for consumers that
-        # re-derive statistics on the hot path (adaptive hedging computes
-        # a p95 per batch — over 128 recent samples, not the full window)
-        self.worker_recent_s: dict[str, "deque[float]"] = {}
+        self.registry = registry if registry is not None else \
+            MetricsRegistry()
+        r = self.registry
+        h = lambda name, help: r.histogram(name, help, window=window)
+        self._requests = r.counter(
+            "serve_requests_total", "request outcomes",
+            labels=("status",))
+        self._served = self._requests.labels("ok")
+        self._rejected = self._requests.labels("rejected")
+        self._dropped = self._requests.labels("dropped")
+        self._failed = self._requests.labels("failed")
+        self._cache_hits = r.counter("serve_cache_hits_total",
+                                     "result-cache hits")
+        self._latency = h("serve_latency_seconds",
+                          "end-to-end request latency (wait + service)")
+        self._wait = h("serve_wait_seconds", "batcher queue wait")
+        self._service = h("serve_service_seconds", "scoring service time")
+        self._occupancy = h("serve_batch_occupancy",
+                            "micro-batch fill fraction at flush")
+        self._batch_size = h("serve_batch_size",
+                             "requests per scored micro-batch")
+        self._batches = r.counter("serve_batches_total",
+                                  "micro-batches scored")
+        self._batched = r.counter(
+            "serve_batched_requests_total",
+            "requests served through a micro-batch")
+        self._methods = r.counter(
+            "serve_dispatch_requests_total",
+            "requests per scoring method", labels=("method",))
+        self._queue_depth = r.gauge("serve_queue_depth",
+                                    "batcher backlog")
+        self._connections = r.gauge("serve_connections",
+                                    "open client sessions")
+        self._conn_total = r.counter("serve_connections_total",
+                                     "client sessions ever accepted")
+        self._tiles = r.counter(
+            "serve_tile_events_total", "device tile-cache activity",
+            labels=("event",))
+        self._tile_hits = self._tiles.labels("hit")
+        self._tile_faults = self._tiles.labels("fault")
+        self._tile_prefetched = self._tiles.labels("prefetch")
+        self._tile_prefetch_hits = self._tiles.labels("prefetch_hit")
+        self._resident = r.gauge("serve_resident_tiles",
+                                 "device tiles resident after last pass")
+        self._shard_tiles = r.counter(
+            "serve_shard_tile_events_total",
+            "per-shard tile-cache faults/evictions/hits",
+            labels=("shard", "event"))
+        self._dispatches = r.counter("serve_shard_dispatches_total",
+                                     "shard RPCs issued")
+        self._hedges_fired = r.counter("serve_hedges_fired_total",
+                                       "backup shard RPCs issued")
+        self._hedges_won = r.counter(
+            "serve_hedges_won_total", "backups that beat the primary")
+        self._failovers = r.counter(
+            "serve_failovers_total",
+            "dispatches served by a non-primary replica")
+        self._worker_lat = r.histogram(
+            "serve_worker_latency_seconds",
+            "per-worker shard dispatch latency", labels=("worker",),
+            window=window, recent=128)
+        # Optional back-reference set by the owning backend so snapshots
+        # carry trace counts (finished / slow) without a separate poll.
+        self.tracer = None
 
     # -- recording ---------------------------------------------------------
     def record_request(self, *, wait_s: float, service_s: float,
                        cached: bool = False) -> None:
-        self.served += 1
-        self.wait_s.append(wait_s)
-        self.service_s.append(service_s)
-        self.latencies_s.append(wait_s + service_s)
+        self._served.inc()
+        self._wait.observe(wait_s)
+        self._service.observe(service_s)
+        self._latency.observe(wait_s + service_s)
         if cached:
-            self.cache_hits += 1
+            self._cache_hits.inc()
 
     def record_batch(self, size: int, occupancy: float, method: str) -> None:
-        self.batch_sizes.append(size)
-        self.occupancies.append(occupancy)
-        self.method_counts[method] += size
-        self.n_batches += 1
-        self.batched_requests += size
+        self._batch_size.observe(size)
+        self._occupancy.observe(occupancy)
+        self._methods.labels(method).inc(size)
+        self._batches.inc()
+        self._batched.inc(size)
 
     def set_queue_depth(self, depth: int) -> None:
         """Gauge: batcher backlog (sampled by the serving loop)."""
-        self.queue_depth = depth
-        self.max_queue_depth = max(self.max_queue_depth, depth)
+        self._queue_depth.set(depth)
 
     def record_connection(self, delta: int) -> None:
         """Gauge: a client session opened (+1) or closed (-1). Called
-        from per-connection threads — unlike every other recorder (which
-        the serving loop serializes), this one locks its own counters."""
-        with self._conn_lock:
-            self.connections += delta
-            if delta > 0:
-                self.total_connections += delta
+        from per-connection threads; the gauge locks internally."""
+        self._connections.inc(delta)
+        if delta > 0:
+            self._conn_total.inc(delta)
 
     def record_rejected(self) -> None:
-        self.rejected += 1
+        self._rejected.inc()
 
     def record_dropped(self) -> None:
-        self.dropped += 1
+        self._dropped.inc()
 
     def record_failed(self) -> None:
         """A request that could not be served: some shard it needs has no
         live replica left."""
-        self.failed += 1
+        self._failed.inc()
 
     def record_tiles(self, *, hits: int, faults: int, resident: int,
                      prefetched: int = 0, prefetch_hits: int = 0) -> None:
         """Device-tile cache activity for one scoring pass: cache hits,
         page faults (host->device shard stages, prefetches included), the
         resident-tile gauge after the pass, and the prefetch counters."""
-        self.tile_hits += hits
-        self.page_faults += faults
-        self.resident_tiles = resident
-        self.prefetched_tiles += prefetched
-        self.prefetch_hits += prefetch_hits
+        if hits:
+            self._tile_hits.inc(hits)
+        if faults:
+            self._tile_faults.inc(faults)
+        self._resident.set(resident)
+        if prefetched:
+            self._tile_prefetched.inc(prefetched)
+        if prefetch_hits:
+            self._tile_prefetch_hits.inc(prefetch_hits)
+
+    def record_shard_tile(self, shard, event: str, n: int = 1) -> None:
+        """Per-shard tile-cache event ("hit" / "fault" / "eviction"):
+        the DeviceTileCache observer feeds this so traces and the
+        exporter can name WHICH shard faulted."""
+        self._shard_tiles.labels(shard, event).inc(n)
 
     def record_worker(self, worker: str, latency_s: float) -> None:
         """One shard dispatch served by ``worker`` (hedged or not)."""
-        self.dispatches += 1
-        q = self.worker_lat_s.get(worker)
-        if q is None:
-            q = self.worker_lat_s[worker] = deque(maxlen=self._window)
-            self.worker_recent_s[worker] = deque(maxlen=128)
-        q.append(latency_s)
-        self.worker_recent_s[worker].append(latency_s)
+        self._dispatches.inc()
+        self._worker_lat.labels(worker).observe(latency_s)
 
     def record_hedges(self, *, fired: int, won: int) -> None:
-        self.hedges_fired += fired
-        self.hedges_won += won
+        if fired:
+            self._hedges_fired.inc(fired)
+        if won:
+            self._hedges_won.inc(won)
 
     def record_failovers(self, n: int) -> None:
-        self.failovers += n
+        if n:
+            self._failovers.inc(n)
+
+    # -- legacy attribute surface ------------------------------------------
+    @property
+    def served(self) -> int:
+        return self._served.value
+
+    @property
+    def rejected(self) -> int:
+        return self._rejected.value
+
+    @property
+    def dropped(self) -> int:
+        return self._dropped.value
+
+    @property
+    def failed(self) -> int:
+        return self._failed.value
+
+    @property
+    def cache_hits(self) -> int:
+        return self._cache_hits.value
+
+    @property
+    def n_batches(self) -> int:
+        return self._batches.value
+
+    @property
+    def batched_requests(self) -> int:
+        return self._batched.value
+
+    @property
+    def method_counts(self) -> "_Counter[str]":
+        return _Counter({vals[0]: child.value
+                         for vals, child in self._methods.children()})
+
+    @property
+    def page_faults(self) -> int:
+        return self._tile_faults.value
+
+    @property
+    def tile_hits(self) -> int:
+        return self._tile_hits.value
+
+    @property
+    def resident_tiles(self) -> int:
+        return int(self._resident.value)
+
+    @property
+    def prefetched_tiles(self) -> int:
+        return self._tile_prefetched.value
+
+    @property
+    def prefetch_hits(self) -> int:
+        return self._tile_prefetch_hits.value
+
+    @property
+    def queue_depth(self) -> int:
+        return int(self._queue_depth.value)
+
+    @property
+    def max_queue_depth(self) -> int:
+        return int(self._queue_depth.max)
+
+    @property
+    def connections(self) -> int:
+        return int(self._connections.value)
+
+    @property
+    def total_connections(self) -> int:
+        return self._conn_total.value
+
+    @property
+    def dispatches(self) -> int:
+        return self._dispatches.value
+
+    @property
+    def hedges_fired(self) -> int:
+        return self._hedges_fired.value
+
+    @property
+    def hedges_won(self) -> int:
+        return self._hedges_won.value
+
+    @property
+    def failovers(self) -> int:
+        return self._failovers.value
+
+    @property
+    def worker_recent_s(self) -> dict[str, np.ndarray]:
+        """Recent-window dispatch latencies per worker (consistent
+        copies — adaptive hedging derives its p95 from these)."""
+        return {vals[0]: child.recent_values()
+                for vals, child in self._worker_lat.children()}
+
+    def shard_tile_counts(self, event: str) -> dict[str, int]:
+        return {vals[0]: child.value
+                for vals, child in self._shard_tiles.children()
+                if vals[1] == event and child.value}
 
     # -- reading -----------------------------------------------------------
     def percentile_ms(self, p: float) -> float:
-        if not self.latencies_s:
-            return 0.0
-        return float(np.percentile(np.fromiter(self.latencies_s, float),
-                                   p) * 1e3)
+        return self._latency.percentile(p) * 1e3
 
     def snapshot(self) -> MetricsSnapshot:
         n_cacheable = self.served
-        n_tiles = self.tile_hits + self.page_faults
+        tile_hits, page_faults = self.tile_hits, self.page_faults
+        n_tiles = tile_hits + page_faults
+        prefetched, prefetch_hits = (self.prefetched_tiles,
+                                     self.prefetch_hits)
+        dispatches = self.dispatches
+        hedges_fired = self.hedges_fired
+        n_batches = self.n_batches
+        p50, p99 = self._latency.percentiles((50, 99))
         return MetricsSnapshot(
-            page_faults=self.page_faults,
-            tile_hits=self.tile_hits,
+            page_faults=page_faults,
+            tile_hits=tile_hits,
             resident_tiles=self.resident_tiles,
-            tile_hit_rate=(self.tile_hits / n_tiles if n_tiles else 0.0),
-            prefetched_tiles=self.prefetched_tiles,
-            prefetch_hits=self.prefetch_hits,
-            prefetch_hit_rate=(self.prefetch_hits / self.prefetched_tiles
-                               if self.prefetched_tiles else 0.0),
+            tile_hit_rate=(tile_hits / n_tiles if n_tiles else 0.0),
+            prefetched_tiles=prefetched,
+            prefetch_hits=prefetch_hits,
+            prefetch_hit_rate=(prefetch_hits / prefetched
+                               if prefetched else 0.0),
             queue_depth=self.queue_depth,
             max_queue_depth=self.max_queue_depth,
             connections=self.connections,
             total_connections=self.total_connections,
-            coalesce_rate=(self.batched_requests / self.n_batches
-                           if self.n_batches else 0.0),
+            coalesce_rate=(self.batched_requests / n_batches
+                           if n_batches else 0.0),
             failed=self.failed,
-            dispatches=self.dispatches,
-            hedges_fired=self.hedges_fired,
+            dispatches=dispatches,
+            hedges_fired=hedges_fired,
             hedges_won=self.hedges_won,
-            hedge_fire_rate=(self.hedges_fired / self.dispatches
-                             if self.dispatches else 0.0),
+            hedge_fire_rate=(hedges_fired / dispatches
+                             if dispatches else 0.0),
             failovers=self.failovers,
             worker_p99_ms={
-                w: float(np.percentile(np.fromiter(q, float), 99) * 1e3)
-                for w, q in sorted(self.worker_lat_s.items()) if q},
-            served=self.served,
+                vals[0]: child.percentile(99) * 1e3
+                for vals, child in self._worker_lat.children()
+                if len(child)},
+            shard_faults=self.shard_tile_counts("fault"),
+            shard_evictions=self.shard_tile_counts("eviction"),
+            traces_finished=(self.tracer.finished_count
+                             if self.tracer is not None else 0),
+            slow_queries=(self.tracer.slow_count
+                          if self.tracer is not None else 0),
+            served=n_cacheable,
             rejected=self.rejected,
             dropped=self.dropped,
             cache_hits=self.cache_hits,
-            batches=self.n_batches,
-            p50_ms=self.percentile_ms(50),
-            p99_ms=self.percentile_ms(99),
-            mean_occupancy=(float(np.mean(self.occupancies))
-                            if self.occupancies else 0.0),
+            batches=n_batches,
+            p50_ms=p50 * 1e3,
+            p99_ms=p99 * 1e3,
+            mean_occupancy=self._occupancy.mean(),
             cache_hit_rate=(self.cache_hits / n_cacheable
                             if n_cacheable else 0.0),
             methods=dict(self.method_counts),

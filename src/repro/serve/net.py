@@ -29,6 +29,28 @@ the payload, whose first byte is the message type.
   SearchResult the in-process server produced — bit-identical, which the
   end-to-end property test asserts against a QueryEngine oracle.
 
+Protocol version 2 (PR 6) adds end-to-end observability, all of it
+OPTIONAL trailing bytes so version-1 frames remain valid:
+
+* ``QUERY`` may carry a trailing u64 trace id (client-minted, nonzero):
+  the server adopts it for the request's server-side trace, so a slow-
+  query log line can be joined to the exact client call. A v1 client
+  simply never appends it; the server treats absent as "no tracing".
+* ``RESULT`` carries — only when the query carried a nonzero trace id —
+  a trailing trace block: the echoed trace id plus a compact per-stage
+  timing breakdown (stage name, total seconds) aggregated from the
+  server-side trace spans (queue_wait / plan / kernel_score /
+  shard_dispatch / gather ...).
+* ``STATS`` (bidirectional): the client sends ``[MSG_STATS, format]``
+  and the server replies with the same frame type carrying either a
+  JSON metrics snapshot (format 0) or the Prometheus text exposition of
+  the whole metrics registry (format 1).
+
+A server pinned to ``proto_version=1`` (constructor knob) speaks the old
+protocol bit-for-bit — the mixed-version interop tests hold both
+directions: old client against a new server (pinned v1) and raw v1
+frames against a v2 server.
+
 Sessions are pipelined: a client may have any number of queries in
 flight; responses come back in completion order (batch flushes), matched
 by request id. Shutdown is graceful: ``NetServer.close(drain=True)``
@@ -38,7 +60,10 @@ response, then closes the sockets — clients see their answers, then EOF.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import json
 import math
+import os
 import queue
 import socket
 import struct
@@ -50,14 +75,20 @@ import numpy as np
 
 from ..core.index import IndexParams
 from ..core.query import SearchResult, compile_pattern
+from ..obs.export import render_prometheus
 from .loop import LoopClosed, ServingLoop
 from .request import QueryResponse, Status
 
-PROTO_VERSION = 1
+PROTO_VERSION = 2        # v2: optional trace id / trace block / STATS
+MIN_PROTO_VERSION = 1    # oldest version a client will still talk to
 
 MSG_HELLO = 1
 MSG_QUERY = 2
 MSG_RESULT = 3
+MSG_STATS = 4
+
+STATS_SNAPSHOT = 0       # JSON-encoded MetricsSnapshot
+STATS_PROMETHEUS = 1     # Prometheus text exposition of the registry
 
 _LEN = struct.Struct("!I")
 # type, version, n_docs, n_hashes, kmer, canonical, fpr
@@ -67,6 +98,12 @@ _QUERY = struct.Struct("!BQdIdI")
 # type, rid, status, batch_size, wait_s, service_s, n_terms, cutoff,
 # n_hits, method_len
 _RESULT = struct.Struct("!BQBIddIiIB")
+# optional QUERY tail: client-minted trace id
+_TRACE_ID = struct.Struct("!Q")
+# optional RESULT tail header: trace id, n_stages; each stage is a u8
+# name length + name bytes + f64 total seconds
+_TRACE_HEAD = struct.Struct("!QB")
+_STAGE_SECONDS = struct.Struct("!d")
 
 # wire status byte <-> Status (order is the protocol, do not reorder)
 _STATUS_CODES = (Status.OK, Status.REJECTED, Status.DROPPED, Status.FAILED)
@@ -110,8 +147,9 @@ def write_frame(sock: socket.socket, payload: bytes) -> None:
 
 # -- message encode/decode ----------------------------------------------------
 
-def encode_hello(params: IndexParams, n_docs: int) -> bytes:
-    return _HELLO.pack(MSG_HELLO, PROTO_VERSION, n_docs, params.n_hashes,
+def encode_hello(params: IndexParams, n_docs: int,
+                 version: int = PROTO_VERSION) -> bytes:
+    return _HELLO.pack(MSG_HELLO, version, n_docs, params.n_hashes,
                        params.kmer, int(params.canonical), params.fpr)
 
 
@@ -123,42 +161,90 @@ def decode_hello(payload: bytes) -> tuple[IndexParams, int, int]:
 
 
 def encode_query(rid: int, terms: np.ndarray, threshold: Optional[float],
-                 top_k: int, deadline_s: Optional[float]) -> bytes:
+                 top_k: int, deadline_s: Optional[float],
+                 trace_id: int = 0) -> bytes:
+    """``trace_id`` nonzero appends the v2 trailing trace-id field — only
+    send it to a server that announced protocol >= 2 (a v1 server's strict
+    length check would tear the session)."""
     th = float("nan") if threshold is None else float(threshold)
     dl = 0.0 if deadline_s is None else float(deadline_s)
     body = np.ascontiguousarray(terms, dtype="<u4").tobytes()
-    return _QUERY.pack(MSG_QUERY, rid, th, int(top_k), dl,
+    head = _QUERY.pack(MSG_QUERY, rid, th, int(top_k), dl,
                        terms.shape[0]) + body
+    if trace_id:
+        head += _TRACE_ID.pack(trace_id)
+    return head
 
 
-def decode_query(payload: bytes) -> tuple[int, np.ndarray, Optional[float],
-                                          int, Optional[float]]:
+def decode_query(payload: bytes
+                 ) -> tuple[int, np.ndarray, Optional[float], int,
+                            Optional[float], int]:
+    """Accepts BOTH v1 frames (terms only) and v2 frames (terms + the
+    optional trailing trace id); returns trace_id 0 when absent."""
     (_, rid, th, top_k, dl, n_terms) = _QUERY.unpack_from(payload)
     body = payload[_QUERY.size:]
-    if len(body) != n_terms * 8:
+    trace_id = 0
+    if len(body) == n_terms * 8 + _TRACE_ID.size:
+        (trace_id,) = _TRACE_ID.unpack_from(body, n_terms * 8)
+        body = body[: n_terms * 8]
+    elif len(body) != n_terms * 8:
         raise ConnectionError(
             f"QUERY rid={rid}: {len(body)} term bytes != {n_terms} terms")
     terms = np.frombuffer(body, dtype="<u4").reshape(n_terms, 2)
     terms = terms.astype(np.uint32)          # native, writable
     return (rid, terms, None if math.isnan(th) else th, top_k,
-            dl if dl > 0 else None)
+            dl if dl > 0 else None, trace_id)
 
 
-def encode_result(rid: int, resp: QueryResponse) -> bytes:
+def _encode_trace_block(trace_id: int, stages: Optional[dict]) -> bytes:
+    """Compact per-stage breakdown: trace id + up to 255 (name, seconds)
+    pairs, insertion order preserved (admission -> delivery)."""
+    items = list((stages or {}).items())[:255]
+    out = [_TRACE_HEAD.pack(trace_id, len(items))]
+    for name, seconds in items:
+        nb = str(name).encode()[:255]
+        out.append(struct.pack("!B", len(nb)) + nb
+                   + _STAGE_SECONDS.pack(float(seconds)))
+    return b"".join(out)
+
+
+def _decode_trace_block(payload: bytes, off: int) -> tuple[int, dict]:
+    (trace_id, n_stages) = _TRACE_HEAD.unpack_from(payload, off)
+    off += _TRACE_HEAD.size
+    stages: dict[str, float] = {}
+    for _ in range(n_stages):
+        nlen = payload[off]
+        off += 1
+        name = payload[off: off + nlen].decode()
+        off += nlen
+        (seconds,) = _STAGE_SECONDS.unpack_from(payload, off)
+        off += _STAGE_SECONDS.size
+        stages[name] = seconds
+    return trace_id, stages
+
+
+def encode_result(rid: int, resp: QueryResponse, *,
+                  trace_id: int = 0) -> bytes:
+    """``trace_id`` nonzero (the id the QUERY carried) appends the v2
+    trace block with the response's per-stage breakdown."""
     res = resp.result
     method = resp.method.encode()[:255]
     if res is None:
         head = _RESULT.pack(MSG_RESULT, rid, _STATUS_TO_CODE[resp.status],
                             resp.batch_size, resp.wait_s, resp.service_s,
                             0, 0, 0, len(method))
-        return head + method
-    head = _RESULT.pack(MSG_RESULT, rid, _STATUS_TO_CODE[resp.status],
-                        resp.batch_size, resp.wait_s, resp.service_s,
-                        res.n_terms, int(res.threshold),
-                        res.doc_ids.shape[0], len(method))
-    return (head + method
-            + np.ascontiguousarray(res.doc_ids, dtype="<i4").tobytes()
-            + np.ascontiguousarray(res.scores, dtype="<i4").tobytes())
+        frame = head + method
+    else:
+        head = _RESULT.pack(MSG_RESULT, rid, _STATUS_TO_CODE[resp.status],
+                            resp.batch_size, resp.wait_s, resp.service_s,
+                            res.n_terms, int(res.threshold),
+                            res.doc_ids.shape[0], len(method))
+        frame = (head + method
+                 + np.ascontiguousarray(res.doc_ids, dtype="<i4").tobytes()
+                 + np.ascontiguousarray(res.scores, dtype="<i4").tobytes())
+    if trace_id:
+        frame += _encode_trace_block(trace_id, resp.stages)
+    return frame
 
 
 def decode_result(payload: bytes) -> tuple[int, "NetResult"]:
@@ -175,8 +261,24 @@ def decode_result(payload: bytes) -> tuple[int, "NetResult"]:
         scores = np.frombuffer(payload, dtype="<i4", count=n_hits,
                                offset=off + 4 * n_hits).astype(np.int32)
         result = SearchResult(docs, scores, n_terms, cutoff)
+        off += 8 * n_hits
+    trace_id, stages = 0, None
+    if len(payload) > off:                   # v2 trailing trace block
+        trace_id, stages = _decode_trace_block(payload, off)
     return rid, NetResult(status, result, method, batch_size, wait_s,
-                          service_s)
+                          service_s, trace_id, stages)
+
+
+def encode_stats(fmt: int, body: bytes = b"") -> bytes:
+    """Both directions: the request is the bare [type, format] header,
+    the reply appends the rendered body."""
+    return struct.pack("!BB", MSG_STATS, fmt) + body
+
+
+def decode_stats(payload: bytes) -> tuple[int, bytes]:
+    if len(payload) < 2:
+        raise ConnectionError("STATS frame too short")
+    return payload[1], payload[2:]
 
 
 # -- server -------------------------------------------------------------------
@@ -255,8 +357,14 @@ class NetServer:
     the scorer never waits for any client's socket."""
 
     def __init__(self, loop: ServingLoop, *, host: str = "127.0.0.1",
-                 port: int = 0, backlog: int = 128):
+                 port: int = 0, backlog: int = 128,
+                 proto_version: int = PROTO_VERSION):
+        if not MIN_PROTO_VERSION <= proto_version <= PROTO_VERSION:
+            raise ValueError(f"proto_version {proto_version} unsupported")
         self.loop = loop
+        # pinned to 1 the server speaks the old protocol bit-for-bit
+        # (no trace fields, no STATS) — the interop escape hatch
+        self.proto_version = proto_version
         self.params, self.n_docs = _backend_info(loop.backend)
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -318,31 +426,48 @@ class NetServer:
             threading.Thread(target=self._serve_conn, args=(session,),
                              name="serve-conn", daemon=True).start()
 
+    def _stats_body(self, fmt: int) -> bytes:
+        if fmt == STATS_PROMETHEUS:
+            return render_prometheus(self.metrics.registry).encode()
+        snap = self.loop.metrics_snapshot()
+        return json.dumps(dataclasses.asdict(snap)).encode()
+
     def _serve_conn(self, session: _Session) -> None:
         conn = session.sock
         self.metrics.record_connection(+1)
+        v2 = self.proto_version >= 2
         owned = True                          # close() may take ownership
         try:
-            session.send(encode_hello(self.params, self.n_docs))
+            session.send(encode_hello(self.params, self.n_docs,
+                                      self.proto_version))
             while True:
                 payload = read_frame(conn)
                 if payload is None:
                     return                    # client closed its session
+                if v2 and payload and payload[0] == MSG_STATS:
+                    fmt, _ = decode_stats(payload)
+                    session.send(encode_stats(fmt, self._stats_body(fmt)))
+                    continue
                 if not payload or payload[0] != MSG_QUERY:
                     raise ConnectionError(
                         f"unexpected message "
                         f"{payload[:1].hex() or 'empty'}")
-                rid, terms, th, top_k, dl = decode_query(payload)
+                rid, terms, th, top_k, dl, tid = decode_query(payload)
                 deadline = (None if dl is None
                             else self.loop.clock() + dl)
+                # the trace block goes back only when the CLIENT asked
+                # for tracing (nonzero trace id) on a v2 session
+                tid = tid if v2 else 0
 
-                def on_done(resp: QueryResponse, rid=rid) -> None:
-                    session.send(encode_result(rid, resp))
+                def on_done(resp: QueryResponse, rid=rid,
+                            tid=tid) -> None:
+                    session.send(encode_result(rid, resp, trace_id=tid))
 
                 try:
                     self.loop.submit(terms=terms, threshold=th,
                                      top_k=top_k or None,
-                                     deadline=deadline, on_done=on_done)
+                                     deadline=deadline, trace_id=tid,
+                                     on_done=on_done)
                 except LoopClosed:
                     # shutting down: 429-style refusal, session stays up
                     # until the client closes or the server finishes
@@ -366,13 +491,27 @@ class NetServer:
 @dataclasses.dataclass
 class NetResult:
     """One wire response: status + the reconstructed SearchResult (None
-    unless status == OK) plus the server-side timing split."""
+    unless status == OK) plus the server-side timing split. On a traced
+    v2 session ``trace_id`` echoes the id this client minted for the
+    query and ``stages`` is the server-side per-stage breakdown (name ->
+    total seconds) — joinable against the server's slow-query log."""
     status: Status
     result: Optional[SearchResult]
     method: str = ""
     batch_size: int = 0
     wait_s: float = 0.0
     service_s: float = 0.0
+    trace_id: int = 0
+    stages: Optional[dict] = None
+
+
+# Client-minted trace ids: unique per process (counter) and salted with
+# the pid so two client processes against one server rarely collide.
+_TRACE_COUNTER = itertools.count(1)
+
+
+def _mint_trace_id() -> int:
+    return ((os.getpid() & 0xFFFF) << 40) | next(_TRACE_COUNTER)
 
 
 class NetClient:
@@ -384,7 +523,8 @@ class NetClient:
     announced in the server's HELLO, so the wire only ever carries packed
     terms. Thread-safe: many threads may submit on one session."""
 
-    def __init__(self, host: str, port: int, *, timeout_s: float = 30.0):
+    def __init__(self, host: str, port: int, *, timeout_s: float = 30.0,
+                 trace: bool = True):
         self.timeout_s = timeout_s
         self._sock = socket.create_connection((host, port),
                                               timeout=timeout_s)
@@ -393,13 +533,17 @@ class NetClient:
         if hello is None or hello[0] != MSG_HELLO:
             raise ConnectionError("no HELLO from server")
         self.params, self.n_docs, self.proto_version = decode_hello(hello)
-        if self.proto_version != PROTO_VERSION:
+        if not MIN_PROTO_VERSION <= self.proto_version <= PROTO_VERSION:
             raise ConnectionError(
-                f"protocol version {self.proto_version} != {PROTO_VERSION}")
+                f"protocol version {self.proto_version} outside "
+                f"[{MIN_PROTO_VERSION}, {PROTO_VERSION}]")
+        # trace ids ride on queries only when the server can take them
+        self.trace = bool(trace) and self.proto_version >= 2
         self._sock.settimeout(None)           # reader blocks until frames
         self._wlock = threading.Lock()
         self._flock = threading.Lock()
         self._futs: dict[int, Future] = {}
+        self._stats_futs: "queue.SimpleQueue[Future]" = queue.SimpleQueue()
         self._next_rid = 0
         self._closed = False
         self._reader = threading.Thread(target=self._read_loop,
@@ -423,8 +567,9 @@ class NetClient:
             rid = self._next_rid
             self._next_rid += 1
             self._futs[rid] = fut
+        tid = _mint_trace_id() if self.trace else 0
         payload = encode_query(rid, terms, threshold, int(top_k or 0),
-                               deadline_s)
+                               deadline_s, trace_id=tid)
         try:
             with self._wlock:
                 write_frame(self._sock, payload)
@@ -449,6 +594,29 @@ class NetClient:
                            deadline_s=deadline_s).result(
                                timeout_s or self.timeout_s)
 
+    # -- observability -------------------------------------------------------
+    def stats(self, *, prometheus: bool = False,
+              timeout_s: Optional[float] = None):
+        """Server metrics over the wire (v2 sessions only): the parsed
+        JSON MetricsSnapshot dict, or the raw Prometheus text exposition
+        when ``prometheus=True``. STATS replies come back in request
+        order on this session (the server answers them inline)."""
+        if self.proto_version < 2:
+            raise ConnectionError("STATS requires protocol >= 2")
+        fut: Future = Future()
+        with self._flock:
+            if self._closed:
+                raise ConnectionError("client is closed")
+            self._stats_futs.put(fut)
+        fmt = STATS_PROMETHEUS if prometheus else STATS_SNAPSHOT
+        try:
+            with self._wlock:
+                write_frame(self._sock, encode_stats(fmt))
+        except OSError as e:
+            raise ConnectionError(f"send failed: {e}") from e
+        body = fut.result(timeout_s or self.timeout_s)
+        return body.decode() if prometheus else json.loads(body)
+
     # -- reader --------------------------------------------------------------
     def _read_loop(self) -> None:
         err: Optional[Exception] = None
@@ -457,6 +625,14 @@ class NetClient:
                 payload = read_frame(self._sock)
                 if payload is None:
                     break
+                if payload and payload[0] == MSG_STATS:
+                    _, body = decode_stats(payload)
+                    try:
+                        sfut = self._stats_futs.get_nowait()
+                    except queue.Empty:
+                        raise ConnectionError("unsolicited STATS reply")
+                    sfut.set_result(body)
+                    continue
                 if not payload or payload[0] != MSG_RESULT:
                     raise ConnectionError(
                         f"unexpected message "
@@ -478,6 +654,11 @@ class NetClient:
             # or sees _closed and raises — never a forever-pending Future
             self._closed = True
             futs, self._futs = list(self._futs.values()), {}
+        while True:
+            try:
+                futs.append(self._stats_futs.get_nowait())
+            except queue.Empty:
+                break
         for fut in futs:
             fut.set_exception(err or ConnectionError("session closed"))
 

@@ -39,6 +39,16 @@ class QueryRequest:
     bucket: int = 0              # padded term length (set by the batcher)
     top_k: int = 0               # > 0 = exact top-k selection instead of
     #                              the coverage threshold
+    # Observability: the Trace minted at admission (None = tracing off)
+    # rides with the request so every layer it crosses can append spans.
+    # ``trace`` holds live span state and is deliberately excluded from
+    # equality/repr noise via compare=False.
+    trace: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                compare=False)
+
+    @property
+    def trace_id(self) -> int:
+        return self.trace.trace_id if self.trace is not None else 0
 
     def expired(self, now: float) -> bool:
         return self.deadline is not None and now > self.deadline
@@ -63,6 +73,14 @@ class QueryResponse:
     wait_s: float = 0.0
     service_s: float = 0.0
     cached: bool = False
+    # Observability: the request's trace id (0 = untraced), the compact
+    # per-stage timing breakdown {stage: seconds} the wire layer ships
+    # back in the RESULT frame, and the full Trace for in-process
+    # consumers (slow-query assertions, the loop's deliver span).
+    trace_id: int = 0
+    stages: Optional[dict] = None
+    trace: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                compare=False)
 
     @property
     def latency_s(self) -> float:

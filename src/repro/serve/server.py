@@ -33,6 +33,8 @@ from ..core.query import (SearchResult, compile_pattern, plan_dedup_batch,
                           run_paged, run_paged_dedup, select_hits,
                           select_top_k)
 from ..kernels.autotune import KernelTuner, TuningCache
+from ..obs import EventLog, KernelProfiler, Tracer
+from ..obs.profile import gather_bytes
 from .base import ServingBackend
 from .batcher import MicroBatch, MicroBatcher
 from .cache import LRUCache, result_key, term_key
@@ -72,6 +74,21 @@ class ServerConfig:
     # repro.core.store.tuning_path(store_dir) = beside the v2 manifest).
     # None keeps tuned entries in memory only.
     tuning_cache: Optional[str] = None
+    # -- observability (repro.obs) --
+    # Request tracing: every admitted query gets a Trace; layers append
+    # spans; finished traces land in a bounded ring. Cheap enough to
+    # default on (two clock reads + a locked append per span).
+    tracing: bool = True
+    # Completed traces slower than this (ms, end to end) go to the
+    # slow-query JSONL log. 0 disables the slow sink (ring still fills).
+    trace_slow_ms: float = 0.0
+    trace_ring: int = 256
+    # JSONL slow-query log path; None keeps events in memory only.
+    trace_log: Optional[str] = None
+    # Per-dispatch kernel wall time + bytes-moved accounting, fed to the
+    # metrics registry and (when a tuner is wired) back into the tuning
+    # cache as live observed-cost entries.
+    profile_kernels: bool = True
 
 
 def _next_pow2(n: int) -> int:
@@ -115,17 +132,41 @@ class QueryServer(ServingBackend):
         self._shard_args = [(sp.shard, jnp.asarray(sp.row_offset),
                              jnp.asarray(sp.block_width))
                             for sp in self.planner.shard_plans]
+        # -- observability ---------------------------------------------------
+        self.events = EventLog(config.trace_log,
+                               ring=max(64, config.trace_ring))
+        self.tracer = Tracer(enabled=config.tracing,
+                             ring=config.trace_ring,
+                             slow_ms=config.trace_slow_ms,
+                             sink=self.events, clock=clock)
+        self.metrics.tracer = self.tracer
+        self.profiler = KernelProfiler(self.metrics.registry, self.tuner,
+                                       enabled=config.profile_kernels)
+        # Tile-cache events flow through one observer: per-shard labeled
+        # counters always; per-batch fault/prefetch capture so the kernel
+        # span can name the shards it had to stage.
+        self._tile_events: list[tuple] = []
+        self.tiles.observer = self._on_tile_event
+
+    def _on_tile_event(self, shard: int, event: str,
+                       seconds: float) -> None:
+        self.metrics.record_shard_tile(shard, event)
+        if event in ("fault", "prefetch"):
+            self._tile_events.append((shard, event, self.clock(), seconds))
 
     # -- submission ---------------------------------------------------------
     def submit(self, pattern=None, *, terms: Optional[np.ndarray] = None,
                threshold: Optional[float] = None,
                top_k: Optional[int] = None,
-               deadline: Optional[float] = None) -> int:
+               deadline: Optional[float] = None,
+               trace_id: int = 0) -> int:
         """Accept one query (pattern or precompiled terms); returns the
         request id. ``top_k`` switches the request from coverage-threshold
         selection to exact top-k (same total order as QueryEngine.top_k).
         Fast paths answer immediately; everything else lands in the
-        micro-batcher until the next ``step``/``drain``."""
+        micro-batcher until the next ``step``/``drain``. ``trace_id``
+        propagates a caller-minted id (the wire layer's) into the
+        request's trace; 0 mints a fresh one when tracing is on."""
         if (pattern is None) == (terms is None):
             raise ValueError("pass exactly one of pattern / terms")
         if terms is None:
@@ -137,11 +178,17 @@ class QueryServer(ServingBackend):
         rid = self._next_id
         self._next_id += 1
         ell = terms.shape[0]
+        trace = self.tracer.begin(rid, trace_id=trace_id or None,
+                                  started_s=now)
 
         if ell == 0:
             empty = SearchResult(np.zeros(0, np.int32),
                                  np.zeros(0, np.int32), 0, 0)
-            self._answer(rid, Status.OK, empty, wait=0.0, service=0.0)
+            if trace is not None:
+                trace.add("fast_path", now, self.clock(),
+                          {"path": "empty"})
+            self._answer(rid, Status.OK, empty, wait=0.0, service=0.0,
+                         trace=trace)
             return rid
 
         key = result_key(terms, threshold, top_k)
@@ -149,9 +196,11 @@ class QueryServer(ServingBackend):
         if hit is not None:
             self.metrics.record_request(wait_s=0.0, service_s=0.0,
                                         cached=True)
-            self._responses[rid] = QueryResponse(
+            if trace is not None:
+                trace.add("cache_lookup", now, self.clock(), {"hit": 1})
+            self._responses[rid] = self._finalize(trace, QueryResponse(
                 rid, Status.OK, hit, method="cache", batch_size=1,
-                cached=True)
+                cached=True))
             return rid
 
         if ell == 1 and self.rows_cache.capacity:
@@ -159,20 +208,30 @@ class QueryServer(ServingBackend):
             service = self.clock() - now
             self.metrics.record_request(wait_s=0.0, service_s=service,
                                         cached=row_hit)
-            self._responses[rid] = QueryResponse(
+            if trace is not None:
+                trace.add("point_query", now, self.clock(),
+                          {"row_hit": int(row_hit)})
+            self._responses[rid] = self._finalize(trace, QueryResponse(
                 rid, Status.OK, result, method="row_cache", batch_size=1,
-                wait_s=0.0, service_s=service, cached=row_hit)
+                wait_s=0.0, service_s=service, cached=row_hit))
             self.results_cache.put(key, result)
             return rid
 
         req = QueryRequest(rid, terms, ell, threshold,
                            submitted_at=now, deadline=deadline,
-                           top_k=top_k)
+                           top_k=top_k, trace=trace)
         if not self.batcher.submit(req):
             self.metrics.record_rejected()
-            self._responses[rid] = QueryResponse(rid, Status.REJECTED)
+            if trace is not None:
+                trace.add("reject", now, self.clock(),
+                          {"reason": "backpressure"})
+            self._responses[rid] = self._finalize(
+                trace, QueryResponse(rid, Status.REJECTED))
             return rid
         return rid
+
+    def _finalize(self, trace, resp: QueryResponse) -> QueryResponse:
+        return self.finalize_trace(trace, resp)
 
     # -- point queries (COBS single-k-mer lookups) via the row cache --------
     def _gather_host_row(self, term: np.ndarray) -> np.ndarray:
@@ -228,25 +287,58 @@ class QueryServer(ServingBackend):
             run_paged(self.tiles, self._shard_args, fn, terms_dev,
                       valid_dev), axis=-1)
 
-    def _score_dedup(self, buf: np.ndarray, n_valid: np.ndarray, plan
-                     ) -> Optional[np.ndarray]:
+    def _score_dedup(self, buf: np.ndarray, n_valid: np.ndarray, plan,
+                     marks: Optional[list] = None) -> Optional[np.ndarray]:
         """Row-dedup dispatch, or None when the batch's measured dedup
         rate is below the plan's break-even threshold. The global-layout
         plan decides; dense execution reuses it directly, paged execution
-        re-plans per shard against the rebased addressing."""
+        re-plans per shard against the rebased addressing. ``marks``
+        collects (name, start, end, tags) stage timings for tracing."""
         layout = self.index.layout
+        td0 = self.clock()
         dp = plan_dedup_batch(buf, n_valid, layout.row_offset,
                               layout.block_width)
+        if marks is not None:
+            marks.append(("dedup_plan", td0, self.clock(),
+                          {"dedup_rate": round(float(dp.dedup_rate), 4),
+                           "n_unique": int(dp.n_unique)}))
         if dp.dedup_rate < plan.dedup_threshold:
             return None
         fn = self.planner.dedup_score_fn(plan)
+        tk0 = self.clock()
         if not plan.paged:
-            return np.asarray(fn(self.tiles.get(0),
-                                 jnp.asarray(dp.uniq_rows),
-                                 jnp.asarray(dp.indir),
-                                 jnp.asarray(dp.mask)))
-        return run_paged_dedup(self.tiles, self.planner.shard_plans, fn,
-                               buf, n_valid)
+            slots = np.asarray(fn(self.tiles.get(0),
+                                  jnp.asarray(dp.uniq_rows),
+                                  jnp.asarray(dp.indir),
+                                  jnp.asarray(dp.mask)))
+        else:
+            slots = run_paged_dedup(self.tiles, self.planner.shard_plans,
+                                    fn, buf, n_valid)
+        tk1 = self.clock()
+        self._kernel_mark(marks, "dedup", plan, tk0, tk1,
+                          rows=int(dp.uniq_rows.shape[0]))
+        return slots
+
+    def _kernel_mark(self, marks: Optional[list], method: str, plan,
+                     t0: float, t1: float, *, rows: int) -> None:
+        """Record one kernel dispatch: trace mark (with the shards the
+        tile cache had to stage mid-dispatch), profiler histogram, and
+        the live cost signal for the autotuner."""
+        moved = gather_bytes(rows, int(self.index.storage.shape[1]))
+        if marks is not None:
+            tags = {"method": method, "bucket": plan.bucket,
+                    "word_block": plan.word_block or 0,
+                    "bytes_moved": moved}
+            faulted = sorted({s for s, ev, _, _ in self._tile_events
+                              if ev == "fault"})
+            if faulted:
+                tags["faulted_shards"] = faulted
+            marks.append(("kernel_score", t0, t1, tags))
+        self.profiler.record(
+            method=method, bucket=plan.bucket, batch=plan.batch_size,
+            seconds=t1 - t0, word_block=plan.word_block or 0,
+            term_block=plan.term_block or 0, grid_order=plan.grid_order,
+            bytes_moved=moved)
 
     def score_batch(self, batch: MicroBatch) -> None:
         """Plan, dispatch, and answer one flushed micro-batch. Public so
@@ -254,7 +346,16 @@ class QueryServer(ServingBackend):
         ``poll_batches`` and score them from worker threads."""
         t0 = self.clock()
         Q, B = batch.size, batch.bucket
+        traced = any(r.trace is not None for r in batch.requests)
+        marks: Optional[list] = [] if traced else None
+        self._tile_events = []
+        nb = self.index.layout.n_blocks
+        tp0 = self.clock()
         plan = self.planner.plan(B, Q)
+        if marks is not None:
+            marks.append(("plan", tp0, self.clock(),
+                          {"method": plan.method, "fused": int(plan.fused),
+                           "paged": int(plan.paged)}))
         method = plan.method
         ells = np.array([r.n_terms for r in batch.requests], dtype=np.int32)
         tiles0 = (self.tiles.hits, self.tiles.faults,
@@ -263,8 +364,11 @@ class QueryServer(ServingBackend):
             buf = np.zeros((B, 2), dtype=np.uint32)
             buf[: ells[0]] = batch.requests[0].terms
             fn = self.planner.single_score_fn(plan)
+            tk0 = self.clock()
             slots = self._run_plan(plan, fn, jnp.asarray(buf),
                                    jnp.int32(ells[0]))
+            self._kernel_mark(marks, method, plan, tk0, self.clock(),
+                              rows=B * nb)
             scores = slots[None, self._host_slot]
         else:
             # Pad the query axis to a power of two so jit entries stay
@@ -278,17 +382,26 @@ class QueryServer(ServingBackend):
             n_valid[:Q] = ells
             slots = None
             if plan.fused and plan.dedup_threshold is not None:
-                slots = self._score_dedup(buf, n_valid, plan)
+                slots = self._score_dedup(buf, n_valid, plan, marks)
                 if slots is not None:
                     method = "dedup"
             if slots is None:
                 fn = self.planner.batch_score_fn(plan)
+                tk0 = self.clock()
                 slots = self._run_plan(plan, fn, jnp.asarray(buf),
                                        jnp.asarray(n_valid))
+                self._kernel_mark(marks, method, plan, tk0, self.clock(),
+                                  rows=q_pad * nb * B)
             scores = slots[:Q][:, self._host_slot]
         t1 = self.clock()
         service = t1 - t0
 
+        if marks is not None:
+            # tile stagings observed during this batch's dispatches, as
+            # their own spans naming the shard (demand fault vs prefetch)
+            for s, ev, t_end, dur in self._tile_events:
+                marks.append(("tile_fetch", t_end - dur, t_end,
+                              {"shard": s, "event": ev}))
         self.planner.record(plan, method)
         self.metrics.record_batch(Q, self.batcher.occupancy(batch), method)
         if plan.paged:
@@ -299,21 +412,31 @@ class QueryServer(ServingBackend):
                 prefetched=self.tiles.prefetched - tiles0[2],
                 prefetch_hits=self.tiles.prefetch_hits - tiles0[3])
         for i, r in enumerate(batch.requests):
+            ts0 = self.clock()
             result = self._select(scores[i], r.n_terms, r.threshold,
                                   r.top_k)
             wait = max(0.0, t0 - r.submitted_at)
             self.metrics.record_request(wait_s=wait, service_s=service)
-            self._responses[r.request_id] = QueryResponse(
+            resp = QueryResponse(
                 r.request_id, Status.OK, result, method=method,
                 batch_size=Q, wait_s=wait, service_s=service)
+            if r.trace is not None:
+                r.trace.add("queue_wait", r.submitted_at, t0,
+                            {"flush": batch.reason or "direct",
+                             "batch_size": Q})
+                for name, ms, me, tags in marks:
+                    r.trace.add(name, ms, me, tags)
+                r.trace.add("select", ts0, self.clock())
+                self.finalize_trace(r.trace, resp)
+            self._responses[r.request_id] = resp
             self.results_cache.put(
                 result_key(r.terms, r.threshold, r.top_k), result)
 
     def _answer(self, rid: int, status: Status, result, *, wait: float,
-                service: float) -> None:
+                service: float, trace=None) -> None:
         self.metrics.record_request(wait_s=wait, service_s=service)
-        self._responses[rid] = QueryResponse(rid, status, result,
-                                             wait_s=wait, service_s=service)
+        self._responses[rid] = self._finalize(trace, QueryResponse(
+            rid, status, result, wait_s=wait, service_s=service))
 
     # -- serving loop (poll_batches / step / drain / take_response /
     # retract / pop_responses come from ServingBackend) ----------------------
@@ -324,6 +447,8 @@ class QueryServer(ServingBackend):
         the measurement workload, which would otherwise be served entirely
         from cache."""
         self.metrics = ServingMetrics()
+        self.metrics.tracer = self.tracer
+        self.profiler.bind_registry(self.metrics.registry)
         self.planner.dispatch_counts.clear()
         if clear_caches:
             self.results_cache = LRUCache(self.results_cache.capacity)

@@ -31,6 +31,7 @@ into failover to the next replica.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Optional
 
 import jax
@@ -99,6 +100,10 @@ class ShardWorker:
                        self._dev(p.block_width)) for p in self.plans]
         self.failed = False
         self.dispatches = 0
+        # Optional KernelProfiler (repro.obs.profile): the frontend wires
+        # its own in so per-shard kernel timings land in the shared
+        # metrics registry tagged with this worker's dispatches.
+        self.profiler = None
         # One dispatch at a time per worker: the frontend's concurrent
         # scatter may land two shards on the same host in parallel, and
         # the tile cache / counters are not thread-safe. Serializing per
@@ -157,9 +162,21 @@ class ShardWorker:
         q, bucket = int(terms_dev.shape[0]), int(terms_dev.shape[1])
         method = choose_method(self.params.n_hashes, bucket, q,
                                self.short_query_terms)
+        t0 = time.perf_counter()
         slots = self._score_fn(method)(self.tiles.get(local), offs, widths,
                                        terms_dev, n_valid_dev)
-        return np.asarray(slots), plan, method
+        slots = np.asarray(slots)
+        if self.profiler is not None:
+            from ..obs.profile import gather_bytes
+            nb_local = int(getattr(plan.row_offset, "shape", (1,))[0])
+            self.profiler.record(
+                method=method, bucket=bucket, batch=q,
+                seconds=time.perf_counter() - t0,
+                word_block=self.word_block or 0,
+                bytes_moved=gather_bytes(q * nb_local * bucket,
+                                         int(self.storage.shape[1])),
+                shard=gshard)
+        return slots, plan, method
 
     def score_candidates(self, gshard: int, terms_dev, n_valid_dev,
                          cutoffs: np.ndarray, topks: np.ndarray,

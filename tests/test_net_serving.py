@@ -27,8 +27,10 @@ from repro.launch.serve import run_closed
 from repro.serve import (Frontend, FrontendConfig, LoopClosed, NetClient,
                          NetServer, QueryServer, ServerConfig, ServingLoop,
                          ShardWorker, Status)
-from repro.serve.net import (decode_query, decode_result, encode_query,
-                             encode_result)
+from repro.serve.net import (MSG_HELLO, MSG_QUERY, MSG_RESULT, PROTO_VERSION,
+                             _QUERY, decode_hello, decode_query,
+                             decode_result, encode_query, encode_result,
+                             read_frame, write_frame)
 from repro.serve.request import QueryResponse
 
 PARAMS = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
@@ -72,12 +74,18 @@ def _assert_identical(got, want):
 def test_wire_query_round_trip():
     terms = np.array([[1, 2], [3, 4], [5, 6]], dtype=np.uint32)
     payload = encode_query(42, terms, 0.75, 7, 1.5)
-    rid, t2, th, k, dl = decode_query(payload)
-    assert rid == 42 and th == 0.75 and k == 7 and dl == 1.5
+    rid, t2, th, k, dl, tid = decode_query(payload)
+    assert rid == 42 and th == 0.75 and k == 7 and dl == 1.5 and tid == 0
     assert np.array_equal(t2, terms) and t2.dtype == np.uint32
     # defaults: NaN threshold -> None, deadline 0 -> None
-    rid, t2, th, k, dl = decode_query(encode_query(0, terms, None, 0, None))
-    assert th is None and dl is None and k == 0
+    rid, t2, th, k, dl, tid = decode_query(
+        encode_query(0, terms, None, 0, None))
+    assert th is None and dl is None and k == 0 and tid == 0
+    # v2 trailing trace id round-trips
+    rid, t2, th, k, dl, tid = decode_query(
+        encode_query(7, terms, 0.5, 0, None, trace_id=0xBEEF00012345))
+    assert rid == 7 and tid == 0xBEEF00012345
+    assert np.array_equal(t2, terms)
 
 
 def test_wire_result_round_trip():
@@ -90,12 +98,35 @@ def test_wire_result_round_trip():
     assert rid == 3 and out.status == Status.OK
     assert out.method == "lookup" and out.batch_size == 4
     assert out.wait_s == 0.25 and out.service_s == 0.125
+    assert out.trace_id == 0 and out.stages is None
     _assert_identical(out.result, res)
     # non-OK statuses carry no result
     for status in (Status.REJECTED, Status.DROPPED, Status.FAILED):
         rid, out = decode_result(
             encode_result(9, QueryResponse(0, status)))
         assert out.status == status and out.result is None
+
+
+def test_wire_result_trace_block_round_trip():
+    """The v2 trailing trace block (trace id + per-stage breakdown)
+    round-trips on OK and non-OK results alike, insertion order kept."""
+    from repro.core.query import SearchResult
+    res = SearchResult(np.array([1], np.int32), np.array([9], np.int32),
+                       4, 3)
+    stages = {"queue_wait": 0.001, "kernel_score": 0.25, "select": 0.002}
+    resp = QueryResponse(0, Status.OK, res, method="fused",
+                         trace_id=77, stages=stages)
+    rid, out = decode_result(encode_result(5, resp, trace_id=77))
+    assert rid == 5 and out.trace_id == 77
+    assert out.stages == stages
+    assert list(out.stages) == list(stages)      # order preserved
+    _assert_identical(out.result, res)
+    # non-OK (e.g. DROPPED) still carries its breakdown
+    dropped = QueryResponse(0, Status.DROPPED, trace_id=9,
+                            stages={"queue_wait": 0.5})
+    rid, out = decode_result(encode_result(6, dropped, trace_id=9))
+    assert out.status == Status.DROPPED and out.trace_id == 9
+    assert out.stages == {"queue_wait": 0.5}
 
 
 # --------------------------------------------------------------------------
@@ -209,6 +240,93 @@ def test_net_multihost_frontend_over_socket(built):
             for q, f in zip(qs, futs[len(qs):]):
                 _assert_identical(f.result(120.0).result,
                                   eng.top_k(q, k=4))
+    finally:
+        net.close()
+
+
+# --------------------------------------------------------------------------
+# Protocol-version interop (v1 <-> v2)
+# --------------------------------------------------------------------------
+
+def test_net_v1_frames_against_v2_server(built, oracle):
+    """Old client -> new server: raw protocol-1 QUERY frames (terms only,
+    no trailing trace id) against a default (v2) server must be answered
+    with plain v1 RESULT frames — no trace block, bit-identical result."""
+    import socket as socketlib
+    c, index, _ = built
+    _, net = _serve(index, max_batch=4, max_wait_s=0.001)
+    (q,), _ = make_queries(c, n_pos=1, n_neg=0, length=120, seed=41)
+    terms = compile_pattern(q, PARAMS)
+    try:
+        sock = socketlib.create_connection(net.address, timeout=60.0)
+        try:
+            hello = read_frame(sock)
+            assert hello[0] == MSG_HELLO
+            params, n_docs, version = decode_hello(hello)
+            assert version == PROTO_VERSION >= 2     # server advertises v2
+            # a v1 client's encoder: header + packed terms, nothing else
+            frame = _QUERY.pack(MSG_QUERY, 11, 0.8, 0, 0.0,
+                                terms.shape[0]) + np.ascontiguousarray(
+                                    terms, dtype="<u4").tobytes()
+            write_frame(sock, frame)
+            payload = read_frame(sock)
+            assert payload[0] == MSG_RESULT
+            rid, res = decode_result(payload)
+            assert rid == 11 and res.status == Status.OK
+            assert res.trace_id == 0 and res.stages is None  # no v2 tail
+            _assert_identical(res.result, oracle.search(q, threshold=0.8))
+        finally:
+            sock.close()
+    finally:
+        net.close()
+
+
+def test_net_v2_client_against_v1_pinned_server(built, oracle):
+    """New client -> old server (NetServer pinned to proto_version=1):
+    the client sees version 1 in HELLO, never sends trace ids, and gets
+    plain v1 results; STATS is refused client-side."""
+    c, index, _ = built
+    server = QueryServer(index, ServerConfig(max_batch=4, max_wait_s=0.001))
+    net = NetServer(ServingLoop(server), proto_version=1).start()
+    (q,), _ = make_queries(c, n_pos=1, n_neg=0, length=120, seed=43)
+    try:
+        with NetClient(*net.address, timeout_s=60.0) as cl:
+            assert cl.proto_version == 1 and not cl.trace
+            r = cl.search(q, threshold=0.8)
+            assert r.status == Status.OK
+            assert r.trace_id == 0 and r.stages is None
+            _assert_identical(r.result, oracle.search(q, threshold=0.8))
+            with pytest.raises(ConnectionError):
+                cl.stats()
+    finally:
+        net.close()
+
+
+def test_net_trace_and_stats_round_trip(built, oracle):
+    """v2 <-> v2: a traced query returns its client-minted trace id plus
+    a per-stage breakdown, and STATS serves both formats over the same
+    pipelined session."""
+    from repro.obs.export import parse_prometheus
+    c, index, _ = built
+    server, net = _serve(index, max_batch=4, max_wait_s=0.001)
+    (q,), _ = make_queries(c, n_pos=1, n_neg=0, length=120, seed=47)
+    try:
+        with NetClient(*net.address, timeout_s=60.0) as cl:
+            assert cl.proto_version >= 2 and cl.trace
+            r = cl.search(q, threshold=0.8)
+            assert r.status == Status.OK and r.trace_id != 0
+            assert r.stages and "kernel_score" in r.stages
+            assert all(v >= 0 for v in r.stages.values())
+            _assert_identical(r.result, oracle.search(q, threshold=0.8))
+            # the server-side trace carries the SAME id end to end
+            trace = server.tracer.find(r.trace_id)
+            assert trace is not None and trace.done
+            snap = cl.stats()
+            assert snap["served"] >= 1 and "p99_ms" in snap
+            text = cl.stats(prometheus=True)
+            parsed = parse_prometheus(text)
+            assert parsed.get("serve_requests_total{status=\"ok\"}",
+                              0) >= 1
     finally:
         net.close()
 
