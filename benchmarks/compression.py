@@ -1,0 +1,152 @@
+"""Compressed arena: ratio x decode throughput x end-to-end latency.
+
+The tentpole claim of the compressed arena is that fused-decode scoring
+multiplies EFFECTIVE memory bandwidth: a dict-coded shard moves
+raw_bytes/ratio across HBM per dispatch and decodes inside the kernel
+loop, so the win is real only when the decode cost stays below the
+bandwidth saved. This sweep measures all three terms per corpus
+redundancy level:
+
+  ratio   — on-disk + HBM compression ratio the rowdict codec achieves;
+  decode  — host decode throughput (codec layer, tile -> raw MB/s) and
+            fused kernel call time vs the raw kernel on identical shapes;
+  e2e     — QueryServer latency over the same query stream, raw store vs
+            compressed store with the planner's cost model active.
+
+``--json`` writes results/BENCH_compression.json for CI trend tracking.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import IndexParams, QueryEngine
+from repro.core import codec as codec_mod
+from repro.data import make_corpus
+from repro.index import build_compact_streaming
+
+from .common import emit, timeit
+
+
+def _redundant_terms(n_base: int, reps: int, seed: int = 3):
+    c = make_corpus(n_base, k=15, mean_length=160, min_length=120,
+                    seed=seed)
+    return c, [c.doc_terms[i % n_base] for i in range(n_base * reps)]
+
+
+def _decode_throughput(storage) -> tuple[float, float]:
+    """(host decode MB/s over all dict shards, decoded MB)."""
+    total_b = 0
+    t0 = time.perf_counter()
+    for s in range(storage.n_shards):
+        if storage.shard_codec(s) in codec_mod.DICT_CODECS:
+            tile = np.asarray(storage.shard_host(s))
+            total_b += tile.nbytes
+    dt = time.perf_counter() - t0
+    return (total_b / 2 ** 20 / max(dt, 1e-9), total_b / 2 ** 20)
+
+
+def _serve_latency(index, pats, *, compressed: bool) -> float:
+    from repro.serve.server import QueryServer, ServerConfig
+    srv = QueryServer(index, ServerConfig(result_cache=0, row_cache=0,
+                                          compressed=compressed))
+    rid = srv.submit(pats[0], threshold=0.4)   # warm the jit path
+    srv.drain()
+    srv.pop_responses()
+
+    def one_round():
+        for p in pats:
+            srv.submit(p, threshold=0.4)
+        srv.drain()
+        srv.pop_responses()
+
+    return timeit(one_round, repeats=3, warmup=1)
+
+
+def run(n_base: int = 24, n_queries: int = 24, *,
+        reps_levels: tuple[int, ...] = (1, 4, 8)) -> dict:
+    params = IndexParams(n_hashes=1, fpr=0.03, kmer=15)
+    report: dict = {"params": {"n_base": n_base, "n_queries": n_queries},
+                    "levels": []}
+    rng = np.random.default_rng(0)
+    for reps in reps_levels:
+        c, terms = _redundant_terms(n_base, reps)
+        pats = ["".join(rng.choice(list("ACGT"), size=60))
+                for _ in range(n_queries // 2)]
+        pats += [c.documents[i % n_base][10:90]
+                 for i in range(n_queries - len(pats))]
+        tmp = Path(tempfile.mkdtemp(prefix="cobs-compress-"))
+        try:
+            idx_c, _ = build_compact_streaming(
+                terms, tmp / "comp", params, block_docs=128,
+                blocks_per_shard=1, codec="rowdict")
+            idx_r, _ = build_compact_streaming(
+                terms, tmp / "raw", params, block_docs=128,
+                blocks_per_shard=1, codec="raw")
+            ratio = idx_c.storage.dict_ratio() or 1.0
+            mbps, mb = _decode_throughput(idx_c.storage)
+
+            # fused-decode kernel vs raw kernel, identical shapes, warm
+            eng_r = QueryEngine(idx_r, method="lookup")
+            eng_c = QueryEngine(idx_c, method="lookup", compressed=True)
+            t_raw_k = timeit(lambda: [eng_r.search(p, threshold=0.4)
+                                      for p in pats], repeats=3)
+            t_comp_k = timeit(lambda: [eng_c.search(p, threshold=0.4)
+                                       for p in pats], repeats=3)
+
+            t_raw_e2e = _serve_latency(idx_r, pats, compressed=False)
+            t_comp_e2e = _serve_latency(idx_c, pats, compressed=True)
+
+            per_q = 1e6 / len(pats)
+            tag = f"reps={reps}"
+            emit(f"compression/ratio_{reps}x", ratio * 1000,
+                 f"{tag};ratio={ratio:.2f};unit=milli")
+            emit(f"compression/decode_host_{reps}x",
+                 1e6 * mb / max(mbps, 1e-9) / max(mb, 1e-9),
+                 f"{tag};MBps={mbps:.0f}")
+            emit(f"compression/query_raw_{reps}x", t_raw_k * per_q, tag)
+            emit(f"compression/query_fused_{reps}x", t_comp_k * per_q,
+                 f"{tag};vs_raw={t_comp_k / max(t_raw_k, 1e-12):.2f}")
+            emit(f"compression/serve_raw_{reps}x", t_raw_e2e * per_q, tag)
+            emit(f"compression/serve_comp_{reps}x", t_comp_e2e * per_q,
+                 f"{tag};vs_raw={t_comp_e2e / max(t_raw_e2e, 1e-12):.2f}")
+            report["levels"].append({
+                "reps": reps,
+                "ratio": round(ratio, 4),
+                "decode_host_MBps": round(mbps, 1),
+                "decoded_MB": round(mb, 3),
+                "query_raw_us": round(t_raw_k * per_q, 1),
+                "query_fused_us": round(t_comp_k * per_q, 1),
+                "serve_raw_us": round(t_raw_e2e * per_q, 1),
+                "serve_comp_us": round(t_comp_e2e * per_q, 1),
+            })
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    return report
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write the sweep report to this path")
+    args = ap.parse_args()
+    report = run(n_base=16 if args.quick else 24,
+                 n_queries=12 if args.quick else 24,
+                 reps_levels=(1, 4) if args.quick else (1, 4, 8))
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=2))
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,8 +27,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import common
-    from . import (compaction, construction, fpr, hedging, kernel_micro,
-                   outofcore, query, scaling, serving)
+    from . import (compaction, compression, construction, fpr, hedging,
+                   kernel_micro, outofcore, query, scaling, serving)
 
     n = 128 if args.quick else 512
     suites = {
@@ -48,15 +48,22 @@ def main() -> None:
             max_hosts=2 if args.quick else 3),
         "outofcore": lambda: outofcore.run(64 if args.quick else 256,
                                            n_queries=8 if args.quick else 16),
+        "compression": lambda: compression.run(
+            16 if args.quick else 24,
+            n_queries=12 if args.quick else 24,
+            reps_levels=(1, 4) if args.quick else (1, 4, 8)),
     }
     print("name,us_per_call,derived")
     kernel_report = None
+    compression_report = None
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue
         res = fn()
         if name == "kernel":
             kernel_report = res
+        elif name == "compression":
+            compression_report = res
 
     out = Path("results")
     out.mkdir(exist_ok=True)
@@ -71,6 +78,12 @@ def main() -> None:
         kernel_json = out / "BENCH_kernels.json"
         kernel_json.write_text(json.dumps(kernel_report, indent=2))
         print(f"# wrote {kernel_json} (overlap sweep + DMA accounting)",
+              file=sys.stderr)
+    if compression_report is not None:
+        import json
+        comp_json = out / "BENCH_compression.json"
+        comp_json.write_text(json.dumps(compression_report, indent=2))
+        print(f"# wrote {comp_json} (ratio x decode x e2e sweep)",
               file=sys.stderr)
 
 

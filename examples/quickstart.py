@@ -202,3 +202,39 @@ assert logged, "the traced query must reach the slow-query log"
 print(f"slow-query log has the matching span tree "
       f"({len(logged[0]['spans'])} spans) — render it with:\n"
       f"  python -m benchmarks.trace_report {slow_log}")
+
+# --- compressed arena: fused-decode scoring ---------------------------------
+# Real collections are redundant (strain panels, re-sequenced samples), so
+# whole signature rows recur. codec="rowdict" (or "auto") stores each
+# shard tile as (unique rows, int32 refs); the manifest records per-shard
+# codec + ratio, hashes stay over the DECODED tile, and migrate_store_codec
+# re-encodes existing stores in place-for-place geometry. A compressed
+# engine/server keeps the (dict, refs) form in HBM — the working set
+# shrinks by the ratio — and the Pallas kernels resolve refs inside the
+# gather loop, so scores stay bit-identical to raw. The planner only picks
+# the compressed path when the tuner's measured lookup_c cost (decode) is
+# beaten by the bandwidth saved; ServerConfig(compressed=True) enables it.
+dup_terms = [doc_terms[i % len(doc_terms)] for i in range(12)]  # redundant
+comp_store = store.parent / "cobs-v2-comp"
+# block_docs=128 -> 4-word tiles: rowdict needs multi-word rows to pay
+comp_idx, comp_stats = build_compact_streaming(
+    dup_terms, comp_store, params, block_docs=128, row_align=64,
+    codec="rowdict")
+ratio = comp_idx.storage.dict_ratio()
+print(f"compressed store: ratio {ratio:.2f}x "
+      f"({comp_stats.n_shards} shard(s), dict-coded HBM form)")
+
+comp_server = QueryServer(comp_idx, ServerConfig(
+    max_batch=8, max_wait_s=0.0, compressed=True))
+rid = comp_server.submit(genomes[1][200:320], threshold=0.8)
+comp_server.drain()
+hit_c = comp_server.pop_responses()[rid].result
+# docs 1, 4, 7, 10 are copies of genome 1 in the duplicated corpus: all
+# hit, each with exactly the single-host score
+assert 1 in hit_c.doc_ids and hit_c.scores.max() == res2.scores[0]
+snap = comp_server.metrics.snapshot()
+print(f"compressed serving: doc{hit_c.doc_ids[0]} "
+      f"score {hit_c.scores[0]}/{hit_c.n_terms}, "
+      f"HBM staged {snap.arena_comp_bytes}B compressed / "
+      f"{snap.arena_raw_bytes}B raw "
+      f"(plan compressed={comp_server.planner.plan(64, 8).compressed})")

@@ -38,6 +38,8 @@ from pathlib import Path
 import jax.numpy as jnp
 import numpy as np
 
+from . import codec as _codec
+
 
 @dataclasses.dataclass(frozen=True)
 class ArenaLayout:
@@ -169,6 +171,56 @@ class ArenaStorage:
             out[sel] = np.asarray(self.shard_host(int(s)))[local]
         return out.reshape(*rows.shape, self.shape[1])
 
+    # -- compression surface (raw everywhere except MappedArena) ------------
+    def shard_codec(self, s: int) -> str:
+        """This shard's on-disk codec (repro.core.codec.CODECS)."""
+        return _codec.CODEC_RAW
+
+    def shard_comp_nbytes(self, s: int) -> int:
+        """Encoded (on-disk) shard bytes (== shard_nbytes for raw)."""
+        return self.shard_nbytes(s)
+
+    def shard_hbm_nbytes(self, s: int) -> int:
+        """Bytes the shard's compressed DEVICE form needs: dict + refs
+        for rowdict codecs (what the tile cache stages), raw otherwise.
+        Unlike ``shard_comp_nbytes`` this excludes disk-only RLE gains —
+        it is the working-set number the cache accounts in."""
+        return self.shard_nbytes(s)
+
+    def shard_dict_host(self, s: int
+                        ) -> tuple[np.ndarray, np.ndarray] | None:
+        """The shard's HBM-compressible dictionary form — (dict_rows
+        uint32 [D, W], refs int32 [rows]) for rowdict-coded shards, None
+        otherwise. The DeviceTileCache stages THIS instead of the
+        expanded tile when the compressed score path is planned."""
+        return None
+
+    def comp_summary(self) -> tuple[int, int, int]:
+        """(raw_bytes, encoded_bytes, n_compressed_shards) over all
+        shards — the store-level compression ratio the manifest records
+        per shard, aggregated."""
+        raw = comp = n = 0
+        for s in range(self.n_shards):
+            raw += self.shard_nbytes(s)
+            comp += self.shard_comp_nbytes(s)
+            if self.shard_codec(s) != _codec.CODEC_RAW:
+                n += 1
+        return raw, comp, n
+
+    def dict_ratio(self) -> float | None:
+        """HBM compression ratio of the dict-form shards: expanded bytes
+        over (dict + refs) bytes, aggregated across every rowdict-coded
+        shard. None when no shard has a dict form — the planner/tuner
+        gate the compressed kernel paths on this."""
+        raw = comp = 0
+        for s in range(self.n_shards):
+            if self.shard_codec(s) in _codec.DICT_CODECS:
+                raw += self.shard_nbytes(s)
+                comp += self.shard_hbm_nbytes(s)
+        if comp == 0:
+            return None
+        return raw / comp
+
 
 def _starts(n_rows: int) -> np.ndarray:
     return np.array([0, n_rows], dtype=np.int64)
@@ -216,36 +268,100 @@ class HostArena(ArenaStorage):
 
 
 class MappedArena(ArenaStorage):
-    """Row-range shards backed by raw ``.npy`` files (np.memmap) and/or
-    in-memory arrays. File-backed shards are opened lazily with
+    """Row-range shards backed by raw ``.npy`` files (np.memmap), lazy
+    compressed sources (``repro.core.codec.CompressedShardSource``),
+    and/or in-memory arrays. File-backed shards are opened lazily with
     ``mmap_mode='r'`` so touching a shard costs page faults, not a load;
     in-memory sources make merge an O(metadata) shard-list concatenation.
+
+    Compressed sources decode on first ``shard_host`` touch (the decoded
+    tile is cached; all existing raw consumers stay bit-identical), or
+    hand their dictionary form to the tile cache via ``shard_dict_host``
+    without ever expanding. ``decode_observer(shard, codec, seconds)``,
+    when set, sees every host-side decode — the serving layer wires it
+    to the obs registry's decode-time histogram.
     """
 
     def __init__(self, sources: list, shard_row_starts: np.ndarray,
                  doc_words: int, dtype=np.uint32):
-        self.sources = list(sources)        # each: Path | str | np.ndarray
+        self.sources = list(sources)        # Path | str | ndarray | source
         self.shard_row_starts = np.asarray(shard_row_starts, dtype=np.int64)
         if len(self.sources) != self.n_shards:
             raise ValueError("sources / shard_row_starts length mismatch")
         self.shape = (int(self.shard_row_starts[-1]), int(doc_words))
         self.dtype = np.dtype(dtype)
         self._open: dict[int, np.ndarray] = {}
+        self._open_dict: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self.decode_observer = None
+        self.decodes = 0
+
+    def _shard_rows(self, s: int) -> int:
+        return int(self.shard_row_starts[s + 1] - self.shard_row_starts[s])
+
+    def _notify_decode(self, s: int, codec: str, seconds: float) -> None:
+        self.decodes += 1
+        if self.decode_observer is not None:
+            try:
+                self.decode_observer(s, codec, seconds)
+            except Exception:
+                pass              # accounting must never fail a read
 
     def shard_host(self, s: int) -> np.ndarray:
         a = self._open.get(s)
         if a is None:
             src = self.sources[s]
-            a = src if isinstance(src, np.ndarray) else np.load(
-                src, mmap_mode="r")
-            want_rows = int(self.shard_row_starts[s + 1]
-                            - self.shard_row_starts[s])
+            if isinstance(src, _codec.CompressedShardSource):
+                t0 = time.perf_counter()
+                a = src.load().decode()
+                self._notify_decode(s, src.codec,
+                                    time.perf_counter() - t0)
+            elif isinstance(src, np.ndarray):
+                a = src
+            else:
+                a = np.load(src, mmap_mode="r")
+            want_rows = self._shard_rows(s)
             if a.shape != (want_rows, self.shape[1]):
                 raise ValueError(
                     f"shard {s}: shape {a.shape} != "
                     f"({want_rows}, {self.shape[1]})")
             self._open[s] = a
         return a
+
+    # -- compression surface -------------------------------------------------
+    def shard_codec(self, s: int) -> str:
+        src = self.sources[s]
+        if isinstance(src, _codec.CompressedShardSource):
+            return src.codec
+        return _codec.CODEC_RAW
+
+    def shard_comp_nbytes(self, s: int) -> int:
+        src = self.sources[s]
+        if isinstance(src, _codec.CompressedShardSource):
+            return int(src.comp_nbytes)
+        return self.shard_nbytes(s)
+
+    def shard_hbm_nbytes(self, s: int) -> int:
+        d = self.shard_dict_host(s)
+        if d is None:
+            return self.shard_nbytes(s)
+        return int(d[0].nbytes) + int(d[1].nbytes)
+
+    def shard_dict_host(self, s: int
+                        ) -> tuple[np.ndarray, np.ndarray] | None:
+        if self.shard_codec(s) not in _codec.DICT_CODECS:
+            return None
+        cached = self._open_dict.get(s)
+        if cached is None:
+            src = self.sources[s]
+            t0 = time.perf_counter()
+            cached = src.load().dict_form()
+            # rowdict mmaps straight through (no decode work); the +rle
+            # variant expands its dictionary payload here — count it
+            if src.codec == _codec.CODEC_ROWDICT_RLE:
+                self._notify_decode(s, src.codec,
+                                    time.perf_counter() - t0)
+            self._open_dict[s] = cached
+        return cached
 
     @staticmethod
     def concat(a: "ArenaStorage", b: "ArenaStorage") -> "MappedArena":
@@ -282,6 +398,13 @@ def wrap_arena(arena) -> ArenaStorage:
 # HBM paging
 # --------------------------------------------------------------------------
 
+def _pad_dict_rows(n: int) -> int:
+    """Pow2 padding (floor 8) for staged dictionary heights — mirrors the
+    query planner's unique-row padding so compressed kernel shapes bucket
+    into O(log) variants instead of one compile per distinct D."""
+    return max(8, 1 << max(0, int(n) - 1).bit_length())
+
+
 def common_tile_rows(storage: ArenaStorage) -> int | None:
     """Row count unifying all of a sharded storage's tiles (the tallest
     shard), or None for dense single-shard storage (no padding needed)."""
@@ -317,6 +440,15 @@ class DeviceTileCache:
 
     ``device`` optionally pins staged tiles to a specific jax device — the
     multi-host serving path gives each fake-host worker its own device.
+
+    Compressed residency: for rowdict-coded shards, ``get_compressed``
+    stages the (dict_rows, refs) pair instead of the expanded tile — the
+    HBM working set shrinks by the shard's measured ratio and the cache
+    accounts the COMPRESSED bytes, so the same ``capacity_bytes`` holds
+    ratio-times more shards. Raw and compressed forms of a shard are
+    independent cache entries (int key vs ("c", shard)) sharing one LRU
+    and one byte budget; ``raw_bytes_staged`` / ``comp_bytes_staged``
+    accumulate staged bytes per form for the serving metrics.
     """
 
     def __init__(self, storage: ArenaStorage,
@@ -327,13 +459,17 @@ class DeviceTileCache:
         self.capacity_bytes = capacity_bytes
         self.pad_rows_to = pad_rows_to
         self.device = device
-        self._tiles: "OrderedDict[int, jnp.ndarray]" = OrderedDict()
-        self._prefetched: set[int] = set()
+        # key: shard id (raw tile) or ("c", shard id) (dict form)
+        self._tiles: "OrderedDict" = OrderedDict()
+        self._sizes: dict = {}
+        self._prefetched: set = set()
         self.resident_bytes = 0
         self.hits = 0
         self.faults = 0
         self.prefetched = 0
         self.prefetch_hits = 0
+        self.raw_bytes_staged = 0
+        self.comp_bytes_staged = 0
         # Per-shard accounting (the global totals above cannot say WHICH
         # shard keeps faulting when the working set outsizes the cache).
         self.shard_hits: dict[int, int] = {}
@@ -371,53 +507,111 @@ class DeviceTileCache:
             return self.storage.shard_device(s)
         return self._put(np.pad(host, ((0, pad), (0, 0))))
 
+    def _stage_compressed(self, s: int) -> tuple:
+        d = self.storage.shard_dict_host(s)
+        if d is None:
+            raise ValueError(
+                f"shard {s} has no dict form "
+                f"(codec {self.storage.shard_codec(s)!r})")
+        dict_rows, refs = d
+        D = int(dict_rows.shape[0])
+        d_pad = _pad_dict_rows(D) - D
+        if d_pad:
+            dict_rows = np.pad(np.asarray(dict_rows), ((0, d_pad), (0, 0)))
+        pad_to = self.pad_rows_to or int(refs.shape[0])
+        r_pad = pad_to - int(refs.shape[0])
+        if r_pad < 0:
+            raise ValueError(f"shard {s} taller than pad_rows_to")
+        if r_pad:                  # padded rows ref slot 0; never addressed
+            refs = np.pad(np.asarray(refs), (0, r_pad))
+        return (self._put(np.ascontiguousarray(dict_rows)),
+                self._put(np.ascontiguousarray(refs)))
+
     def _tile_nbytes(self, s: int) -> int:
         if not self.pad_rows_to:
             return self.storage.shard_nbytes(s)
         return (self.pad_rows_to * int(self.storage.shape[1])
                 * np.dtype(self.storage.dtype).itemsize)
 
+    @staticmethod
+    def _shard_of(key) -> int:
+        return key[1] if isinstance(key, tuple) else key
+
     def __len__(self) -> int:
         return len(self._tiles)
 
     @property
     def resident_shards(self) -> tuple[int, ...]:
-        return tuple(self._tiles)
+        return tuple(self._shard_of(k) for k in self._tiles)
 
-    def _insert(self, s: int) -> tuple:
+    def has_compressed(self, s: int) -> bool:
+        return ("c", s) in self._tiles
+
+    def _insert(self, key) -> tuple:
+        s = self._shard_of(key)
+        compressed = isinstance(key, tuple)
         t0 = time.perf_counter()
-        tile = self._stage(s)
+        tile = self._stage_compressed(s) if compressed else self._stage(s)
         staged_s = time.perf_counter() - t0
-        need = self._tile_nbytes(s)
+        if compressed:
+            need = sum(int(t.nbytes) for t in tile)
+            self.comp_bytes_staged += need
+        else:
+            need = self._tile_nbytes(s)
+            self.raw_bytes_staged += need
         if self.capacity_bytes is not None:
             while (self._tiles
                    and self.resident_bytes + need > self.capacity_bytes):
                 old, _ = self._tiles.popitem(last=False)
-                self.resident_bytes -= self._tile_nbytes(old)
+                self.resident_bytes -= self._sizes.pop(old)
                 self._prefetched.discard(old)
-                self.shard_evictions[old] = \
-                    self.shard_evictions.get(old, 0) + 1
-                self._notify(old, "eviction")
-        self._tiles[s] = tile
+                old_s = self._shard_of(old)
+                self.shard_evictions[old_s] = \
+                    self.shard_evictions.get(old_s, 0) + 1
+                self._notify(old_s, "eviction")
+        self._tiles[key] = tile
+        self._sizes[key] = need
         self.resident_bytes += need
         return tile, staged_s
 
-    def get(self, s: int) -> jnp.ndarray:
-        tile = self._tiles.get(s)
+    def _get(self, key):
+        s = self._shard_of(key)
+        tile = self._tiles.get(key)
         if tile is not None:
-            self._tiles.move_to_end(s)
+            self._tiles.move_to_end(key)
             self.hits += 1
             self.shard_hits[s] = self.shard_hits.get(s, 0) + 1
-            if s in self._prefetched:
-                self._prefetched.discard(s)
+            if key in self._prefetched:
+                self._prefetched.discard(key)
                 self.prefetch_hits += 1
             self._notify(s, "hit")
             return tile
         self.faults += 1
         self.shard_faults[s] = self.shard_faults.get(s, 0) + 1
-        tile, staged_s = self._insert(s)
+        tile, staged_s = self._insert(key)
         self._notify(s, "fault", staged_s)
         return tile
+
+    def get(self, s: int) -> jnp.ndarray:
+        return self._get(s)
+
+    def get_compressed(self, s: int) -> tuple:
+        """(dict_tile uint32 [D_pad, W], refs int32 [pad_rows_to]) on
+        device — the fused kernels' decode inputs. D is padded to a pow2
+        (floor 8) so kernel shapes bucket; refs pad with slot 0."""
+        return self._get(("c", s))
+
+    def _prefetch(self, key) -> bool:
+        if key in self._tiles:
+            return False
+        s = self._shard_of(key)
+        self.faults += 1
+        self.shard_faults[s] = self.shard_faults.get(s, 0) + 1
+        self.prefetched += 1
+        self._prefetched.add(key)
+        _, staged_s = self._insert(key)
+        self._notify(s, "prefetch", staged_s)
+        return True
 
     def prefetch(self, s: int) -> bool:
         """Stage shard ``s`` ahead of use (double buffering). The transfer
@@ -425,17 +619,14 @@ class DeviceTileCache:
         caller computes next; a later ``get(s)`` finds the tile resident.
         Counts as a fault (it IS one H2D staging); returns True if a
         transfer was started, False if the tile was already resident."""
-        if s in self._tiles:
-            return False
-        self.faults += 1
-        self.shard_faults[s] = self.shard_faults.get(s, 0) + 1
-        self.prefetched += 1
-        self._prefetched.add(s)
-        _, staged_s = self._insert(s)
-        self._notify(s, "prefetch", staged_s)
-        return True
+        return self._prefetch(s)
+
+    def prefetch_compressed(self, s: int) -> bool:
+        """``prefetch`` for the dict form (see ``get_compressed``)."""
+        return self._prefetch(("c", s))
 
     def clear(self) -> None:
         self._tiles.clear()
+        self._sizes.clear()
         self._prefetched.clear()
         self.resident_bytes = 0

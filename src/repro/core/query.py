@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import codec as _codec
 from . import dna, hashing
 from .arena import ArenaLayout, DeviceTileCache, common_tile_rows
 from .index import BitSlicedIndex, IndexParams
@@ -190,13 +191,39 @@ def run_paged(tiles, shard_args, fn, *args) -> list[np.ndarray]:
     return [np.asarray(p) for p in parts]
 
 
+def run_paged_compressed(tiles, shard_args, fn_raw, fn_comp, *args
+                         ) -> list[np.ndarray]:
+    """``run_paged`` with per-shard codec dispatch: dict-coded shards stage
+    their COMPRESSED (dict, refs) form to device and score through
+    ``fn_comp(dict_rows, refs, offs, widths, *args)`` — the fused-decode
+    kernels — while raw shards take ``fn_raw`` unchanged. Prefetch is
+    codec-aware, so the overlap stages the form that will actually be
+    scored. Outputs are bit-identical to the all-raw path."""
+    storage = tiles.storage
+    comp = [storage.shard_codec(s) in _codec.DICT_CODECS
+            for (s, _, _) in shard_args]
+    parts = []
+    for i, (s, offs, widths) in enumerate(shard_args):
+        if comp[i]:
+            dict_rows, refs = tiles.get_compressed(s)
+            out = fn_comp(dict_rows, refs, offs, widths, *args)
+        else:
+            out = fn_raw(tiles.get(s), offs, widths, *args)
+        if i + 1 < len(shard_args):
+            nxt = shard_args[i + 1][0]
+            (tiles.prefetch_compressed if comp[i + 1]
+             else tiles.prefetch)(nxt)
+        parts.append(out)
+    return [np.asarray(p) for p in parts]
+
+
 # --------------------------------------------------------------------------
 # Batched row dedup (the serving hot-path bandwidth optimization)
 # --------------------------------------------------------------------------
 
 @dataclass(frozen=True)
 class DedupBatchPlan:
-    """Unique-row addressing for one micro-batch (k=1 lookup path).
+    """Unique-row addressing for one micro-batch.
 
     Queries in a batch share rows heavily (overlapping k-mers), but the
     fused multi-query kernel re-streams an arena row per (query, block,
@@ -205,11 +232,16 @@ class DedupBatchPlan:
     jit entries stay bounded) plus the ``indir`` indirection that maps
     every cell back to its unique row — the kernels then gather U rows
     from the arena instead of Q*nb*L.
+
+    For k>1 indexes the unit of dedup is the (row-set, AND) TUPLE: one
+    term addresses k rows whose AND is scored, so ``uniq_rows`` is
+    [U_pad, k] and equal row-sets across cells collapse to one k-row
+    gather + AND (``np.unique(axis=0)`` over tuples).
     """
-    uniq_rows: np.ndarray   # int32 [U_pad] unique arena rows (0-padded)
+    uniq_rows: np.ndarray   # int32 [U_pad] (k=1) or [U_pad, k] (0-padded)
     indir: np.ndarray       # int32 [Q, nb, L] -> index into uniq_rows
     mask: np.ndarray        # int32 [Q, nb, L] (1 = live term)
-    n_unique: int           # live unique rows (<= U_pad)
+    n_unique: int           # live unique rows/row-sets (<= U_pad)
     n_gathers: int          # live (query, block, term) cells
 
     @property
@@ -237,29 +269,44 @@ def plan_dedup_batch(terms: np.ndarray, n_valid: np.ndarray,
     paged path plans per shard). Pure numpy: hashing reuses the
     bit-identical host mirror of the device hash, so the rows the fused
     kernel would gather and the rows planned here are the same set.
+
+    k=1 dedups single rows; k>1 dedups (row-set) tuples — every cell's k
+    hash rows, deduped as a unit via ``np.unique(axis=0)``, so the device
+    gathers + ANDs each distinct row-set once (see DedupBatchPlan).
     """
-    if n_hashes != 1:
-        raise ValueError("dedup planning applies to the k=1 lookup path")
     terms = np.asarray(terms)
     n_valid = np.asarray(n_valid, dtype=np.int32)
     Q, L = terms.shape[0], terms.shape[1]
-    h = hashing.hash_terms_np(terms, 1)[..., 0]               # [Q, L]
+    k = int(n_hashes)
     w = np.asarray(block_width).astype(np.uint32)
-    rows = (h[..., None] % w[None, None, :]
-            + np.asarray(row_offset).astype(np.uint32))       # [Q, L, nb]
-    rows = np.swapaxes(rows, 1, 2).astype(np.int64)           # [Q, nb, L]
-    nb = rows.shape[1]
+    off = np.asarray(row_offset).astype(np.uint32)
     valid = np.arange(L, dtype=np.int32)[None, :] < n_valid[:, None]
-    mask = np.broadcast_to(valid[:, None, :], rows.shape)
-    live = rows[mask]
-    uniq = np.unique(live)                                    # sorted
-    indir = np.zeros(rows.shape, dtype=np.int32)
-    indir[mask] = np.searchsorted(uniq, live).astype(np.int32)
-    uniq_pad = np.zeros(_pad_unique(uniq.size), dtype=np.int32)
-    uniq_pad[: uniq.size] = uniq
+    if k == 1:
+        h = hashing.hash_terms_np(terms, 1)[..., 0]           # [Q, L]
+        rows = (h[..., None] % w[None, None, :] + off)        # [Q, L, nb]
+        rows = np.swapaxes(rows, 1, 2).astype(np.int64)       # [Q, nb, L]
+        cell_shape = rows.shape
+        mask = np.broadcast_to(valid[:, None, :], cell_shape)
+        live = rows[mask]                                     # [N]
+        uniq, inv = np.unique(live, return_inverse=True)
+        uniq_pad = np.zeros(_pad_unique(uniq.size), dtype=np.int32)
+        uniq_pad[: uniq.size] = uniq
+    else:
+        h = hashing.hash_terms_np(terms, k)                   # [Q, L, k]
+        rows = (h[..., None] % w + off)                       # [Q, L, k, nb]
+        rows = np.transpose(rows, (0, 3, 1, 2)).astype(np.int64)  # [Q,nb,L,k]
+        cell_shape = rows.shape[:3]
+        mask = np.broadcast_to(valid[:, None, :], cell_shape)
+        live = rows[mask]                                     # [N, k]
+        uniq, inv = np.unique(live, axis=0, return_inverse=True)
+        uniq_pad = np.zeros((_pad_unique(uniq.shape[0]), k), dtype=np.int32)
+        uniq_pad[: uniq.shape[0]] = uniq
+    indir = np.zeros(cell_shape, dtype=np.int32)
+    indir[mask] = np.asarray(inv).reshape(-1).astype(np.int32)
+    n_uniq = int(uniq.shape[0])
     return DedupBatchPlan(uniq_rows=uniq_pad, indir=indir,
                           mask=mask.astype(np.int32),
-                          n_unique=int(uniq.size), n_gathers=int(live.size))
+                          n_unique=n_uniq, n_gathers=int(live.shape[0]))
 
 
 def make_dedup_score_fn(word_block: int | None = None):
@@ -275,22 +322,50 @@ def make_dedup_score_fn(word_block: int | None = None):
     return score
 
 
+def make_comp_dedup_score_fn(word_block: int | None = None):
+    """Compressed twin of ``make_dedup_score_fn``: score(dict_rows, refs,
+    uniq_rows, indir, mask) -> int32 [Q, n_slots], decoding each unique
+    row (or AND'd row-set) out of the shard dict inside the gather kernel."""
+
+    def score(dict_rows, refs, uniq_rows, indir, mask):
+        return ops.bitslice_lookup_score_dedup_comp(
+            dict_rows, refs, uniq_rows, indir, mask, word_block=word_block)
+
+    return score
+
+
 def run_paged_dedup(tiles, shard_plans: list[ShardPlan], fn,
-                    terms: np.ndarray, n_valid: np.ndarray) -> np.ndarray:
+                    terms: np.ndarray, n_valid: np.ndarray,
+                    n_hashes: int = 1, fn_comp=None) -> np.ndarray:
     """Dedup-scored batch across shard tiles (one tile = the whole arena
     for dense storage): per shard, plan the unique-row set against the
     shard's REBASED addressing, score through ``fn`` (from
     ``make_dedup_score_fn``), prefetch the next tile while the dispatch is
     in flight, and concatenate per-shard slot scores — the dedup analogue
-    of ``run_paged``."""
+    of ``run_paged``.
+
+    With ``fn_comp`` (from ``make_comp_dedup_score_fn``) dict-coded shards
+    stage compressed and score through the fused-decode kernels; raw
+    shards keep ``fn``. ``n_hashes`` > 1 plans row-SET dedup."""
+    storage = tiles.storage
+    comp = [fn_comp is not None
+            and storage.shard_codec(sp.shard) in _codec.DICT_CODECS
+            for sp in shard_plans]
     parts = []
     for i, sp in enumerate(shard_plans):
-        dp = plan_dedup_batch(terms, n_valid, sp.row_offset, sp.block_width)
-        tile = tiles.get(sp.shard)
-        out = fn(tile, jnp.asarray(dp.uniq_rows), jnp.asarray(dp.indir),
-                 jnp.asarray(dp.mask))
+        dp = plan_dedup_batch(terms, n_valid, sp.row_offset, sp.block_width,
+                              n_hashes=n_hashes)
+        planned = (jnp.asarray(dp.uniq_rows), jnp.asarray(dp.indir),
+                   jnp.asarray(dp.mask))
+        if comp[i]:
+            dict_rows, refs = tiles.get_compressed(sp.shard)
+            out = fn_comp(dict_rows, refs, *planned)
+        else:
+            out = fn(tiles.get(sp.shard), *planned)
         if i + 1 < len(shard_plans):
-            tiles.prefetch(shard_plans[i + 1].shard)
+            nxt = shard_plans[i + 1].shard
+            (tiles.prefetch_compressed if comp[i + 1]
+             else tiles.prefetch)(nxt)
         parts.append(out)
     return np.concatenate([np.asarray(p) for p in parts], axis=1)
 
@@ -306,6 +381,20 @@ def gather_rows(arena: jnp.ndarray, rows: jnp.ndarray, valid: jnp.ndarray
         anded = anded & g[:, i]
     anded = jnp.where(valid[:, None, None], anded, jnp.uint32(0))
     return anded.reshape(L, nb * arena.shape[1])
+
+
+def gather_rows_comp(dict_rows: jnp.ndarray, refs: jnp.ndarray,
+                     rows: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """``gather_rows`` against a rowdict-compressed tile: the double gather
+    ``dict_rows[refs[rows]]`` decodes on the fly — same AND + mask, same
+    output, HBM traffic proportional to the dict instead of the tile."""
+    L, k, nb = rows.shape
+    g = dict_rows[refs[rows]]                     # [L, k, nb, Wb]
+    anded = g[:, 0]
+    for i in range(1, k):
+        anded = anded & g[:, i]
+    anded = jnp.where(valid[:, None, None], anded, jnp.uint32(0))
+    return anded.reshape(L, nb * dict_rows.shape[1])
 
 
 # --------------------------------------------------------------------------
@@ -385,6 +474,69 @@ def make_batch_score_fn(n_hashes: int, method: str = "vertical",
     return jax.jit(jax.vmap(inner, in_axes=(None, None, None, 0, 0)))
 
 
+def make_comp_score_fn(n_hashes: int, method: str = "vertical",
+                       word_block: int | None = None,
+                       term_block: int | None = None):
+    """Compressed twin of ``make_score_fn``: score(dict_rows, refs,
+    row_offset, block_width, terms [L,2], n_valid) -> int32 [n_slots].
+
+    The arena argument splits into the shard's dict + refs staged as-is on
+    device; rows decode during the gather (in-kernel for the fused k=1
+    lookup path, via the ``dict[refs[row]]`` double gather otherwise), so
+    scores are bit-identical to the raw-tile scorer."""
+
+    @jax.jit
+    def score(dict_rows, refs, row_offset, block_width, terms, n_valid):
+        L = terms.shape[0]
+        h = hashing.hash_terms(terms, n_hashes)            # [L, k]
+        rows = plan_rows(h, row_offset, block_width)       # [L, k, nb]
+        valid = jnp.arange(L, dtype=jnp.int32) < n_valid
+        if method == "lookup" and n_hashes == 1:
+            idx = rows[:, 0, :].T                          # [nb, L]
+            msk = jnp.broadcast_to(valid.astype(jnp.int32)[None, :],
+                                   idx.shape)
+            return ops.bitslice_lookup_score_blocks_comp(
+                dict_rows, refs, idx, msk, word_block=word_block)
+        flat = gather_rows_comp(dict_rows, refs, rows, valid)
+        return ops.bitslice_score(flat, method=method if method != "lookup"
+                                  else "vertical", word_block=word_block,
+                                  term_block=term_block)
+
+    return score
+
+
+def make_comp_batch_score_fn(n_hashes: int, method: str = "vertical",
+                             word_block: int | None = None,
+                             term_block: int | None = None,
+                             grid_order: str = "wq"):
+    """Compressed twin of ``make_batch_score_fn``: score(dict_rows, refs,
+    row_offset, block_width, terms [Q,L,2], n_valid [Q]) -> int32
+    [Q, n_slots]. k=1 'lookup' dispatches the fused decode-in-the-loop
+    multi-query kernel; other methods vmap the compressed single-query
+    scorer (the decode is a jnp double gather, so vmap batches it fine)."""
+    if method == "lookup" and n_hashes == 1:
+        @jax.jit
+        def score_batch(dict_rows, refs, row_offset, block_width,
+                        terms, n_valid):
+            Q, L = terms.shape[0], terms.shape[1]
+            h = hashing.hash_terms(terms, n_hashes)        # [Q, L, 1]
+            rows = plan_rows(h, row_offset, block_width)   # [Q, L, 1, nb]
+            idx = jnp.swapaxes(rows[:, :, 0, :], 1, 2)     # [Q, nb, L]
+            valid = (jnp.arange(L, dtype=jnp.int32)[None, :]
+                     < n_valid[:, None])                   # [Q, L]
+            msk = jnp.broadcast_to(valid.astype(jnp.int32)[:, None, :],
+                                   idx.shape)
+            return ops.bitslice_lookup_score_multi_comp(
+                dict_rows, refs, idx, msk, word_block=word_block,
+                grid_order=grid_order)
+        return score_batch
+
+    inner = make_comp_score_fn(
+        n_hashes, "vertical" if method == "lookup" else method,
+        word_block=word_block, term_block=term_block)
+    return jax.jit(jax.vmap(inner, in_axes=(None, None, None, None, 0, 0)))
+
+
 @dataclass
 class SearchResult:
     """One query's reported documents, best-first.
@@ -419,11 +571,18 @@ class QueryEngine:
     resident arena. Sharded storage scores shard by shard through
     ``tile_cache`` (default: an unbounded DeviceTileCache, so hot shards
     stay in HBM) and concatenates — bit-identical either way.
+
+    ``compressed=True`` keeps dict-coded shards (codec 'rowdict' /
+    'rowdict+rle') in their compressed (dict, refs) form on device and
+    scores them through the fused-decode kernels; raw shards are
+    unaffected. Results stay bit-identical — only the HBM working set and
+    the per-row bandwidth change.
     """
 
     def __init__(self, index: BitSlicedIndex, method: str = "vertical",
                  term_pad: int = 64,
-                 tile_cache: DeviceTileCache | None = None):
+                 tile_cache: DeviceTileCache | None = None,
+                 compressed: bool = False):
         self.index = index
         self.method = method
         self.term_pad = term_pad
@@ -441,24 +600,50 @@ class QueryEngine:
                              jnp.asarray(sp.block_width))
                             for sp in self._shard_plans]
         self._host_slot = np.asarray(index.layout.doc_slot)
+        self.compressed = bool(compressed) and any(
+            index.storage.shard_codec(s) in _codec.DICT_CODECS
+            for s in range(index.storage.n_shards))
+        if self.compressed:
+            self._score_comp = make_comp_score_fn(
+                index.params.n_hashes, method)
+            self._score_batch_comp = make_comp_batch_score_fn(
+                index.params.n_hashes, method)
 
     # -- scoring -------------------------------------------------------------
     def _score_slots(self, padded: jnp.ndarray, L: jnp.ndarray) -> np.ndarray:
         if not self._paged:
             # tiles.get(0) caches the device copy for every backend
             # (a single-shard MappedArena would otherwise re-upload here)
+            if self.compressed:
+                dict_rows, refs = self.tiles.get_compressed(0)
+                return np.asarray(self._score_comp(
+                    dict_rows, refs, self.index.row_offset,
+                    self.index.block_width, padded, L))
             return np.asarray(self._score(
                 self.tiles.get(0), self.index.row_offset,
                 self.index.block_width, padded, L))
+        if self.compressed:
+            return np.concatenate(run_paged_compressed(
+                self.tiles, self._shard_args, self._score, self._score_comp,
+                padded, L))
         return np.concatenate(
             run_paged(self.tiles, self._shard_args, self._score, padded, L))
 
     def _score_slots_batch(self, terms: jnp.ndarray, n_valid: jnp.ndarray
                            ) -> np.ndarray:
         if not self._paged:
+            if self.compressed:
+                dict_rows, refs = self.tiles.get_compressed(0)
+                return np.asarray(self._score_batch_comp(
+                    dict_rows, refs, self.index.row_offset,
+                    self.index.block_width, terms, n_valid))
             return np.asarray(self._score_batch(
                 self.tiles.get(0), self.index.row_offset,
                 self.index.block_width, terms, n_valid))
+        if self.compressed:
+            return np.concatenate(run_paged_compressed(
+                self.tiles, self._shard_args, self._score_batch,
+                self._score_batch_comp, terms, n_valid), axis=1)
         return np.concatenate(
             run_paged(self.tiles, self._shard_args, self._score_batch,
                       terms, n_valid), axis=1)

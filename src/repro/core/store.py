@@ -37,6 +37,7 @@ from pathlib import Path
 
 import numpy as np
 
+from . import codec as _codec
 from .arena import ArenaLayout, MappedArena
 from .index import BitSlicedIndex, IndexParams
 
@@ -75,6 +76,43 @@ def _shard_name(s: int) -> str:
     return f"shard-{s:06d}.npy"
 
 
+def _shard_stem(s: int) -> str:
+    return f"shard-{s:06d}"
+
+
+_CODEC_COMPONENTS = {
+    _codec.CODEC_RAW: ("data",),
+    _codec.CODEC_ROWDICT: ("dict", "refs"),
+    _codec.CODEC_ROWDICT_RLE: ("rle", "refs"),
+    _codec.CODEC_RLE: ("rle",),
+}
+
+
+def _shard_files(s: int, codec: str) -> dict[str, str]:
+    """Component name -> file name for shard ``s`` under ``codec``. Raw
+    keeps the historic single ``shard-%06d.npy``; compressed shards store
+    each component as its own mmap-able ``.npy``."""
+    stem = _shard_stem(s)
+    return {c: stem + _codec.COMPONENT_SUFFIX[c]
+            for c in _CODEC_COMPONENTS[codec]}
+
+
+def _source_from_entry(path: Path, entry: dict, doc_words: int):
+    """MappedArena source for one manifest shard row: the raw file path,
+    or a lazy CompressedShardSource for non-raw codecs. Manifests written
+    before the codec layer have no "codec" key — treated as raw."""
+    codec = entry.get("codec", _codec.CODEC_RAW)
+    if codec == _codec.CODEC_RAW:
+        return path / entry["file"]
+    rows = int(entry["rows"][1]) - int(entry["rows"][0])
+    return _codec.CompressedShardSource(
+        codec=codec,
+        paths={c: path / f for c, f in entry["files"].items()},
+        rows=rows,
+        doc_words=int(doc_words),
+        comp_nbytes=int(entry["comp_bytes"]))
+
+
 class ShardStoreWriter:
     """Streaming writer for a v2 store.
 
@@ -84,18 +122,29 @@ class ShardStoreWriter:
     are missing. Re-running over an existing directory resumes: shards
     whose file already matches the expected shape (and hash, if a partial
     manifest is present) are skipped by the builder via ``have_shard``.
+
+    ``codec`` selects the per-shard tile codec (repro.core.codec.CODECS,
+    or "auto" for smallest-wins): each tile is encoded independently and
+    falls back to raw when compression doesn't pay, so a store may mix
+    codecs shard by shard. Content hashes are ALWAYS over the decoded
+    tile — raw<->compressed migration preserves them.
     """
 
     def __init__(self, path: str | Path, layout: ArenaLayout,
-                 params: IndexParams, blocks_per_shard: int = 1):
+                 params: IndexParams, blocks_per_shard: int = 1,
+                 codec: str = _codec.CODEC_RAW):
         self.path = Path(path)
         self.path.mkdir(parents=True, exist_ok=True)
         self.layout = layout
         self.params = params
         self.blocks_per_shard = int(blocks_per_shard)
+        if codec not in _codec.CODECS + ("auto",):
+            raise ValueError(f"unknown codec {codec!r}")
+        self.codec = codec
         self.row_starts = shard_row_bounds(layout, blocks_per_shard)
         self.block_ranges = layout.shard_blocks(self.row_starts)
         self._hashes: dict[int, str] = {}
+        self._entries: dict[int, dict] = {}   # codec/files/bytes per shard
 
     @property
     def n_shards(self) -> int:
@@ -108,41 +157,124 @@ class ShardStoreWriter:
     def shard_blocks(self, s: int) -> tuple[int, int]:
         return self.block_ranges[s]
 
-    def have_shard(self, s: int) -> bool:
-        """A resumable shard: file exists with the expected shape/dtype."""
-        f = self.path / _shard_name(s)
-        if not f.exists():
-            return False
+    @staticmethod
+    def _valid_components(codec: str, arrays: dict, rows: int, W: int
+                          ) -> bool:
+        """Cheap (header/shape-only) consistency check for resumed shard
+        component files — full integrity is the manifest hash's job."""
         try:
-            a = np.load(f, mmap_mode="r")
-        except (ValueError, OSError):
+            if codec == _codec.CODEC_RAW:
+                return (arrays["data"].shape == (rows, W)
+                        and arrays["data"].dtype == np.uint32)
+            if "refs" in arrays:
+                r = arrays["refs"]
+                if r.shape != (rows,) or r.dtype != np.int32:
+                    return False
+            if codec == _codec.CODEC_ROWDICT:
+                d = arrays["dict"]
+                return (d.ndim == 2 and d.shape[1] == W
+                        and d.dtype == np.uint32)
+            rle = arrays["rle"]
+            if rle.ndim != 1 or rle.dtype != np.uint32 or rle.size < 3:
+                return False
+            if codec == _codec.CODEC_RLE:
+                return int(rle[0]) == rows and int(rle[1]) == W
+            return int(rle[1]) == W     # rowdict+rle header: [D, W, P]
+        except (KeyError, IndexError, AttributeError):
             return False
-        return a.shape == self.shard_shape(s) and a.dtype == np.uint32
+
+    def _resume_entry(self, s: int) -> dict | None:
+        """Inspect disk for a complete shard ``s`` written by ANY codec
+        (a resumed build may change the requested codec; what's on disk
+        wins). Returns the codec/files/byte fields of the manifest entry,
+        or None when no consistent set of component files exists."""
+        rows, W = self.shard_shape(s)
+        for codec in _CODEC_COMPONENTS:
+            files = _shard_files(s, codec)
+            paths = {c: self.path / f for c, f in files.items()}
+            if not all(p.exists() for p in paths.values()):
+                continue
+            try:
+                arrays = {c: np.load(p, mmap_mode="r")
+                          for c, p in paths.items()}
+            except (ValueError, OSError):
+                continue
+            if not self._valid_components(codec, arrays, rows, W):
+                continue
+            comp = int(sum(int(a.nbytes) for a in arrays.values()))
+            raw_nb = rows * W * 4
+            entry = {"codec": codec, "files": files, "comp_bytes": comp,
+                     "ratio": round(raw_nb / comp, 4) if comp else 1.0}
+            if codec == _codec.CODEC_ROWDICT:
+                entry["dict_rows"] = int(arrays["dict"].shape[0])
+            elif codec == _codec.CODEC_ROWDICT_RLE:
+                entry["dict_rows"] = int(arrays["rle"][0])
+            return entry
+        return None
+
+    def have_shard(self, s: int) -> bool:
+        """A resumable shard: component files exist, shapes consistent."""
+        return self._resume_entry(s) is not None
+
+    def _clean_shard_files(self, s: int) -> None:
+        stem = _shard_stem(s)
+        for suffix in _codec.COMPONENT_SUFFIX.values():
+            f = self.path / (stem + suffix)
+            if f.exists():
+                f.unlink()
 
     def write_shard(self, s: int, matrix: np.ndarray) -> None:
         if matrix.shape != self.shard_shape(s) or matrix.dtype != np.uint32:
             raise ValueError(
                 f"shard {s}: got {matrix.dtype}{matrix.shape}, want "
                 f"uint32{self.shard_shape(s)}")
-        np.save(self.path / _shard_name(s), matrix)
-        self._hashes[s] = _hash_array(matrix)
+        tile = _codec.encode_tile(matrix, self.codec)
+        self._clean_shard_files(s)   # stale other-codec components confuse resume
+        files = _shard_files(s, tile.codec)
+        for comp, name in files.items():
+            np.save(self.path / name, tile.arrays[comp])
+        self._hashes[s] = _hash_array(matrix)   # hash the DECODED tile
+        entry = {"codec": tile.codec, "files": files,
+                 "comp_bytes": tile.comp_nbytes,
+                 "ratio": round(tile.ratio, 4)}
+        d = tile.dict_form()
+        if d is not None:
+            entry["dict_rows"] = int(d[0].shape[0])
+        self._entries[s] = entry
+
+    def _shard_host_from_disk(self, s: int, entry: dict) -> np.ndarray:
+        arrays = {c: np.load(self.path / f, mmap_mode="r")
+                  for c, f in entry["files"].items()}
+        rows, W = self.shard_shape(s)
+        return _codec.tile_from_arrays(entry["codec"], arrays, rows,
+                                       W).decode()
 
     def finalize(self) -> Path:
         shards = []
+        raw_total = comp_total = 0
         for s in range(self.n_shards):
-            f = self.path / _shard_name(s)
-            if not f.exists():
-                raise FileNotFoundError(f"missing shard file {f}")
+            info = self._entries.get(s)
+            if info is None:                   # resumed shard: read disk
+                info = self._resume_entry(s)
+                if info is None:
+                    raise FileNotFoundError(
+                        f"missing shard files for shard {s} in {self.path}")
             h = self._hashes.get(s)
             if h is None:                      # resumed shard: hash from disk
-                h = _hash_array(np.load(f, mmap_mode="r"))
+                h = _hash_array(self._shard_host_from_disk(s, info))
             b0, b1 = self.block_ranges[s]
-            shards.append({
-                "file": _shard_name(s),
+            rows, W = self.shard_shape(s)
+            raw_total += rows * W * 4
+            comp_total += int(info["comp_bytes"])
+            entry = {
                 "blocks": [b0, b1],
                 "rows": [int(self.row_starts[s]), int(self.row_starts[s + 1])],
                 "hash": h,
-            })
+                **info,
+            }
+            if info["codec"] == _codec.CODEC_RAW:
+                entry["file"] = info["files"]["data"]   # legacy readers
+            shards.append(entry)
         np.savez(self.path / "meta.npz",
                  row_offset=self.layout.row_offset,
                  block_width=self.layout.block_width,
@@ -153,6 +285,10 @@ class ShardStoreWriter:
             "block_docs": self.layout.block_docs,
             "n_docs": self.layout.n_docs,
             "params": self.params.to_json(),
+            "codec": self.codec,
+            "raw_bytes": raw_total,
+            "comp_bytes": comp_total,
+            "ratio": round(raw_total / comp_total, 4) if comp_total else 1.0,
             "shards": shards,
         }
         out = self.path / "manifest.json"
@@ -183,7 +319,9 @@ def _verify_shards(storage: MappedArena, shards: list[dict],
     for i in (range(len(shards)) if which is None else which):
         got = _hash_array(storage.shard_host(i))
         if got != shards[i]["hash"]:
-            raise IOError(f"shard {shards[i]['file']} content hash mismatch")
+            name = shards[i].get("file") or "+".join(
+                sorted(shards[i].get("files", {}).values())) or f"#{i}"
+            raise IOError(f"shard {name} content hash mismatch")
 
 
 def open_store(path: str | Path, *, verify: bool = False
@@ -196,7 +334,8 @@ def open_store(path: str | Path, *, verify: bool = False
     shards = manifest["shards"]
     starts = np.asarray([s["rows"][0] for s in shards]
                         + [shards[-1]["rows"][1]], dtype=np.int64)
-    sources = [path / s["file"] for s in shards]
+    sources = [_source_from_entry(path, s, layout.doc_words)
+               for s in shards]
     storage = MappedArena(sources, starts, doc_words=layout.doc_words)
     if verify:
         _verify_shards(storage, shards)
@@ -245,8 +384,10 @@ def open_substore(path: str | Path, shard_ids, *, verify: bool = False
                                + [shards[-1]["rows"][1]], dtype=np.int64)
     heights = [shards[g]["rows"][1] - shards[g]["rows"][0] for g in ids]
     local_starts = np.concatenate([[0], np.cumsum(heights)]).astype(np.int64)
-    storage = MappedArena([path / shards[g]["file"] for g in ids],
-                          local_starts, doc_words=layout.doc_words)
+    storage = MappedArena(
+        [_source_from_entry(path, shards[g], layout.doc_words)
+         for g in ids],
+        local_starts, doc_words=layout.doc_words)
     if verify:
         _verify_shards(storage, [shards[g] for g in ids])
     return SubStore(layout=layout, storage=storage, params=params,
@@ -260,11 +401,12 @@ def load_index_v2(path: str | Path, *, verify: bool = False
 
 
 def save_index_v2(index: BitSlicedIndex, path: str | Path, *,
-                  blocks_per_shard: int = 1) -> None:
+                  blocks_per_shard: int = 1,
+                  codec: str = _codec.CODEC_RAW) -> None:
     """Write any index (whatever its storage backend) as a v2 store, one
     block group at a time — host memory stays bounded by one shard."""
     writer = ShardStoreWriter(path, index.layout, index.params,
-                              blocks_per_shard)
+                              blocks_per_shard, codec=codec)
     starts = writer.row_starts
     for s in range(writer.n_shards):
         rows = np.arange(starts[s], starts[s + 1], dtype=np.int64)
@@ -272,6 +414,32 @@ def save_index_v2(index: BitSlicedIndex, path: str | Path, *,
             s, np.ascontiguousarray(
                 index.storage.read_rows_host(rows).astype(np.uint32)))
     writer.finalize()
+
+
+def migrate_store_codec(src: str | Path, dst: str | Path,
+                        codec: str = "auto") -> dict:
+    """Re-encode a v2 store under another codec (raw<->compressed both
+    ways; ``codec`` may be any CODECS member or "auto"). Shard geometry
+    is preserved exactly, and because content hashes cover the DECODED
+    tile, every shard's hash is identical in src and dst — migration is
+    integrity-checkable end to end. Returns the dst manifest."""
+    src = Path(src)
+    layout, storage, params = open_store(src)
+    manifest = json.loads((src / "manifest.json").read_text())
+    b0, b1 = manifest["shards"][0]["blocks"]
+    writer = ShardStoreWriter(dst, layout, params,
+                              blocks_per_shard=max(1, int(b1) - int(b0)),
+                              codec=codec)
+    if writer.n_shards != storage.n_shards or not np.array_equal(
+            writer.row_starts, storage.shard_row_starts):
+        raise ValueError("migrate_store_codec: shard geometry mismatch "
+                         "(non-uniform blocks_per_shard store?)")
+    for s in range(writer.n_shards):
+        writer.write_shard(
+            s, np.ascontiguousarray(np.asarray(storage.shard_host(s),
+                                               dtype=np.uint32)))
+    writer.finalize()
+    return json.loads((Path(dst) / "manifest.json").read_text())
 
 
 def migrate_v1_to_v2(src: str | Path, dst: str | Path, *,
@@ -315,36 +483,59 @@ def merge_stores(a: str | Path, b: str | Path, out: str | Path) -> None:
     out.mkdir(parents=True, exist_ok=True)
     man_a = json.loads((Path(a) / "manifest.json").read_text())
     man_b = json.loads((Path(b) / "manifest.json").read_text())
+    W = layout.doc_words
     shards, row_base, block_base = [], 0, 0
+    raw_total = comp_total = 0
     for src_dir, man in ((Path(a), man_a), (Path(b), man_b)):
         for s in man["shards"]:
             i = len(shards)
-            name = _shard_name(i)
-            target = out / name
-            if target.exists():
-                target.unlink()
-            try:
-                import os
-                os.link(src_dir / s["file"], target)
-            except OSError:
-                shutil.copyfile(src_dir / s["file"], target)
-            shards.append({
-                "file": name,
+            codec = s.get("codec", _codec.CODEC_RAW)
+            src_files = s.get("files") or {"data": s["file"]}
+            new_files = _shard_files(i, codec)
+            for comp, src_name in src_files.items():
+                target = out / new_files[comp]
+                if target.exists():
+                    target.unlink()
+                try:
+                    import os
+                    os.link(src_dir / src_name, target)
+                except OSError:
+                    shutil.copyfile(src_dir / src_name, target)
+            raw_nb = (int(s["rows"][1]) - int(s["rows"][0])) * W * 4
+            comp_nb = int(s.get("comp_bytes", raw_nb))
+            raw_total += raw_nb
+            comp_total += comp_nb
+            entry = {
                 "blocks": [s["blocks"][0] + block_base,
                            s["blocks"][1] + block_base],
                 "rows": [s["rows"][0] + row_base, s["rows"][1] + row_base],
                 "hash": s["hash"],
-            })
+                "codec": codec,
+                "files": new_files,
+                "comp_bytes": comp_nb,
+                "ratio": float(s.get("ratio", 1.0)),
+            }
+            if "dict_rows" in s:
+                entry["dict_rows"] = int(s["dict_rows"])
+            if codec == _codec.CODEC_RAW:
+                entry["file"] = new_files["data"]
+            shards.append(entry)
         row_base += int(man["shards"][-1]["rows"][1])
         block_base += int(man["shards"][-1]["blocks"][1])
     np.savez(out / "meta.npz",
              row_offset=layout.row_offset, block_width=layout.block_width,
              doc_slot=layout.doc_slot, doc_n_terms=layout.doc_n_terms)
+    codecs = {man_a.get("codec", _codec.CODEC_RAW),
+              man_b.get("codec", _codec.CODEC_RAW)}
     manifest = {
         "format": FORMAT_V2,
         "block_docs": layout.block_docs,
         "n_docs": layout.n_docs,
         "params": pa.to_json(),
+        "codec": codecs.pop() if len(codecs) == 1 else "mixed",
+        "raw_bytes": raw_total,
+        "comp_bytes": comp_total,
+        "ratio": round(raw_total / comp_total, 4) if comp_total else 1.0,
         "shards": shards,
     }
     tmp = out / "manifest.json.tmp"

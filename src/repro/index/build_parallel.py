@@ -102,12 +102,16 @@ class StreamingBuildStats:
     acceptance evidence): ``peak_block_bytes`` is the high-water mark of
     simultaneously-live block-group matrices inside the builder, and
     ``max_shard_bytes``/``total_arena_bytes`` give the shard-size
-    arithmetic it must stay proportional to."""
+    arithmetic it must stay proportional to. ``comp_bytes``/``comp_ratio``
+    record the store's on-disk compression (1.0 for raw builds)."""
     n_shards: int
     n_resumed: int
     max_shard_bytes: int
     total_arena_bytes: int
     peak_block_bytes: int
+    comp_bytes: int = 0
+    comp_ratio: float = 1.0
+    n_compressed_shards: int = 0
 
 
 def build_compact_streaming(
@@ -118,6 +122,7 @@ def build_compact_streaming(
     row_align: int = bloom.ROW_ALIGN,
     blocks_per_shard: int = 1,
     workers: int = 1,
+    codec: str = "raw",
 ) -> tuple[BitSlicedIndex, StreamingBuildStats]:
     """Build a compact index straight into a cobs-jax-v2 store.
 
@@ -125,13 +130,17 @@ def build_compact_streaming(
     block matrices) but never holds more than ``workers`` block groups in
     host memory: each finished group is written as one shard and released.
     Shards already present in ``store_path`` (from an interrupted run) are
-    skipped. Returns the mmap-backed index plus allocation accounting."""
+    skipped. ``codec`` selects the per-shard tile codec ("auto" for
+    smallest-wins; see repro.core.codec) — the opened index decodes
+    bit-identically, the store just costs fewer bytes. Returns the
+    mmap-backed index plus allocation accounting."""
     n_docs = len(doc_terms)
     if n_docs == 0:
         raise ValueError("empty document set")
     counts = np.array([t.shape[0] for t in doc_terms], dtype=np.int64)
     layout, order = plan_compact_layout(counts, params, block_docs, row_align)
-    writer = ShardStoreWriter(store_path, layout, params, blocks_per_shard)
+    writer = ShardStoreWriter(store_path, layout, params, blocks_per_shard,
+                              codec=codec)
 
     lock = threading.Lock()
     live_bytes = 0
@@ -177,11 +186,15 @@ def build_compact_streaming(
     index = load_index_v2(store_path)
     shard_bytes = [index.storage.shard_nbytes(s)
                    for s in range(index.storage.n_shards)]
+    raw_total, comp_total, n_comp = index.storage.comp_summary()
     stats = StreamingBuildStats(
         n_shards=writer.n_shards,
         n_resumed=n_resumed,
         max_shard_bytes=max(shard_bytes),
         total_arena_bytes=sum(shard_bytes),
         peak_block_bytes=peak_bytes,
+        comp_bytes=comp_total,
+        comp_ratio=round(raw_total / comp_total, 4) if comp_total else 1.0,
+        n_compressed_shards=n_comp,
     )
     return index, stats

@@ -48,7 +48,14 @@ DEFAULT_WORD_BLOCKS = (64, 128, 256)
 DEFAULT_TERM_BLOCKS = (8, 16)
 
 # Methods the tuner knows how to measure for a batch dispatch.
-TUNABLE_METHODS = ("lookup", "vertical", "unpack")
+# "lookup_c" is the fused DECODE-in-the-loop variant over a
+# rowdict-compressed arena (kernels.bitslice_score.
+# lookup_score_multi_compressed): measurable only when the tuner knows
+# the index's dict compression ratio (``comp_ratio``), and picked by the
+# planner only when its measured cost — decode indirection included —
+# beats the raw fused kernel, i.e. when the bandwidth saved on dict rows
+# outweighs the extra scalar gather.
+TUNABLE_METHODS = ("lookup", "lookup_c", "vertical", "unpack")
 
 # Key prefix for live observed-cost entries (see TunedEntry.observed).
 # tuning_key() output always starts with "r<rows>", so no collision.
@@ -210,7 +217,8 @@ class KernelTuner:
                  term_blocks: tuple[int, ...] = DEFAULT_TERM_BLOCKS,
                  grid_orders: tuple[str, ...] = _k.GRID_ORDERS,
                  repeats: int = 2, max_tune_rows: int = 2048,
-                 max_tune_blocks: int = 4, seed: int = 0):
+                 max_tune_blocks: int = 4, seed: int = 0,
+                 comp_ratio: float | None = None):
         self.n_rows = int(n_rows)
         self.doc_words = int(doc_words)
         self.n_hashes = int(n_hashes)
@@ -224,8 +232,15 @@ class KernelTuner:
         self.max_tune_rows = int(max_tune_rows)
         self.max_tune_blocks = int(max_tune_blocks)
         self.seed = int(seed)
+        # The index's HBM dict compression ratio (ArenaStorage.dict_ratio):
+        # None = no dict-coded shards, the compressed method "lookup_c" is
+        # untunable and never returned. The ratio shapes the synthetic
+        # dict fixture so the measured decode cost reflects the real
+        # dict-row working set the fused-decode kernel would stream.
+        self.comp_ratio = None if comp_ratio is None else float(comp_ratio)
         self.tunes = 0              # measurement runs (tests assert 0 on reopen)
         self._arena = None
+        self._dict = None           # (dict_rows_dev, refs_dev) fixture
         # -- live observed-cost feedback (KernelProfiler -> observe) --
         # Rolling per-key sample windows; every ``live_min_samples`` new
         # observations the median is (re-)promoted to a cache entry
@@ -241,6 +256,11 @@ class KernelTuner:
     @classmethod
     def for_index(cls, index, cache: TuningCache | None = None, **kw
                   ) -> "KernelTuner":
+        # dict_ratio is None for all-raw stores, which disables the
+        # compressed method cleanly; pass comp_ratio explicitly to override
+        if "comp_ratio" not in kw:
+            ratio_fn = getattr(index.storage, "dict_ratio", None)
+            kw["comp_ratio"] = ratio_fn() if callable(ratio_fn) else None
         return cls(index.storage.shape[0], index.storage.shape[1],
                    index.params.n_hashes, index.layout.n_blocks,
                    cache, **kw)
@@ -253,6 +273,22 @@ class KernelTuner:
             self._arena = jnp.asarray(rng.integers(
                 0, 2 ** 32, size=(rows, self.doc_words), dtype=np.uint32))
         return self._arena
+
+    def _tune_dict(self) -> tuple:
+        """Synthetic (dict_rows, refs) at the index's measured ratio: the
+        tuning arena's first ~R/ratio rows as the dictionary, refs drawn
+        uniformly — the fused-decode kernels then stream a dict working
+        set of the size the real compressed shards would."""
+        if self._dict is None:
+            arena = self._tune_arena()
+            R = int(arena.shape[0])
+            ratio = max(1.0, self.comp_ratio or 1.0)
+            D = _pad_unique(max(8, int(round(R / ratio))))
+            rng = np.random.default_rng(self.seed + 3)
+            self._dict = (arena[: min(D, R)],
+                          jnp.asarray(rng.integers(
+                              0, min(D, R), size=R).astype(np.int32)))
+        return self._dict
 
     def _batch_fixture(self, bucket: int, batch: int, n_unique: int | None
                        ) -> tuple:
@@ -287,12 +323,25 @@ class KernelTuner:
                 grid_order=grid_order).block_until_ready(),
             self.repeats)
 
+    def _measure_fused_c(self, bucket: int, batch: int, word_block: int,
+                         grid_order: str) -> float:
+        dict_rows, refs = self._tune_dict()
+        idx, mask = self._batch_fixture(bucket, batch, None)
+        idx_d, mask_d = jnp.asarray(idx), jnp.asarray(mask)
+        return _timeit(
+            lambda: ops.bitslice_lookup_score_multi_comp(
+                dict_rows, refs, idx_d, mask_d, word_block=word_block,
+                grid_order=grid_order).block_until_ready(),
+            self.repeats)
+
     def _measure_dedup(self, bucket: int, batch: int, word_block: int,
-                       n_unique: int) -> tuple[float, int]:
+                       n_unique: int, compressed: bool = False
+                       ) -> tuple[float, int]:
         """(seconds, ACTUAL padded unique-row count). The fixture's real
         unique count is capped by the tuning arena height and reduced by
         with-replacement draws, so the break-even fit must use the U the
-        kernel really gathered, not the requested target."""
+        kernel really gathered, not the requested target. ``compressed``
+        measures the fused-decode dedup pair against the dict fixture."""
         arena = self._tune_arena()
         idx, mask = self._batch_fixture(bucket, batch, n_unique)
         uniq, inv = np.unique(idx, return_inverse=True)
@@ -301,12 +350,39 @@ class KernelTuner:
         uniq_pad[: uniq.size] = uniq
         u_d, i_d, m_d = (jnp.asarray(uniq_pad), jnp.asarray(indir),
                          jnp.asarray(mask))
-        t = _timeit(
-            lambda: ops.bitslice_lookup_score_dedup(
-                arena, u_d, i_d, m_d,
-                word_block=word_block).block_until_ready(),
-            self.repeats)
+        if compressed:
+            dict_rows, refs = self._tune_dict()
+            t = _timeit(
+                lambda: ops.bitslice_lookup_score_dedup_comp(
+                    dict_rows, refs, u_d, i_d, m_d,
+                    word_block=word_block).block_until_ready(),
+                self.repeats)
+        else:
+            t = _timeit(
+                lambda: ops.bitslice_lookup_score_dedup(
+                    arena, u_d, i_d, m_d,
+                    word_block=word_block).block_until_ready(),
+                self.repeats)
         return t, int(uniq_pad.size)
+
+    def _measure_plan_host(self, bucket: int, batch: int) -> float:
+        """Host-side dedup PLANNING cost for this batch shape: the
+        np.unique over all live (block, row) cells plus the indirection
+        scatter — the work repro.core.query.plan_dedup_batch does per
+        batch per shard before the dedup kernels can run. The break-even
+        fit must charge this against the dedup path: a dedup dispatch
+        that beats the fused kernel on device but loses the difference
+        to host planning is a net regression."""
+        idx, mask = self._batch_fixture(bucket, batch, None)
+        live_mask = mask.astype(bool)
+
+        def plan() -> None:
+            live = idx[live_mask]
+            uniq, inv = np.unique(live, return_inverse=True)
+            indir = np.zeros(idx.shape, dtype=np.int32)
+            indir[live_mask] = np.asarray(inv).reshape(-1).astype(np.int32)
+
+        return _timeit(plan, self.repeats)
 
     def _measure_add(self, method: str, bucket: int, batch: int,
                      word_block: int, term_block: int) -> float:
@@ -335,7 +411,8 @@ class KernelTuner:
         return _timeit(lambda: fn(idx).block_until_ready(), self.repeats)
 
     def _dedup_threshold(self, bucket: int, batch: int, word_block: int,
-                         fused_s: float) -> float | None:
+                         fused_s: float, compressed: bool = False
+                         ) -> float | None:
         """Break-even dedup rate from two measured unique fractions.
 
         The dedup cost is ~linear in the unique-row count U (the gather
@@ -344,38 +421,45 @@ class KernelTuner:
         through the ACTUAL padded unique counts each fixture produced
         (targets are capped by the tuning arena height and shrunk by
         with-replacement draws — fitting at the requested targets would
-        flatten the slope and poison the cached threshold), and solve
-        cost(U*) == fused. threshold = 1 - U*/N. Returns 2.0 (unreachable
-        rate = measured, never wins) when even the heavily-shared
-        measurement loses to the fused kernel."""
+        flatten the slope and poison the cached threshold), add the
+        measured HOST planning cost (hash/unique/indirection, which only
+        the dedup path pays), and solve cost(U*) + host == fused.
+        threshold = 1 - U*/N. Returns 2.0 (unreachable rate = measured,
+        never wins) when even the heavily-shared measurement plus its
+        planning loses to the fused kernel."""
         n = batch * max(1, min(self.n_blocks, self.max_tune_blocks)) * bucket
-        d_hi, u_hi = self._measure_dedup(bucket, batch, word_block, n)
+        d_hi, u_hi = self._measure_dedup(bucket, batch, word_block, n,
+                                         compressed)
         d_lo, u_lo = self._measure_dedup(bucket, batch, word_block,
-                                         max(8, n // 10))
+                                         max(8, n // 10), compressed)
+        host = self._measure_plan_host(bucket, batch)
         if u_lo >= u_hi:
             return None                       # fixtures indistinguishable
-        if d_lo >= fused_s:
+        if d_lo + host >= fused_s:
             return 2.0                        # measured: dedup never wins
-        if d_hi <= fused_s:
+        if d_hi + host <= fused_s:
             return 0.0                        # dedup wins even disjoint
         b = (d_hi - d_lo) / (u_hi - u_lo)
         if b <= 0:
             return 0.0
         a = d_hi - b * u_hi
-        u_star = (fused_s - a) / b
+        u_star = (fused_s - host - a) / b
         return float(min(1.0, max(0.0, 1.0 - u_star / n)))
 
     def _tune(self, method: str, bucket: int, batch: int) -> TunedEntry:
         self.tunes += 1
         best = None
-        if method == "lookup":
+        if method in ("lookup", "lookup_c"):
+            compressed = method == "lookup_c"
+            measure = (self._measure_fused_c if compressed
+                       else self._measure_fused)
             for wb in self.word_blocks:
                 for go in self.grid_orders:
-                    t = self._measure_fused(bucket, batch, wb, go)
+                    t = measure(bucket, batch, wb, go)
                     if best is None or t < best[0]:
                         best = (t, wb, _k.DEFAULT_TERM_BLOCK, go)
             t, wb, tb, go = best
-            thr = self._dedup_threshold(bucket, batch, wb, t)
+            thr = self._dedup_threshold(bucket, batch, wb, t, compressed)
             return TunedEntry(method, wb, tb, go, t * 1e6,
                               dedup_threshold=thr)
         for wb in self.word_blocks:
@@ -388,8 +472,13 @@ class KernelTuner:
 
     # -- public surface ------------------------------------------------------
     def key(self, method: str, bucket: int, batch: int) -> str:
-        return tuning_key(self.n_rows, self.doc_words, self.n_hashes,
-                          self.n_blocks, method, bucket, batch)
+        k = tuning_key(self.n_rows, self.doc_words, self.n_hashes,
+                       self.n_blocks, method, bucket, batch)
+        if method == "lookup_c" and self.comp_ratio is not None:
+            # decode cost depends on the dict working-set size: a store
+            # rebuilt at a different ratio must re-measure, not hit
+            k += f".cr{self.comp_ratio:.2f}"
+        return k
 
     def entry(self, method: str, bucket: int, batch: int
               ) -> TunedEntry | None:
@@ -404,8 +493,10 @@ class KernelTuner:
         on a cold cache (a measurement already exists). The synthetic
         entry's dedup_threshold is grafted on because live entries never
         carry one (the profiler sees only dispatched configurations)."""
-        if method == "lookup" and self.n_hashes != 1:
+        if method in ("lookup", "lookup_c") and self.n_hashes != 1:
             return None
+        if method == "lookup_c" and self.comp_ratio is None:
+            return None               # no dict-coded shards to decode from
         key = self.key(method, bucket, batch)
         live = (self.cache.entries.get(LIVE_PREFIX + key)
                 if self.prefer_observed else None)

@@ -466,6 +466,168 @@ def dedup_score(
     )(indir, mask, uniq)
 
 
+# --------------------------------------------------------------------------
+# 5. fused-decode kernels: score straight off the rowdict-compressed arena
+# --------------------------------------------------------------------------
+#
+# A rowdict-coded shard lives in HBM as (dict_rows uint32 [D, W], refs int32
+# [R]) with D << R — the DeviceTileCache stages that pair instead of the
+# expanded tile, shrinking the HBM working set by the shard's ratio. The
+# kernels below decode by ONE extra scalar indirection in the BlockSpec
+# index map: where the raw kernels DMA ``arena[row]``, these DMA
+# ``dict[refs[row]]``. refs ride the scalar-prefetch channel (SMEM), so
+# rows decompress on the way HBM->VMEM — no expanded tile ever exists in
+# HBM, and effective gather bandwidth multiplies by R/D when queries hit
+# duplicate rows. Bit-identical to the raw kernels by construction
+# (dict[refs[row]] == arena[row]); property-tested in
+# tests/test_compression.py.
+
+
+def gather_rows_compressed(
+    dict_rows: jnp.ndarray,
+    refs: jnp.ndarray,
+    uniq_idx: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused decode+gather: (dict uint32 [D, W], refs int32 [R], uniq_idx
+    int32 [U]) -> uint32 [U, W] with out[u] = dict[refs[uniq_idx[u]]].
+
+    The compressed twin of ``gather_rows``: feeds ``dedup_score``
+    unchanged. The double indirection collapses at grid-index time —
+    both lookups are scalar reads, the DMA itself moves one dict row
+    tile, so duplicate rows ACROSS the unique set still cost one dict
+    slot each in cache-resident HBM."""
+    D, W = dict_rows.shape
+    U = uniq_idx.shape[0]
+
+    def kernel(idx_ref, refs_ref, dict_ref, out_ref):
+        del idx_ref, refs_ref            # consumed by the index map
+        out_ref[...] = dict_ref[...]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W // word_block, U),
+        in_specs=[
+            pl.BlockSpec((1, word_block),
+                         lambda iw, iu, idx, refs: (refs[idx[iu]], iw)),
+        ],
+        out_specs=pl.BlockSpec((1, word_block),
+                               lambda iw, iu, idx, refs: (iu, iw)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((U, W), jnp.uint32),
+        interpret=interpret,
+    )(uniq_idx, refs, dict_rows)
+
+
+def _lookup_multi_comp_kernel(idx_ref, mask_ref, refs_ref, arena_ref,
+                              out_ref, planes_ref, *, n_planes: int,
+                              q_axis: int = 1, b_axis: int = 2):
+    # Same body as _lookup_multi_kernel; refs_ref is consumed by the
+    # BlockSpec index map (the decode), not by the compute.
+    del refs_ref
+    _lookup_multi_kernel(idx_ref, mask_ref, arena_ref, out_ref, planes_ref,
+                         n_planes=n_planes, q_axis=q_axis, b_axis=b_axis)
+
+
+def lookup_score_multi_compressed(
+    dict_rows: jnp.ndarray,
+    refs: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    grid_order: str = "wq",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode-in-the-loop variant of ``lookup_score_multi``: (dict uint32
+    [D, W], refs int32 [R], rows_idx int32 [Q, nb, L], mask int32
+    [Q, nb, L]) -> int32 [Q, nb, W, 32], scoring ``dict[refs[row]]``
+    where the raw kernel scores ``arena[row]``. Duplicate rows within AND
+    across queries resolve to the same dict slot, so repeated terms hit
+    tiles the pipeline already has in flight instead of new HBM traffic."""
+    D, W = dict_rows.shape
+    Q, nb, L = rows_idx.shape
+    n_planes = _num_planes(L)
+    if grid_order == "wq":
+        grid = (W // word_block, Q, nb, L)
+        arena_map = (lambda iw, iq, ib, il, idx, msk, refs:
+                     (refs[idx[iq, ib, il]], iw))
+        out_map = lambda iw, iq, ib, il, idx, msk, refs: (iq, ib, iw, 0)
+        q_axis, b_axis = 1, 2
+    elif grid_order == "qw":
+        grid = (Q, nb, W // word_block, L)
+        arena_map = (lambda iq, ib, iw, il, idx, msk, refs:
+                     (refs[idx[iq, ib, il]], iw))
+        out_map = lambda iq, ib, iw, il, idx, msk, refs: (iq, ib, iw, 0)
+        q_axis, b_axis = 0, 1
+    else:
+        raise ValueError(f"unknown grid_order {grid_order!r}; "
+                         f"one of {GRID_ORDERS}")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, word_block), arena_map)],
+        out_specs=pl.BlockSpec((1, 1, word_block, 32), out_map),
+        scratch_shapes=[pltpu.VMEM((n_planes, word_block), jnp.uint32)],
+    )
+    kernel = functools.partial(_lookup_multi_comp_kernel, n_planes=n_planes,
+                               q_axis=q_axis, b_axis=b_axis)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, nb, W, 32), jnp.int32),
+        interpret=interpret,
+    )(rows_idx, mask, refs, dict_rows)
+
+
+def _lookup_blocks_comp_kernel(idx_ref, mask_ref, refs_ref, arena_ref,
+                               out_ref, planes_ref, *, n_planes: int):
+    del refs_ref
+    _lookup_blocks_kernel(idx_ref, mask_ref, arena_ref, out_ref, planes_ref,
+                          n_planes=n_planes)
+
+
+def lookup_score_blocks_compressed(
+    dict_rows: jnp.ndarray,
+    refs: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode-in-the-loop variant of ``lookup_score_blocks`` (single-query
+    compact hot loop): int32 [nb, W, 32] over ``dict[refs[row]]``."""
+    D, W = dict_rows.shape
+    nb, L = rows_idx.shape
+    n_planes = _num_planes(L)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(W // word_block, nb, L),
+        in_specs=[
+            pl.BlockSpec((1, word_block),
+                         lambda iw, ib, il, idx, msk, refs:
+                         (refs[idx[ib, il]], iw)),
+        ],
+        out_specs=pl.BlockSpec((1, word_block, 32),
+                               lambda iw, ib, il, idx, msk, refs:
+                               (ib, iw, 0)),
+        scratch_shapes=[pltpu.VMEM((n_planes, word_block), jnp.uint32)],
+    )
+    kernel = functools.partial(_lookup_blocks_comp_kernel, n_planes=n_planes)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, W, 32), jnp.int32),
+        interpret=interpret,
+    )(rows_idx, mask, refs, dict_rows)
+
+
 def lookup_score(
     arena: jnp.ndarray,
     rows_idx: jnp.ndarray,

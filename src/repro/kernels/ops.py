@@ -147,8 +147,8 @@ def bitslice_lookup_score_dedup(
     interpret: bool | None = None,
     word_block: int | None = None,
 ) -> jnp.ndarray:
-    """Row-dedup batched gather+score: (arena [R, W], uniq_rows [U],
-    indir [Q, nb, L], mask [Q, nb, L]) -> int32 [Q, nb * W * 32].
+    """Row-dedup batched gather+score: (arena [R, W], uniq_rows [U] or
+    [U, k], indir [Q, nb, L], mask [Q, nb, L]) -> int32 [Q, nb * W * 32].
 
     Two kernels: ``gather_rows`` streams each unique arena row from HBM
     exactly once into a compact [U, W] matrix; ``dedup_score`` accumulates
@@ -157,6 +157,11 @@ def bitslice_lookup_score_dedup(
     fused path's Q*nb*L — the win scales with batch row overlap. Semantics
     == ``bitslice_lookup_score_multi(arena, uniq_rows[indir], mask)``,
     property-tested bit-identical.
+
+    For k>1 indexes ``uniq_rows`` is [U, k]: each unique entry is a
+    (row-set) tuple whose k gathered rows are AND-reduced on device before
+    scoring — dedup over AND'd tuples, so shared row-SETS between queries
+    (not just shared single rows) collapse to one gather + one AND each.
     """
     if interpret is None:
         interpret = _use_interpret()
@@ -164,8 +169,105 @@ def bitslice_lookup_score_dedup(
     Q = indir.shape[0]
     wb = _word_block(W, word_block)
     arena_p = _pad_axis(arena, 1, wb)
-    uniq = _k.gather_rows(arena_p, uniq_rows.astype(jnp.int32),
-                          word_block=wb, interpret=interpret)
+    uniq_rows = uniq_rows.astype(jnp.int32)
+    if uniq_rows.ndim == 1:
+        uniq = _k.gather_rows(arena_p, uniq_rows, word_block=wb,
+                              interpret=interpret)
+    else:
+        uniq = _k.gather_rows(arena_p, uniq_rows[:, 0], word_block=wb,
+                              interpret=interpret)
+        for j in range(1, uniq_rows.shape[1]):
+            uniq = uniq & _k.gather_rows(arena_p, uniq_rows[:, j],
+                                         word_block=wb, interpret=interpret)
+    out = _k.dedup_score(uniq, indir.astype(jnp.int32),
+                         mask.astype(jnp.int32), word_block=wb,
+                         interpret=interpret)
+    return out[:, :, :W].reshape(Q, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block",
+                                             "grid_order"))
+def bitslice_lookup_score_multi_comp(
+    dict_rows: jnp.ndarray,
+    refs: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    interpret: bool | None = None,
+    word_block: int | None = None,
+    grid_order: str = "wq",
+) -> jnp.ndarray:
+    """``bitslice_lookup_score_multi`` over a rowdict-compressed arena:
+    (dict [D, W], refs [R], rows_idx [Q, nb, L], mask [Q, nb, L]) ->
+    int32 [Q, nb * W * 32]. Rows decode HBM->VMEM inside the kernel via
+    ``dict[refs[row]]`` — bit-identical to the raw path on the expanded
+    tile, moving D-dict-row working sets instead of R."""
+    if interpret is None:
+        interpret = _use_interpret()
+    D, W = dict_rows.shape
+    Q = rows_idx.shape[0]
+    wb = _word_block(W, word_block)
+    dict_p = _pad_axis(dict_rows, 1, wb)
+    out = _k.lookup_score_multi_compressed(
+        dict_p, refs.astype(jnp.int32), rows_idx.astype(jnp.int32),
+        mask.astype(jnp.int32), word_block=wb, grid_order=grid_order,
+        interpret=interpret)
+    return out[:, :, :W].reshape(Q, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block"))
+def bitslice_lookup_score_blocks_comp(
+    dict_rows: jnp.ndarray,
+    refs: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    interpret: bool | None = None,
+    word_block: int | None = None,
+) -> jnp.ndarray:
+    """``bitslice_lookup_score_blocks`` over a rowdict-compressed arena:
+    single-query decode-in-the-loop scoring, int32 [nb * W * 32]."""
+    if interpret is None:
+        interpret = _use_interpret()
+    D, W = dict_rows.shape
+    wb = _word_block(W, word_block)
+    dict_p = _pad_axis(dict_rows, 1, wb)
+    out = _k.lookup_score_blocks_compressed(
+        dict_p, refs.astype(jnp.int32), rows_idx.astype(jnp.int32),
+        mask.astype(jnp.int32), word_block=wb, interpret=interpret)
+    return out[:, :W].reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block"))
+def bitslice_lookup_score_dedup_comp(
+    dict_rows: jnp.ndarray,
+    refs: jnp.ndarray,
+    uniq_rows: jnp.ndarray,
+    indir: jnp.ndarray,
+    mask: jnp.ndarray,
+    interpret: bool | None = None,
+    word_block: int | None = None,
+) -> jnp.ndarray:
+    """``bitslice_lookup_score_dedup`` over a rowdict-compressed arena:
+    ``gather_rows_compressed`` decodes each unique row (or k>1 row-set,
+    AND-reduced) out of the dict on the way HBM->VMEM, then the identical
+    ``dedup_score`` indirection scores it. int32 [Q, nb * W * 32]."""
+    if interpret is None:
+        interpret = _use_interpret()
+    D, W = dict_rows.shape
+    Q = indir.shape[0]
+    wb = _word_block(W, word_block)
+    dict_p = _pad_axis(dict_rows, 1, wb)
+    refs = refs.astype(jnp.int32)
+    uniq_rows = uniq_rows.astype(jnp.int32)
+    if uniq_rows.ndim == 1:
+        uniq = _k.gather_rows_compressed(dict_p, refs, uniq_rows,
+                                         word_block=wb, interpret=interpret)
+    else:
+        uniq = _k.gather_rows_compressed(dict_p, refs, uniq_rows[:, 0],
+                                         word_block=wb, interpret=interpret)
+        for j in range(1, uniq_rows.shape[1]):
+            uniq = uniq & _k.gather_rows_compressed(
+                dict_p, refs, uniq_rows[:, j], word_block=wb,
+                interpret=interpret)
     out = _k.dedup_score(uniq, indir.astype(jnp.int32),
                          mask.astype(jnp.int32), word_block=wb,
                          interpret=interpret)

@@ -75,6 +75,10 @@ class MetricsSnapshot:
     # tracing (0 when the tracer is off / absent)
     traces_finished: int = 0
     slow_queries: int = 0
+    # compressed-arena serving (0 when no dict-coded shard was staged)
+    arena_raw_bytes: int = 0      # bytes staged to device in raw form
+    arena_comp_bytes: int = 0     # bytes staged in compressed (dict) form
+    decodes: int = 0              # host-side shard decodes observed
 
     def report(self) -> str:
         meth = " ".join(f"{m}={n}" for m, n in sorted(self.methods.items()))
@@ -105,6 +109,10 @@ class MetricsSnapshot:
         if self.traces_finished:
             s += (f" traces[done={self.traces_finished} "
                   f"slow={self.slow_queries}]")
+        if self.arena_comp_bytes:
+            s += (f" arena[raw={self.arena_raw_bytes}B "
+                  f"comp={self.arena_comp_bytes}B "
+                  f"decodes={self.decodes}]")
         return s
 
 
@@ -178,6 +186,19 @@ class ServingMetrics:
             "serve_worker_latency_seconds",
             "per-worker shard dispatch latency", labels=("worker",),
             window=window, recent=128)
+        # compressed-arena serving: bytes staged host->device per form
+        # ("raw" = expanded tiles, "comp" = dict+refs pairs) and the
+        # host-side shard decode times (MappedArena.decode_observer)
+        self._arena_bytes = r.counter(
+            "serve_arena_bytes_total",
+            "arena bytes staged to device, by tile form",
+            labels=("form",))
+        self._arena_raw = self._arena_bytes.labels("raw")
+        self._arena_comp = self._arena_bytes.labels("comp")
+        self._decode = h("serve_decode_seconds",
+                         "host-side compressed shard decode time")
+        self._decodes = r.counter("serve_decodes_total",
+                                  "host-side compressed shard decodes")
         # Optional back-reference set by the owning backend so snapshots
         # carry trace counts (finished / slow) without a separate poll.
         self.tracer = None
@@ -241,6 +262,19 @@ class ServingMetrics:
         the DeviceTileCache observer feeds this so traces and the
         exporter can name WHICH shard faulted."""
         self._shard_tiles.labels(shard, event).inc(n)
+
+    def record_arena_bytes(self, *, raw: int = 0, comp: int = 0) -> None:
+        """Bytes newly staged to device during one scoring pass, split by
+        tile form (deltas of the tile cache's staged-byte counters)."""
+        if raw:
+            self._arena_raw.inc(raw)
+        if comp:
+            self._arena_comp.inc(comp)
+
+    def record_decode(self, seconds: float) -> None:
+        """One host-side compressed shard decode (storage observer)."""
+        self._decodes.inc()
+        self._decode.observe(seconds)
 
     def record_worker(self, worker: str, latency_s: float) -> None:
         """One shard dispatch served by ``worker`` (hedged or not)."""
@@ -310,6 +344,18 @@ class ServingMetrics:
     @property
     def prefetch_hits(self) -> int:
         return self._tile_prefetch_hits.value
+
+    @property
+    def arena_raw_bytes(self) -> int:
+        return self._arena_raw.value
+
+    @property
+    def arena_comp_bytes(self) -> int:
+        return self._arena_comp.value
+
+    @property
+    def decodes(self) -> int:
+        return self._decodes.value
 
     @property
     def queue_depth(self) -> int:
@@ -401,6 +447,9 @@ class ServingMetrics:
                              if self.tracer is not None else 0),
             slow_queries=(self.tracer.slow_count
                           if self.tracer is not None else 0),
+            arena_raw_bytes=self.arena_raw_bytes,
+            arena_comp_bytes=self.arena_comp_bytes,
+            decodes=self.decodes,
             served=n_cacheable,
             rejected=self.rejected,
             dropped=self.dropped,

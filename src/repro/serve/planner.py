@@ -19,6 +19,14 @@ repro.kernels.bitslice_score):
   per-row DMA pipeline and the vertical plane expansion dominate.
 * ``ref``      — pure-jnp oracle; never planned, test/debug only.
 
+Compressed dispatch: indexes whose shards carry a rowdict codec can be
+served from the compressed (dict, refs) device form through fused-decode
+kernels (``lookup_c`` in the tuner's cost table). The plan's
+``compressed`` flag turns on only when the measured decode-in-the-loop
+cost beats the raw fused kernel (or, unmeasured, when the dict ratio
+clears ``COMPRESSED_MIN_RATIO``), so a store whose decode cost exceeds
+its bandwidth saving transparently keeps the raw path.
+
 Method choice consults MEASURED costs when a ``KernelTuner`` is wired in
 (``repro.kernels.autotune``): per (bucket, batch) key the tuner returns
 per-method dispatch costs plus the tuned ``word_block`` / ``term_block``
@@ -48,7 +56,9 @@ from typing import Optional
 
 from ..core.index import BitSlicedIndex
 from ..core.query import (ShardPlan, make_batch_score_fn,
-                          make_dedup_score_fn, make_score_fn, plan_shards)
+                          make_comp_batch_score_fn, make_comp_dedup_score_fn,
+                          make_comp_score_fn, make_dedup_score_fn,
+                          make_score_fn, plan_shards)
 from ..kernels.autotune import KernelTuner
 
 # Below this many (padded) terms the fixed costs dominate and the simple
@@ -61,6 +71,13 @@ SHORT_QUERY_TERMS = 96
 # of the batch's row gathers are duplicates (a measured break-even from the
 # tuner overrides it).
 DEFAULT_DEDUP_MIN_RATE = 0.5
+
+# Without measured costs, compressed (fused-decode) dispatch needs at least
+# this much HBM dict compression before the decode indirection is presumed
+# worth the bandwidth saved; a tuner's measured lookup-vs-lookup_c argmin
+# overrides it. Below this the dict barely shrinks the working set and the
+# extra scalar gather per row would be pure overhead.
+COMPRESSED_MIN_RATIO = 1.25
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +96,11 @@ class QueryPlan:
     # minimum batch dedup rate for the row-dedup path (fused lookup plans
     # only); None disables dedup for this plan
     dedup_threshold: Optional[float] = None
+    # True = dict-coded shards dispatch through the fused-decode kernels
+    # against their compressed (dict, refs) device form; raw shards in the
+    # same plan keep the raw path. Chosen by measured lookup-vs-lookup_c
+    # cost when the tuner has both, else by the dict-ratio heuristic.
+    compressed: bool = False
 
 
 def choose_method(n_hashes: int, bucket: int, batch_size: int,
@@ -90,11 +112,15 @@ def choose_method(n_hashes: int, bucket: int, batch_size: int,
 
     ``costs`` (method -> measured cost, e.g. the tuner's ``cost_us``)
     switches the rule from shape heuristics to measured argmin; methods
-    that do not apply to the index (lookup with k>1) are ignored. Ties
-    break to the alphabetically first method, deterministically."""
+    that do not apply to the index (lookup/lookup_c with k>1) are
+    ignored. "lookup_c" — the fused-decode kernel over a compressed
+    arena — competes on equal footing: it wins only when the measured
+    cost WITH the in-kernel decode beats every raw path, i.e. when the
+    dict bandwidth saving exceeds the decode cost. Ties break to the
+    alphabetically first method, deterministically."""
     if costs:
         ok = {m: c for m, c in costs.items()
-              if m != "lookup" or n_hashes == 1}
+              if m not in ("lookup", "lookup_c") or n_hashes == 1}
         if ok:
             return min(sorted(ok), key=ok.get)
     if batch_size > 1:
@@ -120,13 +146,18 @@ class QueryPlanner:
     docstring); ``word_block`` force-overrides the tile width everywhere
     (ServerConfig surface); ``dedup_min_rate`` sets the fallback dedup
     threshold when no measured break-even exists (None disables the
-    dedup path outright)."""
+    dedup path outright); ``compressed`` allows fused-decode dispatch
+    against dict-coded shards — taken only when the index HAS such
+    shards AND either the tuner's measured lookup_c cost wins the argmin
+    or (without measurements) the dict ratio clears
+    ``COMPRESSED_MIN_RATIO``."""
 
     def __init__(self, index: BitSlicedIndex, *,
                  short_query_terms: int = SHORT_QUERY_TERMS,
                  tuner: Optional[KernelTuner] = None,
                  word_block: Optional[int] = None,
-                 dedup_min_rate: Optional[float] = DEFAULT_DEDUP_MIN_RATE):
+                 dedup_min_rate: Optional[float] = DEFAULT_DEDUP_MIN_RATE,
+                 compressed: bool = False):
         self.index = index
         self.short_query_terms = short_query_terms
         self.tuner = tuner
@@ -136,10 +167,17 @@ class QueryPlanner:
         self._single_fns: dict[tuple, object] = {}
         self._batch_fns: dict[tuple, object] = {}
         self._dedup_fns: dict[Optional[int], object] = {}
+        self._comp_single_fns: dict[tuple, object] = {}
+        self._comp_batch_fns: dict[tuple, object] = {}
+        self._comp_dedup_fns: dict[Optional[int], object] = {}
         self.dispatch_counts: Counter[str] = Counter()
         self.n_shards = index.storage.n_shards
         self.shard_plans: list[ShardPlan] = plan_shards(
             index.layout, index.storage.shard_row_starts)
+        ratio_fn = getattr(index.storage, "dict_ratio", None)
+        self.dict_ratio = ratio_fn() if callable(ratio_fn) else None
+        self.compressed_enabled = bool(compressed) and \
+            self.dict_ratio is not None
 
     # -- planning ----------------------------------------------------------
     def plan(self, bucket: int, batch_size: int) -> QueryPlan:
@@ -148,10 +186,26 @@ class QueryPlanner:
         misses (read-only tuners never measure in the serving path)."""
         entries = (self.tuner.costs(bucket, batch_size)
                    if self.tuner is not None else {})
+        if not self.compressed_enabled:
+            # never dispatch fused-decode when compressed serving is off,
+            # even if a tuned lookup_c cost exists in a shared cache
+            entries.pop("lookup_c", None)
         costs = {m: e.cost_us for m, e in entries.items()}
         method = choose_method(self._k, bucket, batch_size,
                                self.short_query_terms, costs=costs)
-        tuned = entries.get(method)
+        compressed = method == "lookup_c"
+        if compressed:
+            method = "lookup"     # lookup_c IS the fused lookup, decoded
+            tuned = entries.get("lookup_c")
+        else:
+            tuned = entries.get(method)
+            # no measured comparison for this shape: fall back to the
+            # dict-ratio heuristic — decode only when the working set
+            # shrinks enough to plausibly pay for the indirection
+            if (self.compressed_enabled and method == "lookup"
+                    and "lookup_c" not in entries
+                    and self.dict_ratio >= COMPRESSED_MIN_RATIO):
+                compressed = True
         word_block = (self.word_block if self.word_block is not None
                       else (tuned.word_block if tuned else None))
         term_block = tuned.term_block if tuned else None
@@ -171,7 +225,8 @@ class QueryPlanner:
         return QueryPlan(method, bucket, batch_size, fused=fused,
                          paged=self.n_shards > 1, n_shards=self.n_shards,
                          word_block=word_block, term_block=term_block,
-                         grid_order=grid_order, dedup_threshold=threshold)
+                         grid_order=grid_order, dedup_threshold=threshold,
+                         compressed=compressed)
 
     # -- score-function cache ---------------------------------------------
     def batch_score_fn(self, plan: QueryPlan):
@@ -205,6 +260,38 @@ class QueryPlanner:
                                word_block=plan.word_block,
                                term_block=plan.term_block)
             self._single_fns[key] = fn
+        return fn
+
+    # -- compressed (fused-decode) twins: same keys, (dict, refs) leading
+    # arguments instead of the arena. A compressed plan needs BOTH forms —
+    # raw shards in a mixed-codec store still take the raw fn.
+    def comp_batch_score_fn(self, plan: QueryPlan):
+        key = (plan.method, plan.word_block, plan.term_block,
+               plan.grid_order)
+        fn = self._comp_batch_fns.get(key)
+        if fn is None:
+            fn = make_comp_batch_score_fn(self._k, plan.method,
+                                          word_block=plan.word_block,
+                                          term_block=plan.term_block,
+                                          grid_order=plan.grid_order)
+            self._comp_batch_fns[key] = fn
+        return fn
+
+    def comp_dedup_score_fn(self, plan: QueryPlan):
+        fn = self._comp_dedup_fns.get(plan.word_block)
+        if fn is None:
+            fn = make_comp_dedup_score_fn(word_block=plan.word_block)
+            self._comp_dedup_fns[plan.word_block] = fn
+        return fn
+
+    def comp_single_score_fn(self, plan: QueryPlan):
+        key = (plan.method, plan.word_block, plan.term_block)
+        fn = self._comp_single_fns.get(key)
+        if fn is None:
+            fn = make_comp_score_fn(self._k, plan.method,
+                                    word_block=plan.word_block,
+                                    term_block=plan.term_block)
+            self._comp_single_fns[key] = fn
         return fn
 
     def record(self, plan: QueryPlan, method: Optional[str] = None) -> None:

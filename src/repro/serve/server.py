@@ -26,12 +26,13 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import codec as _codec
 from ..core import hashing
 from ..core.arena import DeviceTileCache, common_tile_rows
 from ..core.index import BitSlicedIndex
 from ..core.query import (SearchResult, compile_pattern, plan_dedup_batch,
-                          run_paged, run_paged_dedup, select_hits,
-                          select_top_k)
+                          run_paged, run_paged_compressed, run_paged_dedup,
+                          select_hits, select_top_k)
 from ..kernels.autotune import KernelTuner, TuningCache
 from ..obs import EventLog, KernelProfiler, Tracer
 from ..obs.profile import gather_bytes
@@ -65,6 +66,11 @@ class ServerConfig:
     # kernel. None disables dedup; a tuner-measured break-even overrides
     # this default.
     dedup_min_rate: Optional[float] = DEFAULT_DEDUP_MIN_RATE
+    # Serve dict-coded shards from their compressed (dict, refs) device
+    # form through the fused-decode kernels. The planner still decides
+    # per batch shape (measured lookup-vs-lookup_c cost, or the dict
+    # ratio heuristic); raw shards and all-raw stores are unaffected.
+    compressed: bool = False
     # Autotune kernel configs on demand per batch shape (measured costs
     # drive the planner; entries persist in tuning_cache). False with a
     # tuning_cache still CONSULTS existing entries — it just never
@@ -112,7 +118,8 @@ class QueryServer(ServingBackend):
                 enabled=config.autotune)
         self.planner = QueryPlanner(index, tuner=self.tuner,
                                     word_block=config.word_block,
-                                    dedup_min_rate=config.dedup_min_rate)
+                                    dedup_min_rate=config.dedup_min_rate,
+                                    compressed=config.compressed)
         self.batcher = MicroBatcher(
             term_pad=config.term_pad, max_batch=config.max_batch,
             max_wait_s=config.max_wait_s, max_queued=config.max_queued)
@@ -147,6 +154,12 @@ class QueryServer(ServingBackend):
         # span can name the shards it had to stage.
         self._tile_events: list[tuple] = []
         self.tiles.observer = self._on_tile_event
+        # Compressed-arena accounting: host-side decodes land in the
+        # decode histogram; staged bytes are read as per-batch deltas of
+        # the tile cache's per-form counters in score_batch.
+        if hasattr(index.storage, "decode_observer"):
+            index.storage.decode_observer = \
+                lambda s, codec, sec: self.metrics.record_decode(sec)
 
     def _on_tile_event(self, shard: int, event: str,
                        seconds: float) -> None:
@@ -273,16 +286,30 @@ class QueryServer(ServingBackend):
         return select_hits(scores, n_terms, threshold)
 
     # -- batch scoring -------------------------------------------------------
-    def _run_plan(self, plan, fn, terms_dev, valid_dev) -> np.ndarray:
+    def _run_plan(self, plan, fn, terms_dev, valid_dev,
+                  fn_comp=None) -> np.ndarray:
         """Dispatch ``fn`` once against the dense arena, or — for a paged
         plan — once per shard tile (staged through the LRU tile cache),
-        concatenating per-shard slot scores along the slot axis."""
+        concatenating per-shard slot scores along the slot axis. With
+        ``fn_comp`` (compressed plans) dict-coded shards stage their
+        (dict, refs) form and score through the fused-decode kernels."""
         if not plan.paged:
             # tiles.get(0) caches the device copy for every backend (a
             # single-shard MappedArena would otherwise re-upload per batch)
-            out = fn(self.tiles.get(0), self.index.row_offset,
-                     self.index.block_width, terms_dev, valid_dev)
+            if (fn_comp is not None and self.index.storage.shard_codec(0)
+                    in _codec.DICT_CODECS):
+                dict_rows, refs = self.tiles.get_compressed(0)
+                out = fn_comp(dict_rows, refs, self.index.row_offset,
+                              self.index.block_width, terms_dev, valid_dev)
+            else:
+                out = fn(self.tiles.get(0), self.index.row_offset,
+                         self.index.block_width, terms_dev, valid_dev)
             return np.asarray(out)
+        if fn_comp is not None:
+            return np.concatenate(
+                run_paged_compressed(self.tiles, self._shard_args, fn,
+                                     fn_comp, terms_dev, valid_dev),
+                axis=-1)
         return np.concatenate(
             run_paged(self.tiles, self._shard_args, fn, terms_dev,
                       valid_dev), axis=-1)
@@ -305,18 +332,24 @@ class QueryServer(ServingBackend):
         if dp.dedup_rate < plan.dedup_threshold:
             return None
         fn = self.planner.dedup_score_fn(plan)
+        fn_comp = (self.planner.comp_dedup_score_fn(plan)
+                   if plan.compressed else None)
         tk0 = self.clock()
         if not plan.paged:
-            slots = np.asarray(fn(self.tiles.get(0),
-                                  jnp.asarray(dp.uniq_rows),
-                                  jnp.asarray(dp.indir),
-                                  jnp.asarray(dp.mask)))
+            planned = (jnp.asarray(dp.uniq_rows), jnp.asarray(dp.indir),
+                       jnp.asarray(dp.mask))
+            if (fn_comp is not None and self.index.storage.shard_codec(0)
+                    in _codec.DICT_CODECS):
+                dict_rows, refs = self.tiles.get_compressed(0)
+                slots = np.asarray(fn_comp(dict_rows, refs, *planned))
+            else:
+                slots = np.asarray(fn(self.tiles.get(0), *planned))
         else:
             slots = run_paged_dedup(self.tiles, self.planner.shard_plans,
-                                    fn, buf, n_valid)
+                                    fn, buf, n_valid, fn_comp=fn_comp)
         tk1 = self.clock()
-        self._kernel_mark(marks, "dedup", plan, tk0, tk1,
-                          rows=int(dp.uniq_rows.shape[0]))
+        self._kernel_mark(marks, "dedup_c" if plan.compressed else "dedup",
+                          plan, tk0, tk1, rows=int(dp.uniq_rows.shape[0]))
         return slots
 
     def _kernel_mark(self, marks: Optional[list], method: str, plan,
@@ -356,17 +389,24 @@ class QueryServer(ServingBackend):
             marks.append(("plan", tp0, self.clock(),
                           {"method": plan.method, "fused": int(plan.fused),
                            "paged": int(plan.paged)}))
-        method = plan.method
+        # compressed fused dispatch reports (and live-profiles) as
+        # "lookup_c" — the tuner's cost key for the decode-in-the-loop
+        # kernel, keeping observed costs per path
+        method = ("lookup_c" if plan.compressed and plan.method == "lookup"
+                  else plan.method)
         ells = np.array([r.n_terms for r in batch.requests], dtype=np.int32)
         tiles0 = (self.tiles.hits, self.tiles.faults,
                   self.tiles.prefetched, self.tiles.prefetch_hits)
+        bytes0 = (self.tiles.raw_bytes_staged, self.tiles.comp_bytes_staged)
         if Q == 1:
             buf = np.zeros((B, 2), dtype=np.uint32)
             buf[: ells[0]] = batch.requests[0].terms
             fn = self.planner.single_score_fn(plan)
+            fn_comp = (self.planner.comp_single_score_fn(plan)
+                       if plan.compressed else None)
             tk0 = self.clock()
             slots = self._run_plan(plan, fn, jnp.asarray(buf),
-                                   jnp.int32(ells[0]))
+                                   jnp.int32(ells[0]), fn_comp=fn_comp)
             self._kernel_mark(marks, method, plan, tk0, self.clock(),
                               rows=B * nb)
             scores = slots[None, self._host_slot]
@@ -384,12 +424,15 @@ class QueryServer(ServingBackend):
             if plan.fused and plan.dedup_threshold is not None:
                 slots = self._score_dedup(buf, n_valid, plan, marks)
                 if slots is not None:
-                    method = "dedup"
+                    method = "dedup_c" if plan.compressed else "dedup"
             if slots is None:
                 fn = self.planner.batch_score_fn(plan)
+                fn_comp = (self.planner.comp_batch_score_fn(plan)
+                           if plan.compressed else None)
                 tk0 = self.clock()
                 slots = self._run_plan(plan, fn, jnp.asarray(buf),
-                                       jnp.asarray(n_valid))
+                                       jnp.asarray(n_valid),
+                                       fn_comp=fn_comp)
                 self._kernel_mark(marks, method, plan, tk0, self.clock(),
                                   rows=q_pad * nb * B)
             scores = slots[:Q][:, self._host_slot]
@@ -404,6 +447,9 @@ class QueryServer(ServingBackend):
                               {"shard": s, "event": ev}))
         self.planner.record(plan, method)
         self.metrics.record_batch(Q, self.batcher.occupancy(batch), method)
+        self.metrics.record_arena_bytes(
+            raw=self.tiles.raw_bytes_staged - bytes0[0],
+            comp=self.tiles.comp_bytes_staged - bytes0[1])
         if plan.paged:
             self.metrics.record_tiles(
                 hits=self.tiles.hits - tiles0[0],

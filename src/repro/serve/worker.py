@@ -38,7 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.query import (ShardPlan, make_batch_score_fn, plan_shards_subset)
+from ..core import codec as _codec
+from ..core.query import (ShardPlan, make_batch_score_fn,
+                          make_comp_batch_score_fn, plan_shards_subset)
 from ..core.store import open_substore
 from ..core.arena import DeviceTileCache
 from ..index.hedge import AttemptFailed
@@ -49,6 +51,8 @@ from .planner import SHORT_QUERY_TERMS, choose_method
 # shard, so their dispatch shapes coincide and recompiling per worker would
 # only burn startup time (noticeable across the elasticity property sweeps).
 _SCORE_FNS: dict[tuple[int, str, Optional[int]], object] = {}
+# ... and the fused-decode twins for workers serving compressed shards.
+_SCORE_FNS_C: dict[tuple[int, str, Optional[int]], object] = {}
 
 
 def _shared_score_fn(n_hashes: int, method: str,
@@ -60,6 +64,16 @@ def _shared_score_fn(n_hashes: int, method: str,
     return fn
 
 
+def _shared_comp_score_fn(n_hashes: int, method: str,
+                          word_block: Optional[int] = None):
+    fn = _SCORE_FNS_C.get((n_hashes, method, word_block))
+    if fn is None:
+        fn = make_comp_batch_score_fn(n_hashes, method,
+                                      word_block=word_block)
+        _SCORE_FNS_C[(n_hashes, method, word_block)] = fn
+    return fn
+
+
 class ShardWorker:
     """One fake/real host serving a subset of a v2 store's shards."""
 
@@ -67,7 +81,8 @@ class ShardWorker:
                  tile_cache_bytes: Optional[int] = None,
                  verify: bool = False, device=None,
                  short_query_terms: int = SHORT_QUERY_TERMS,
-                 word_block: Optional[int] = None):
+                 word_block: Optional[int] = None,
+                 compressed: bool = False):
         sub = open_substore(store, shard_ids, verify=verify)
         self.name = name
         self.layout = sub.layout            # FULL store layout (metadata)
@@ -80,6 +95,12 @@ class ShardWorker:
         # the autotuner's choice, threaded from the launcher); None = the
         # kernel default
         self.word_block = word_block
+        # Serve dict-coded shards from their compressed (dict, refs)
+        # device form through the fused-decode kernels; raw shards on the
+        # same worker keep the raw path. Candidates are bit-identical —
+        # only this host's HBM working set changes.
+        self.compressed = bool(compressed)
+        self.compressed_dispatches = 0
         self._local = {g: i for i, g in enumerate(self.shard_ids)}
         self.plans: list[ShardPlan] = plan_shards_subset(
             sub.layout, sub.global_row_starts, sub.shard_ids)
@@ -135,16 +156,24 @@ class ShardWorker:
 
     def prefetch_shard(self, gshard: int) -> bool:
         """Double-buffering hook: stage the tile of global shard
-        ``gshard`` host->device without blocking (no-op when resident)."""
+        ``gshard`` host->device without blocking (no-op when resident).
+        Compressed workers stage the form they will actually score."""
         if self.failed or gshard not in self._local:
             return False
+        local = self._local[gshard]
         with self._lock:
-            return self.tiles.prefetch(self._local[gshard])
+            if self._comp_shard(local):
+                return self.tiles.prefetch_compressed(local)
+            return self.tiles.prefetch(local)
 
     # -- scoring -------------------------------------------------------------
     def _score_fn(self, method: str):
         return _shared_score_fn(self.params.n_hashes, method,
                                 self.word_block)
+
+    def _comp_shard(self, local: int) -> bool:
+        return (self.compressed and
+                self.storage.shard_codec(local) in _codec.DICT_CODECS)
 
     def score_shard(self, gshard: int, terms_dev, n_valid_dev
                     ) -> tuple[np.ndarray, ShardPlan, str]:
@@ -163,8 +192,16 @@ class ShardWorker:
         method = choose_method(self.params.n_hashes, bucket, q,
                                self.short_query_terms)
         t0 = time.perf_counter()
-        slots = self._score_fn(method)(self.tiles.get(local), offs, widths,
-                                       terms_dev, n_valid_dev)
+        if self._comp_shard(local):
+            self.compressed_dispatches += 1
+            dict_rows, refs = self.tiles.get_compressed(local)
+            fn = _shared_comp_score_fn(self.params.n_hashes, method,
+                                       self.word_block)
+            slots = fn(dict_rows, refs, offs, widths, terms_dev,
+                       n_valid_dev)
+        else:
+            slots = self._score_fn(method)(self.tiles.get(local), offs,
+                                           widths, terms_dev, n_valid_dev)
         slots = np.asarray(slots)
         if self.profiler is not None:
             from ..obs.profile import gather_bytes

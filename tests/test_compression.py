@@ -1,0 +1,286 @@
+"""Compressed-arena tests: codec round-trips, store build/open/migrate,
+and bit-identity of every compressed score path against the raw kernels.
+
+The load-bearing invariant: compression changes BYTES, never SCORES. A
+store built (or migrated) under any codec must open to the exact same
+decoded arena, and the fused-decode kernels — engine, server, paged
+multi-host worker — must return results bit-identical to the raw paths.
+"""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import IndexParams, QueryEngine
+from repro.core import codec as codec_mod
+from repro.core.query import (compile_pattern, coverage_cutoff,
+                              pad_term_batch)
+from repro.core.store import migrate_store_codec, open_store
+from repro.data import make_corpus
+from repro.index import build_compact_streaming
+
+PARAMS = IndexParams(n_hashes=1, fpr=0.03, kmer=15)
+
+
+def _redundant_terms(n_base=24, reps=8, seed=3):
+    """A corpus with genuine row-level redundancy: every document is
+    repeated ``reps`` times, so whole signature rows recur and the
+    rowdict codec has something to find."""
+    c = make_corpus(n_base, k=15, mean_length=160, min_length=120,
+                    seed=seed)
+    return c, [c.doc_terms[i % n_base] for i in range(n_base * reps)]
+
+
+@pytest.fixture(scope="module")
+def stores(tmp_path_factory):
+    c, terms = _redundant_terms()
+    root = tmp_path_factory.mktemp("comp-stores")
+    idx_c, stats = build_compact_streaming(
+        terms, root / "comp", PARAMS, block_docs=128, blocks_per_shard=1,
+        codec="rowdict")
+    idx_raw, _ = build_compact_streaming(
+        terms, root / "raw", PARAMS, block_docs=128, blocks_per_shard=1,
+        codec="raw")
+    return c, root, idx_c, idx_raw, stats
+
+
+def _patterns(c, n_random=8, seed=0):
+    rng = np.random.default_rng(seed)
+    pats = ["".join(rng.choice(list("ACGT"), size=60))
+            for _ in range(n_random)]
+    pats += [c.documents[i][10:90] for i in range(6)]
+    return pats
+
+
+# --------------------------------------------------------------------------
+# Codec layer: encode/decode round-trips on arbitrary tiles
+# --------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 96), st.integers(1, 9), st.integers(0, 10 ** 6),
+       st.sampled_from(codec_mod.CODECS + ("auto",)),
+       st.sampled_from(["dense", "sparse", "redundant", "zero"]))
+def test_encode_tile_roundtrip(rows, words, seed, codec, shape):
+    rng = np.random.default_rng(seed)
+    if shape == "dense":
+        tile = rng.integers(0, 2 ** 32, size=(rows, words), dtype=np.uint32)
+    elif shape == "sparse":
+        tile = (rng.random((rows, words)) < 0.05).astype(np.uint32)
+    elif shape == "zero":
+        tile = np.zeros((rows, words), dtype=np.uint32)
+    else:  # redundant: few distinct rows, many refs
+        base = rng.integers(0, 2 ** 32, size=(max(1, rows // 8), words),
+                            dtype=np.uint32)
+        tile = base[rng.integers(0, base.shape[0], size=rows)]
+    t = codec_mod.encode_tile(tile, codec)
+    assert t.codec in codec_mod.CODECS
+    np.testing.assert_array_equal(t.decode(), tile)
+    assert t.raw_nbytes == tile.nbytes
+    if t.codec != codec_mod.CODEC_RAW:
+        # the encoder only keeps a coded form when it actually gains
+        assert t.comp_nbytes < t.raw_nbytes
+        assert t.ratio > 1.0
+    if t.codec in codec_mod.DICT_CODECS:
+        d, refs = t.dict_form()
+        np.testing.assert_array_equal(d[refs], tile)
+        assert refs.dtype == np.int32 and d.dtype == np.uint32
+
+
+def test_rle_roundtrip_random_planes():
+    rng = np.random.default_rng(11)
+    for density in (0.0, 0.01, 0.2, 0.9):
+        m = (rng.random((64, 8)) < density).astype(np.uint32) * rng.integers(
+            1, 2 ** 32, size=(64, 8), dtype=np.uint32)
+        np.testing.assert_array_equal(
+            codec_mod.rle_decode(codec_mod.rle_encode(m)), m)
+
+
+# --------------------------------------------------------------------------
+# Store: build -> open -> migrate round-trips (hash-checked)
+# --------------------------------------------------------------------------
+
+def test_compressed_store_manifest_and_ratio(stores):
+    _, root, idx_c, idx_raw, stats = stores
+    manifest = json.loads((root / "comp" / "manifest.json").read_text())
+    codecs = [s["codec"] for s in manifest["shards"]]
+    assert all(c in codec_mod.CODECS for c in codecs)
+    assert any(c in codec_mod.DICT_CODECS for c in codecs)
+    # acceptance: >= 2x on the redundant corpus, visible in the manifest
+    assert manifest["ratio"] >= 2.0
+    assert manifest["comp_bytes"] < manifest["raw_bytes"]
+    assert idx_c.storage.dict_ratio() >= 2.0
+    assert idx_raw.storage.dict_ratio() is None
+    # decoded arena identical to the raw store's
+    np.testing.assert_array_equal(idx_c.storage.full_host(),
+                                  idx_raw.storage.full_host())
+
+
+def test_migrate_codec_roundtrip(stores):
+    _, root, idx_c, idx_raw, _ = stores
+    migrate_store_codec(root / "raw", root / "mig-comp", codec="auto")
+    migrate_store_codec(root / "mig-comp", root / "mig-raw", codec="raw")
+    src = json.loads((root / "raw" / "manifest.json").read_text())
+    back = json.loads((root / "mig-raw" / "manifest.json").read_text())
+    # hashes cover the DECODED tile: identical through the round trip
+    assert ([s["hash"] for s in src["shards"]]
+            == [s["hash"] for s in back["shards"]])
+    for name in ("mig-comp", "mig-raw"):
+        _, storage, _ = open_store(root / name, verify=True)
+        np.testing.assert_array_equal(storage.full_host(),
+                                      idx_raw.storage.full_host())
+
+
+# --------------------------------------------------------------------------
+# Fused-decode scoring: engine-level bit-identity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["lookup", "vertical"])
+def test_engine_compressed_bit_identical(stores, method):
+    c, _, idx_c, idx_raw, _ = stores
+    raw = QueryEngine(idx_raw, method=method)
+    comp = QueryEngine(idx_c, method=method, compressed=True)
+    assert comp.compressed
+    for pat in _patterns(c):
+        a = raw.search(pat, threshold=0.4)
+        b = comp.search(pat, threshold=0.4)
+        np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+    ta, tb = raw.top_k(c.documents[2][5:85], 7), \
+        comp.top_k(c.documents[2][5:85], 7)
+    np.testing.assert_array_equal(ta.doc_ids, tb.doc_ids)
+    np.testing.assert_array_equal(ta.scores, tb.scores)
+    pats = _patterns(c)[:5]
+    for a, b in zip(raw.search_batch(pats, threshold=0.4),
+                    comp.search_batch(pats, threshold=0.4)):
+        np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+    # compressed serving must not have staged any raw tile bytes
+    assert comp.tiles.comp_bytes_staged > 0
+    assert comp.tiles.raw_bytes_staged == 0
+
+
+def test_engine_compressed_k2(tmp_path):
+    """n_hashes=2: the general gather path (dict[refs[rows]] + AND) and
+    the k>1 dedup tuple planner, both against the raw engine."""
+    c, terms = _redundant_terms(n_base=16, reps=6, seed=9)
+    p2 = IndexParams(n_hashes=2, fpr=0.05, kmer=15)
+    idx_c, _ = build_compact_streaming(
+        terms, tmp_path / "c2", p2, block_docs=128, blocks_per_shard=1,
+        codec="rowdict")
+    idx_r, _ = build_compact_streaming(
+        terms, tmp_path / "r2", p2, block_docs=128, blocks_per_shard=1,
+        codec="raw")
+    raw = QueryEngine(idx_r, method="vertical")
+    comp = QueryEngine(idx_c, method="vertical", compressed=True)
+    assert comp.compressed
+    for pat in _patterns(c, n_random=4, seed=5):
+        a, b = raw.search(pat, threshold=0.4), comp.search(pat,
+                                                           threshold=0.4)
+        np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+
+
+# --------------------------------------------------------------------------
+# Serving: QueryServer dispatches, planner flag, metrics accounting
+# --------------------------------------------------------------------------
+
+def test_server_compressed_bit_identical_and_metrics(stores):
+    from repro.serve.server import QueryServer, ServerConfig
+    c, _, idx_c, idx_raw, _ = stores
+    pats = _patterns(c)
+
+    def run(index, **kw):
+        srv = QueryServer(index, ServerConfig(result_cache=0, row_cache=0,
+                                              **kw))
+        rids = [srv.submit(p, threshold=0.4) for p in pats]
+        srv.drain()
+        return srv, srv.pop_responses(), rids
+
+    srv_r, resp_r, rids_r = run(idx_raw)
+    srv_c, resp_c, rids_c = run(idx_c, compressed=True)
+    for rr, rc in zip(rids_r, rids_c):
+        a, b = resp_r[rr].result, resp_c[rc].result
+        np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+    # planner: dict ratio clears the heuristic bar -> compressed plans
+    assert srv_c.planner.compressed_enabled
+    assert srv_c.planner.plan(64, 8).compressed
+    assert not srv_r.planner.plan(64, 8).compressed
+    # metrics: every staged byte was compressed-form, and it shows in
+    # both the snapshot and the Prometheus exposition
+    snap = srv_c.metrics.snapshot()
+    assert snap.arena_comp_bytes > 0 and snap.arena_raw_bytes == 0
+    from repro.obs import render_prometheus
+    text = render_prometheus(srv_c.metrics.registry)
+    assert 'serve_arena_bytes_total{form="comp"}' in text
+    assert "serve_decode_seconds" in text
+
+
+def test_server_compressed_flag_inert_on_raw_store(stores):
+    from repro.serve.server import QueryServer, ServerConfig
+    c, _, _, idx_raw, _ = stores
+    srv = QueryServer(idx_raw, ServerConfig(result_cache=0, row_cache=0,
+                                            compressed=True))
+    assert not srv.planner.compressed_enabled
+    rid = srv.submit(_patterns(c)[0], threshold=0.4)
+    srv.drain()
+    resp = srv.pop_responses()[rid]
+    assert resp.result is not None
+    assert srv.metrics.snapshot().arena_comp_bytes == 0
+
+
+# --------------------------------------------------------------------------
+# Paged multi-host: ShardWorker candidates under compressed dispatch
+# --------------------------------------------------------------------------
+
+def test_worker_compressed_candidates_identical(stores):
+    from repro.serve.worker import ShardWorker
+    c, root, idx_c, _, _ = stores
+    ids = list(range(idx_c.storage.n_shards))
+    w_raw = ShardWorker("w-raw", root / "comp", ids)
+    w_c = ShardWorker("w-comp", root / "comp", ids, compressed=True)
+    term_sets = [compile_pattern(p, PARAMS) for p in _patterns(c)[:6]]
+    buf, ells = pad_term_batch(term_sets, 64)
+    cuts = np.array([coverage_cutoff(0.4, int(e)) for e in ells], np.int32)
+    topks = np.zeros(len(ells), np.int32)
+    topks[3] = 5                      # mix selection modes in one batch
+    td_r, nd_r = w_raw.stage_batch(buf, ells)
+    td_c, nd_c = w_c.stage_batch(buf, ells)
+    for g in ids:
+        assert w_c.prefetch_shard(g)
+        cand_r, m_r = w_raw.score_candidates(g, td_r, nd_r, cuts, topks,
+                                             len(ells))
+        cand_c, m_c = w_c.score_candidates(g, td_c, nd_c, cuts, topks,
+                                           len(ells))
+        assert m_r == m_c             # dispatch-mix comparability
+        for (d0, s0), (d1, s1) in zip(cand_r, cand_c):
+            np.testing.assert_array_equal(d0, d1)
+            np.testing.assert_array_equal(s0, s1)
+    assert w_c.compressed_dispatches == len(ids)
+    assert w_c.tiles.comp_bytes_staged > 0
+    assert w_c.tiles.raw_bytes_staged == 0
+    assert w_raw.compressed_dispatches == 0
+
+
+# --------------------------------------------------------------------------
+# Autotuner: the lookup_c cost model
+# --------------------------------------------------------------------------
+
+def test_tuner_lookup_c_entries(stores):
+    from repro.kernels.autotune import KernelTuner, TuningCache
+    _, _, idx_c, idx_raw, _ = stores
+    tuner = KernelTuner.for_index(idx_c, TuningCache(), enabled=True,
+                                  repeats=1, word_blocks=(64,),
+                                  grid_orders=("wq",))
+    assert tuner.comp_ratio is not None and tuner.comp_ratio >= 2.0
+    e = tuner.entry("lookup_c", 64, 4)
+    assert e is not None and e.cost_us > 0
+    assert f".cr{tuner.comp_ratio:.2f}" in tuner.key("lookup_c", 64, 4)
+    # dedup break-even exists for the compressed path too
+    assert e.dedup_threshold is not None
+    # raw store: no ratio, lookup_c untunable
+    raw_tuner = KernelTuner.for_index(idx_raw, TuningCache(), enabled=True)
+    assert raw_tuner.comp_ratio is None
+    assert raw_tuner.entry("lookup_c", 64, 4) is None
