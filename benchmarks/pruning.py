@@ -1,0 +1,189 @@
+"""Pruned scoring: threshold x selectivity x chunk-size sweep with exact
+bytes-read accounting.
+
+The tentpole claim of threshold-driven pruned scoring is that block-level
+early exit turns the coverage threshold into an I/O budget: once a
+block's running count plus its remaining term budget cannot reach
+``ceil(threshold * ell)``, that block's tile rows are never read, staged,
+or scored again. The win must show up in BYTES, not just kernel time —
+so each cell of the sweep runs the chunked executor against a fresh
+engine (cold tile cache) and reports:
+
+  bytes_read  — exact host arena bytes the pruned run touched
+                (``PruneStats.bytes_read``: row gathers + any promoted
+                full-tile stagings);
+  baseline    — what exhaustive paged scoring stages for the same batch
+                with a cold cache: every shard tile once,
+                ``sum(shard_hbm_nbytes)``;
+  reduction   — baseline / bytes_read (the headline: >= 3x at
+                threshold >= 0.8 on a selective corpus);
+  prune_rate  — fraction of (query, block) cells eliminated early;
+  identical   — pruned hits AND scores bit-equal to the exhaustive
+                QueryEngine oracle (hard assertion, threshold and top-k).
+
+Selectivity levels plant a shared motif in a fraction of the corpus: a
+query drawn from the motif matches that fraction of documents, so "sel"
+is the fraction of docs a query is designed to hit (0 = pure negative
+queries, the most prunable workload).
+
+``--json`` writes results/BENCH_pruning.json for CI trend tracking.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import IndexParams, QueryEngine
+from repro.core.query import PruneStats
+from repro.index import build_compact_streaming
+
+from .common import emit, timeit
+
+_BASES = "ACGT"
+
+
+def _rand_seq(rng, n: int) -> str:
+    return "".join(_BASES[i] for i in rng.integers(0, 4, size=n))
+
+
+def _build_corpus(n_docs: int, doc_len: int, sel: float, seed: int = 0
+                  ) -> tuple[list[str], str]:
+    """Corpus where ``sel * n_docs`` documents share a planted motif.
+    Returns (documents, motif)."""
+    rng = np.random.default_rng(seed)
+    motif = _rand_seq(rng, doc_len // 2)
+    n_hit = int(round(sel * n_docs))
+    docs = []
+    for i in range(n_docs):
+        if i < n_hit:
+            pad = _rand_seq(rng, doc_len - len(motif))
+            docs.append(pad[: len(pad) // 2] + motif + pad[len(pad) // 2:])
+        else:
+            docs.append(_rand_seq(rng, doc_len))
+    return docs, motif
+
+
+def _queries(docs: list[str], motif: str, n_queries: int, q_len: int,
+             seed: int = 7) -> list[str]:
+    """Half motif-derived (hit the planted fraction), half random
+    negatives (hit nothing above noise)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_queries):
+        if i % 2 == 0 and len(motif) >= q_len:
+            j = int(rng.integers(0, len(motif) - q_len + 1))
+            out.append(motif[j: j + q_len])
+        else:
+            out.append(_rand_seq(rng, q_len))
+    return out
+
+
+def run(n_docs: int = 128, n_queries: int = 8, *,
+        thresholds: tuple[float, ...] = (0.3, 0.5, 0.8, 0.9, 1.0),
+        selectivities: tuple[float, ...] = (0.0, 0.05, 0.25),
+        chunks: tuple[int, ...] = (16, 32)) -> dict:
+    params = IndexParams(n_hashes=1, fpr=0.03, kmer=15)
+    report: dict = {"params": {"n_docs": n_docs, "n_queries": n_queries},
+                    "cells": [], "identical": True}
+    for sel in selectivities:
+        docs, motif = _build_corpus(n_docs, 320, sel)
+        pats = _queries(docs, motif, n_queries, 140)
+        tmp = Path(tempfile.mkdtemp(prefix="cobs-prune-"))
+        try:
+            from repro.core import dna
+            terms = [dna.unique_terms(dna.pack_kmers(
+                dna.encode_dna(d), params.kmer, params.canonical))
+                for d in docs]
+            index, _ = build_compact_streaming(
+                terms, tmp / "store", params, block_docs=32,
+                blocks_per_shard=1)
+            storage = index.storage
+            baseline = sum(int(storage.shard_hbm_nbytes(s))
+                           for s in range(storage.n_shards))
+            oracle_eng = QueryEngine(index, method="lookup")
+            t_base = timeit(lambda: oracle_eng.search_batch(
+                pats, threshold=0.8), repeats=3)
+            for thr in thresholds:
+                oracle = oracle_eng.search_batch(pats, threshold=thr)
+                for chunk in chunks:
+                    # fresh engine per cell: cold tile cache, so the
+                    # byte accounting is exact and unshared
+                    eng = QueryEngine(index, method="lookup",
+                                     prune_chunk=chunk)
+                    stats = PruneStats()
+                    pruned = eng.search_batch_pruned(pats, threshold=thr,
+                                                     stats=stats)
+                    same = all(
+                        np.array_equal(a.doc_ids, b.doc_ids)
+                        and np.array_equal(a.scores, b.scores)
+                        for a, b in zip(pruned, oracle))
+                    assert same, (f"pruned != oracle at thr={thr} "
+                                  f"sel={sel} chunk={chunk}")
+                    eng_t = QueryEngine(index, method="lookup",
+                                        prune_chunk=chunk)
+                    t_pruned = timeit(lambda: eng_t.search_batch_pruned(
+                        pats, threshold=thr), repeats=3)
+                    reduction = baseline / max(1, stats.bytes_read)
+                    tag = (f"thr={thr};sel={sel};chunk={chunk};"
+                           f"reduction={reduction:.1f}x;"
+                           f"prune_rate={stats.prune_rate:.2f}")
+                    emit(f"pruning/t{thr}_s{sel}_c{chunk}",
+                         t_pruned * 1e6 / len(pats), tag)
+                    report["cells"].append({
+                        "threshold": thr, "selectivity": sel,
+                        "chunk": chunk,
+                        "bytes_read": int(stats.bytes_read),
+                        "baseline_bytes": baseline,
+                        "bytes_reduction": round(reduction, 2),
+                        "prune_rate": round(stats.prune_rate, 4),
+                        "blocks_pruned": int(stats.blocks_pruned),
+                        "blocks_total": int(stats.blocks_total),
+                        "tiles_promoted": int(stats.tiles_promoted),
+                        "shard_visits_skipped":
+                            int(stats.shard_visits_skipped),
+                        "pruned_us_per_query":
+                            round(t_pruned * 1e6 / len(pats), 1),
+                        "exhaustive_us_per_query":
+                            round(t_base * 1e6 / len(pats), 1),
+                        "identical": bool(same),
+                    })
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    # acceptance: >= 3x bytes reduction at threshold >= 0.8 on the most
+    # selective corpus, with bit-identical results everywhere
+    best = max((c["bytes_reduction"] for c in report["cells"]
+                if c["threshold"] >= 0.8), default=0.0)
+    report["best_reduction_thr_ge_0.8"] = round(best, 2)
+    emit("pruning/best_reduction", best * 1000,
+         f"best_bytes_reduction_at_thr>=0.8={best:.1f}x;unit=milli")
+    return report
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write the sweep report to this path")
+    args = ap.parse_args()
+    report = run(n_docs=96 if args.quick else 128,
+                 n_queries=6 if args.quick else 8,
+                 thresholds=(0.5, 0.8, 1.0) if args.quick
+                 else (0.3, 0.5, 0.8, 0.9, 1.0),
+                 selectivities=(0.0, 0.25) if args.quick
+                 else (0.0, 0.05, 0.25),
+                 chunks=(16,) if args.quick else (16, 32))
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=2))
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,7 @@ def main() -> None:
 
     from . import common
     from . import (compaction, compression, construction, fpr, hedging,
-                   kernel_micro, outofcore, query, scaling, serving)
+                   kernel_micro, outofcore, pruning, query, scaling, serving)
 
     n = 128 if args.quick else 512
     suites = {
@@ -52,10 +52,18 @@ def main() -> None:
             16 if args.quick else 24,
             n_queries=12 if args.quick else 24,
             reps_levels=(1, 4) if args.quick else (1, 4, 8)),
+        "pruning": lambda: pruning.run(
+            96 if args.quick else 128,
+            n_queries=6 if args.quick else 8,
+            thresholds=(0.5, 0.8, 1.0) if args.quick
+            else (0.3, 0.5, 0.8, 0.9, 1.0),
+            selectivities=(0.0, 0.25) if args.quick else (0.0, 0.05, 0.25),
+            chunks=(16,) if args.quick else (16, 32)),
     }
     print("name,us_per_call,derived")
     kernel_report = None
     compression_report = None
+    pruning_report = None
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue
@@ -64,6 +72,8 @@ def main() -> None:
             kernel_report = res
         elif name == "compression":
             compression_report = res
+        elif name == "pruning":
+            pruning_report = res
 
     out = Path("results")
     out.mkdir(exist_ok=True)
@@ -84,6 +94,12 @@ def main() -> None:
         comp_json = out / "BENCH_compression.json"
         comp_json.write_text(json.dumps(compression_report, indent=2))
         print(f"# wrote {comp_json} (ratio x decode x e2e sweep)",
+              file=sys.stderr)
+    if pruning_report is not None:
+        import json
+        prune_json = out / "BENCH_pruning.json"
+        prune_json.write_text(json.dumps(pruning_report, indent=2))
+        print(f"# wrote {prune_json} (threshold x selectivity x chunk sweep)",
               file=sys.stderr)
 
 

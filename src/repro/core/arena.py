@@ -171,6 +171,19 @@ class ArenaStorage:
             out[sel] = np.asarray(self.shard_host(int(s)))[local]
         return out.reshape(*rows.shape, self.shape[1])
 
+    # -- popcount stats (recorded by v2 stores; absent elsewhere) -----------
+    def has_popcounts(self) -> bool:
+        return False
+
+    def shard_popcounts(self, s: int) -> np.ndarray | None:
+        return None
+
+    def row_popcounts(self, rows: np.ndarray) -> np.ndarray | None:
+        return None
+
+    def mean_popcount(self) -> float | None:
+        return None
+
     # -- compression surface (raw everywhere except MappedArena) ------------
     def shard_codec(self, s: int) -> str:
         """This shard's on-disk codec (repro.core.codec.CODECS)."""
@@ -283,7 +296,8 @@ class MappedArena(ArenaStorage):
     """
 
     def __init__(self, sources: list, shard_row_starts: np.ndarray,
-                 doc_words: int, dtype=np.uint32):
+                 doc_words: int, dtype=np.uint32, pop_sources: list | None
+                 = None):
         self.sources = list(sources)        # Path | str | ndarray | source
         self.shard_row_starts = np.asarray(shard_row_starts, dtype=np.int64)
         if len(self.sources) != self.n_shards:
@@ -292,6 +306,15 @@ class MappedArena(ArenaStorage):
         self.dtype = np.dtype(dtype)
         self._open: dict[int, np.ndarray] = {}
         self._open_dict: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        # optional per-slice popcount sidecars (Path | ndarray | None per
+        # shard, from the v2 manifest's "pops" field): rarest-term-first
+        # ordering for the pruned executor; None entries degrade to
+        # natural term order
+        self.pop_sources = (list(pop_sources) if pop_sources is not None
+                            else [None] * self.n_shards)
+        if len(self.pop_sources) != self.n_shards:
+            raise ValueError("pop_sources / shard_row_starts length mismatch")
+        self._open_pops: dict[int, np.ndarray] = {}
         self.decode_observer = None
         self.decodes = 0
 
@@ -326,6 +349,61 @@ class MappedArena(ArenaStorage):
                     f"({want_rows}, {self.shape[1]})")
             self._open[s] = a
         return a
+
+    # -- popcount stats surface ----------------------------------------------
+    def has_popcounts(self) -> bool:
+        """True when EVERY shard carries a popcount sidecar — the pruned
+        executor needs a total order over a query's terms, so partial
+        stats degrade to natural order."""
+        return all(p is not None for p in self.pop_sources)
+
+    def shard_popcounts(self, s: int) -> np.ndarray | None:
+        """Per-row popcounts of shard ``s`` (uint32 [rows], mmap-backed),
+        or None when the store predates the stats field."""
+        src = self.pop_sources[s]
+        if src is None:
+            return None
+        a = self._open_pops.get(s)
+        if a is None:
+            a = src if isinstance(src, np.ndarray) else np.load(
+                src, mmap_mode="r")
+            if a.shape != (self._shard_rows(s),):
+                raise ValueError(
+                    f"shard {s}: popcount sidecar shape {a.shape} != "
+                    f"({self._shard_rows(s)},)")
+            self._open_pops[s] = a
+        return a
+
+    def row_popcounts(self, rows: np.ndarray) -> np.ndarray | None:
+        """Popcounts of arbitrary GLOBAL arena rows (int64 [..] -> int64
+        [..]), reading only the touched sidecar pages — never the arena.
+        None when any shard lacks stats."""
+        if not self.has_popcounts():
+            return None
+        rows = np.asarray(rows, dtype=np.int64)
+        flat = rows.reshape(-1)
+        out = np.empty(flat.size, dtype=np.int64)
+        owner = np.searchsorted(self.shard_row_starts, flat,
+                                side="right") - 1
+        for s in np.unique(owner):
+            sel = owner == s
+            local = flat[sel] - int(self.shard_row_starts[s])
+            out[sel] = np.asarray(self.shard_popcounts(int(s))[local],
+                                  dtype=np.int64)
+        return out.reshape(rows.shape)
+
+    def mean_popcount(self) -> float | None:
+        """Mean set-bit count per arena row across all shards (the corpus
+        density the serving planner's prune-rate prediction uses), or
+        None without stats."""
+        if not self.has_popcounts():
+            return None
+        total = n = 0
+        for s in range(self.n_shards):
+            p = self.shard_popcounts(s)
+            total += int(np.asarray(p, dtype=np.int64).sum())
+            n += p.shape[0]
+        return total / n if n else 0.0
 
     # -- compression surface -------------------------------------------------
     def shard_codec(self, s: int) -> str:
@@ -547,6 +625,17 @@ class DeviceTileCache:
     def has_compressed(self, s: int) -> bool:
         return ("c", s) in self._tiles
 
+    def _evict_victim(self):
+        """Ratio-aware victim selection: the least-recently-used RAW tile
+        goes first — a dict-coded entry packs ratio-times more arena per
+        resident byte (and costs a re-encode-shaped decode to restage), so
+        raw tiles are the cheap bytes to give back. Falls back to plain
+        LRU when only dict entries remain."""
+        for key in self._tiles:                # OrderedDict: LRU first
+            if not isinstance(key, tuple):
+                return key
+        return next(iter(self._tiles))
+
     def _insert(self, key) -> tuple:
         s = self._shard_of(key)
         compressed = isinstance(key, tuple)
@@ -562,7 +651,8 @@ class DeviceTileCache:
         if self.capacity_bytes is not None:
             while (self._tiles
                    and self.resident_bytes + need > self.capacity_bytes):
-                old, _ = self._tiles.popitem(last=False)
+                old = self._evict_victim()
+                del self._tiles[old]
                 self.resident_bytes -= self._sizes.pop(old)
                 self._prefetched.discard(old)
                 old_s = self._shard_of(old)

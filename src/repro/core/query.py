@@ -370,6 +370,287 @@ def run_paged_dedup(tiles, shard_plans: list[ShardPlan], fn,
     return np.concatenate([np.asarray(p) for p in parts], axis=1)
 
 
+# --------------------------------------------------------------------------
+# Pruned scoring (branch-and-bound over the coverage threshold)
+# --------------------------------------------------------------------------
+#
+# The fused path scores every (query, block, term) cell before the threshold
+# is consulted. The pruned path executes terms in CHUNKS (rarest first when
+# the store recorded popcount stats) and keeps a per-(query, block) running
+# count on device; after each chunk any block whose best possible final
+# score — running max + terms remaining — cannot reach the required cutoff
+# is dropped. Work for dropped blocks (host row reads, device staging,
+# kernel cells) is never issued, and a shard whose every block is dropped
+# is never touched again. Partial sums in dropped blocks stay strictly
+# below the cutoff, so reported hits and scores are bit-identical to the
+# exhaustive engine.
+#
+# I/O model: instead of staging whole shard tiles, each (chunk, shard)
+# visit host-gathers only the chunk's unique touched rows out of the mmap
+# (dict-coded shards gather decoded rows through their dictionary) and
+# stages that small matrix. When a shard's cumulative gathered bytes
+# approach its tile size — dense corpora, long queries, low thresholds —
+# the executor PROMOTES the shard: the full tile is staged once through
+# the DeviceTileCache and later chunks use the fused in-kernel gather.
+# Pruned shards never promote, so the tile cache records zero faults for
+# them — "tiles skipped" is directly observable.
+
+
+@dataclass
+class PruneStats:
+    """Work accounting for one pruned batch (mutated in place).
+
+    ``bytes_read`` is the headline number: host arena bytes actually read
+    (row gathers + promoted tile stagings) — the quantity the exhaustive
+    path pays ``sum(shard_nbytes)`` for."""
+    blocks_total: int = 0        # live (query, block) cells at entry
+    blocks_pruned: int = 0       # cells dropped before the final chunk
+    chunks: int = 0              # term chunks executed
+    shard_visits: int = 0        # (chunk, shard) visits dispatched
+    shard_visits_skipped: int = 0  # visits skipped (no live cell)
+    tiles_promoted: int = 0      # shards escalated to full-tile staging
+    kernel_dispatches: int = 0
+    bytes_gathered: int = 0      # host bytes read by row gathers
+    bytes_tile_staged: int = 0   # bytes of promoted full tiles
+
+    @property
+    def bytes_read(self) -> int:
+        return self.bytes_gathered + self.bytes_tile_staged
+
+    @property
+    def prune_rate(self) -> float:
+        if self.blocks_total == 0:
+            return 0.0
+        return self.blocks_pruned / self.blocks_total
+
+    def merge(self, other: "PruneStats") -> None:
+        """Accumulate another batch's counters (serving aggregates)."""
+        for f in ("blocks_total", "blocks_pruned", "chunks", "shard_visits",
+                  "shard_visits_skipped", "tiles_promoted",
+                  "kernel_dispatches", "bytes_gathered", "bytes_tile_staged"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+
+
+def order_terms_rarest(storage, shard_plans: list[ShardPlan],
+                       terms: np.ndarray, n_valid: np.ndarray,
+                       n_hashes: int = 1, max_blocks: int = 8) -> np.ndarray:
+    """Per-query term execution order for pruned scoring: int32 [Q, L]
+    permutation, valid terms first, rarest first.
+
+    Rare terms kill blocks early — a block missing a rare term loses score
+    headroom immediately — so ascending estimated popcount maximizes
+    early-exit leverage. The estimate samples up to ``max_blocks`` blocks
+    spread over the arena and sums each term's row popcounts there (min
+    over the k hash rows: a term's hits need all k bits), read from the
+    store's popcount sidecars. Stores without stats (pre-v2 or external
+    arenas) fall back to natural order — the executor stays correct, just
+    prunes later."""
+    terms = np.asarray(terms)
+    n_valid = np.asarray(n_valid, dtype=np.int32)
+    Q, L = terms.shape[0], terms.shape[1]
+    natural = np.broadcast_to(np.arange(L, dtype=np.int32), (Q, L)).copy()
+    has = getattr(storage, "has_popcounts", None)
+    if L == 0 or has is None or not has():
+        return natural
+    starts = np.asarray(storage.shard_row_starts, dtype=np.int64)
+    offs = [sp.row_offset.astype(np.int64) + int(starts[sp.shard])
+            for sp in shard_plans]
+    wids = [sp.block_width.astype(np.int64) for sp in shard_plans]
+    off = np.concatenate(offs)
+    wid = np.concatenate(wids)
+    sel = np.unique(np.linspace(0, off.shape[0] - 1,
+                                min(max_blocks, off.shape[0])).astype(np.int64))
+    off, wid = off[sel], wid[sel]
+    h = hashing.hash_terms_np(terms, n_hashes).astype(np.int64)  # [Q, L, k]
+    rows = h[..., None] % wid + off                       # [Q, L, k, S]
+    uniq, inv = np.unique(rows.reshape(-1), return_inverse=True)
+    pops = np.asarray(storage.row_popcounts(uniq), dtype=np.int64)
+    est = pops[inv].reshape(rows.shape).min(axis=2).sum(axis=-1)  # [Q, L]
+    est[np.arange(L, dtype=np.int32)[None, :] >= n_valid[:, None]] = (
+        np.iinfo(np.int64).max)                           # padding last
+    return np.argsort(est, axis=1, kind="stable").astype(np.int32)
+
+
+def run_paged_pruned(tiles, shard_plans: list[ShardPlan], terms: np.ndarray,
+                     n_valid: np.ndarray, required: np.ndarray,
+                     topk: np.ndarray, *, n_hashes: int = 1,
+                     chunk_terms: int = 32, word_block: int | None = None,
+                     promote_ratio: float = 0.5, order: np.ndarray | None = None,
+                     stats: PruneStats | None = None) -> np.ndarray:
+    """Branch-and-bound batch scoring across shard tiles.
+
+    terms uint32 [Q, L, 2] (shared padding), n_valid int32 [Q];
+    ``required`` int32 [Q] is each query's fixed score cutoff
+    (``coverage_cutoff`` — use 0 for top-k queries) and ``topk`` int32 [Q]
+    the per-query k (0 = threshold query; the cutoff then tightens
+    dynamically to the merged k-th largest running count). Returns int32
+    [Q, n_slots] slot scores, bit-identical to ``run_paged`` on every slot
+    that can meet its query's cutoff — pruned blocks hold partial sums
+    that are provably below it, so downstream ``select_hits`` /
+    ``select_top_k`` report identical results.
+
+    ``order`` overrides the term execution order ([Q, L] permutation,
+    valid-first); default is ``order_terms_rarest``. ``stats`` (a
+    PruneStats) is mutated with work/IO accounting."""
+    terms = np.asarray(terms)
+    n_valid = np.asarray(n_valid, dtype=np.int32)
+    required = np.asarray(required, dtype=np.int64).copy()
+    topk = np.asarray(topk, dtype=np.int32)
+    if stats is None:
+        stats = PruneStats()
+    storage = tiles.storage
+    Q, L = terms.shape[0], terms.shape[1]
+    W = int(storage.shape[1])
+    k = int(n_hashes)
+    ct = max(1, int(chunk_terms))
+    n_sh = len(shard_plans)
+    nbs = [sp.row_offset.shape[0] for sp in shard_plans]
+    l_max = int(n_valid.max(initial=0))
+    if l_max == 0 or Q == 0:
+        return np.zeros((Q, sum(nbs) * W * 32), dtype=np.int32)
+
+    if order is None:
+        order = order_terms_rarest(storage, shard_plans, terms, n_valid,
+                                   n_hashes=k)
+    h = hashing.hash_terms_np(terms, k)                   # [Q, L, k]
+    h_ord = np.take_along_axis(h, np.asarray(order, np.int64)[..., None],
+                               axis=1)
+
+    alive = [np.ones((Q, nb), dtype=bool) for nb in nbs]
+    acc = [None] * n_sh
+    block_max = [np.zeros((Q, nb), dtype=np.int64) for nb in nbs]
+    tk_lower = [None] * n_sh                # [Q, kmax] per shard (top-k)
+    promoted = [False] * n_sh
+    resident = [None] * n_sh                # device tile or (dict, refs)
+    gathered = [0] * n_sh                   # cumulative gather bytes
+    decode_counted = [False] * n_sh
+    stats.blocks_total += int(Q * sum(nbs))
+    kmax = int(topk.max(initial=0))
+    is_topk = topk > 0
+
+    n_chunks = -(-l_max // ct)
+    offs = [sp.row_offset.astype(np.uint32) for sp in shard_plans]
+    wids = [sp.block_width.astype(np.uint32) for sp in shard_plans]
+    codecs = [storage.shard_codec(sp.shard) for sp in shard_plans]
+
+    for c in range(n_chunks):
+        stats.chunks += 1
+        j0 = c * ct
+        h_chunk = np.zeros((Q, ct, k), dtype=h_ord.dtype)
+        width = min(ct, L - j0)
+        h_chunk[:, :width] = h_ord[:, j0:j0 + width]
+        valid_chunk = (j0 + np.arange(ct, dtype=np.int32)[None, :]
+                       < n_valid[:, None])                # [Q, ct]
+        visited = []
+        for s, sp in enumerate(shard_plans):
+            live = alive[s][:, :, None] & valid_chunk[:, None, :]  # [Q,nb,ct]
+            if not live.any():
+                stats.shard_visits_skipped += 1
+                continue
+            stats.shard_visits += 1
+            visited.append(s)
+            rows = (h_chunk[..., None] % wids[s] + offs[s])  # [Q, ct, k, nb]
+            rows = np.transpose(rows, (0, 3, 1, 2)).astype(np.int64)
+            if acc[s] is None:
+                acc[s] = ops.chunk_acc_init(Q, nbs[s], W,
+                                            word_block=word_block)
+            if (not promoted[s] and k == 1
+                    and gathered[s] >= promote_ratio
+                    * storage.shard_hbm_nbytes(sp.shard)):
+                promoted[s] = True
+                if codecs[s] in _codec.DICT_CODECS:
+                    resident[s] = tiles.get_compressed(sp.shard)
+                else:
+                    resident[s] = tiles.get(sp.shard)
+                stats.tiles_promoted += 1
+                stats.bytes_tile_staged += storage.shard_hbm_nbytes(sp.shard)
+            mask = jnp.asarray(live.astype(np.int32))
+            if promoted[s]:
+                idx = jnp.asarray(rows[..., 0].astype(np.int32))
+                if codecs[s] in _codec.DICT_CODECS:
+                    d, r = resident[s]
+                    acc[s], bmax = ops.bitslice_chunk_score_multi_comp(
+                        d, r, idx, mask, acc[s], word_block=word_block)
+                else:
+                    acc[s], bmax = ops.bitslice_chunk_score_multi(
+                        resident[s], idx, mask, acc[s], word_block=word_block)
+            else:
+                cells = rows[live]                        # [N, k]
+                if k == 1:
+                    uniq, inv = np.unique(cells[:, 0], return_inverse=True)
+                else:
+                    uniq, inv = np.unique(cells, axis=0, return_inverse=True)
+                if codecs[s] in _codec.DICT_CODECS:
+                    d_host, r_host = storage.shard_dict_host(sp.shard)
+                    refs = np.asarray(r_host)[uniq]       # [U] or [U, k]
+                    mat = np.asarray(d_host[refs.reshape(-1)],
+                                     dtype=np.uint32)
+                    nread = int(np.unique(refs).size)
+                else:
+                    if (codecs[s] != _codec.CODEC_RAW
+                            and not decode_counted[s]):
+                        # non-dict compressed shards decode whole on touch
+                        decode_counted[s] = True
+                        stats.bytes_gathered += storage.shard_nbytes(sp.shard)
+                    host = storage.shard_host(sp.shard)
+                    mat = np.asarray(host[uniq.reshape(-1)],
+                                     dtype=np.uint32)
+                    nread = int(uniq.reshape(-1).size)
+                if codecs[s] == _codec.CODEC_RAW:
+                    stats.bytes_gathered += nread * W * 4
+                elif codecs[s] in _codec.DICT_CODECS:
+                    stats.bytes_gathered += nread * W * 4
+                gathered[s] += mat.shape[0] * W * 4
+                if k > 1:
+                    mat = mat.reshape(-1, k, W)
+                    anded = mat[:, 0]
+                    for i in range(1, k):
+                        anded = anded & mat[:, i]
+                    mat = anded
+                u_pad = np.zeros((_pad_unique(mat.shape[0]), W),
+                                 dtype=np.uint32)
+                u_pad[: mat.shape[0]] = mat
+                indir = np.zeros((Q, nbs[s], ct), dtype=np.int32)
+                indir[live] = np.asarray(inv).reshape(-1).astype(np.int32)
+                acc[s], bmax = ops.bitslice_chunk_score_dedup(
+                    jnp.asarray(u_pad), jnp.asarray(indir), mask, acc[s],
+                    word_block=word_block)
+            stats.kernel_dispatches += 1
+            block_max[s] = np.asarray(bmax).astype(np.int64)
+
+        if c == n_chunks - 1:
+            break
+        if kmax > 0:
+            for s in visited:
+                tk_lower[s] = np.asarray(ops.chunk_topk_lower(acc[s], kmax))
+            have = [t for t in tk_lower if t is not None]
+            if have:
+                merged = -np.sort(-np.concatenate(have, axis=1), axis=1)
+                for q in np.nonzero(is_topk)[0]:
+                    kq = int(topk[q])
+                    if merged.shape[1] >= kq:
+                        required[q] = max(required[q], int(merged[q, kq - 1]))
+        executed = np.minimum(n_valid, (c + 1) * ct).astype(np.int64)
+        remaining = n_valid.astype(np.int64) - executed
+        any_alive = False
+        for s in range(n_sh):
+            keep = (block_max[s] + remaining[:, None]) >= required[:, None]
+            newly = alive[s] & ~keep
+            stats.blocks_pruned += int(newly.sum())
+            alive[s] &= keep
+            any_alive = any_alive or bool(alive[s].any())
+        if not any_alive:
+            break
+
+    parts = []
+    for s in range(n_sh):
+        if acc[s] is None:
+            parts.append(np.zeros((Q, nbs[s] * W * 32), dtype=np.int32))
+        else:
+            parts.append(np.asarray(ops.chunk_acc_scores(acc[s], W)))
+    return np.concatenate(parts, axis=1)
+
+
 def gather_rows(arena: jnp.ndarray, rows: jnp.ndarray, valid: jnp.ndarray
                 ) -> jnp.ndarray:
     """Gather + AND + mask: (arena [R, Wb], rows int32 [L, k, nb],
@@ -582,10 +863,11 @@ class QueryEngine:
     def __init__(self, index: BitSlicedIndex, method: str = "vertical",
                  term_pad: int = 64,
                  tile_cache: DeviceTileCache | None = None,
-                 compressed: bool = False):
+                 compressed: bool = False, prune_chunk: int = 32):
         self.index = index
         self.method = method
         self.term_pad = term_pad
+        self.prune_chunk = prune_chunk
         self._score = make_score_fn(index.params.n_hashes, method)
         self._score_batch = make_batch_score_fn(index.params.n_hashes, method)
         self._paged = index.storage.n_shards > 1
@@ -689,3 +971,45 @@ class QueryEngine:
             return SearchResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
         scores = self.score_terms(terms)
         return select_top_k(scores, terms.shape[0], k)
+
+    # -- pruned search (branch-and-bound over the coverage cutoff) -----------
+    def _pruned_doc_scores(self, term_sets: list[np.ndarray],
+                           required: np.ndarray, topk: np.ndarray,
+                           stats: PruneStats | None) -> np.ndarray:
+        buf, ells = pad_term_batch(term_sets, self.term_pad)
+        slots = run_paged_pruned(
+            self.tiles, self._shard_plans, buf, ells, required, topk,
+            n_hashes=self.index.params.n_hashes,
+            chunk_terms=self.prune_chunk, stats=stats)
+        return slots[:, self._host_slot]
+
+    def search_pruned(self, pattern, threshold: float = 0.8,
+                      stats: PruneStats | None = None) -> SearchResult:
+        """``search`` through the pruned executor — bit-identical results,
+        arena I/O and kernel work scaled down by the threshold's kill rate
+        (``stats`` receives the accounting)."""
+        return self.search_batch_pruned([pattern], threshold, stats=stats)[0]
+
+    def search_batch_pruned(self, patterns: list, threshold: float = 0.8,
+                            stats: PruneStats | None = None
+                            ) -> list[SearchResult]:
+        """Batched ``search_batch`` twin of ``search_pruned``."""
+        term_sets = [compile_pattern(p, self.index.params) for p in patterns]
+        required = np.array([coverage_cutoff(threshold, t.shape[0])
+                             for t in term_sets], dtype=np.int64)
+        topk = np.zeros(len(term_sets), dtype=np.int32)
+        scores = self._pruned_doc_scores(term_sets, required, topk, stats)
+        return [select_hits(scores[i], int(t.shape[0]), threshold)
+                for i, t in enumerate(term_sets)]
+
+    def top_k_pruned(self, pattern, k: int = 10,
+                     stats: PruneStats | None = None) -> SearchResult:
+        """``top_k`` through the pruned executor: the cutoff tightens to
+        the merged k-th largest running count as chunks accumulate, so
+        blocks provably outside the final top-k stop being scored."""
+        terms = compile_pattern(pattern, self.index.params)
+        if terms.shape[0] == 0:
+            return SearchResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
+        scores = self._pruned_doc_scores(
+            [terms], np.zeros(1, np.int64), np.array([k], np.int32), stats)
+        return select_top_k(scores[0], terms.shape[0], k)

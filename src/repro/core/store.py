@@ -59,6 +59,28 @@ def _hash_array(a: np.ndarray) -> str:
                            digest_size=16).hexdigest()
 
 
+# "pops-" prefix, not a "shard-" suffix: data shards must stay exactly
+# the ``shard-*.npy`` glob that merge tooling and resume tests rely on
+def _pops_name(s: int) -> str:
+    return f"pops-{s:06d}.npy"
+
+
+def row_popcounts(matrix: np.ndarray, *, rows_per_slab: int = 1 << 16
+                  ) -> np.ndarray:
+    """Per-slice popcount stats: uint32 [rows] with the number of set doc
+    bits in each arena row of a decoded shard tile. Recorded at build time
+    as a ``pops-*.npy`` sidecar so the pruned executor can order a query's
+    terms rarest-first (low-popcount rows keep non-matching blocks'
+    running counts low, which is what makes the branch-and-bound kill
+    blocks early) without ever reading the arena itself."""
+    out = np.empty(matrix.shape[0], dtype=np.uint32)
+    for r0 in range(0, matrix.shape[0], rows_per_slab):
+        slab = np.ascontiguousarray(matrix[r0:r0 + rows_per_slab])
+        bits = np.unpackbits(slab.view(np.uint8), axis=1)
+        out[r0:r0 + slab.shape[0]] = bits.sum(axis=1, dtype=np.int64)
+    return out
+
+
 def shard_row_bounds(layout: ArenaLayout, blocks_per_shard: int = 1
                      ) -> np.ndarray:
     """Shard boundaries (int64 [n_shards+1]) grouping ``blocks_per_shard``
@@ -95,6 +117,17 @@ def _shard_files(s: int, codec: str) -> dict[str, str]:
     stem = _shard_stem(s)
     return {c: stem + _codec.COMPONENT_SUFFIX[c]
             for c in _CODEC_COMPONENTS[codec]}
+
+
+def _pops_from_entry(path: Path, entry: dict) -> Path | None:
+    """Popcount-sidecar path for one manifest shard row, or None for
+    stores written before the stats field existed (readers then fall back
+    to natural term order — the field is optional both ways)."""
+    name = entry.get("pops")
+    if not name:
+        return None
+    p = path / name
+    return p if p.exists() else None
 
 
 def _source_from_entry(path: Path, entry: dict, doc_words: int):
@@ -209,6 +242,17 @@ class ShardStoreWriter:
                 entry["dict_rows"] = int(arrays["dict"].shape[0])
             elif codec == _codec.CODEC_ROWDICT_RLE:
                 entry["dict_rows"] = int(arrays["rle"][0])
+            pops_path = self.path / _pops_name(s)
+            if pops_path.exists():
+                try:
+                    pops = np.load(pops_path, mmap_mode="r")
+                    if pops.shape == (rows,):
+                        entry["pops"] = _pops_name(s)
+                        entry["mean_pop"] = round(
+                            float(np.asarray(pops).mean()) if rows else 0.0,
+                            4)
+                except (ValueError, OSError):
+                    pass
             return entry
         return None
 
@@ -218,8 +262,10 @@ class ShardStoreWriter:
 
     def _clean_shard_files(self, s: int) -> None:
         stem = _shard_stem(s)
-        for suffix in _codec.COMPONENT_SUFFIX.values():
-            f = self.path / (stem + suffix)
+        for name in [stem + suffix
+                     for suffix in _codec.COMPONENT_SUFFIX.values()] \
+                + [_pops_name(s)]:
+            f = self.path / name
             if f.exists():
                 f.unlink()
 
@@ -233,10 +279,18 @@ class ShardStoreWriter:
         files = _shard_files(s, tile.codec)
         for comp, name in files.items():
             np.save(self.path / name, tile.arrays[comp])
+        # per-slice popcount sidecar: an OPTIONAL manifest field (old
+        # stores simply lack it and readers fall back to natural term
+        # order), so the format stays backward- and forward-compatible
+        pops = row_popcounts(matrix)
+        np.save(self.path / _pops_name(s), pops)
         self._hashes[s] = _hash_array(matrix)   # hash the DECODED tile
         entry = {"codec": tile.codec, "files": files,
                  "comp_bytes": tile.comp_nbytes,
-                 "ratio": round(tile.ratio, 4)}
+                 "ratio": round(tile.ratio, 4),
+                 "pops": _pops_name(s),
+                 "mean_pop": round(float(pops.mean()) if pops.size else 0.0,
+                                   4)}
         d = tile.dict_form()
         if d is not None:
             entry["dict_rows"] = int(d[0].shape[0])
@@ -336,7 +390,9 @@ def open_store(path: str | Path, *, verify: bool = False
                         + [shards[-1]["rows"][1]], dtype=np.int64)
     sources = [_source_from_entry(path, s, layout.doc_words)
                for s in shards]
-    storage = MappedArena(sources, starts, doc_words=layout.doc_words)
+    storage = MappedArena(sources, starts, doc_words=layout.doc_words,
+                          pop_sources=[_pops_from_entry(path, s)
+                                       for s in shards])
     if verify:
         _verify_shards(storage, shards)
     return layout, storage, params
@@ -387,7 +443,8 @@ def open_substore(path: str | Path, shard_ids, *, verify: bool = False
     storage = MappedArena(
         [_source_from_entry(path, shards[g], layout.doc_words)
          for g in ids],
-        local_starts, doc_words=layout.doc_words)
+        local_starts, doc_words=layout.doc_words,
+        pop_sources=[_pops_from_entry(path, shards[g]) for g in ids])
     if verify:
         _verify_shards(storage, [shards[g] for g in ids])
     return SubStore(layout=layout, storage=storage, params=params,
@@ -519,6 +576,18 @@ def merge_stores(a: str | Path, b: str | Path, out: str | Path) -> None:
                 entry["dict_rows"] = int(s["dict_rows"])
             if codec == _codec.CODEC_RAW:
                 entry["file"] = new_files["data"]
+            if s.get("pops") and (src_dir / s["pops"]).exists():
+                target = out / _pops_name(i)
+                if target.exists():
+                    target.unlink()
+                try:
+                    import os
+                    os.link(src_dir / s["pops"], target)
+                except OSError:
+                    shutil.copyfile(src_dir / s["pops"], target)
+                entry["pops"] = _pops_name(i)
+                if "mean_pop" in s:
+                    entry["mean_pop"] = float(s["mean_pop"])
             shards.append(entry)
         row_base += int(man["shards"][-1]["rows"][1])
         block_base += int(man["shards"][-1]["blocks"][1])

@@ -55,11 +55,22 @@ DEFAULT_TERM_BLOCKS = (8, 16)
 # planner only when its measured cost — decode indirection included —
 # beats the raw fused kernel, i.e. when the bandwidth saved on dict rows
 # outweighs the extra scalar gather.
+#
+# "lookup_p" (the pruned chunked executor) is tunable via ``entry`` but
+# deliberately NOT listed here: it is chosen by prune-rate break-even
+# against the argmin of these methods, never by cost argmin itself, and
+# live profiler observations of it would poison the cost table.
 TUNABLE_METHODS = ("lookup", "lookup_c", "vertical", "unpack")
 
 # Key prefix for live observed-cost entries (see TunedEntry.observed).
 # tuning_key() output always starts with "r<rows>", so no collision.
 LIVE_PREFIX = "live."
+
+# Chunk size used when measuring the pruned (chunked) path's break-even.
+# The planner may serve a different chunk size; the break-even is a rate
+# comparison and only weakly chunk-size dependent, so one fixture size
+# keeps the tuning cost bounded.
+PRUNE_TUNE_CHUNK = 32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -410,6 +421,38 @@ class KernelTuner:
         fn = jax.jit(jax.vmap(one))
         return _timeit(lambda: fn(idx).block_until_ready(), self.repeats)
 
+    def _measure_chunk(self, bucket: int, batch: int, word_block: int,
+                       chunk: int) -> float:
+        """One pruned-executor chunk dispatch at the WORST case: no block
+        pruned yet, every (query, block, term) cell touching a distinct
+        row — the per-chunk cost ``run_paged_pruned`` pays before any
+        bound fires. The timed body includes the host row gather the
+        executor performs per chunk (rows stream out of the mmap, not a
+        staged tile) plus the accumulate kernel."""
+        arena = self._tune_arena()
+        host = np.asarray(arena)
+        R = int(host.shape[0])
+        nb = max(1, min(self.n_blocks, self.max_tune_blocks))
+        chunk = max(1, min(chunk, bucket))
+        rng = np.random.default_rng(self.seed + 7)
+        idx = rng.integers(0, R, size=(batch, nb, chunk))
+        uniq, inv = np.unique(idx, return_inverse=True)
+        indir = jnp.asarray(np.asarray(inv).reshape(idx.shape)
+                            .astype(np.int32))
+        mask = jnp.asarray(np.ones(idx.shape, dtype=np.int32))
+        u_pad = _pad_unique(uniq.size)
+        acc = ops.chunk_acc_init(batch, nb, self.doc_words, word_block)
+
+        def one() -> None:
+            rows = np.zeros((u_pad, self.doc_words), dtype=np.uint32)
+            rows[: uniq.size] = host[uniq]
+            out, bmax = ops.bitslice_chunk_score_dedup(
+                jnp.asarray(rows), indir, mask, acc,
+                word_block=word_block)
+            bmax.block_until_ready()
+
+        return _timeit(one, self.repeats)
+
     def _dedup_threshold(self, bucket: int, batch: int, word_block: int,
                          fused_s: float, compressed: bool = False
                          ) -> float | None:
@@ -449,6 +492,40 @@ class KernelTuner:
     def _tune(self, method: str, bucket: int, batch: int) -> TunedEntry:
         self.tunes += 1
         best = None
+        if method == "lookup_p":
+            # Pruned (chunked) executor break-even. Field reuse on the
+            # returned entry: ``term_block`` carries the tuned CHUNK SIZE
+            # and ``dedup_threshold`` the minimum predicted PRUNE RATE at
+            # which chunked execution beats the best unpruned dispatch
+            # (0.0 = pruned wins even with nothing pruned, 2.0 = measured
+            # and pruned never wins). cost_us is the worst-case (nothing
+            # pruned) full-query chunked cost.
+            chunk = max(1, min(PRUNE_TUNE_CHUNK, bucket))
+            n_chunks = -(-bucket // chunk)
+            for wb in self.word_blocks:
+                t = self._measure_chunk(bucket, batch, wb, chunk)
+                if best is None or t < best[0]:
+                    best = (t, wb)
+            c0, wb = best
+            full = c0 * n_chunks
+            if self.n_hashes == 1:
+                fused = min(self._measure_fused(bucket, batch, wb, go)
+                            for go in self.grid_orders)
+            else:
+                fused = self._measure_add("vertical", bucket, batch, wb,
+                                          _k.DEFAULT_TERM_BLOCK)
+            # Expected pruned cost at prune rate p is ~ full - p*(full -
+            # c0): the first chunk always runs in full, later chunks skip
+            # pruned blocks. Solve full - p*(full - c0) <= fused.
+            if full <= fused:
+                thr = 0.0
+            elif fused <= c0 or full <= c0:
+                thr = 2.0
+            else:
+                thr = float(min(1.0, max(
+                    0.0, (full - fused) / (full - c0))))
+            return TunedEntry("lookup_p", wb, chunk, "wq", full * 1e6,
+                              dedup_threshold=thr)
         if method in ("lookup", "lookup_c"):
             compressed = method == "lookup_c"
             measure = (self._measure_fused_c if compressed

@@ -628,6 +628,211 @@ def lookup_score_blocks_compressed(
     )(rows_idx, mask, refs, dict_rows)
 
 
+# --------------------------------------------------------------------------
+# 6. chunked accumulator kernels: branch-and-bound pruned scoring
+# --------------------------------------------------------------------------
+#
+# Threshold/top-k queries do not need every term scored before blocks can
+# be discarded: after a PREFIX of the terms, any block whose best-possible
+# final score (running count + terms remaining) cannot reach the required
+# cutoff is dead. The chunked variants below score one term CHUNK and fold
+# the partial counts into a persistent per-(query, block) running-count
+# buffer ``acc`` — the executor (repro.core.query.run_paged_pruned) calls
+# them once per surviving (chunk, shard) visit and derives the per-block
+# survivor mask host-side from the block max of the returned buffer. All
+# three fused forms exist: raw (tile-resident), dedup (host-gathered
+# unique chunk rows — the out-of-core I/O saver), and _comp (fused decode
+# off the rowdict pair). Bit-identity with the unchunked kernels is by
+# construction: the sum over chunks telescopes into the full-term sum.
+
+
+def _chunk_dedup_kernel(indir_ref, mask_ref, uniq_ref, acc_ref, out_ref, *,
+                        n_planes: int, n_terms: int):
+    iq = pl.program_id(1)
+    ib = pl.program_id(2)
+    wb = uniq_ref.shape[1]
+
+    def add_term(il, planes):
+        u = indir_ref[iq, ib, il]
+        row = (uniq_ref[pl.ds(u, 1), :][0]
+               * mask_ref[iq, ib, il].astype(jnp.uint32))
+        carry = row
+        nxt = []
+        for j in range(n_planes):
+            new_carry = planes[j] & carry
+            nxt.append(planes[j] ^ carry)
+            carry = new_carry
+        return tuple(nxt)
+
+    planes = tuple(jnp.zeros((wb,), jnp.uint32) for _ in range(n_planes))
+    planes = jax.lax.fori_loop(0, n_terms, add_term, planes)
+
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+    acc = acc_ref[0, 0]
+    for j in range(n_planes):
+        bits = ((planes[j][:, None] >> shifts) & jnp.uint32(1))
+        acc += bits.astype(jnp.int32) << j
+    out_ref[0, 0] = acc
+
+
+def chunk_dedup_score(
+    uniq: jnp.ndarray,
+    indir: jnp.ndarray,
+    mask: jnp.ndarray,
+    acc: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``dedup_score`` over one term chunk, accumulated into ``acc``.
+
+    uniq uint32 [U, W] (the chunk's unique rows, host-gathered so only
+    the touched rows were ever read); indir/mask int32 [Q, nb, Lc];
+    acc int32 [Q, nb, W, 32] (running counts) -> int32 [Q, nb, W, 32]
+    with out = acc + chunk partial counts."""
+    U, W = uniq.shape
+    Q, nb, L = indir.shape
+    n_planes = _num_planes(L)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W // word_block, Q, nb),
+        in_specs=[
+            pl.BlockSpec((U, word_block),
+                         lambda iw, iq, ib, ind, msk: (0, iw)),
+            pl.BlockSpec((1, 1, word_block, 32),
+                         lambda iw, iq, ib, ind, msk: (iq, ib, iw, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, word_block, 32),
+                               lambda iw, iq, ib, ind, msk: (iq, ib, iw, 0)),
+    )
+    kernel = functools.partial(_chunk_dedup_kernel, n_planes=n_planes,
+                               n_terms=L)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, nb, W, 32), jnp.int32),
+        interpret=interpret,
+    )(indir, mask, uniq, acc)
+
+
+def _chunk_multi_kernel(idx_ref, mask_ref, arena_ref, acc_ref, out_ref,
+                        planes_ref, *, n_planes: int):
+    il = pl.program_id(3)
+    n_l = pl.num_programs(3)
+
+    @pl.when(il == 0)
+    def _init():
+        planes_ref[...] = jnp.zeros_like(planes_ref)
+
+    iq = pl.program_id(1)
+    ib = pl.program_id(2)
+    row = arena_ref[0, :] * mask_ref[iq, ib, il].astype(jnp.uint32)
+    carry = row
+    for j in range(n_planes):
+        new_carry = planes_ref[j, :] & carry
+        planes_ref[j, :] = planes_ref[j, :] ^ carry
+        carry = new_carry
+
+    @pl.when(il == n_l - 1)
+    def _expand():
+        shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+        acc = acc_ref[0, 0]
+        for j in range(n_planes):
+            bits = ((planes_ref[j, :][:, None] >> shifts) & jnp.uint32(1))
+            acc += bits.astype(jnp.int32) << j
+        out_ref[0, 0] = acc
+
+
+def chunk_lookup_score_multi(
+    arena: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    acc: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``lookup_score_multi`` over one term chunk, accumulated into ``acc``.
+
+    Used by the pruned executor when the shard's full tile is already
+    resident (promoted / cached) — the chunk's rows stream straight out of
+    the staged tile, no host gather. rows_idx/mask int32 [Q, nb, Lc];
+    acc int32 [Q, nb, W, 32] -> acc + chunk counts."""
+    R, W = arena.shape
+    Q, nb, L = rows_idx.shape
+    n_planes = _num_planes(L)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W // word_block, Q, nb, L),
+        in_specs=[
+            pl.BlockSpec((1, word_block),
+                         lambda iw, iq, ib, il, idx, msk:
+                         (idx[iq, ib, il], iw)),
+            pl.BlockSpec((1, 1, word_block, 32),
+                         lambda iw, iq, ib, il, idx, msk: (iq, ib, iw, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, word_block, 32),
+                               lambda iw, iq, ib, il, idx, msk:
+                               (iq, ib, iw, 0)),
+        scratch_shapes=[pltpu.VMEM((n_planes, word_block), jnp.uint32)],
+    )
+    kernel = functools.partial(_chunk_multi_kernel, n_planes=n_planes)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, nb, W, 32), jnp.int32),
+        interpret=interpret,
+    )(rows_idx, mask, arena, acc)
+
+
+def _chunk_multi_comp_kernel(idx_ref, mask_ref, refs_ref, arena_ref, acc_ref,
+                             out_ref, planes_ref, *, n_planes: int):
+    del refs_ref                 # consumed by the BlockSpec index map
+    _chunk_multi_kernel(idx_ref, mask_ref, arena_ref, acc_ref, out_ref,
+                        planes_ref, n_planes=n_planes)
+
+
+def chunk_lookup_score_multi_compressed(
+    dict_rows: jnp.ndarray,
+    refs: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    acc: jnp.ndarray,
+    *,
+    word_block: int = DEFAULT_WORD_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused-decode twin of ``chunk_lookup_score_multi``: the chunk's rows
+    resolve ``dict[refs[row]]`` inside the gather, so a dict-coded shard
+    scores chunks straight off its compressed (dict, refs) HBM pair."""
+    D, W = dict_rows.shape
+    Q, nb, L = rows_idx.shape
+    n_planes = _num_planes(L)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(W // word_block, Q, nb, L),
+        in_specs=[
+            pl.BlockSpec((1, word_block),
+                         lambda iw, iq, ib, il, idx, msk, refs:
+                         (refs[idx[iq, ib, il]], iw)),
+            pl.BlockSpec((1, 1, word_block, 32),
+                         lambda iw, iq, ib, il, idx, msk, refs:
+                         (iq, ib, iw, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, word_block, 32),
+                               lambda iw, iq, ib, il, idx, msk, refs:
+                               (iq, ib, iw, 0)),
+        scratch_shapes=[pltpu.VMEM((n_planes, word_block), jnp.uint32)],
+    )
+    kernel = functools.partial(_chunk_multi_comp_kernel, n_planes=n_planes)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, nb, W, 32), jnp.int32),
+        interpret=interpret,
+    )(rows_idx, mask, refs, dict_rows, acc)
+
+
 def lookup_score(
     arena: jnp.ndarray,
     rows_idx: jnp.ndarray,

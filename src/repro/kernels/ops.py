@@ -274,6 +274,119 @@ def bitslice_lookup_score_dedup_comp(
     return out[:, :, :W].reshape(Q, -1)
 
 
+# --------------------------------------------------------------------------
+# chunked pruned-scoring wrappers (branch-and-bound executor support)
+# --------------------------------------------------------------------------
+#
+# The pruned executor (repro.core.query.run_paged_pruned) scores terms in
+# chunks and keeps a persistent per-(query, block) running-count buffer per
+# shard. Each wrapper returns (new_acc, block_max) where block_max int32
+# [Q, nb] is the per-block maximum running count — the executor's survivor
+# bound ``block_max + terms_remaining < required`` consumes only that tiny
+# array host-side, the acc itself stays on device between chunks.
+
+
+def chunk_acc_init(q: int, nb: int, w: int,
+                   word_block: int | None = None) -> jnp.ndarray:
+    """Fresh running-count buffer int32 [Q, nb, Wp, 32] with the word axis
+    pre-padded to the kernel tile multiple (stable across chunk calls)."""
+    wb = _word_block(w, word_block)
+    wp = w + ((-w) % wb)
+    return jnp.zeros((q, nb, wp, 32), jnp.int32)
+
+
+def chunk_acc_scores(acc: jnp.ndarray, w: int) -> jnp.ndarray:
+    """Finished running counts -> int32 [Q, nb * W * 32] in the engine's
+    (block, word, bit) slot order."""
+    q = acc.shape[0]
+    return acc[:, :, :w].reshape(q, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block"))
+def bitslice_chunk_score_dedup(
+    uniq: jnp.ndarray,
+    indir: jnp.ndarray,
+    mask: jnp.ndarray,
+    acc: jnp.ndarray,
+    interpret: bool | None = None,
+    word_block: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One term chunk against a host-gathered unique-row matrix.
+
+    uniq uint32 [U, W] (only the chunk's touched rows were read from the
+    store — for k>1 the host pre-ANDs the row sets); indir/mask int32
+    [Q, nb, Lc]; acc int32 [Q, nb, Wp, 32]. Returns (acc + chunk counts,
+    per-block max int32 [Q, nb])."""
+    if interpret is None:
+        interpret = _use_interpret()
+    U, W = uniq.shape
+    wb = _word_block(W, word_block)
+    uniq_p = _pad_axis(uniq, 1, wb)
+    out = _k.chunk_dedup_score(uniq_p, indir.astype(jnp.int32),
+                               mask.astype(jnp.int32), acc,
+                               word_block=wb, interpret=interpret)
+    return out, jnp.max(out, axis=(2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block"))
+def bitslice_chunk_score_multi(
+    arena: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    acc: jnp.ndarray,
+    interpret: bool | None = None,
+    word_block: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One term chunk fused-gathered from a resident shard tile (the
+    promoted path: tile already staged, chunk rows stream out of HBM).
+    Returns (acc + chunk counts, per-block max int32 [Q, nb])."""
+    if interpret is None:
+        interpret = _use_interpret()
+    R, W = arena.shape
+    wb = _word_block(W, word_block)
+    arena_p = _pad_axis(arena, 1, wb)
+    out = _k.chunk_lookup_score_multi(
+        arena_p, rows_idx.astype(jnp.int32), mask.astype(jnp.int32), acc,
+        word_block=wb, interpret=interpret)
+    return out, jnp.max(out, axis=(2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "word_block"))
+def bitslice_chunk_score_multi_comp(
+    dict_rows: jnp.ndarray,
+    refs: jnp.ndarray,
+    rows_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    acc: jnp.ndarray,
+    interpret: bool | None = None,
+    word_block: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One term chunk fused-DECODED from a resident (dict, refs) pair —
+    the compressed promoted path. Returns (acc', per-block max)."""
+    if interpret is None:
+        interpret = _use_interpret()
+    D, W = dict_rows.shape
+    wb = _word_block(W, word_block)
+    dict_p = _pad_axis(dict_rows, 1, wb)
+    out = _k.chunk_lookup_score_multi_compressed(
+        dict_p, refs.astype(jnp.int32), rows_idx.astype(jnp.int32),
+        mask.astype(jnp.int32), acc, word_block=wb, interpret=interpret)
+    return out, jnp.max(out, axis=(2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def chunk_topk_lower(acc: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-query k-th-largest running counts of one shard's buffer: int32
+    [Q, k] (descending). Running counts are LOWER bounds on final scores,
+    so merging these across shards gives a sound, ever-tightening top-k
+    pruning cutoff."""
+    q = acc.shape[0]
+    flat = acc.reshape(q, -1)
+    kk = min(int(k), flat.shape[1])
+    vals, _ = jax.lax.top_k(flat, kk)
+    return vals
+
+
 def and_rows(rows: jnp.ndarray) -> jnp.ndarray:
     """AND over the k hash rows: uint32 [L, k, W] -> [L, W] (jnp; XLA fuses
     this into the surrounding gather — measured no win from a kernel)."""

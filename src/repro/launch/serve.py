@@ -148,7 +148,9 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
                             fail_hosts=(), latency_models=None,
                             tracing: bool = True,
                             trace_slow_ms: float = 0.0,
-                            trace_log=None) -> Frontend:
+                            trace_log=None, pruned: bool = False,
+                            prune_chunk: int = 32,
+                            prune_min_rate=None) -> Frontend:
     """Sharded data plane over in-process fake hosts: HRW-place the v2
     manifest rows, open each host's sub-store, wire the hedging frontend
     (per-shard dispatches overlap through ``scatter_threads`` in
@@ -162,13 +164,16 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
     held = placement.replica_assignment()
     workers = {n: ShardWorker(n, store_dir, held[n],
                               tile_cache_bytes=tile_cache_bytes,
-                              word_block=word_block)
+                              word_block=word_block, pruned=pruned,
+                              prune_chunk=prune_chunk,
+                              prune_min_rate=prune_min_rate)
                for n in nodes if held[n]}
     frontend = Frontend(workers, placement, FrontendConfig(
         max_batch=max_batch, max_wait_s=max_wait_s,
         hedge_after_s=hedge_after_s, hedge_auto=hedge_auto,
         scatter_threads=scatter_threads, tracing=tracing,
-        trace_slow_ms=trace_slow_ms, trace_log=trace_log),
+        trace_slow_ms=trace_slow_ms, trace_log=trace_log,
+        pruned=pruned, prune_chunk=prune_chunk),
         latency_models=latency_models)
     for n in fail_hosts:
         frontend.fail_worker(n)
@@ -237,6 +242,22 @@ def main() -> None:
                          "multi-query kernel; negative disables dedup "
                          "(a tuner-measured break-even overrides this). "
                          "Single-host mode only")
+    ap.add_argument("--prune", action="store_true",
+                    help="threshold-driven pruned scoring: execute terms "
+                         "rarest-first in chunks and early-exit blocks "
+                         "whose bound cannot reach the coverage cutoff, "
+                         "skipping their tile I/O, staging and kernel "
+                         "work. The planner still gates per batch on the "
+                         "tuned/heuristic break-even; results stay "
+                         "bit-identical. STATS show blocks pruned / tiles "
+                         "skipped / bytes saved")
+    ap.add_argument("--prune-chunk", type=int, default=32,
+                    help="terms per chunk for --prune (smaller = earlier "
+                         "exit, more dispatches)")
+    ap.add_argument("--prune-min-rate", type=float, default=None,
+                    help="minimum predicted block-prune rate before a "
+                         "batch dispatches pruned (default 0.5; a "
+                         "tuner-measured break-even overrides this)")
     ap.add_argument("--scatter-threads", type=int, default=4,
                     help="multi-host concurrent scatter pool size "
                          "(<= 1 = sequential per-shard dispatch)")
@@ -307,7 +328,9 @@ def main() -> None:
             tile_cache_bytes=tile_bytes, word_block=args.word_block,
             scatter_threads=args.scatter_threads,
             fail_hosts=args.fail_host, tracing=not args.no_trace,
-            trace_slow_ms=args.trace_slow_ms, trace_log=args.trace_log)
+            trace_slow_ms=args.trace_slow_ms, trace_log=args.trace_log,
+            pruned=args.prune, prune_chunk=args.prune_chunk,
+            prune_min_rate=args.prune_min_rate)
         down = sorted(set(server.placement.nodes)
                       - set(server.placement.live_nodes))
         print(f"multi-host frontend: {args.hosts} hosts, "
@@ -322,6 +345,8 @@ def main() -> None:
             autotune=args.autotune,
             tuning_cache=tuning_cache if args.autotune or args.tuning_cache
             else None,
+            pruned=args.prune, prune_chunk=args.prune_chunk,
+            prune_min_rate=args.prune_min_rate,
             tracing=not args.no_trace, trace_slow_ms=args.trace_slow_ms,
             trace_log=args.trace_log))
         if args.autotune:

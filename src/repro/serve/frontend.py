@@ -73,6 +73,13 @@ class FrontendConfig:
     # sequential). Only active in wall-clock mode — simulated-latency runs
     # share one deterministic event clock and stay sequential regardless.
     scatter_threads: int = 4
+    # Threshold-driven pruned scoring on every worker: shard dispatches
+    # whose coverage threshold predicts enough block pruning run through
+    # the chunked early-exit executor (see ShardWorker._score_pruned) —
+    # gathered results stay bit-identical either way. Setting this
+    # overrides the flags the workers were constructed with.
+    pruned: bool = False
+    prune_chunk: int = 32
     # -- observability (mirrors ServerConfig; see repro.obs) --
     tracing: bool = True
     trace_slow_ms: float = 0.0
@@ -132,6 +139,9 @@ class Frontend(ServingBackend):
         for w in workers.values():
             w.profiler = self.profiler
             w.tiles.observer = self._tile_observer(w)
+            if config.pruned:
+                w.pruned = True
+                w.prune_chunk = int(config.prune_chunk)
         self._responses: dict[int, QueryResponse] = {}
         self._next_id = 0
         self._dispatch_seq = 0
@@ -351,6 +361,7 @@ class Frontend(ServingBackend):
         ex = self.executor
         fired0, won0, fo0 = ex.hedges_fired, ex.hedges_won, ex.failovers
         tiles0 = self._tile_counters()
+        prune0 = self._prune_counters()
         traced = any(r.trace is not None for r in batch.requests)
         method = ""
         t_sc0 = self.clock()
@@ -400,6 +411,16 @@ class Frontend(ServingBackend):
             hits=th - tiles0[0], faults=tf - tiles0[1],
             resident=sum(len(w.tiles) for w in self.workers.values()),
             prefetched=tp - tiles0[2], prefetch_hits=tph - tiles0[3])
+        # pruned-dispatch deltas across the fleet (workers accumulate
+        # PruneStats per dispatch; this batch's share is the difference)
+        pr = self._prune_counters()
+        if pr[0] != prune0[0] or pr[2] != prune0[2]:
+            self.metrics.record_prune(
+                blocks_total=pr[0] - prune0[0],
+                blocks_pruned=pr[1] - prune0[1],
+                tiles_skipped=pr[2] - prune0[2],
+                bytes_saved=max(0, (pr[4] - prune0[4])
+                                - (pr[3] - prune0[3])))
 
         # Batch-level shard_dispatch marks, replayed into every member
         # request's trace: one span per shard naming the serving node and
@@ -469,6 +490,16 @@ class Frontend(ServingBackend):
                 sum(w.tiles.faults for w in ws),
                 sum(w.tiles.prefetched for w in ws),
                 sum(w.tiles.prefetch_hits for w in ws))
+
+    def _prune_counters(self) -> tuple[int, int, int, int, int]:
+        """(blocks_total, blocks_pruned, visits_skipped, bytes_read,
+        baseline_bytes) summed over the fleet's cumulative PruneStats."""
+        ws = self.workers.values()
+        return (sum(w.prune_stats.blocks_total for w in ws),
+                sum(w.prune_stats.blocks_pruned for w in ws),
+                sum(w.prune_stats.shard_visits_skipped for w in ws),
+                sum(w.prune_stats.bytes_read for w in ws),
+                sum(w.prune_baseline_bytes for w in ws))
 
     def _gather(self, parts: list[tuple[np.ndarray, np.ndarray]],
                 req: QueryRequest, top_k: int, cutoff: int) -> SearchResult:

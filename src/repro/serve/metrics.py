@@ -79,6 +79,11 @@ class MetricsSnapshot:
     arena_raw_bytes: int = 0      # bytes staged to device in raw form
     arena_comp_bytes: int = 0     # bytes staged in compressed (dict) form
     decodes: int = 0              # host-side shard decodes observed
+    # pruned (branch-and-bound) scoring (0 when never dispatched)
+    pruned_blocks: int = 0        # (query, block) cells killed by the bound
+    prune_rate: float = 0.0       # killed / considered
+    tiles_skipped: int = 0        # shard-tile visits never issued
+    pruned_bytes_saved: int = 0   # arena bytes NOT read thanks to pruning
 
     def report(self) -> str:
         meth = " ".join(f"{m}={n}" for m, n in sorted(self.methods.items()))
@@ -113,6 +118,11 @@ class MetricsSnapshot:
             s += (f" arena[raw={self.arena_raw_bytes}B "
                   f"comp={self.arena_comp_bytes}B "
                   f"decodes={self.decodes}]")
+        if self.pruned_blocks or self.tiles_skipped:
+            s += (f" prune[blocks={self.pruned_blocks} "
+                  f"rate={self.prune_rate:.2f} "
+                  f"tiles_skipped={self.tiles_skipped} "
+                  f"bytes_saved={self.pruned_bytes_saved}B]")
         return s
 
 
@@ -199,6 +209,20 @@ class ServingMetrics:
                          "host-side compressed shard decode time")
         self._decodes = r.counter("serve_decodes_total",
                                   "host-side compressed shard decodes")
+        # pruned (branch-and-bound) scoring: block kills, skipped tile
+        # visits, and the arena bytes those skips never read — the
+        # threshold's leverage, visible in STATS and Prometheus
+        self._prune_blocks = r.counter(
+            "serve_pruned_blocks_total", "pruned-scoring block outcomes",
+            labels=("outcome",))
+        self._pruned_blocks = self._prune_blocks.labels("pruned")
+        self._prune_considered = self._prune_blocks.labels("considered")
+        self._tiles_skipped = r.counter(
+            "serve_pruned_tiles_skipped_total",
+            "shard-tile visits skipped entirely by pruning")
+        self._prune_bytes_saved = r.counter(
+            "serve_pruned_bytes_saved_total",
+            "arena bytes not read thanks to pruning")
         # Optional back-reference set by the owning backend so snapshots
         # carry trace counts (finished / slow) without a separate poll.
         self.tracer = None
@@ -275,6 +299,20 @@ class ServingMetrics:
         """One host-side compressed shard decode (storage observer)."""
         self._decodes.inc()
         self._decode.observe(seconds)
+
+    def record_prune(self, *, blocks_total: int, blocks_pruned: int,
+                     tiles_skipped: int, bytes_saved: int) -> None:
+        """One pruned dispatch's accounting (a core.query.PruneStats
+        delta): cells considered/killed by the bound, shard-tile visits
+        never issued, and arena bytes never read."""
+        if blocks_total:
+            self._prune_considered.inc(blocks_total)
+        if blocks_pruned:
+            self._pruned_blocks.inc(blocks_pruned)
+        if tiles_skipped:
+            self._tiles_skipped.inc(tiles_skipped)
+        if bytes_saved > 0:
+            self._prune_bytes_saved.inc(bytes_saved)
 
     def record_worker(self, worker: str, latency_s: float) -> None:
         """One shard dispatch served by ``worker`` (hedged or not)."""
@@ -356,6 +394,22 @@ class ServingMetrics:
     @property
     def decodes(self) -> int:
         return self._decodes.value
+
+    @property
+    def pruned_blocks(self) -> int:
+        return self._pruned_blocks.value
+
+    @property
+    def prune_considered(self) -> int:
+        return self._prune_considered.value
+
+    @property
+    def tiles_skipped(self) -> int:
+        return self._tiles_skipped.value
+
+    @property
+    def pruned_bytes_saved(self) -> int:
+        return self._prune_bytes_saved.value
 
     @property
     def queue_depth(self) -> int:
@@ -450,6 +504,11 @@ class ServingMetrics:
             arena_raw_bytes=self.arena_raw_bytes,
             arena_comp_bytes=self.arena_comp_bytes,
             decodes=self.decodes,
+            pruned_blocks=self.pruned_blocks,
+            prune_rate=(self.pruned_blocks / self.prune_considered
+                        if self.prune_considered else 0.0),
+            tiles_skipped=self.tiles_skipped,
+            pruned_bytes_saved=self.pruned_bytes_saved,
             served=n_cacheable,
             rejected=self.rejected,
             dropped=self.dropped,

@@ -79,6 +79,31 @@ DEFAULT_DEDUP_MIN_RATE = 0.5
 # extra scalar gather per row would be pure overhead.
 COMPRESSED_MIN_RATIO = 1.25
 
+# Without a measured chunked-vs-fused break-even (the tuner's "lookup_p"
+# entry), pruned dispatch needs at least this predicted block-prune rate
+# before the chunked executor's extra per-chunk dispatches are presumed
+# worth the tile I/O and kernel work they skip.
+DEFAULT_PRUNE_MIN_RATE = 0.5
+
+
+def predict_prune_rate(threshold: float, density: float) -> float:
+    """Expected fraction of blocks the bound eliminates, from the query
+    coverage threshold and the index's mean slice density (fraction of
+    set bits — from the v2 manifest's per-slice popcount stats when
+    present, else the configured Bloom FPR).
+
+    Model: a non-matching doc's running count grows ~``density`` per
+    term, so after the rarest-first chunks a block with no real match
+    sits near ``ell * density`` while the bound demands
+    ``ell * threshold`` — the margin (threshold - density) relative to
+    the headroom (1 - density) is the fraction of term budget a random
+    block cannot recover, i.e. how early it prunes. 0 when the
+    threshold is below the noise floor (nothing can ever prune)."""
+    if threshold <= density:
+        return 0.0
+    return float(min(1.0, max(
+        0.0, 1.0 - (1.0 - threshold) / max(1e-6, 1.0 - density))))
+
 
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
@@ -101,6 +126,16 @@ class QueryPlan:
     # same plan keep the raw path. Chosen by measured lookup-vs-lookup_c
     # cost when the tuner has both, else by the dict-ratio heuristic.
     compressed: bool = False
+    # True = the batch runs through the chunked pruned executor
+    # (repro.core.query.run_paged_pruned) instead of a whole-query
+    # dispatch: terms execute rarest-first in ``chunk_terms``-sized
+    # chunks and blocks whose bound can no longer reach the coverage
+    # cutoff skip all further tile I/O, staging and kernel work. Taken
+    # only when ``predicted_prune`` clears the tuned (or heuristic)
+    # break-even rate — the cost model must predict a win.
+    pruned: bool = False
+    chunk_terms: int = 0
+    predicted_prune: float = 0.0
 
 
 def choose_method(n_hashes: int, bucket: int, batch_size: int,
@@ -157,12 +192,30 @@ class QueryPlanner:
                  tuner: Optional[KernelTuner] = None,
                  word_block: Optional[int] = None,
                  dedup_min_rate: Optional[float] = DEFAULT_DEDUP_MIN_RATE,
-                 compressed: bool = False):
+                 compressed: bool = False,
+                 pruned: bool = False, prune_chunk: int = 32,
+                 prune_min_rate: Optional[float] = None):
         self.index = index
         self.short_query_terms = short_query_terms
         self.tuner = tuner
         self.word_block = word_block
         self.dedup_min_rate = dedup_min_rate
+        self.pruned_enabled = bool(pruned)
+        self.prune_chunk = int(prune_chunk)
+        self.prune_min_rate = (DEFAULT_PRUNE_MIN_RATE
+                               if prune_min_rate is None
+                               else float(prune_min_rate))
+        # Mean slice density for the prune-rate prediction: measured from
+        # the store's per-slice popcount stats when the v2 manifest has
+        # them, else the configured Bloom FPR (the density every slice
+        # targets by construction).
+        w = index.storage.shape[1]
+        mean_fn = getattr(index.storage, "mean_popcount", None)
+        has_fn = getattr(index.storage, "has_popcounts", None)
+        if callable(has_fn) and has_fn() and callable(mean_fn) and w:
+            self.density = float(mean_fn()) / float(32 * w)
+        else:
+            self.density = float(index.params.fpr)
         self._k = index.params.n_hashes
         self._single_fns: dict[tuple, object] = {}
         self._batch_fns: dict[tuple, object] = {}
@@ -180,10 +233,15 @@ class QueryPlanner:
             self.dict_ratio is not None
 
     # -- planning ----------------------------------------------------------
-    def plan(self, bucket: int, batch_size: int) -> QueryPlan:
+    def plan(self, bucket: int, batch_size: int,
+             threshold: Optional[float] = None) -> QueryPlan:
         """Dispatch decision; records nothing. Consults the tuner's
         measured costs when present, falling back to shape heuristics on
-        misses (read-only tuners never measure in the serving path)."""
+        misses (read-only tuners never measure in the serving path).
+
+        ``threshold`` (the batch's weakest coverage threshold) enables
+        the pruned-dispatch decision: see ``lookup_pruned``."""
+        coverage = threshold
         entries = (self.tuner.costs(bucket, batch_size)
                    if self.tuner is not None else {})
         if not self.compressed_enabled:
@@ -222,11 +280,48 @@ class QueryPlanner:
                 # wins" sentinel): disable outright so the server never
                 # pays the per-batch host-side dedup planning
                 threshold = None
-        return QueryPlan(method, bucket, batch_size, fused=fused,
+        plan = QueryPlan(method, bucket, batch_size, fused=fused,
                          paged=self.n_shards > 1, n_shards=self.n_shards,
                          word_block=word_block, term_block=term_block,
                          grid_order=grid_order, dedup_threshold=threshold,
                          compressed=compressed)
+        return self.lookup_pruned(plan, coverage) or plan
+
+    def lookup_pruned(self, plan: QueryPlan,
+                      coverage: Optional[float]) -> Optional[QueryPlan]:
+        """Upgrade ``plan`` to pruned (chunked, early-exit) dispatch when
+        the cost model predicts a win, else None.
+
+        ``coverage`` is the batch's weakest coverage threshold (the bound
+        every block must clear; None = a top-k-only or unknown batch —
+        still pruneable, via the dynamic k-th-score bound, but with no
+        basis for a rate prediction we stay unpruned). The break-even
+        rate comes from the tuner's measured "lookup_p" entry when one
+        exists — its ``dedup_threshold`` field carries the minimum prune
+        rate at which the chunked executor beats the best whole-query
+        dispatch, with 2.0 meaning "measured, never wins" — else from
+        ``prune_min_rate``. The predicted rate comes from
+        ``predict_prune_rate`` over the index's measured slice density."""
+        if (not self.pruned_enabled or coverage is None
+                or plan.bucket <= self.prune_chunk):
+            return None
+        predicted = predict_prune_rate(float(coverage), self.density)
+        break_even = self.prune_min_rate
+        chunk = min(self.prune_chunk, plan.bucket)
+        word_block = plan.word_block
+        if self.tuner is not None:
+            e = self.tuner.entry("lookup_p", plan.bucket, plan.batch_size)
+            if e is not None:
+                if e.dedup_threshold is not None:
+                    break_even = e.dedup_threshold
+                chunk = min(e.term_block or chunk, plan.bucket)
+                if self.word_block is None:
+                    word_block = e.word_block
+        if break_even >= 1.0 or predicted < break_even:
+            return None
+        return dataclasses.replace(
+            plan, pruned=True, chunk_terms=chunk, word_block=word_block,
+            predicted_prune=predicted)
 
     # -- score-function cache ---------------------------------------------
     def batch_score_fn(self, plan: QueryPlan):

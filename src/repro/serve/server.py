@@ -30,9 +30,10 @@ from ..core import codec as _codec
 from ..core import hashing
 from ..core.arena import DeviceTileCache, common_tile_rows
 from ..core.index import BitSlicedIndex
-from ..core.query import (SearchResult, compile_pattern, plan_dedup_batch,
-                          run_paged, run_paged_compressed, run_paged_dedup,
-                          select_hits, select_top_k)
+from ..core.query import (PruneStats, SearchResult, compile_pattern,
+                          coverage_cutoff, plan_dedup_batch, run_paged,
+                          run_paged_compressed, run_paged_dedup,
+                          run_paged_pruned, select_hits, select_top_k)
 from ..kernels.autotune import KernelTuner, TuningCache
 from ..obs import EventLog, KernelProfiler, Tracer
 from ..obs.profile import gather_bytes
@@ -71,6 +72,17 @@ class ServerConfig:
     # per batch shape (measured lookup-vs-lookup_c cost, or the dict
     # ratio heuristic); raw shards and all-raw stores are unaffected.
     compressed: bool = False
+    # Threshold-driven pruned scoring: batches whose coverage threshold
+    # predicts enough block pruning run through the chunked early-exit
+    # executor (rarest-first term chunks, per-block bound, pruned blocks
+    # skip all further tile I/O/staging/kernel work). The planner still
+    # gates per batch on the tuned (or heuristic) break-even — results
+    # stay bit-identical to unpruned scoring either way.
+    pruned: bool = False
+    prune_chunk: int = 32
+    # Minimum predicted block-prune rate before pruned dispatch, when no
+    # measured break-even exists (None = planner.DEFAULT_PRUNE_MIN_RATE).
+    prune_min_rate: Optional[float] = None
     # Autotune kernel configs on demand per batch shape (measured costs
     # drive the planner; entries persist in tuning_cache). False with a
     # tuning_cache still CONSULTS existing entries — it just never
@@ -119,7 +131,15 @@ class QueryServer(ServingBackend):
         self.planner = QueryPlanner(index, tuner=self.tuner,
                                     word_block=config.word_block,
                                     dedup_min_rate=config.dedup_min_rate,
-                                    compressed=config.compressed)
+                                    compressed=config.compressed,
+                                    pruned=config.pruned,
+                                    prune_chunk=config.prune_chunk,
+                                    prune_min_rate=config.prune_min_rate)
+        # Whole-arena HBM footprint: the baseline a pruned batch's actual
+        # bytes-read is charged against for the bytes-saved metric.
+        self._arena_total_bytes = sum(
+            int(index.storage.shard_hbm_nbytes(s))
+            for s in range(index.storage.n_shards))
         self.batcher = MicroBatcher(
             term_pad=config.term_pad, max_batch=config.max_batch,
             max_wait_s=config.max_wait_s, max_queued=config.max_queued)
@@ -384,11 +404,19 @@ class QueryServer(ServingBackend):
         self._tile_events = []
         nb = self.index.layout.n_blocks
         tp0 = self.clock()
-        plan = self.planner.plan(B, Q)
+        # The weakest coverage threshold across the batch is the bound
+        # every block must clear for at least one request — the planner's
+        # basis for predicting the prune rate. All-top-k batches pass
+        # None (still correct to prune via the dynamic bound, but with no
+        # static prediction the planner stays unpruned).
+        thr_hint = min((r.threshold for r in batch.requests if not r.top_k),
+                       default=None)
+        plan = self.planner.plan(B, Q, threshold=thr_hint)
         if marks is not None:
             marks.append(("plan", tp0, self.clock(),
                           {"method": plan.method, "fused": int(plan.fused),
-                           "paged": int(plan.paged)}))
+                           "paged": int(plan.paged),
+                           "pruned": int(plan.pruned)}))
         # compressed fused dispatch reports (and live-profiles) as
         # "lookup_c" — the tuner's cost key for the decode-in-the-loop
         # kernel, keeping observed costs per path
@@ -398,7 +426,51 @@ class QueryServer(ServingBackend):
         tiles0 = (self.tiles.hits, self.tiles.faults,
                   self.tiles.prefetched, self.tiles.prefetch_hits)
         bytes0 = (self.tiles.raw_bytes_staged, self.tiles.comp_bytes_staged)
-        if Q == 1:
+        if plan.pruned:
+            # Chunked branch-and-bound executor: rarest-first term chunks
+            # against a persistent running-count buffer; blocks whose
+            # bound falls below the coverage cutoff (or the running k-th
+            # score) skip all further gathers, staging and kernel work.
+            # Bit-identical to the unpruned paths by construction.
+            q_pad = 1 if Q == 1 else _next_pow2(Q)
+            buf = np.zeros((q_pad, B, 2), dtype=np.uint32)
+            n_valid = np.zeros(q_pad, dtype=np.int32)
+            required = np.full(q_pad, np.iinfo(np.int32).max,
+                               dtype=np.int64)
+            topks = np.zeros(q_pad, dtype=np.int32)
+            for i, r in enumerate(batch.requests):
+                buf[i, : r.n_terms] = r.terms
+                n_valid[i] = r.n_terms
+                topks[i] = r.top_k
+                required[i] = (0 if r.top_k else
+                               coverage_cutoff(r.threshold, r.n_terms))
+            method = "lookup_p"
+            pstats = PruneStats()
+            tk0 = self.clock()
+            slots = run_paged_pruned(
+                self.tiles, self.planner.shard_plans, buf, n_valid,
+                required, topks, n_hashes=self.index.params.n_hashes,
+                chunk_terms=plan.chunk_terms or self.config.prune_chunk,
+                word_block=plan.word_block, stats=pstats)
+            tk1 = self.clock()
+            w = int(self.index.storage.shape[1])
+            self._kernel_mark(marks, method, plan, tk0, tk1,
+                              rows=max(1, pstats.bytes_read // (4 * w)))
+            self.metrics.record_prune(
+                blocks_total=pstats.blocks_total,
+                blocks_pruned=pstats.blocks_pruned,
+                tiles_skipped=pstats.shard_visits_skipped,
+                bytes_saved=max(
+                    0, self._arena_total_bytes - pstats.bytes_read))
+            if marks is not None:
+                marks.append(("prune", tk0, tk1, {
+                    "blocks_pruned": int(pstats.blocks_pruned),
+                    "blocks_total": int(pstats.blocks_total),
+                    "tiles_skipped": int(pstats.shard_visits_skipped),
+                    "bytes_read": int(pstats.bytes_read),
+                    "predicted": round(float(plan.predicted_prune), 3)}))
+            scores = slots[:Q][:, self._host_slot]
+        elif Q == 1:
             buf = np.zeros((B, 2), dtype=np.uint32)
             buf[: ells[0]] = batch.requests[0].terms
             fn = self.planner.single_score_fn(plan)

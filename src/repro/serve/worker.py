@@ -39,12 +39,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import codec as _codec
-from ..core.query import (ShardPlan, make_batch_score_fn,
-                          make_comp_batch_score_fn, plan_shards_subset)
+from ..core.query import (PruneStats, ShardPlan, make_batch_score_fn,
+                          make_comp_batch_score_fn, plan_shards_subset,
+                          run_paged_pruned)
 from ..core.store import open_substore
 from ..core.arena import DeviceTileCache
 from ..index.hedge import AttemptFailed
-from .planner import SHORT_QUERY_TERMS, choose_method
+from .planner import (DEFAULT_PRUNE_MIN_RATE, SHORT_QUERY_TERMS,
+                      choose_method, predict_prune_rate)
 
 # One compiled scorer per (n_hashes, method, word_block), shared by EVERY
 # worker in the process: fake hosts pad tiles to the parent store's tallest
@@ -82,7 +84,10 @@ class ShardWorker:
                  verify: bool = False, device=None,
                  short_query_terms: int = SHORT_QUERY_TERMS,
                  word_block: Optional[int] = None,
-                 compressed: bool = False):
+                 compressed: bool = False,
+                 pruned: bool = False, prune_chunk: int = 32,
+                 prune_min_rate: Optional[float] = None,
+                 local_pad: bool = False, tuner=None):
         sub = open_substore(store, shard_ids, verify=verify)
         self.name = name
         self.layout = sub.layout            # FULL store layout (metadata)
@@ -105,9 +110,48 @@ class ShardWorker:
         self.plans: list[ShardPlan] = plan_shards_subset(
             sub.layout, sub.global_row_starts, sub.shard_ids)
         # pad tiles to the PARENT store's tallest shard: one kernel shape
-        # across every worker, not one per host's local maximum
-        pad_rows = (int(np.max(np.diff(sub.global_row_starts)))
-                    if sub.n_shards_total > 1 else None)
+        # across every worker, not one per host's local maximum.
+        # ``local_pad`` instead pads to THIS host's tallest shard — smaller
+        # tiles and per-worker dispatch shapes, so a per-worker tuner (the
+        # ``tuner`` argument, keyed on the local geometry) can measure each
+        # shard height separately instead of one tall-parent tune key
+        # covering every worker.
+        self.local_pad = bool(local_pad)
+        if sub.n_shards_total <= 1:
+            pad_rows = None
+        elif self.local_pad:
+            starts = np.asarray(sub.global_row_starts, dtype=np.int64)
+            pad_rows = int(max(starts[g + 1] - starts[g]
+                               for g in self.shard_ids))
+        else:
+            pad_rows = int(np.max(np.diff(sub.global_row_starts)))
+        # Optional per-worker KernelTuner (repro.kernels.autotune): its
+        # key carries this worker's LOCAL row count, so two workers with
+        # different shard heights tune (and cache) separately.
+        self.tuner = tuner
+        # local-pad shapes differ per worker, so compiled score fns live
+        # on the instance instead of the module-level shared caches
+        self._fns: dict = {}
+        self._fns_c: dict = {}
+        # -- pruned (chunked early-exit) candidate scoring ------------------
+        self.pruned = bool(pruned)
+        self.prune_chunk = int(prune_chunk)
+        self.prune_min_rate = (DEFAULT_PRUNE_MIN_RATE
+                               if prune_min_rate is None
+                               else float(prune_min_rate))
+        self.prune_stats = PruneStats()     # cumulative across dispatches
+        self.pruned_dispatches = 0
+        # cumulative HBM bytes of the shards pruned dispatches covered —
+        # what exhaustive scoring would have staged; bytes saved =
+        # baseline - prune_stats.bytes_read
+        self.prune_baseline_bytes = 0
+        w = int(self.storage.shape[1])
+        mean_fn = getattr(self.storage, "mean_popcount", None)
+        has_fn = getattr(self.storage, "has_popcounts", None)
+        if callable(has_fn) and has_fn() and callable(mean_fn) and w:
+            self.density = float(mean_fn()) / float(32 * w)
+        else:
+            self.density = float(self.params.fpr)
         self.tiles = DeviceTileCache(self.storage,
                                      capacity_bytes=tile_cache_bytes,
                                      pad_rows_to=pad_rows, device=device)
@@ -167,9 +211,29 @@ class ShardWorker:
             return self.tiles.prefetch(local)
 
     # -- scoring -------------------------------------------------------------
-    def _score_fn(self, method: str):
-        return _shared_score_fn(self.params.n_hashes, method,
-                                self.word_block)
+    def _score_fn(self, method: str, word_block: Optional[int] = None):
+        wb = self.word_block if word_block is None else word_block
+        if not self.local_pad:
+            return _shared_score_fn(self.params.n_hashes, method, wb)
+        key = (self.params.n_hashes, method, wb)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = make_batch_score_fn(self.params.n_hashes, method,
+                                     word_block=wb)
+            self._fns[key] = fn
+        return fn
+
+    def _comp_score_fn(self, method: str, word_block: Optional[int] = None):
+        wb = self.word_block if word_block is None else word_block
+        if not self.local_pad:
+            return _shared_comp_score_fn(self.params.n_hashes, method, wb)
+        key = (self.params.n_hashes, method, wb)
+        fn = self._fns_c.get(key)
+        if fn is None:
+            fn = make_comp_batch_score_fn(self.params.n_hashes, method,
+                                          word_block=wb)
+            self._fns_c[key] = fn
+        return fn
 
     def _comp_shard(self, local: int) -> bool:
         return (self.compressed and
@@ -189,19 +253,34 @@ class ShardWorker:
         plan = self.plans[local]
         _, offs, widths = self._args[local]
         q, bucket = int(terms_dev.shape[0]), int(terms_dev.shape[1])
-        method = choose_method(self.params.n_hashes, bucket, q,
-                               self.short_query_terms)
+        wb = self.word_block
+        if self.tuner is not None:
+            # per-worker measured costs (keyed on THIS host's geometry)
+            entries = self.tuner.costs(bucket, q)
+            if not self.compressed:
+                entries.pop("lookup_c", None)
+            costs = {m: e.cost_us for m, e in entries.items()}
+            method = choose_method(self.params.n_hashes, bucket, q,
+                                   self.short_query_terms, costs=costs)
+            tuned = entries.get(method)
+            if method == "lookup_c":
+                method = "lookup"
+            if wb is None and tuned is not None:
+                wb = tuned.word_block
+        else:
+            method = choose_method(self.params.n_hashes, bucket, q,
+                                   self.short_query_terms)
         t0 = time.perf_counter()
         if self._comp_shard(local):
             self.compressed_dispatches += 1
             dict_rows, refs = self.tiles.get_compressed(local)
-            fn = _shared_comp_score_fn(self.params.n_hashes, method,
-                                       self.word_block)
+            fn = self._comp_score_fn(method, wb)
             slots = fn(dict_rows, refs, offs, widths, terms_dev,
                        n_valid_dev)
         else:
-            slots = self._score_fn(method)(self.tiles.get(local), offs,
-                                           widths, terms_dev, n_valid_dev)
+            slots = self._score_fn(method, wb)(self.tiles.get(local), offs,
+                                               widths, terms_dev,
+                                               n_valid_dev)
         slots = np.asarray(slots)
         if self.profiler is not None:
             from ..obs.profile import gather_bytes
@@ -209,7 +288,7 @@ class ShardWorker:
             self.profiler.record(
                 method=method, bucket=bucket, batch=q,
                 seconds=time.perf_counter() - t0,
-                word_block=self.word_block or 0,
+                word_block=wb or 0,
                 bytes_moved=gather_bytes(q * nb_local * bucket,
                                          int(self.storage.shape[1])),
                 shard=gshard)
@@ -223,10 +302,23 @@ class ShardWorker:
         arrays of this shard's documents — hits >= cutoffs[i] when
         topks[i] == 0, else the local top-k under (-score, doc id). Only
         candidates cross the host boundary, O(hits + k) per query instead
-        of O(n_docs) — the scatter/gather contract of the frontend."""
+        of O(n_docs) — the scatter/gather contract of the frontend.
+
+        With ``pruned`` enabled and the cost model predicting a win, the
+        shard dispatch runs through the chunked early-exit executor
+        instead: blocks whose bound cannot reach the cutoff skip all
+        further gathers and kernel work, a fully-pruned shard never
+        stages its tile, and candidates stay bit-identical (pruned
+        partial sums are provably below every cutoff)."""
         with self._lock:
-            slots, plan, method = self.score_shard(gshard, terms_dev,
-                                                   n_valid_dev)
+            pr = (self._score_pruned(gshard, terms_dev, n_valid_dev,
+                                     cutoffs, topks, n_live)
+                  if self.pruned else None)
+            if pr is not None:
+                slots, plan, method = pr
+            else:
+                slots, plan, method = self.score_shard(gshard, terms_dev,
+                                                       n_valid_dev)
         slot0 = plan.block_start * self.layout.block_docs
         docs = self._slot_doc[slot0: slot0 + slots.shape[1]]
         real = docs >= 0
@@ -241,3 +333,59 @@ class ShardWorker:
                 m = sc >= cutoffs[i]
                 out.append((docs[m], sc[m].astype(np.int32)))
         return out, method
+
+    def _score_pruned(self, gshard: int, terms_dev, n_valid_dev,
+                      cutoffs: np.ndarray, topks: np.ndarray, n_live: int
+                      ) -> Optional[tuple[np.ndarray, ShardPlan, str]]:
+        """Chunked early-exit dispatch of one held shard, or None when the
+        cost model predicts no win (caller falls back to ``score_shard``).
+
+        Shard-LOCAL top-k pruning is sound here: this worker only reports
+        its own shard's top-k candidates, so the dynamic bound needs only
+        this shard's running counts. Called under ``self._lock``."""
+        if self.failed or gshard not in self._local:
+            return None                 # score_shard raises the real error
+        bucket = int(terms_dev.shape[1])
+        if bucket <= self.prune_chunk:
+            return None
+        n_valid = np.asarray(n_valid_dev)
+        covs = [cutoffs[i] / max(1, int(n_valid[i]))
+                for i in range(n_live) if not topks[i]]
+        if not covs:
+            return None                 # all-top-k: no static prediction
+        predicted = predict_prune_rate(float(min(covs)), self.density)
+        break_even = self.prune_min_rate
+        chunk = min(self.prune_chunk, bucket)
+        if self.tuner is not None:
+            q = int(terms_dev.shape[0])
+            e = self.tuner.entry("lookup_p", bucket, q)
+            if e is not None:
+                if e.dedup_threshold is not None:
+                    break_even = e.dedup_threshold
+                chunk = min(e.term_block or chunk, bucket)
+        if break_even >= 1.0 or predicted < break_even:
+            return None
+        local = self._local[gshard]
+        plan = self.plans[local]
+        self.dispatches += 1
+        self.pruned_dispatches += 1
+        self.prune_baseline_bytes += int(self.storage.shard_hbm_nbytes(local))
+        Q = int(terms_dev.shape[0])
+        required = np.full(Q, np.iinfo(np.int32).max, dtype=np.int64)
+        for i in range(n_live):
+            required[i] = 0 if topks[i] else int(cutoffs[i])
+        bytes0 = self.prune_stats.bytes_read
+        t0 = time.perf_counter()
+        slots = run_paged_pruned(
+            self.tiles, [plan], np.asarray(terms_dev), n_valid, required,
+            np.asarray(topks, dtype=np.int32),
+            n_hashes=self.params.n_hashes, chunk_terms=chunk,
+            word_block=self.word_block, stats=self.prune_stats)
+        if self.profiler is not None:
+            self.profiler.record(
+                method="lookup_p", bucket=bucket, batch=Q,
+                seconds=time.perf_counter() - t0,
+                word_block=self.word_block or 0,
+                bytes_moved=self.prune_stats.bytes_read - bytes0,
+                shard=gshard)
+        return slots, plan, "lookup_p"

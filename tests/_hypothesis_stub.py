@@ -52,6 +52,16 @@ def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
 
 def given(*strats: _Strategy):
     def deco(fn):
+        # Drawn params fill the TRAILING positions (real hypothesis
+        # semantics for positional @given); only the leading ones are
+        # pytest fixtures. Pytest passes fixtures by KEYWORD, so drawn
+        # values must also go by name or they collide with fixture
+        # kwargs at the leading positions.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        fixture_params = params[:-len(strats)] if strats else params
+        drawn_names = [p.name for p in params[len(fixture_params):]]
+
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
@@ -60,14 +70,11 @@ def given(*strats: _Strategy):
             seed = zlib.crc32(fn.__qualname__.encode())
             rng = np.random.default_rng(seed)
             for _ in range(n):
-                drawn = [s.draw(rng) for s in strats]
-                fn(*args, *drawn, **kwargs)
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(drawn_names, strats)}
+                fn(*args, **drawn, **kwargs)
 
-        # Drawn params fill the TRAILING positions; only the leading ones
-        # are pytest fixtures. Hide the drawn ones from pytest's collector.
-        sig = inspect.signature(fn)
-        fixture_params = list(sig.parameters.values())[:-len(strats)] \
-            if strats else list(sig.parameters.values())
+        # Hide the drawn params from pytest's collector.
         wrapper.__signature__ = sig.replace(parameters=fixture_params)
         del wrapper.__wrapped__
         return wrapper
