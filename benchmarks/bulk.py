@@ -1,0 +1,242 @@
+"""Bulk lane: staged-bytes amortization and interactive-p99 protection.
+
+The tentpole claim of the offline bulk lane is that inverting the loop
+order — stage each shard tile into HBM once and stream the WHOLE query
+set against it, instead of restaging tiles for every micro-batch — cuts
+arena bytes staged per query by the number of micro-batches the
+interactive lane would have needed. The win must show up in BYTES, so
+each cell runs the same query set down both lanes against a fresh
+server (cold, one-shard-sized tile cache so interactive restaging is
+real) and reports:
+
+  interactive_B_per_q — tile-cache bytes staged by the query-major lane
+                        (max_batch-sized micro-batches, each sweeping
+                        every shard) divided by the query count;
+  bulk_B_per_q        — BulkStats.bytes_staged for the shard-major
+                        sweep of the same set (each tile staged once);
+  amortization        — interactive / bulk (the headline: >= 5x for a
+                        scan-sized set);
+  identical           — bulk hits AND scores bit-equal to the
+                        QueryEngine oracle (hard assertion, threshold
+                        and top-k, raw and rowdict codecs).
+
+The second table measures the scheduling contract: interactive p99 with
+a bulk sweep running (yield points at shard boundaries) versus with the
+lane idle — the sweep must not blow up tail latency.
+
+``--json`` writes results/BENCH_bulk.json for CI trend tracking.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import IndexParams, QueryEngine
+from repro.data import make_corpus
+from repro.index import build_compact_streaming
+from repro.serve import (BulkLane, BulkStatus, QueryServer, ServerConfig,
+                         ServingLoop, Status)
+
+from .common import emit
+
+PARAMS = IndexParams(n_hashes=1, fpr=0.03, kmer=15)
+
+
+def _corpus_and_queries(n_docs: int, n_queries: int, seed: int = 0):
+    c = make_corpus(max(16, n_docs // 4), k=15, mean_length=200,
+                    min_length=150, seed=seed)
+    terms = [c.doc_terms[i % len(c.doc_terms)] for i in range(n_docs)]
+    rng = np.random.default_rng(seed + 1)
+    pats = []
+    for i in range(n_queries):
+        if i % 2 == 0:
+            d = c.documents[int(rng.integers(len(c.documents)))]
+            j = int(rng.integers(0, max(1, len(d) - 70)))
+            pats.append(d[j: j + 70])
+        else:
+            pats.append("".join(rng.choice(list("ACGT"), size=70)))
+    return terms, pats
+
+
+def _interactive_staged(index, pats, threshold, *, max_batch, tile_bytes
+                        ) -> tuple[int, float]:
+    """(bytes staged, wall seconds) for the query-major lane with a
+    one-shard cache — every micro-batch restages every shard."""
+    srv = QueryServer(index, ServerConfig(
+        max_batch=max_batch, tile_cache_bytes=tile_bytes,
+        result_cache=0, row_cache=0))
+    t0 = time.perf_counter()
+    for i in range(0, len(pats), max_batch):
+        for p in pats[i:i + max_batch]:
+            srv.submit(p, threshold=threshold)
+        srv.drain()
+    wall = time.perf_counter() - t0
+    return srv.tiles.raw_bytes_staged + srv.tiles.comp_bytes_staged, wall
+
+
+def _latencies(loop, pats, threshold) -> np.ndarray:
+    done = threading.Event()
+    lat: list[float] = []
+    lock = threading.Lock()
+    for p in pats:
+        t0 = time.perf_counter()
+
+        def cb(resp, t0=t0):
+            with lock:
+                lat.append(time.perf_counter() - t0)
+                if len(lat) == len(pats):
+                    done.set()
+        loop.submit(p, threshold=threshold, on_done=cb)
+        time.sleep(0.002)
+    assert done.wait(300.0), "interactive queries never completed"
+    return np.asarray(lat)
+
+
+def run(n_docs: int = 128, n_queries: int = 256, *,
+        codecs: tuple[str, ...] = ("raw", "rowdict"),
+        threshold: float = 0.5, max_batch: int = 32,
+        p99_queries: int = 48) -> dict:
+    report: dict = {"params": {"n_docs": n_docs, "n_queries": n_queries,
+                               "max_batch": max_batch,
+                               "threshold": threshold},
+                    "cells": [], "identical": True}
+    terms, pats = _corpus_and_queries(n_docs, n_queries)
+    for codec in codecs:
+        tmp = Path(tempfile.mkdtemp(prefix="cobs-bulk-"))
+        try:
+            index, _ = build_compact_streaming(
+                terms, tmp / "store", PARAMS, block_docs=32,
+                blocks_per_shard=1, codec=codec)
+            storage = index.storage
+            tile_bytes = max(storage.shard_nbytes(s)
+                             for s in range(storage.n_shards))
+            comp = codec != "raw"
+            oracle = QueryEngine(index, compressed=comp).search_batch(
+                pats, threshold=threshold)
+
+            inter_bytes, inter_wall = _interactive_staged(
+                index, pats, threshold, max_batch=max_batch,
+                tile_bytes=tile_bytes)
+
+            srv = QueryServer(index, ServerConfig(
+                tile_cache_bytes=tile_bytes, result_cache=0,
+                row_cache=0))
+            lane = BulkLane(srv)
+            t0 = time.perf_counter()
+            job = lane.submit(pats, threshold=threshold)
+            lane.drain()
+            bulk_wall = time.perf_counter() - t0
+            assert job.status is BulkStatus.DONE, job.error
+            same = all(np.array_equal(a.doc_ids, b.doc_ids)
+                       and np.array_equal(a.scores, b.scores)
+                       for a, b in zip(job.results, oracle))
+            assert same, f"bulk != oracle for codec={codec}"
+            # top-k down the same lane, same bit-identity bar
+            k_oracle = [QueryEngine(index, compressed=comp).top_k(p, k=5)
+                        for p in pats[:16]]
+            job_k = lane.submit(pats[:16], top_k=5)
+            lane.drain()
+            assert job_k.status is BulkStatus.DONE, job_k.error
+            same_k = all(np.array_equal(a.doc_ids, b.doc_ids)
+                         and np.array_equal(a.scores, b.scores)
+                         for a, b in zip(job_k.results, k_oracle))
+            assert same_k, f"bulk top-k != oracle for codec={codec}"
+
+            inter_pq = inter_bytes / len(pats)
+            bulk_pq = job.staged_bytes_per_query
+            amort = inter_pq / max(1.0, bulk_pq)
+            tag = (f"codec={codec};amortization={amort:.1f}x;"
+                   f"tiles_staged={job.stats.tiles_staged};"
+                   f"prune_rate={job.stats.prune_rate:.2f}")
+            emit(f"bulk/staged_{codec}", bulk_wall * 1e6 / len(pats), tag)
+            report["cells"].append({
+                "codec": codec,
+                "interactive_bytes": int(inter_bytes),
+                "bulk_bytes": int(job.stats.bytes_staged),
+                "interactive_B_per_q": round(inter_pq, 1),
+                "bulk_B_per_q": round(bulk_pq, 1),
+                "amortization": round(amort, 2),
+                "tiles_staged": int(job.stats.tiles_staged),
+                "shards": int(storage.n_shards),
+                "query_chunks": int(job.stats.query_chunks),
+                "kernel_dispatches": int(job.stats.kernel_dispatches),
+                "prune_rate": round(job.stats.prune_rate, 4),
+                "interactive_wall_s": round(inter_wall, 3),
+                "bulk_wall_s": round(bulk_wall, 3),
+                "identical": bool(same and same_k),
+            })
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    # -- preemption: interactive p99 with and without a sweep in flight --
+    tmp = Path(tempfile.mkdtemp(prefix="cobs-bulk-p99-"))
+    try:
+        index, _ = build_compact_streaming(
+            terms, tmp / "store", PARAMS, block_docs=32,
+            blocks_per_shard=1, codec="raw")
+        srv = QueryServer(index, ServerConfig(
+            result_cache=0, row_cache=0, max_wait_s=0.0))
+        loop = ServingLoop(srv).start()
+        lane = BulkLane(srv, loop, chunk_terms=16).start()
+        ipats = pats[:p99_queries]
+        try:
+            _latencies(loop, ipats, threshold)        # warm compile
+            base = _latencies(loop, ipats, threshold)
+            job = lane.submit(pats * 2, threshold=threshold)
+            under = _latencies(loop, ipats, threshold)
+            assert job.wait(600.0), "bulk sweep never finished"
+            assert job.status is BulkStatus.DONE, job.error
+        finally:
+            loop.stop()
+        p99_off = float(np.percentile(base, 99))
+        p99_on = float(np.percentile(under, 99))
+        snap = srv.metrics.snapshot()
+        report["preemption"] = {
+            "p99_ms_bulk_off": round(p99_off * 1e3, 2),
+            "p99_ms_bulk_on": round(p99_on * 1e3, 2),
+            "p99_ratio": round(p99_on / max(p99_off, 1e-9), 3),
+            "bulk_yields": int(snap.bulk_yields),
+            "bulk_shards_swept": int(snap.bulk_shards_swept),
+        }
+        emit("bulk/p99_protection", p99_on * 1e6,
+             f"p99_off_us={p99_off * 1e6:.0f};"
+             f"ratio={p99_on / max(p99_off, 1e-9):.2f};"
+             f"yields={snap.bulk_yields}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    best = max((c["amortization"] for c in report["cells"]), default=0.0)
+    report["best_amortization"] = round(best, 2)
+    emit("bulk/best_amortization", best * 1000,
+         f"best_staged_bytes_amortization={best:.1f}x;unit=milli")
+    return report
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write the sweep report to this path")
+    args = ap.parse_args()
+    report = run(n_docs=96 if args.quick else 160,
+                 n_queries=64 if args.quick else 256,
+                 codecs=("raw",) if args.quick else ("raw", "rowdict"),
+                 max_batch=8 if args.quick else 32,
+                 p99_queries=24 if args.quick else 48)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=2))
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,8 +27,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import common
-    from . import (compaction, compression, construction, fpr, hedging,
-                   kernel_micro, outofcore, pruning, query, scaling, serving)
+    from . import (bulk, compaction, compression, construction, fpr,
+                   hedging, kernel_micro, outofcore, pruning, query,
+                   scaling, serving)
 
     n = 128 if args.quick else 512
     suites = {
@@ -59,11 +60,18 @@ def main() -> None:
             else (0.3, 0.5, 0.8, 0.9, 1.0),
             selectivities=(0.0, 0.25) if args.quick else (0.0, 0.05, 0.25),
             chunks=(16,) if args.quick else (16, 32)),
+        "bulk": lambda: bulk.run(
+            96 if args.quick else 160,
+            n_queries=64 if args.quick else 256,
+            codecs=("raw",) if args.quick else ("raw", "rowdict"),
+            max_batch=8 if args.quick else 32,
+            p99_queries=24 if args.quick else 48),
     }
     print("name,us_per_call,derived")
     kernel_report = None
     compression_report = None
     pruning_report = None
+    bulk_report = None
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue
@@ -74,6 +82,8 @@ def main() -> None:
             compression_report = res
         elif name == "pruning":
             pruning_report = res
+        elif name == "bulk":
+            bulk_report = res
 
     out = Path("results")
     out.mkdir(exist_ok=True)
@@ -101,6 +111,12 @@ def main() -> None:
         prune_json.write_text(json.dumps(pruning_report, indent=2))
         print(f"# wrote {prune_json} (threshold x selectivity x chunk sweep)",
               file=sys.stderr)
+    if bulk_report is not None:
+        import json
+        bulk_json = out / "BENCH_bulk.json"
+        bulk_json.write_text(json.dumps(bulk_report, indent=2))
+        print(f"# wrote {bulk_json} (staged-bytes amortization + p99 "
+              f"protection)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ serving subsystem (which exports the counters as metrics).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
 from pathlib import Path
@@ -538,6 +539,13 @@ class DeviceTileCache:
         self.pad_rows_to = pad_rows_to
         self.device = device
         # key: shard id (raw tile) or ("c", shard id) (dict form)
+        # The LRU map, byte budget, and counters mutate under one lock so
+        # the cache is safe to share between the interactive scoring
+        # workers and the bulk lane WITHOUT serializing their kernel
+        # work behind the loop's backend lock: staged tiles are immutable
+        # device arrays, so a reference obtained under the lock stays
+        # valid through a concurrent eviction.
+        self._lock = threading.RLock()
         self._tiles: "OrderedDict" = OrderedDict()
         self._sizes: dict = {}
         self._prefetched: set = set()
@@ -665,22 +673,23 @@ class DeviceTileCache:
         return tile, staged_s
 
     def _get(self, key):
-        s = self._shard_of(key)
-        tile = self._tiles.get(key)
-        if tile is not None:
-            self._tiles.move_to_end(key)
-            self.hits += 1
-            self.shard_hits[s] = self.shard_hits.get(s, 0) + 1
-            if key in self._prefetched:
-                self._prefetched.discard(key)
-                self.prefetch_hits += 1
-            self._notify(s, "hit")
+        with self._lock:
+            s = self._shard_of(key)
+            tile = self._tiles.get(key)
+            if tile is not None:
+                self._tiles.move_to_end(key)
+                self.hits += 1
+                self.shard_hits[s] = self.shard_hits.get(s, 0) + 1
+                if key in self._prefetched:
+                    self._prefetched.discard(key)
+                    self.prefetch_hits += 1
+                self._notify(s, "hit")
+                return tile
+            self.faults += 1
+            self.shard_faults[s] = self.shard_faults.get(s, 0) + 1
+            tile, staged_s = self._insert(key)
+            self._notify(s, "fault", staged_s)
             return tile
-        self.faults += 1
-        self.shard_faults[s] = self.shard_faults.get(s, 0) + 1
-        tile, staged_s = self._insert(key)
-        self._notify(s, "fault", staged_s)
-        return tile
 
     def get(self, s: int) -> jnp.ndarray:
         return self._get(s)
@@ -692,16 +701,17 @@ class DeviceTileCache:
         return self._get(("c", s))
 
     def _prefetch(self, key) -> bool:
-        if key in self._tiles:
-            return False
-        s = self._shard_of(key)
-        self.faults += 1
-        self.shard_faults[s] = self.shard_faults.get(s, 0) + 1
-        self.prefetched += 1
-        self._prefetched.add(key)
-        _, staged_s = self._insert(key)
-        self._notify(s, "prefetch", staged_s)
-        return True
+        with self._lock:
+            if key in self._tiles:
+                return False
+            s = self._shard_of(key)
+            self.faults += 1
+            self.shard_faults[s] = self.shard_faults.get(s, 0) + 1
+            self.prefetched += 1
+            self._prefetched.add(key)
+            _, staged_s = self._insert(key)
+            self._notify(s, "prefetch", staged_s)
+            return True
 
     def prefetch(self, s: int) -> bool:
         """Stage shard ``s`` ahead of use (double buffering). The transfer
@@ -716,7 +726,8 @@ class DeviceTileCache:
         return self._prefetch(("c", s))
 
     def clear(self) -> None:
-        self._tiles.clear()
-        self._sizes.clear()
-        self._prefetched.clear()
-        self.resident_bytes = 0
+        with self._lock:
+            self._tiles.clear()
+            self._sizes.clear()
+            self._prefetched.clear()
+            self.resident_bytes = 0

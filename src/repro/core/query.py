@@ -391,9 +391,12 @@ def run_paged_dedup(tiles, shard_plans: list[ShardPlan], fn,
 # stages that small matrix. When a shard's cumulative gathered bytes
 # approach its tile size — dense corpora, long queries, low thresholds —
 # the executor PROMOTES the shard: the full tile is staged once through
-# the DeviceTileCache and later chunks use the fused in-kernel gather.
-# Pruned shards never promote, so the tile cache records zero faults for
-# them — "tiles skipped" is directly observable.
+# the DeviceTileCache (prefetched ahead at half the threshold so the H2D
+# copy overlaps the remaining gather-fed chunks) and later chunks read it
+# on device — the fused in-kernel gather for k=1, a device gather+AND of
+# the chunk's unique row sets for k>1. Pruned shards never promote, so
+# the tile cache records zero faults for them — "tiles skipped" is
+# directly observable.
 
 
 @dataclass
@@ -521,6 +524,7 @@ def run_paged_pruned(tiles, shard_plans: list[ShardPlan], terms: np.ndarray,
     block_max = [np.zeros((Q, nb), dtype=np.int64) for nb in nbs]
     tk_lower = [None] * n_sh                # [Q, kmax] per shard (top-k)
     promoted = [False] * n_sh
+    prefetch_issued = [False] * n_sh        # promotion prefetch dispatched
     resident = [None] * n_sh                # device tile or (dict, refs)
     gathered = [0] * n_sh                   # cumulative gather bytes
     decode_counted = [False] * n_sh
@@ -554,18 +558,29 @@ def run_paged_pruned(tiles, shard_plans: list[ShardPlan], terms: np.ndarray,
             if acc[s] is None:
                 acc[s] = ops.chunk_acc_init(Q, nbs[s], W,
                                             word_block=word_block)
-            if (not promoted[s] and k == 1
-                    and gathered[s] >= promote_ratio
-                    * storage.shard_hbm_nbytes(sp.shard)):
+            hbm = storage.shard_hbm_nbytes(sp.shard)
+            if (not promoted[s] and not prefetch_issued[s]
+                    and gathered[s] >= 0.5 * promote_ratio * hbm):
+                # Double-buffer the promotion: once gathers cross half the
+                # promote threshold the full tile is prefetched (a
+                # non-blocking H2D dispatch), so it overlaps the remaining
+                # gather-fed chunks and is already resident when the
+                # threshold trips — promotion never stalls on a staging.
+                prefetch_issued[s] = True
+                if codecs[s] in _codec.DICT_CODECS:
+                    tiles.prefetch_compressed(sp.shard)
+                else:
+                    tiles.prefetch(sp.shard)
+            if not promoted[s] and gathered[s] >= promote_ratio * hbm:
                 promoted[s] = True
                 if codecs[s] in _codec.DICT_CODECS:
                     resident[s] = tiles.get_compressed(sp.shard)
                 else:
                     resident[s] = tiles.get(sp.shard)
                 stats.tiles_promoted += 1
-                stats.bytes_tile_staged += storage.shard_hbm_nbytes(sp.shard)
+                stats.bytes_tile_staged += hbm
             mask = jnp.asarray(live.astype(np.int32))
-            if promoted[s]:
+            if promoted[s] and k == 1:
                 idx = jnp.asarray(rows[..., 0].astype(np.int32))
                 if codecs[s] in _codec.DICT_CODECS:
                     d, r = resident[s]
@@ -574,6 +589,28 @@ def run_paged_pruned(tiles, shard_plans: list[ShardPlan], terms: np.ndarray,
                 else:
                     acc[s], bmax = ops.bitslice_chunk_score_multi(
                         resident[s], idx, mask, acc[s], word_block=word_block)
+            elif promoted[s]:
+                # k>1 promoted path: the chunk's unique row SETS are still
+                # planned host-side (np.unique over live cells), but the
+                # rows themselves are gathered and ANDed on DEVICE out of
+                # the resident tile — no host arena reads after promotion.
+                cells = rows[live]                        # [N, k]
+                uniq, inv = np.unique(cells, axis=0, return_inverse=True)
+                u_idx = np.zeros((_pad_unique(uniq.shape[0]), k),
+                                 dtype=np.int32)
+                u_idx[: uniq.shape[0]] = uniq
+                if codecs[s] in _codec.DICT_CODECS:
+                    d, r = resident[s]
+                    mat_dev = ops.gather_and_rows_comp(
+                        d, r, jnp.asarray(u_idx))
+                else:
+                    mat_dev = ops.gather_and_rows(
+                        resident[s], jnp.asarray(u_idx))
+                indir = np.zeros((Q, nbs[s], ct), dtype=np.int32)
+                indir[live] = np.asarray(inv).reshape(-1).astype(np.int32)
+                acc[s], bmax = ops.bitslice_chunk_score_dedup(
+                    mat_dev, jnp.asarray(indir), mask, acc[s],
+                    word_block=word_block)
             else:
                 cells = rows[live]                        # [N, k]
                 if k == 1:
@@ -649,6 +686,252 @@ def run_paged_pruned(tiles, shard_plans: list[ShardPlan], terms: np.ndarray,
         else:
             parts.append(np.asarray(ops.chunk_acc_scores(acc[s], W)))
     return np.concatenate(parts, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Shard-major streaming execution (the offline bulk lane)
+# --------------------------------------------------------------------------
+#
+# The interactive path is query-major: every micro-batch visits every
+# shard, so a bounded DeviceTileCache restages tiles once per batch and a
+# Q-query workload split into Q/B batches pays Q/B stagings per shard.
+# ``run_shard_major`` inverts the loop for deadline-free bulk jobs: each
+# shard tile is staged into HBM ONCE (raw or dict form, the next shard
+# prefetched while the current one scores), the ENTIRE query set streams
+# against it in query-chunks sized by ``ops.bulk_query_chunk``, and
+# per-(query, block) running counts accumulate in the same chunk
+# machinery ``run_paged_pruned`` uses — rarest-first term order and the
+# threshold early-exit both carry over, so a decontamination scan prunes
+# within each shard. Results are written into a persistent host slot
+# buffer as each shard completes, which is also the resumability story:
+# (out, next_shard, required) round-trips through a checkpoint.
+
+
+@dataclass
+class BulkStats:
+    """Work accounting for shard-major bulk sweeps (additive: pass the
+    same object across resumed calls for cumulative totals).
+
+    ``bytes_staged`` is the headline number — arena bytes actually
+    H2D-staged (raw + dict forms, measured off the tile-cache counters),
+    the quantity the interactive path pays once per micro-batch sweep."""
+    shards_swept: int = 0        # shards fully scored (all queries)
+    tiles_staged: int = 0        # H2D stagings issued (demand + prefetch)
+    bytes_staged: int = 0        # bytes those stagings moved
+    query_chunks: int = 0        # query slabs dispatched
+    kernel_dispatches: int = 0
+    blocks_total: int = 0        # (query, block) cells entering sweeps
+    blocks_pruned: int = 0       # cells retired by threshold early-exit
+
+    @property
+    def prune_rate(self) -> float:
+        if self.blocks_total == 0:
+            return 0.0
+        return self.blocks_pruned / self.blocks_total
+
+    def merge(self, other: "BulkStats") -> None:
+        for f in ("shards_swept", "tiles_staged", "bytes_staged",
+                  "query_chunks", "kernel_dispatches", "blocks_total",
+                  "blocks_pruned"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+
+
+def run_shard_major(tiles, shard_plans: list[ShardPlan], terms: np.ndarray,
+                    n_valid: np.ndarray, required: np.ndarray,
+                    topk: np.ndarray, *, n_hashes: int = 1,
+                    chunk_terms: int = 32, query_chunk: int | None = None,
+                    word_block: int | None = None,
+                    order: np.ndarray | None = None,
+                    stats: BulkStats | None = None, start_shard: int = 0,
+                    out: np.ndarray | None = None,
+                    should_yield=None) -> tuple[np.ndarray, int, np.ndarray]:
+    """Shard-major streaming scan: one tile staging amortized over Q.
+
+    terms uint32 [Q, L, 2] (shared padding), n_valid int32 [Q];
+    ``required`` int64 [Q] per-query score cutoffs (``coverage_cutoff``,
+    0 for top-k) and ``topk`` int32 [Q] per-query k (0 = threshold).
+    Returns ``(out, next_shard, required)``: int32 [Q, n_slots] slot
+    scores (global block addressing — each shard lands at columns
+    [block_start, block_end) * W * 32), the index of the first unswept
+    shard, and the tightened cutoffs. Slots in pruned (query, block)
+    cells hold partial sums provably below the query's cutoff, so
+    ``select_hits`` / ``select_top_k`` downstream are bit-identical to
+    the exhaustive engine — same soundness argument as
+    ``run_paged_pruned``.
+
+    ``tiles`` is one DeviceTileCache or a sequence parallel to
+    ``shard_plans`` (the multi-host sweep walks each shard's primary
+    worker's cache). ``should_yield()`` is polled at shard boundaries:
+    returning True suspends the sweep — the caller checkpoints
+    ``(out, next_shard, required)`` and re-enters with ``start_shard`` /
+    ``out`` / the returned cutoffs to resume. Top-k cutoffs tighten after
+    every completed shard from the k-th largest accumulated count (a
+    sound lower bound: unswept slots are zero, pruned slots are partial),
+    so later shards prune harder."""
+    plans = list(shard_plans)
+    n_sh = len(plans)
+    caches = (list(tiles) if isinstance(tiles, (list, tuple))
+              else [tiles] * n_sh)
+    terms = np.asarray(terms)
+    n_valid = np.asarray(n_valid, dtype=np.int32)
+    required = np.asarray(required, dtype=np.int64).copy()
+    topk = np.asarray(topk, dtype=np.int32)
+    if stats is None:
+        stats = BulkStats()
+    Q, L = terms.shape[0], terms.shape[1]
+    k = int(n_hashes)
+    ct = max(1, int(chunk_terms))
+    if not plans:
+        return np.zeros((Q, 0), dtype=np.int32), 0, required
+    storage0 = caches[0].storage
+    W = int(storage0.shape[1])
+    ncols = max(sp.block_end for sp in plans) * W * 32
+    if out is None:
+        out = np.zeros((Q, ncols), dtype=np.int32)
+    l_max = int(n_valid.max(initial=0))
+    if Q == 0 or l_max == 0:
+        return out, n_sh, required
+
+    if order is None:
+        # Popcount estimation uses the first cache's storage and only the
+        # plans addressed against it (multi-host sweeps mix storages);
+        # the order is a heuristic, correctness never depends on it.
+        own = [sp for ca, sp in zip(caches, plans) if ca is caches[0]]
+        order = order_terms_rarest(storage0, own, terms, n_valid,
+                                   n_hashes=k)
+    h = hashing.hash_terms_np(terms, k)                   # [Q, L, k]
+    h_ord = np.take_along_axis(h, np.asarray(order, np.int64)[..., None],
+                               axis=1)
+    n_chunks = -(-l_max // ct)
+    is_topk = topk > 0
+    any_topk = bool(is_topk.any())
+
+    for si in range(start_shard, n_sh):
+        if (should_yield is not None and si > start_shard
+                and should_yield()):
+            return out, si, required
+        sp, cache = plans[si], caches[si]
+        storage = cache.storage
+        dict_coded = storage.shard_codec(sp.shard) in _codec.DICT_CODECS
+
+        def _staged(cache, fn, *a):
+            # Under the cache's own (reentrant) lock so the byte-counter
+            # delta can't absorb a concurrent interactive staging — the
+            # bulk lane runs unserialized against the scoring workers.
+            with cache._lock:
+                b0 = cache.raw_bytes_staged + cache.comp_bytes_staged
+                r = fn(*a)
+                moved = (cache.raw_bytes_staged
+                         + cache.comp_bytes_staged) - b0
+            if moved:
+                stats.tiles_staged += 1
+                stats.bytes_staged += moved
+            return r
+
+        tile = _staged(cache, cache.get_compressed if dict_coded
+                       else cache.get, sp.shard)
+        if si + 1 < n_sh:                     # double-buffer the next tile
+            nsp, ncache = plans[si + 1], caches[si + 1]
+            ndict = ncache.storage.shard_codec(nsp.shard) in \
+                _codec.DICT_CODECS
+            _staged(ncache, ncache.prefetch_compressed if ndict
+                    else ncache.prefetch, nsp.shard)
+
+        nb = int(sp.block_end - sp.block_start)
+        col0, col1 = sp.block_start * W * 32, sp.block_end * W * 32
+        offs = sp.row_offset.astype(np.uint32)
+        wids = sp.block_width.astype(np.uint32)
+        qc = int(query_chunk) if query_chunk else ops.bulk_query_chunk(
+            nb, W, word_block=word_block)
+        # never dispatch slabs wider than the (pow2-padded) set itself —
+        # the VMEM budget is an upper bound, not a padding target
+        qc = min(qc, max(8, 1 << max(0, Q - 1).bit_length()))
+        for q0 in range(0, Q, qc):
+            qn = min(qc, Q - q0)
+            sl = slice(q0, q0 + qn)
+            stats.query_chunks += 1
+            stats.blocks_total += qn * nb
+            # Pad the final slab up to qc so every slab of the sweep
+            # shares one compiled kernel shape; padded queries carry
+            # n_valid = 0 and are fully masked.
+            hv = np.zeros((qc, L, k), dtype=h_ord.dtype)
+            hv[:qn] = h_ord[sl]
+            nv = np.zeros(qc, dtype=np.int32)
+            nv[:qn] = n_valid[sl]
+            req = np.zeros(qc, dtype=np.int64)
+            req[:qn] = required[sl]
+            alive = np.zeros((qc, nb), dtype=bool)
+            alive[:qn] = True
+            acc = ops.chunk_acc_init(qc, nb, W, word_block=word_block)
+            for c in range(n_chunks):
+                j0 = c * ct
+                valid_chunk = (j0 + np.arange(ct, dtype=np.int32)[None, :]
+                               < nv[:, None])
+                live = alive[:, :, None] & valid_chunk[:, None, :]
+                if not live.any():
+                    break
+                h_chunk = np.zeros((qc, ct, k), dtype=h_ord.dtype)
+                width = min(ct, L - j0)
+                h_chunk[:, :width] = hv[:, j0:j0 + width]
+                rows = (h_chunk[..., None] % wids + offs)  # [qc, ct, k, nb]
+                rows = np.transpose(rows, (0, 3, 1, 2)).astype(np.int64)
+                mask = jnp.asarray(live.astype(np.int32))
+                if k == 1:
+                    idx = jnp.asarray(rows[..., 0].astype(np.int32))
+                    if dict_coded:
+                        d, r = tile
+                        acc, bmax = ops.bitslice_chunk_score_multi_comp(
+                            d, r, idx, mask, acc, word_block=word_block)
+                    else:
+                        acc, bmax = ops.bitslice_chunk_score_multi(
+                            tile, idx, mask, acc, word_block=word_block)
+                else:
+                    # k>1: host-plan the chunk's unique row sets, gather
+                    # and AND them on device out of the resident tile.
+                    cells = rows[live]                    # [N, k]
+                    uniq, inv = np.unique(cells, axis=0,
+                                          return_inverse=True)
+                    u_idx = np.zeros((_pad_unique(uniq.shape[0]), k),
+                                     dtype=np.int32)
+                    u_idx[: uniq.shape[0]] = uniq
+                    if dict_coded:
+                        d, r = tile
+                        mat_dev = ops.gather_and_rows_comp(
+                            d, r, jnp.asarray(u_idx))
+                    else:
+                        mat_dev = ops.gather_and_rows(tile,
+                                                      jnp.asarray(u_idx))
+                    indir = np.zeros((qc, nb, ct), dtype=np.int32)
+                    indir[live] = np.asarray(inv).reshape(-1).astype(
+                        np.int32)
+                    acc, bmax = ops.bitslice_chunk_score_dedup(
+                        mat_dev, jnp.asarray(indir), mask, acc,
+                        word_block=word_block)
+                stats.kernel_dispatches += 1
+                if c < n_chunks - 1:
+                    executed = np.minimum(nv, (c + 1) * ct).astype(np.int64)
+                    remaining = nv.astype(np.int64) - executed
+                    keep = (np.asarray(bmax).astype(np.int64)
+                            + remaining[:, None]) >= req[:, None]
+                    newly = alive & ~keep
+                    stats.blocks_pruned += int(newly[:qn].sum())
+                    alive &= keep
+            out[sl, col0:col1] = np.asarray(
+                ops.chunk_acc_scores(acc, W))[:qn]
+        stats.shards_swept += 1
+        if any_topk:
+            # Completed-shard tightening: every accumulated count is a
+            # lower bound on some doc's final score (unswept slots are 0,
+            # pruned slots partial), so the k-th largest is a sound,
+            # monotonically tightening cutoff for the remaining shards.
+            ns = out.shape[1]
+            for q in np.nonzero(is_topk)[0]:
+                kq = int(topk[q])
+                if ns >= kq > 0:
+                    lb = int(np.partition(out[q], ns - kq)[ns - kq])
+                    if lb > required[q]:
+                        required[q] = lb
+    return out, n_sh, required
 
 
 def gather_rows(arena: jnp.ndarray, rows: jnp.ndarray, valid: jnp.ndarray

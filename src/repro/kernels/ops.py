@@ -391,3 +391,52 @@ def and_rows(rows: jnp.ndarray) -> jnp.ndarray:
     """AND over the k hash rows: uint32 [L, k, W] -> [L, W] (jnp; XLA fuses
     this into the surrounding gather — measured no win from a kernel)."""
     return _ref.and_rows_ref(rows)
+
+
+@jax.jit
+def gather_and_rows(arena: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Device-side row-set materialization for the promoted k>1 pruned
+    path: uint32 tile [R, W] resident in HBM, rows int32 [U, k] ->
+    uint32 [U, W] with the k hash rows of each set ANDed in place.
+
+    This replaces the unpromoted path's host mmap reads once a tile is
+    staged — the gather streams out of HBM and XLA fuses the AND into it,
+    so post-promotion chunks never touch the host arena again."""
+    g = arena[rows]                               # [U, k, W]
+    out = g[:, 0]
+    for i in range(1, g.shape[1]):
+        out = out & g[:, i]
+    return out
+
+
+@jax.jit
+def gather_and_rows_comp(dict_rows: jnp.ndarray, refs: jnp.ndarray,
+                         rows: jnp.ndarray) -> jnp.ndarray:
+    """``gather_and_rows`` against a resident (dict, refs) pair: the
+    double gather decodes rowdict-coded rows on the fly, HBM traffic
+    proportional to the dictionary instead of the expanded tile."""
+    g = dict_rows[refs[rows]]                     # [U, k, W]
+    out = g[:, 0]
+    for i in range(1, g.shape[1]):
+        out = out & g[:, i]
+    return out
+
+
+def bulk_query_chunk(nb: int, w: int, *, word_block: int | None = None,
+                     budget_bytes: int = 32 * 2**20, floor: int = 8,
+                     cap: int = 512) -> int:
+    """Query-chunk size for the shard-major bulk executor.
+
+    The bulk lane scores the whole query set against one resident tile in
+    slabs of Qc queries; the dominant live buffer is the running-count
+    accumulator int32 [Qc, nb, Wp, 32], so Qc is chosen to keep that under
+    ``budget_bytes`` (a conservative stand-in for the VMEM/HBM slice the
+    chunk kernels can hold). Rounded down to a power of two so every slab
+    of a sweep shares one compiled kernel shape (the last slab is padded
+    up, never down)."""
+    wb = _word_block(w, word_block)
+    wp = w + ((-w) % wb)
+    per_q = max(1, nb * wp * 32 * 4)
+    q = max(int(floor), int(budget_bytes) // per_q)
+    q = 1 << (q.bit_length() - 1)                 # pow2 floor
+    return int(min(int(cap), max(int(floor), q)))

@@ -20,6 +20,16 @@ in a ServingLoop (dispatcher + scoring workers) behind the binary wire
 protocol — concurrent clients coalesce into shared micro-batches, queue
 overflow answers 429-style REJECTED, Ctrl-C drains and exits. Query it
 with ``repro.serve.NetClient`` or ``benchmarks/serving.py --listen``.
+A ``BulkLane`` is attached to the loop, so clients can submit whole
+query sets over the wire (``NetClient.bulk`` / the BULK frame); they
+sweep shard-major in interactive idle time.
+
+``--bulk FILE`` submits the patterns in FILE (one per line) through the
+offline bulk lane: in --listen mode the job runs alongside network
+traffic, otherwise it runs inline after the load-generation report —
+either way the summary prints arena bytes staged per query, the bulk
+lane's headline number. ``--bulk-checkpoint PATH`` makes every finished
+shard resumable across runs.
 
 Two load models:
 
@@ -150,7 +160,8 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
                             trace_slow_ms: float = 0.0,
                             trace_log=None, pruned: bool = False,
                             prune_chunk: int = 32,
-                            prune_min_rate=None) -> Frontend:
+                            prune_min_rate=None,
+                            adaptive_buckets: bool = False) -> Frontend:
     """Sharded data plane over in-process fake hosts: HRW-place the v2
     manifest rows, open each host's sub-store, wire the hedging frontend
     (per-shard dispatches overlap through ``scatter_threads`` in
@@ -173,7 +184,8 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
         hedge_after_s=hedge_after_s, hedge_auto=hedge_auto,
         scatter_threads=scatter_threads, tracing=tracing,
         trace_slow_ms=trace_slow_ms, trace_log=trace_log,
-        pruned=pruned, prune_chunk=prune_chunk),
+        pruned=pruned, prune_chunk=prune_chunk,
+        adaptive_buckets=adaptive_buckets),
         latency_models=latency_models)
     for n in fail_hosts:
         frontend.fail_worker(n)
@@ -181,6 +193,54 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
         raise SystemExit("placement lost coverage: too many failed hosts "
                          "for the replication factor")
     return frontend
+
+
+def load_bulk_patterns(path) -> list:
+    """One query pattern per line; blank lines and # comments skipped."""
+    patterns = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                patterns.append(line)
+    if not patterns:
+        raise SystemExit(f"--bulk {path}: no patterns")
+    return patterns
+
+
+def submit_bulk_file(lane, args, on_done=None):
+    """Queue the --bulk FILE job (resuming from --bulk-checkpoint when
+    the file already exists)."""
+    resume = None
+    if args.bulk_checkpoint and os.path.exists(args.bulk_checkpoint):
+        from ..serve import BulkJob
+        resume = BulkJob.load(args.bulk_checkpoint)
+        print(f"resuming bulk sweep at shard {resume['next_shard']} "
+              f"from {args.bulk_checkpoint}")
+    threshold = (args.bulk_threshold if args.bulk_threshold is not None
+                 else args.threshold)
+    return lane.submit(load_bulk_patterns(args.bulk),
+                       threshold=None if args.bulk_topk else threshold,
+                       top_k=args.bulk_topk,
+                       pruned=args.prune and not args.bulk_topk,
+                       tag=os.path.basename(args.bulk), resume=resume,
+                       checkpoint_path=args.bulk_checkpoint,
+                       on_done=on_done)
+
+
+def report_bulk(job) -> None:
+    st = job.stats
+    line = (f"bulk[{job.tag}] {job.status.value}: {job.n_queries} queries"
+            f" x {st.shards_swept} shard sweeps in "
+            f"{job.finished_at - job.started_at:.2f}s; staged "
+            f"{st.bytes_staged / 2**20:.2f} MiB total = "
+            f"{job.staged_bytes_per_query:.0f} B/query "
+            f"({st.kernel_dispatches} dispatches)")
+    if st.blocks_total:
+        line += f"; prune rate {st.prune_rate:.0%}"
+    if job.error:
+        line += f"; error: {job.error}"
+    print(line)
 
 
 def main() -> None:
@@ -258,6 +318,26 @@ def main() -> None:
                     help="minimum predicted block-prune rate before a "
                          "batch dispatches pruned (default 0.5; a "
                          "tuner-measured break-even overrides this)")
+    ap.add_argument("--adaptive-buckets", action="store_true",
+                    help="fit micro-batch bucket edges to the observed "
+                         "term-length histogram instead of the fixed "
+                         "term_pad grid (denser batches when query "
+                         "lengths cluster between grid lines)")
+    ap.add_argument("--bulk", default=None, metavar="FILE",
+                    help="sweep the query patterns in FILE (one per "
+                         "line, # comments) through the offline bulk "
+                         "lane — shard-major, each tile staged once for "
+                         "the whole set. Runs alongside network traffic "
+                         "in --listen mode, inline after the load report "
+                         "otherwise")
+    ap.add_argument("--bulk-threshold", type=float, default=None,
+                    help="coverage threshold for the --bulk job "
+                         "(default: --threshold)")
+    ap.add_argument("--bulk-topk", type=int, default=0,
+                    help="top-k mode for the --bulk job (0 = threshold)")
+    ap.add_argument("--bulk-checkpoint", default=None, metavar="PATH",
+                    help="checkpoint the --bulk sweep here after every "
+                         "shard; an existing file resumes the sweep")
     ap.add_argument("--scatter-threads", type=int, default=4,
                     help="multi-host concurrent scatter pool size "
                          "(<= 1 = sequential per-shard dispatch)")
@@ -330,7 +410,8 @@ def main() -> None:
             fail_hosts=args.fail_host, tracing=not args.no_trace,
             trace_slow_ms=args.trace_slow_ms, trace_log=args.trace_log,
             pruned=args.prune, prune_chunk=args.prune_chunk,
-            prune_min_rate=args.prune_min_rate)
+            prune_min_rate=args.prune_min_rate,
+            adaptive_buckets=args.adaptive_buckets)
         down = sorted(set(server.placement.nodes)
                       - set(server.placement.live_nodes))
         print(f"multi-host frontend: {args.hosts} hosts, "
@@ -348,7 +429,8 @@ def main() -> None:
             pruned=args.prune, prune_chunk=args.prune_chunk,
             prune_min_rate=args.prune_min_rate,
             tracing=not args.no_trace, trace_slow_ms=args.trace_slow_ms,
-            trace_log=args.trace_log))
+            trace_log=args.trace_log,
+            adaptive_buckets=args.adaptive_buckets))
         if args.autotune:
             print(f"autotune on: cache="
                   f"{tuning_cache or 'in-memory'}")
@@ -358,12 +440,19 @@ def main() -> None:
         import signal
 
         from ..obs.export import render_prometheus
-        from ..serve import NetServer, ServingLoop
+        from ..serve import BulkLane, NetServer, ServingLoop
         from ..serve.net import PROTO_VERSION
         loop = ServingLoop(server, workers=args.loop_workers)
+        # offline lane: BULK wire frames (and --bulk FILE) sweep in the
+        # interactive lane's idle time, one shard per lock acquisition
+        lane = BulkLane(server, loop).start()
         net = NetServer(loop, host=args.listen_host,
                         port=args.listen).start()
         host, port = net.address
+        if args.bulk:
+            job = submit_bulk_file(lane, args, on_done=report_bulk)
+            print(f"bulk job {job.job_id} queued: {job.n_queries} "
+                  f"queries from {args.bulk}")
 
         def dump_registry(*_sig) -> None:
             # registry metrics lock individually, so this is safe from
@@ -427,6 +516,15 @@ def main() -> None:
           f"-> {snap.served / wall:.0f} qps")
     print(snap.report())
     print(f"accuracy vs ground truth: {correct}/{total}")
+
+    if args.bulk:
+        # inline sweep: same lane, synchronous drain — the report's
+        # B/query line is the staged-bytes win over the interactive path
+        from ..serve import BulkLane
+        lane = BulkLane(server)
+        job = submit_bulk_file(lane, args)
+        lane.drain()
+        report_bulk(job)
 
 
 if __name__ == "__main__":

@@ -14,6 +14,10 @@ Two serving surfaces live here:
   an active dispatcher + scoring workers, and `NetServer`/`NetClient`
   (`net`) speak the length-prefixed binary wire protocol over TCP —
   pipelined sessions, 429-style backpressure replies, graceful drain.
+* the offline bulk lane (`bulk`): `BulkLane` sweeps whole query sets
+  shard-major (each tile staged into HBM once, amortized over every
+  query) in the interactive lane's idle time, with per-shard
+  checkpoints and a `BULK` wire frame for remote submission.
 * the observability plane (`repro.obs`, threaded through every layer):
   request traces with per-stage spans (trace ids ride the wire protocol
   end to end), the metrics registry behind `ServingMetrics` with a
@@ -25,7 +29,8 @@ Two serving surfaces live here:
 """
 from ..obs import (EventLog, KernelProfiler, MetricsRegistry, Span, Trace,
                    Tracer, render_prometheus)
-from .batcher import MicroBatch, MicroBatcher
+from .batcher import MicroBatch, MicroBatcher, fit_bucket_edges
+from .bulk import BulkJob, BulkLane, BulkStatus
 from .cache import LRUCache, result_key, term_key
 from .frontend import Frontend, FrontendConfig
 from .loop import LoopClosed, ServingLoop
@@ -38,7 +43,9 @@ from .step import make_prefill_step, make_decode_step, greedy_generate
 from .worker import ShardWorker
 
 __all__ = [
-    "MicroBatch", "MicroBatcher", "LRUCache", "result_key", "term_key",
+    "MicroBatch", "MicroBatcher", "fit_bucket_edges",
+    "BulkJob", "BulkLane", "BulkStatus",
+    "LRUCache", "result_key", "term_key",
     "MetricsSnapshot", "ServingMetrics", "QueryPlan", "QueryPlanner",
     "QueryRequest", "QueryResponse", "Status", "QueryServer", "ServerConfig",
     "Frontend", "FrontendConfig", "ShardWorker",

@@ -9,7 +9,10 @@ points at: queries are grouped into *buckets* by padded term length
 micro-batch that flushes when it is full, when its oldest entry has waited
 ``max_wait_s``, or on an explicit drain. Bucket count — and therefore the
 jit-cache footprint — is bounded by the term-length spread, not the query
-count.
+count. With ``adaptive=True`` the bucket boundaries are refit to the
+observed term-length histogram (``fit_bucket_edges``), so workloads whose
+lengths cluster between grid lines batch densely instead of padding up to
+the next ``term_pad`` multiple.
 
 Backpressure is a hard cap on queued requests: ``submit`` refuses beyond
 ``max_queued`` and the caller answers the client with Status.REJECTED
@@ -36,6 +39,31 @@ from ..core.query import padded_len
 from .request import QueryRequest
 
 
+def fit_bucket_edges(lengths, *, max_buckets: int = 8, quantum: int = 8
+                     ) -> list[int]:
+    """Bucket edges fitted to an observed term-length histogram.
+
+    Plain ``padded_len(n, term_pad)`` buckets waste up to ``term_pad - 1``
+    padded terms per query when the workload's lengths cluster between
+    multiples. This picks up to ``max_buckets`` edges at the quantiles of
+    the observed distribution, each rounded up to a multiple of
+    ``quantum`` (the sublane granularity the kernels want) — so dense
+    clusters get an edge of their own and the jit cache stays bounded by
+    ``max_buckets`` shapes. Edges are sorted ascending and always cover
+    the observed maximum; an empty sample returns []."""
+    ls = sorted(int(x) for x in lengths if int(x) > 0)
+    if not ls:
+        return []
+    edges: list[int] = []
+    n = len(ls)
+    for i in range(1, max_buckets + 1):
+        idx = max(0, min(n - 1, (i * n) // max_buckets - 1))
+        e = padded_len(ls[idx], quantum)
+        if not edges or e > edges[-1]:
+            edges.append(e)
+    return edges
+
+
 @dataclasses.dataclass
 class MicroBatch:
     """A dense, same-bucket group of live requests ready to score."""
@@ -54,7 +82,10 @@ class MicroBatch:
 
 class MicroBatcher:
     def __init__(self, *, term_pad: int = 64, max_batch: int = 32,
-                 max_wait_s: float = 0.002, max_queued: int = 1024):
+                 max_wait_s: float = 0.002, max_queued: int = 1024,
+                 adaptive: bool = False, adapt_quantum: int = 8,
+                 adapt_buckets: int = 8, adapt_every: int = 256,
+                 adapt_window: int = 4096):
         if max_batch < 1 or max_queued < 1:
             raise ValueError("max_batch and max_queued must be >= 1")
         self.term_pad = term_pad
@@ -65,6 +96,22 @@ class MicroBatcher:
         # bucket visit order (insertion order of first use).
         self._buckets: "OrderedDict[int, deque[QueryRequest]]" = OrderedDict()
         self._queued = 0
+        # Adaptive bucket boundaries: instead of the fixed term_pad grid,
+        # fit edges to the observed term-length histogram every
+        # ``adapt_every`` submissions (``fit_bucket_edges``), so a
+        # workload clustered between grid lines batches densely. The
+        # fitted edges only steer NEW submissions — queued requests keep
+        # the bucket stamped at submit, so every in-flight micro-batch
+        # stays shape-consistent. Queries past the largest fitted edge
+        # fall back to the fixed grid (the edges always cover the
+        # observed maximum, so this only happens on a fresh record).
+        self.adaptive = bool(adaptive)
+        self.adapt_quantum = int(adapt_quantum)
+        self.adapt_buckets = int(adapt_buckets)
+        self.adapt_every = max(1, int(adapt_every))
+        self._observed: "deque[int]" = deque(maxlen=int(adapt_window))
+        self._edges: list[int] = []
+        self._since_fit = 0
 
     # -- enqueue -----------------------------------------------------------
     def __len__(self) -> int:
@@ -74,13 +121,44 @@ class MicroBatcher:
     def full(self) -> bool:
         return self._queued >= self.max_queued
 
+    @property
+    def bucket_edges(self) -> list[int]:
+        """The fitted edges currently steering new submissions ([] =
+        fixed ``term_pad`` grid)."""
+        return list(self._edges)
+
     def bucket_of(self, n_terms: int) -> int:
+        for e in self._edges:
+            if n_terms <= e:
+                return e
         return padded_len(n_terms, self.term_pad)
+
+    def fit(self, lengths=None) -> list[int]:
+        """Refit bucket edges now — from ``lengths`` (a known workload
+        histogram, e.g. a bulk job's term counts) or from the lengths
+        observed so far. Returns the new edges."""
+        sample = self._observed if lengths is None else lengths
+        edges = fit_bucket_edges(sample, max_buckets=self.adapt_buckets,
+                                 quantum=self.adapt_quantum)
+        if edges:
+            self._edges = edges
+        self._since_fit = 0
+        return list(self._edges)
+
+    def observe(self, n_terms: int) -> None:
+        """Record one observed term count (adaptive mode refits every
+        ``adapt_every`` observations)."""
+        self._observed.append(int(n_terms))
+        self._since_fit += 1
+        if self.adaptive and self._since_fit >= self.adapt_every:
+            self.fit()
 
     def submit(self, req: QueryRequest) -> bool:
         """Queue a request; False = refused (backpressure)."""
         if self.full:
             return False
+        if self.adaptive:
+            self.observe(req.n_terms)
         b = self.bucket_of(req.n_terms)
         req.bucket = b
         self._buckets.setdefault(b, deque()).append(req)

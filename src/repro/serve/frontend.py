@@ -52,6 +52,9 @@ class FrontendConfig:
     max_batch: int = 32         # micro-batch cap per bucket
     max_wait_s: float = 0.002   # flush timer for partially-filled buckets
     max_queued: int = 1024      # backpressure cap across all buckets
+    # Fit bucket boundaries to the observed term-length histogram
+    # (MicroBatcher adaptive mode; mirrors ServerConfig).
+    adaptive_buckets: bool = False
     default_threshold: float = 0.8
     default_top_k: int = 10     # k for top_k() convenience calls
     hedge_after_s: float = 0.05  # backup-request deadline per shard dispatch
@@ -123,7 +126,8 @@ class Frontend(ServingBackend):
         self.clock = clock
         self.batcher = MicroBatcher(
             term_pad=config.term_pad, max_batch=config.max_batch,
-            max_wait_s=config.max_wait_s, max_queued=config.max_queued)
+            max_wait_s=config.max_wait_s, max_queued=config.max_queued,
+            adaptive=config.adaptive_buckets)
         self.metrics = ServingMetrics()
         # Observability plane (mirrors QueryServer): tracer + slow-query
         # event log + kernel profiler shared by every worker, all feeding

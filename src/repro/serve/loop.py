@@ -80,6 +80,11 @@ class ServingLoop:
         self._stopping = False
         self._drain = True
         self._threads: list[threading.Thread] = []
+        # Attached offline bulk lane (set by BulkLane(loop=...)): its
+        # sweeps take this loop's lock one shard at a time and yield to
+        # interactive batches between shards; stop() halts it first so a
+        # mid-sweep job checkpoints before the workers join.
+        self.bulk_lane = None
 
     # -- lifecycle -----------------------------------------------------------
     @property
@@ -118,6 +123,8 @@ class ServingLoop:
         every outstanding callback fires before the threads join."""
         if not self._threads:
             return
+        if self.bulk_lane is not None:
+            self.bulk_lane.stop()
         with self._lock:
             self._accepting = False
             self._drain = drain

@@ -84,6 +84,12 @@ class MetricsSnapshot:
     prune_rate: float = 0.0       # killed / considered
     tiles_skipped: int = 0        # shard-tile visits never issued
     pruned_bytes_saved: int = 0   # arena bytes NOT read thanks to pruning
+    # offline bulk lane (0 when no bulk job ever ran)
+    bulk_jobs: int = 0            # jobs finished (any terminal status)
+    bulk_queries: int = 0         # queries scored through the bulk lane
+    bulk_shards_swept: int = 0    # shard sweeps completed
+    bulk_yields: int = 0          # sweep suspensions to interactive work
+    bulk_staged_bytes: int = 0    # arena bytes staged by bulk sweeps
 
     def report(self) -> str:
         meth = " ".join(f"{m}={n}" for m, n in sorted(self.methods.items()))
@@ -123,6 +129,12 @@ class MetricsSnapshot:
                   f"rate={self.prune_rate:.2f} "
                   f"tiles_skipped={self.tiles_skipped} "
                   f"bytes_saved={self.pruned_bytes_saved}B]")
+        if self.bulk_jobs or self.bulk_queries:
+            s += (f" bulk[jobs={self.bulk_jobs} "
+                  f"queries={self.bulk_queries} "
+                  f"shards={self.bulk_shards_swept} "
+                  f"yields={self.bulk_yields} "
+                  f"staged={self.bulk_staged_bytes}B]")
         return s
 
 
@@ -223,6 +235,25 @@ class ServingMetrics:
         self._prune_bytes_saved = r.counter(
             "serve_pruned_bytes_saved_total",
             "arena bytes not read thanks to pruning")
+        # offline bulk lane: shard-major sweeps that run when no
+        # interactive batch is due — per-job outcomes, shard/query
+        # throughput, preemption yields, and the staged-bytes headline
+        self._bulk_jobs = r.counter(
+            "serve_bulk_jobs_total", "bulk jobs by terminal status",
+            labels=("status",))
+        self._bulk_queries = r.counter(
+            "serve_bulk_queries_total",
+            "queries scored through the bulk lane")
+        self._bulk_shards = r.counter(
+            "serve_bulk_shards_total", "bulk shard sweeps completed")
+        self._bulk_yields = r.counter(
+            "serve_bulk_yields_total",
+            "bulk sweep suspensions yielding to interactive work")
+        self._bulk_staged = r.counter(
+            "serve_bulk_staged_bytes_total",
+            "arena bytes staged to device by bulk sweeps")
+        self._bulk_shard_s = h("serve_bulk_shard_seconds",
+                               "wall time per bulk shard sweep")
         # Optional back-reference set by the owning backend so snapshots
         # carry trace counts (finished / slow) without a separate poll.
         self.tracer = None
@@ -313,6 +344,25 @@ class ServingMetrics:
             self._tiles_skipped.inc(tiles_skipped)
         if bytes_saved > 0:
             self._prune_bytes_saved.inc(bytes_saved)
+
+    def record_bulk_shard(self, *, staged_bytes: int,
+                          seconds: float) -> None:
+        """One bulk shard sweep: bytes it staged (0 when the tile was
+        already resident) and its wall time."""
+        self._bulk_shards.inc()
+        if staged_bytes:
+            self._bulk_staged.inc(staged_bytes)
+        self._bulk_shard_s.observe(seconds)
+
+    def record_bulk_yield(self) -> None:
+        """The bulk lane suspended a sweep for due interactive work."""
+        self._bulk_yields.inc()
+
+    def record_bulk_job(self, status: str, *, queries: int) -> None:
+        """A bulk job reached a terminal status."""
+        self._bulk_jobs.labels(status).inc()
+        if queries and status == "done":
+            self._bulk_queries.inc(queries)
 
     def record_worker(self, worker: str, latency_s: float) -> None:
         """One shard dispatch served by ``worker`` (hedged or not)."""
@@ -412,6 +462,26 @@ class ServingMetrics:
         return self._prune_bytes_saved.value
 
     @property
+    def bulk_jobs(self) -> int:
+        return sum(child.value for _, child in self._bulk_jobs.children())
+
+    @property
+    def bulk_queries(self) -> int:
+        return self._bulk_queries.value
+
+    @property
+    def bulk_shards_swept(self) -> int:
+        return self._bulk_shards.value
+
+    @property
+    def bulk_yields(self) -> int:
+        return self._bulk_yields.value
+
+    @property
+    def bulk_staged_bytes(self) -> int:
+        return self._bulk_staged.value
+
+    @property
     def queue_depth(self) -> int:
         return int(self._queue_depth.value)
 
@@ -509,6 +579,11 @@ class ServingMetrics:
                         if self.prune_considered else 0.0),
             tiles_skipped=self.tiles_skipped,
             pruned_bytes_saved=self.pruned_bytes_saved,
+            bulk_jobs=self.bulk_jobs,
+            bulk_queries=self.bulk_queries,
+            bulk_shards_swept=self.bulk_shards_swept,
+            bulk_yields=self.bulk_yields,
+            bulk_staged_bytes=self.bulk_staged_bytes,
             served=n_cacheable,
             rejected=self.rejected,
             dropped=self.dropped,

@@ -46,6 +46,19 @@ OPTIONAL trailing bytes so version-1 frames remain valid:
   JSON metrics snapshot (format 0) or the Prometheus text exposition of
   the whole metrics registry (format 1).
 
+Protocol version 3 (PR 9) adds the offline bulk lane:
+
+* ``BULK`` (client -> server): a whole query set in one frame —
+  client-chosen base request id (u64), threshold (f64, NaN = server
+  default), top_k (u32, 0 = threshold mode), query count, then per
+  query a u32 term count followed by the packed term pairs. The server
+  submits the set to its attached ``BulkLane`` (shard-major sweep that
+  runs in interactive idle time) and answers with ONE ``RESULT`` frame
+  per query at ``rid_base + i`` when the sweep completes — the same
+  RESULT format interactive queries use, so a client demultiplexes both
+  lanes with one reader. A server without a bulk lane answers every
+  query REJECTED immediately.
+
 A server pinned to ``proto_version=1`` (constructor knob) speaks the old
 protocol bit-for-bit — the mixed-version interop tests hold both
 directions: old client against a new server (pinned v1) and raw v1
@@ -79,13 +92,14 @@ from ..obs.export import render_prometheus
 from .loop import LoopClosed, ServingLoop
 from .request import QueryResponse, Status
 
-PROTO_VERSION = 2        # v2: optional trace id / trace block / STATS
+PROTO_VERSION = 3        # v3: BULK query sets (v2: trace / STATS)
 MIN_PROTO_VERSION = 1    # oldest version a client will still talk to
 
 MSG_HELLO = 1
 MSG_QUERY = 2
 MSG_RESULT = 3
 MSG_STATS = 4
+MSG_BULK = 5
 
 STATS_SNAPSHOT = 0       # JSON-encoded MetricsSnapshot
 STATS_PROMETHEUS = 1     # Prometheus text exposition of the registry
@@ -98,6 +112,10 @@ _QUERY = struct.Struct("!BQdIdI")
 # type, rid, status, batch_size, wait_s, service_s, n_terms, cutoff,
 # n_hits, method_len
 _RESULT = struct.Struct("!BQBIddIiIB")
+# type, rid_base, threshold, top_k, n_queries
+_BULK = struct.Struct("!BQdII")
+# per-query header inside a BULK frame: term count
+_BULK_Q = struct.Struct("!I")
 # optional QUERY tail: client-minted trace id
 _TRACE_ID = struct.Struct("!Q")
 # optional RESULT tail header: trace id, n_stages; each stage is a u8
@@ -281,6 +299,42 @@ def decode_stats(payload: bytes) -> tuple[int, bytes]:
     return payload[1], payload[2:]
 
 
+def encode_bulk(rid_base: int, term_sets: list, threshold: Optional[float],
+                top_k: int = 0) -> bytes:
+    """One frame carrying a whole bulk query set; the server replies with
+    one RESULT per query at ``rid_base + i``. Frames are bounded by
+    MAX_FRAME — a client with more queries than fit splits into several
+    BULK frames (each is an independent job)."""
+    th = float("nan") if threshold is None else float(threshold)
+    out = [_BULK.pack(MSG_BULK, rid_base, th, int(top_k), len(term_sets))]
+    for t in term_sets:
+        t = np.ascontiguousarray(t, dtype="<u4")
+        out.append(_BULK_Q.pack(t.shape[0]) + t.tobytes())
+    return b"".join(out)
+
+
+def decode_bulk(payload: bytes
+                ) -> tuple[int, list, Optional[float], int]:
+    (_, rid_base, th, top_k, n_queries) = _BULK.unpack_from(payload)
+    off = _BULK.size
+    term_sets = []
+    for i in range(n_queries):
+        if off + _BULK_Q.size > len(payload):
+            raise ConnectionError(f"BULK frame truncated at query {i}")
+        (nt,) = _BULK_Q.unpack_from(payload, off)
+        off += _BULK_Q.size
+        nb = nt * 8
+        if off + nb > len(payload):
+            raise ConnectionError(f"BULK frame truncated at query {i}")
+        terms = np.frombuffer(payload, dtype="<u4", count=nt * 2,
+                              offset=off).reshape(nt, 2)
+        term_sets.append(terms.astype(np.uint32))
+        off += nb
+    if off != len(payload):
+        raise ConnectionError("BULK frame has trailing bytes")
+    return rid_base, term_sets, None if math.isnan(th) else th, top_k
+
+
 # -- server -------------------------------------------------------------------
 
 def _backend_info(backend) -> tuple[IndexParams, int]:
@@ -432,10 +486,50 @@ class NetServer:
         snap = self.loop.metrics_snapshot()
         return json.dumps(dataclasses.asdict(snap)).encode()
 
+    def _handle_bulk(self, session: _Session, payload: bytes) -> None:
+        """BULK frame: hand the set to the attached bulk lane; the job's
+        completion callback writes one RESULT per query at rid_base + i.
+        No lane (or a lane refusing the job) answers REJECTED — the same
+        429-style contract as interactive backpressure."""
+        rid_base, term_sets, th, top_k = decode_bulk(payload)
+        lane = getattr(self.loop, "bulk_lane", None)
+
+        def reject_all() -> None:
+            for i in range(len(term_sets)):
+                session.send(encode_result(
+                    rid_base + i, QueryResponse(-1, Status.REJECTED)))
+
+        if lane is None:
+            reject_all()
+            return
+
+        def on_done(job, rid_base=rid_base) -> None:
+            if job.results is None:           # failed / cancelled sweep
+                for i in range(job.n_queries):
+                    session.send(encode_result(
+                        rid_base + i,
+                        QueryResponse(-1, Status.FAILED)))
+                return
+            wait_s = max(0.0, job.started_at - job.submitted_at)
+            service_s = max(0.0, job.finished_at - job.started_at)
+            for i, res in enumerate(job.results):
+                session.send(encode_result(
+                    rid_base + i,
+                    QueryResponse(rid_base + i, Status.OK, result=res,
+                                  method="bulk", batch_size=job.n_queries,
+                                  wait_s=wait_s, service_s=service_s)))
+
+        try:
+            lane.submit(term_sets=term_sets, threshold=th, top_k=top_k,
+                        tag=f"net:{rid_base}", on_done=on_done)
+        except (ValueError, RuntimeError):
+            reject_all()
+
     def _serve_conn(self, session: _Session) -> None:
         conn = session.sock
         self.metrics.record_connection(+1)
         v2 = self.proto_version >= 2
+        v3 = self.proto_version >= 3
         owned = True                          # close() may take ownership
         try:
             session.send(encode_hello(self.params, self.n_docs,
@@ -447,6 +541,9 @@ class NetServer:
                 if v2 and payload and payload[0] == MSG_STATS:
                     fmt, _ = decode_stats(payload)
                     session.send(encode_stats(fmt, self._stats_body(fmt)))
+                    continue
+                if v3 and payload and payload[0] == MSG_BULK:
+                    self._handle_bulk(session, payload)
                     continue
                 if not payload or payload[0] != MSG_QUERY:
                     raise ConnectionError(
@@ -593,6 +690,52 @@ class NetClient:
         return self.submit(pattern, terms=terms, top_k=k,
                            deadline_s=deadline_s).result(
                                timeout_s or self.timeout_s)
+
+    # -- bulk lane ----------------------------------------------------------
+    def submit_bulk(self, patterns=None, *, term_sets=None,
+                    threshold: Optional[float] = None,
+                    top_k: int = 0) -> "list[Future[NetResult]]":
+        """Send a whole query set as one BULK frame (protocol >= 3); the
+        server sweeps it through its offline bulk lane in interactive
+        idle time. Returns one Future per query, in submission order —
+        all resolve together when the sweep completes."""
+        if self.proto_version < 3:
+            raise ConnectionError("BULK requires protocol >= 3")
+        if (patterns is None) == (term_sets is None):
+            raise ValueError("pass exactly one of patterns / term_sets")
+        if term_sets is None:
+            term_sets = [compile_pattern(p, self.params) for p in patterns]
+        futs: list[Future] = []
+        with self._flock:
+            if self._closed:
+                raise ConnectionError("client is closed")
+            rid_base = self._next_rid
+            self._next_rid += len(term_sets)
+            for i in range(len(term_sets)):
+                fut: Future = Future()
+                self._futs[rid_base + i] = fut
+                futs.append(fut)
+        payload = encode_bulk(rid_base, term_sets, threshold, top_k)
+        try:
+            with self._wlock:
+                write_frame(self._sock, payload)
+        except OSError as e:
+            with self._flock:
+                for i in range(len(term_sets)):
+                    self._futs.pop(rid_base + i, None)
+            raise ConnectionError(f"send failed: {e}") from e
+        return futs
+
+    def bulk(self, patterns=None, *, term_sets=None,
+             threshold: Optional[float] = None, top_k: int = 0,
+             timeout_s: Optional[float] = None) -> list[NetResult]:
+        """Blocking bulk sweep: one result per query, submission order.
+        Bulk jobs wait for interactive idle time, so pass a generous
+        timeout for a loaded server."""
+        futs = self.submit_bulk(patterns, term_sets=term_sets,
+                                threshold=threshold, top_k=top_k)
+        t = timeout_s or self.timeout_s
+        return [f.result(t) for f in futs]
 
     # -- observability -------------------------------------------------------
     def stats(self, *, prometheus: bool = False,

@@ -51,6 +51,10 @@ class ServerConfig:
     max_batch: int = 32         # micro-batch cap per bucket
     max_wait_s: float = 0.002   # flush timer for partially-filled buckets
     max_queued: int = 1024      # backpressure cap across all buckets
+    # Fit bucket boundaries to the observed term-length histogram instead
+    # of the fixed term_pad grid (MicroBatcher adaptive mode): workloads
+    # whose query lengths cluster between grid lines batch densely.
+    adaptive_buckets: bool = False
     result_cache: int = 1024    # whole-query LRU entries (0 disables)
     row_cache: int = 4096       # single-term row LRU entries (0 disables)
     default_threshold: float = 0.8
@@ -142,7 +146,8 @@ class QueryServer(ServingBackend):
             for s in range(index.storage.n_shards))
         self.batcher = MicroBatcher(
             term_pad=config.term_pad, max_batch=config.max_batch,
-            max_wait_s=config.max_wait_s, max_queued=config.max_queued)
+            max_wait_s=config.max_wait_s, max_queued=config.max_queued,
+            adaptive=config.adaptive_buckets)
         self.metrics = ServingMetrics()
         self.results_cache = LRUCache(config.result_cache)
         self.rows_cache = LRUCache(config.row_cache)

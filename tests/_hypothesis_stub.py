@@ -37,9 +37,14 @@ def sampled_from(elements) -> _Strategy:
     return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
 
 
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
 class strategies:
     integers = staticmethod(integers)
     sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
 
 
 def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,

@@ -1,0 +1,450 @@
+"""Bulk-lane tests: the shard-major executor must be LOSSLESS.
+
+The load-bearing invariant mirrors the pruning suite's: inverting the
+loop order (stage each shard tile once, stream every query against it)
+changes BYTES MOVED, never SCORES. Every bulk path — threshold and
+top-k, raw and rowdict stores, dense and paged layouts, the multi-host
+frontend sweep, the pruned per-shard reuse, checkpoint/resume, and the
+BULK wire frame — must return results bit-identical to the QueryEngine
+oracle, while BulkStats proves the staging amortization actually
+happened.
+
+Satellites covered here too: the adaptive micro-batch bucket fitting,
+and the preemption contract (interactive requests keep completing while
+a sweep is mid-flight).
+"""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import IndexParams, QueryEngine
+from repro.core.query import (compile_pattern, coverage_cutoff,
+                              pad_term_batch, run_shard_major)
+from repro.data import make_corpus
+from repro.index import build_compact_streaming
+from repro.serve import (BulkJob, BulkLane, BulkStatus, QueryServer,
+                         ServerConfig, ServingLoop, Status)
+
+PARAMS = IndexParams(n_hashes=1, fpr=0.03, kmer=15)
+
+
+def _redundant_terms(n_base=24, reps=6, seed=3):
+    c = make_corpus(n_base, k=15, mean_length=160, min_length=120,
+                    seed=seed)
+    return c, [c.doc_terms[i % n_base] for i in range(n_base * reps)]
+
+
+@pytest.fixture(scope="module")
+def stores(tmp_path_factory):
+    """paged raw, paged rowdict, and dense (single-shard) stores over the
+    same corpus — the three executor regimes the sweep must match."""
+    c, terms = _redundant_terms()
+    root = tmp_path_factory.mktemp("bulk-stores")
+    idx_raw, _ = build_compact_streaming(
+        terms, root / "raw", PARAMS, block_docs=32, blocks_per_shard=1,
+        codec="raw")
+    idx_c, _ = build_compact_streaming(
+        terms, root / "comp", PARAMS, block_docs=32, blocks_per_shard=1,
+        codec="rowdict")
+    idx_dense, _ = build_compact_streaming(
+        terms, root / "dense", PARAMS, block_docs=32, blocks_per_shard=64,
+        codec="raw")
+    assert idx_raw.storage.n_shards > 2
+    assert idx_dense.storage.n_shards == 1
+    return c, root, idx_raw, idx_c, idx_dense
+
+
+def _patterns(c, n_random=4, seed=0):
+    rng = np.random.default_rng(seed)
+    pats = ["".join(rng.choice(list("ACGT"), size=70))
+            for _ in range(n_random)]
+    pats += [c.documents[i][10:100] for i in range(4)]
+    return pats
+
+
+def _assert_job_matches(job, engine, pats, *, threshold=None, top_k=0):
+    assert job.status is BulkStatus.DONE, job.error
+    assert len(job.results) == len(pats)
+    for pat, got in zip(pats, job.results):
+        want = (engine.top_k(pat, k=top_k) if top_k
+                else engine.search(pat, threshold=threshold))
+        np.testing.assert_array_equal(got.doc_ids, want.doc_ids)
+        np.testing.assert_array_equal(got.scores, want.scores)
+
+
+# --------------------------------------------------------------------------
+# Shard-major executor: bit-identical to the oracle (property)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([0.3, 0.5, 0.9, 1.0]),
+       st.sampled_from(["raw", "comp", "dense"]),
+       st.booleans(),
+       st.integers(0, 10 ** 6))
+def test_bulk_threshold_matches_oracle(stores, threshold, kind, pruned,
+                                       seed):
+    c, _, idx_raw, idx_c, idx_dense = stores
+    idx = {"raw": idx_raw, "comp": idx_c, "dense": idx_dense}[kind]
+    engine = QueryEngine(idx, compressed=(kind == "comp"))
+    server = QueryServer(idx, ServerConfig(result_cache=0, row_cache=0))
+    lane = BulkLane(server, chunk_terms=16)
+    pats = _patterns(c, seed=seed)
+    job = lane.submit(pats, threshold=threshold, pruned=pruned)
+    lane.drain()
+    _assert_job_matches(job, engine, pats, threshold=threshold)
+    assert job.stats.shards_swept == idx.storage.n_shards
+    assert job.stats.kernel_dispatches > 0 or pruned
+
+
+def test_bulk_top_k_matches_oracle(stores):
+    c, _, idx_raw, idx_c, _ = stores
+    pats = _patterns(c)
+    for idx, comp in ((idx_raw, False), (idx_c, True)):
+        engine = QueryEngine(idx, compressed=comp)
+        server = QueryServer(idx, ServerConfig(result_cache=0,
+                                               row_cache=0))
+        lane = BulkLane(server, chunk_terms=16)
+        for k in (1, 3, 64):
+            job = lane.submit(pats, top_k=k)
+            lane.drain()
+            _assert_job_matches(job, engine, pats, top_k=k)
+
+
+def test_bulk_k2_hashes_matches_oracle(tmp_path):
+    """n_hashes=2: the device gather+AND promotion path end to end."""
+    c, terms = _redundant_terms(n_base=16, reps=4, seed=9)
+    p2 = IndexParams(n_hashes=2, fpr=0.05, kmer=15)
+    idx, _ = build_compact_streaming(
+        terms, tmp_path / "k2", p2, block_docs=32, blocks_per_shard=1)
+    engine = QueryEngine(idx, method="vertical")
+    server = QueryServer(idx, ServerConfig(result_cache=0, row_cache=0))
+    lane = BulkLane(server, chunk_terms=16)
+    pats = _patterns(c)[:5]
+    for thr in (0.5, 1.0):
+        job = lane.submit(pats, threshold=thr)
+        lane.drain()
+        _assert_job_matches(job, engine, pats, threshold=thr)
+    job = lane.submit(pats, top_k=3)
+    lane.drain()
+    _assert_job_matches(job, engine, pats, top_k=3)
+
+
+def test_bulk_multihost_matches_oracle(stores):
+    from repro.index.placement import ShardPlacement
+    from repro.serve.frontend import Frontend, FrontendConfig
+    from repro.serve.worker import ShardWorker
+    c, root, idx_raw, _, _ = stores
+    engine = QueryEngine(idx_raw)
+    n_sh = idx_raw.storage.n_shards
+    placement = ShardPlacement(["w0", "w1"], n_sh, replication=1)
+    workers = {
+        node: ShardWorker(node, root / "raw",
+                          placement.replica_assignment()[node])
+        for node in ("w0", "w1")
+        if placement.replica_assignment()[node]}
+    fe = Frontend(workers, placement,
+                  FrontendConfig(max_wait_s=0.0, scatter_threads=1))
+    lane = BulkLane(fe, chunk_terms=16)
+    pats = _patterns(c)
+    job = lane.submit(pats, threshold=0.5)
+    lane.drain()
+    _assert_job_matches(job, engine, pats, threshold=0.5)
+    job = lane.submit(pats, top_k=4)
+    lane.drain()
+    _assert_job_matches(job, engine, pats, top_k=4)
+
+
+# --------------------------------------------------------------------------
+# The point of the lane: each tile staged once, amortized over the set
+# --------------------------------------------------------------------------
+
+def test_bulk_stages_each_tile_once(stores):
+    c, _, idx_raw, _, _ = stores
+    storage = idx_raw.storage
+    # interactive baseline: one-shard cache, several batches -> restaging
+    tile_bytes = max(storage.shard_nbytes(s)
+                     for s in range(storage.n_shards))
+    srv_i = QueryServer(idx_raw, ServerConfig(
+        max_batch=2, tile_cache_bytes=tile_bytes, result_cache=0,
+        row_cache=0))
+    pats = _patterns(c)
+    for i in range(0, len(pats), 2):
+        for p in pats[i:i + 2]:
+            srv_i.submit(p, threshold=0.3)
+        srv_i.drain()
+    inter = srv_i.tiles.raw_bytes_staged + srv_i.tiles.comp_bytes_staged
+
+    srv_b = QueryServer(idx_raw, ServerConfig(
+        tile_cache_bytes=tile_bytes, result_cache=0, row_cache=0))
+    lane = BulkLane(srv_b)
+    job = lane.submit(pats, threshold=0.3)
+    lane.drain()
+    assert job.status is BulkStatus.DONE, job.error
+    # one (padded) staging per shard, never more — and a multiple less
+    # traffic than the restaging interactive lane moved for the same set
+    # (both lanes stage through the same DeviceTileCache padding)
+    assert job.stats.tiles_staged == storage.n_shards
+    assert 0 < job.stats.bytes_staged * 2 <= inter
+    assert job.staged_bytes_per_query * len(pats) == job.stats.bytes_staged
+
+
+# --------------------------------------------------------------------------
+# Checkpoint / resume: finished shards are never rescored
+# --------------------------------------------------------------------------
+
+def test_bulk_checkpoint_resume(stores, tmp_path):
+    c, _, idx_raw, _, _ = stores
+    engine = QueryEngine(idx_raw)
+    pats = _patterns(c)
+    server = QueryServer(idx_raw, ServerConfig(result_cache=0,
+                                               row_cache=0))
+    lane = BulkLane(server, chunk_terms=16)
+    job = lane.submit(pats, threshold=0.5,
+                      checkpoint_path=tmp_path / "ck.npz")
+    caches, plans = lane._targets()
+    job.shards_total = len(plans)
+    lane._step(job, caches, plans)       # sweep exactly one shard
+    assert job.next_shard == 1
+    ck = BulkJob.load(tmp_path / "ck.npz")     # written by _step
+    assert ck["next_shard"] == 1
+    # a fresh lane resumes from the persisted state and only sweeps the
+    # remaining shards
+    server2 = QueryServer(idx_raw, ServerConfig(result_cache=0,
+                                                row_cache=0))
+    lane2 = BulkLane(server2, chunk_terms=16)
+    job2 = lane2.submit(pats, threshold=0.5, resume=ck)
+    lane2.drain()
+    assert job2.stats.shards_swept == idx_raw.storage.n_shards - 1
+    _assert_job_matches(job2, engine, pats, threshold=0.5)
+    # in-memory checkpoint dict round-trips the same way
+    ck2 = job.checkpoint()
+    server3 = QueryServer(idx_raw, ServerConfig(result_cache=0,
+                                                row_cache=0))
+    lane3 = BulkLane(server3, chunk_terms=16)
+    job3 = lane3.submit(pats, threshold=0.5, resume=ck2)
+    lane3.drain()
+    _assert_job_matches(job3, engine, pats, threshold=0.5)
+
+
+def test_run_shard_major_suspend_resume(stores):
+    """The executor itself suspends at any shard boundary and picks up
+    from the returned state."""
+    c, _, idx_raw, _, _ = stores
+    engine = QueryEngine(idx_raw)
+    pats = _patterns(c)
+    term_sets = [compile_pattern(p, PARAMS) for p in pats]
+    buf, ells = pad_term_batch(term_sets, 8)
+    ells = np.asarray(ells, np.int32)
+    required = np.array([coverage_cutoff(0.5, int(e)) for e in ells],
+                        np.int64)
+    topk = np.zeros(len(ells), np.int32)
+    server = QueryServer(idx_raw, ServerConfig(result_cache=0,
+                                               row_cache=0))
+    plans = server.planner.shard_plans
+    out, nxt, req = None, 0, required
+    hops = 0
+    while nxt < len(plans):
+        out, nxt, req = run_shard_major(
+            server.tiles, plans, buf, ells, req, topk,
+            n_hashes=PARAMS.n_hashes, start_shard=nxt, out=out,
+            should_yield=lambda: True)      # stop after every shard
+        hops += 1
+    assert hops == len(plans)
+    host_slot = np.asarray(idx_raw.layout.doc_slot)
+    from repro.core.query import select_hits
+    for i, pat in enumerate(pats):
+        want = engine.search(pat, threshold=0.5)
+        got = select_hits(out[i][host_slot], int(ells[i]), 0.5)
+        np.testing.assert_array_equal(got.doc_ids, want.doc_ids)
+        np.testing.assert_array_equal(got.scores, want.scores)
+
+
+# --------------------------------------------------------------------------
+# Preemption: interactive traffic keeps flowing mid-sweep
+# --------------------------------------------------------------------------
+
+def test_bulk_preemption_interactive_liveness(stores):
+    c, _, idx_raw, _, _ = stores
+    engine = QueryEngine(idx_raw)
+    server = QueryServer(idx_raw, ServerConfig(result_cache=0,
+                                               row_cache=0,
+                                               max_wait_s=0.0))
+    loop = ServingLoop(server).start()
+    lane = BulkLane(server, loop, chunk_terms=8).start()
+    try:
+        pats = _patterns(c)
+        # a wide sweep: many queries so every shard does real work
+        job = lane.submit(pats * 8, threshold=0.5)
+        done = threading.Event()
+        inter: list = []
+
+        def on_done(resp, _l=inter):
+            _l.append(resp)
+            if len(_l) == len(pats):
+                done.set()
+
+        for p in pats:
+            loop.submit(p, threshold=0.5, on_done=on_done)
+        assert done.wait(60.0), "interactive queries starved by the sweep"
+        assert all(r.status == Status.OK for r in inter)
+        assert job.wait(120.0), "bulk sweep never finished"
+        _assert_job_matches(job, engine, pats * 8, threshold=0.5)
+        snap = server.metrics.snapshot()
+        assert snap.bulk_jobs == 1
+        assert snap.bulk_queries == len(pats) * 8
+        assert snap.bulk_shards_swept == idx_raw.storage.n_shards
+        assert snap.bulk_staged_bytes == job.stats.bytes_staged
+        assert "bulk[" in snap.report()
+    finally:
+        loop.stop()
+    assert lane._thread is None          # loop.stop() halted the lane
+
+
+def test_bulk_lane_stop_requeues_running_job(stores):
+    c, _, idx_raw, _, _ = stores
+    server = QueryServer(idx_raw, ServerConfig(result_cache=0,
+                                               row_cache=0))
+    lane = BulkLane(server, chunk_terms=8)
+    pats = _patterns(c)
+    job = lane.submit(pats, threshold=0.5)
+    caches, plans = lane._targets()
+    job.shards_total = len(plans)
+    job.status = BulkStatus.RUNNING
+    lane._step(job, caches, plans)       # mid-sweep state exists
+    assert 0 < job.next_shard < job.shards_total
+    # cancel only works on queued jobs; the running one keeps its state
+    assert not lane.cancel(job.job_id)
+    job2 = lane.submit(pats, top_k=2)
+    assert lane.cancel(job2.job_id)
+    assert job2.status is BulkStatus.CANCELLED
+    assert job2.done.is_set()
+
+
+def test_bulk_submit_validation(stores):
+    _, _, idx_raw, _, _ = stores
+    server = QueryServer(idx_raw)
+    lane = BulkLane(server)
+    with pytest.raises(ValueError):
+        lane.submit(term_sets=[np.zeros((4, 2), np.uint32)], top_k=3,
+                    pruned=True)
+
+
+# --------------------------------------------------------------------------
+# Satellite: adaptive micro-batch bucket edges
+# --------------------------------------------------------------------------
+
+def test_fit_bucket_edges_properties():
+    from repro.serve import fit_bucket_edges
+    assert fit_bucket_edges([]) == []
+    lengths = [17, 18, 19, 20, 21, 22, 23, 150]
+    edges = fit_bucket_edges(lengths, max_buckets=4, quantum=8)
+    assert edges == sorted(set(edges))             # ascending, unique
+    assert all(e % 8 == 0 for e in edges)
+    assert len(edges) <= 4
+    assert edges[-1] >= max(lengths)               # covers the maximum
+    assert edges[0] <= 24                          # cluster got its edge
+
+
+def test_adaptive_batcher_densifies_clustered_lengths():
+    from repro.serve import MicroBatcher
+    from repro.serve.request import QueryRequest
+
+    def req(i, n):
+        return QueryRequest(request_id=i, terms=np.zeros((n, 2),
+                                                         np.uint32),
+                            n_terms=n, threshold=0.5, submitted_at=0.0)
+
+    fixed = MicroBatcher(term_pad=64, adaptive=False)
+    adap = MicroBatcher(term_pad=64, adaptive=True, adapt_every=32,
+                        adapt_quantum=8)
+    # a workload clustered at ~20 terms: the fixed grid pads to 64,
+    # the adaptive one converges on a 24-wide bucket
+    for i in range(64):
+        fixed.submit(req(i, 20))
+        adap.submit(req(i, 20))
+    assert fixed.bucket_of(20) == 64
+    assert adap.bucket_edges                      # a fit happened
+    assert adap.bucket_of(20) <= 24
+    # queued requests keep their stamped bucket even after a refit
+    r = req(999, 20)
+    adap.submit(r)
+    stamped = r.bucket
+    adap.fit([100, 200, 300])
+    assert r.bucket == stamped
+    # beyond the largest fitted edge: fixed-grid fallback
+    assert adap.bucket_of(10 ** 4) == 64 * (10 ** 4 // 64 + 1)
+    # explicit fit from a known histogram (a bulk job's term counts)
+    m = MicroBatcher(term_pad=64)
+    m.fit([30, 31, 33])
+    assert m.bucket_of(31) == 32
+    assert m.bucket_of(33) == 40
+
+
+# --------------------------------------------------------------------------
+# BULK wire frame: whole query sets over the wire
+# --------------------------------------------------------------------------
+
+def test_bulk_frame_roundtrip():
+    from repro.serve.net import decode_bulk, encode_bulk
+    rng = np.random.default_rng(0)
+    sets = [rng.integers(0, 2 ** 32, size=(n, 2), dtype=np.uint32)
+            for n in (3, 1, 7)]
+    rid, back, th, tk = decode_bulk(encode_bulk(41, sets, 0.75, 0))
+    assert rid == 41 and th == 0.75 and tk == 0
+    for a, b in zip(sets, back):
+        np.testing.assert_array_equal(a, b)
+    _, _, th, tk = decode_bulk(encode_bulk(0, sets, None, 5))
+    assert th is None and tk == 5
+    with pytest.raises(ConnectionError):
+        decode_bulk(encode_bulk(0, sets, None, 5)[:-3])
+
+
+def test_bulk_over_the_wire(stores):
+    from repro.serve import NetClient, NetServer
+    c, _, idx_raw, _, _ = stores
+    engine = QueryEngine(idx_raw)
+    server = QueryServer(idx_raw, ServerConfig(result_cache=0,
+                                               row_cache=0))
+    loop = ServingLoop(server)
+    lane = BulkLane(server, loop, chunk_terms=16).start()
+    net = NetServer(loop).start()
+    host, port = net.address
+    pats = _patterns(c)
+    try:
+        with NetClient(host, port) as cl:
+            assert cl.proto_version >= 3
+            res = cl.bulk(pats, threshold=0.5, timeout_s=120.0)
+            # an interactive query interleaves on the same session
+            one = cl.search(pats[0], threshold=0.5)
+            res_k = cl.bulk(pats, top_k=3, timeout_s=120.0)
+        for pat, r in zip(pats, res):
+            assert r.status == Status.OK and r.method == "bulk"
+            want = engine.search(pat, threshold=0.5)
+            np.testing.assert_array_equal(r.result.doc_ids, want.doc_ids)
+            np.testing.assert_array_equal(r.result.scores, want.scores)
+        for pat, r in zip(pats, res_k):
+            want = engine.top_k(pat, k=3)
+            np.testing.assert_array_equal(r.result.doc_ids, want.doc_ids)
+            np.testing.assert_array_equal(r.result.scores, want.scores)
+        assert one.status == Status.OK
+    finally:
+        net.close()
+
+
+def test_bulk_frame_without_lane_rejected(stores):
+    from repro.serve import NetClient, NetServer
+    c, _, idx_raw, _, _ = stores
+    server = QueryServer(idx_raw)
+    loop = ServingLoop(server)                 # no BulkLane attached
+    net = NetServer(loop).start()
+    host, port = net.address
+    try:
+        with NetClient(host, port) as cl:
+            res = cl.bulk(_patterns(c)[:3], threshold=0.5,
+                          timeout_s=30.0)
+        assert all(r.status == Status.REJECTED for r in res)
+    finally:
+        net.close()
