@@ -25,10 +25,20 @@ single request must come back with SOME status (OK or the 429-style
 REJECTED) — nothing silently lost, nothing hung. Open loop: Poisson
 arrivals across the client fleet.
 
+``run_rpc`` measures the RPC data plane (``--rpc``): the same queries
+through the in-process scatter frontend vs an RpcFrontend whose every
+shard dispatch is a real SHARD_QUERY/SHARD_RESULT socket round trip to
+an in-process WorkerServer fleet (dispatch-overhead delta), then the
+hedged-cancel win — a wall-clock straggling worker, hedge-off vs
+hedge-on p99, with the loser's worker-side ``cancelled_tiles`` counter
+reported as the 'observably cancelled' datum.
+
     PYTHONPATH=src python -m benchmarks.serving --hosts 3 \\
         --json results/serving_multihost.json
     PYTHONPATH=src python -m benchmarks.serving --listen \\
         --json results/BENCH_net_serving.json
+    PYTHONPATH=src python -m benchmarks.serving --rpc \\
+        --json results/BENCH_rpc.json
 """
 from __future__ import annotations
 
@@ -189,6 +199,130 @@ def _run_multihost(tmp_root, n_docs: int, n_queries: int,
     if p99_on > 0:
         emit("serving/multihost/hedge_p99_improvement", p99_off / p99_on,
              f"off={p99_off:.3f}ms;on={p99_on:.3f}ms")
+    return out
+
+
+# --------------------------------------------------------------------------
+# RPC data plane: real per-shard sockets, cancellable hedges
+# --------------------------------------------------------------------------
+
+def _rpc_fleet(store, nodes, *, straggle=None, **cfg):
+    """(frontend, servers) over in-process WorkerServers on ephemeral
+    localhost ports — same wire protocol, channels and hedged dispatch
+    as separate ``--worker`` processes, minus the process-spawn cost, so
+    the delta against the in-process scatter path isolates pure RPC
+    overhead (serialize + socket round trip + deserialize)."""
+    from repro.index import ShardPlacement
+    from repro.serve import (FrontendConfig, RpcFrontend, ShardWorker,
+                             WorkerPool, WorkerServer)
+
+    placement = ShardPlacement.for_store(
+        store, nodes, replication=min(2, len(nodes)))
+    held = placement.replica_assignment()
+    straggle = straggle or {}
+    servers = {n: WorkerServer(ShardWorker(n, store, held[n]),
+                               straggle_s=straggle.get(n, 0.0)).start()
+               for n in nodes if held[n]}
+    pool = WorkerPool({n: s.address for n, s in servers.items()})
+    pool.wait_connected()
+    fe = RpcFrontend(pool, placement,
+                     FrontendConfig(max_wait_s=0.0, **cfg))
+    return fe, servers
+
+
+def run_rpc(n_docs: int = 256, n_queries: int = 48) -> dict:
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        return _run_rpc(td, n_docs, n_queries)
+
+
+def _run_rpc(tmp_root, n_docs: int, n_queries: int) -> dict:
+    """In-process vs RPC dispatch overhead, then the hedged-cancel win:
+    a straggling worker is injected at the WorkerServer (wall-clock
+    sleeps, cancellable between shard tiles) and the hedge-on pass must
+    pull p99 back to roughly hedge_after + base while the loser's
+    ``cancelled_tiles`` counter moves — the 'observably cancelled'
+    datum, measured end to end over real sockets."""
+    from repro.index import ShardPlacement
+
+    c, store = _build_store(n_docs, tmp_root)
+    queries, _ = make_workload(c, n_queries, seed=79)
+    nodes = ["w0", "w1", "w2"]
+    out = {}
+
+    # -- dispatch overhead: in-process scatter vs real RPC fan-out ----------
+    fe = make_multihost_frontend(store, hosts=len(nodes), replication=2,
+                                 max_batch=32, max_wait_s=0.0,
+                                 hedge_after_s=1e9)
+    _warm(fe, lambda: run_closed(fe, queries, 0.8, 32))
+    t0 = time.perf_counter()
+    run_closed(fe, queries, 0.8, 32)
+    wall = time.perf_counter() - t0
+    snap = fe.metrics.snapshot()
+    inproc_us = wall / snap.served * 1e6
+    emit("serving/rpc/inproc", inproc_us,
+         f"qps={snap.served / wall:.0f};p50_ms={snap.p50_ms:.2f};"
+         f"p99_ms={snap.p99_ms:.2f}")
+    out["inproc_us"] = inproc_us
+
+    fe, servers = _rpc_fleet(store, nodes, hedge_after_s=1e9)
+    try:
+        _warm(fe, lambda: run_closed(fe, queries, 0.8, 32))
+        t0 = time.perf_counter()
+        run_closed(fe, queries, 0.8, 32)
+        wall = time.perf_counter() - t0
+        snap = fe.metrics.snapshot()
+        rpc_us = wall / snap.served * 1e6
+        emit("serving/rpc/remote", rpc_us,
+             f"qps={snap.served / wall:.0f};p50_ms={snap.p50_ms:.2f};"
+             f"p99_ms={snap.p99_ms:.2f};rpcs={snap.rpcs_sent};"
+             f"channels_up={snap.channels_up}")
+        out["rpc_us"] = rpc_us
+        emit("serving/rpc/dispatch_overhead", rpc_us - inproc_us,
+             f"ratio={rpc_us / max(inproc_us, 1e-9):.2f}x")
+        out["overhead_ratio"] = rpc_us / max(inproc_us, 1e-9)
+    finally:
+        fe.close()
+        for s in servers.values():
+            s.close()
+
+    # -- hedged-cancel win: wall-clock straggler, loser told on the wire ----
+    placement = ShardPlacement.for_store(store, nodes, replication=2)
+    straggler = placement.owner(0)        # a node that owns a primary
+    hq = queries[:min(16, len(queries))]
+    for label, hedge_after in (("hedge_off", 1e9), ("hedge_on", 0.01)):
+        fe, servers = _rpc_fleet(store, nodes,
+                                 straggle={straggler: 0.08},
+                                 hedge_after_s=hedge_after)
+        try:
+            run_closed(fe, hq, 0.8, 8)    # warm (kernels + channels)
+            fe.pop_responses()
+            fe.reset_metrics()
+            run_closed(fe, hq, 0.8, 8)
+            snap = fe.metrics.snapshot()
+            ex = fe.executor
+            ctiles = fe.pool.channel(straggler).stats()["cancelled_tiles"]
+            emit(f"serving/rpc/{label}/p99", snap.p99_ms * 1e3,
+                 f"p50_ms={snap.p50_ms:.2f};p99_ms={snap.p99_ms:.2f};"
+                 f"hedges_fired={ex.hedges_fired};"
+                 f"hedges_won={ex.hedges_won};"
+                 f"hedges_cancelled={ex.hedges_cancelled};"
+                 f"cancelled_tiles={ctiles}")
+            out[label] = {"p50_ms": snap.p50_ms, "p99_ms": snap.p99_ms,
+                          "hedges_fired": ex.hedges_fired,
+                          "hedges_cancelled": ex.hedges_cancelled,
+                          "cancelled_tiles": ctiles}
+        finally:
+            fe.close()
+            for s in servers.values():
+                s.close()
+    p99_off = out["hedge_off"]["p99_ms"]
+    p99_on = out["hedge_on"]["p99_ms"]
+    if p99_on > 0:
+        emit("serving/rpc/hedge_p99_improvement", p99_off / p99_on,
+             f"off={p99_off:.2f}ms;on={p99_on:.2f}ms;"
+             f"cancelled_tiles={out['hedge_on']['cancelled_tiles']}")
+        out["hedge_p99_improvement"] = p99_off / p99_on
     return out
 
 
@@ -383,6 +517,10 @@ def main() -> None:
                     help="run the network serving bench (in-process "
                          "NetServer on an ephemeral port, concurrent "
                          "NetClient load) instead of the multi-host one")
+    ap.add_argument("--rpc", action="store_true",
+                    help="run the RPC data-plane bench: in-process vs "
+                         "RPC per-shard dispatch overhead, plus the "
+                         "hedged-cancel win under a wall-clock straggler")
     ap.add_argument("--connect", default=None, metavar="HOST:PORT",
                     help="with --listen: drive the load against an "
                          "EXTERNAL server (repro.launch.serve --listen) "
@@ -395,9 +533,14 @@ def main() -> None:
     if args.connect and not args.listen:
         ap.error("--connect requires --listen (it selects the socket "
                  "bench and points it at an external server)")
+    if args.rpc and args.listen:
+        ap.error("--rpc and --listen are separate benches; pick one")
 
     print("name,us_per_call,derived")
-    if args.listen:
+    if args.rpc:
+        bench, extra = "rpc_serving", {}
+        run_rpc(args.n_docs, args.queries)
+    elif args.listen:
         bench, extra = "net_serving", {"clients": args.clients}
         if args.connect:
             host, port = args.connect.rsplit(":", 1)

@@ -48,6 +48,34 @@ with hedged dispatch (``--hedge-after-ms``) and gathers the final top-k.
 ``--fail-host`` marks hosts down before the measured run to demo replica
 failover.
 
+Real multi-PROCESS serving (PR 10) splits those fake hosts into process
+roles over the v4 wire protocol:
+
+* ``--worker NAME`` — run this process as ONE ShardWorker behind its own
+  WorkerServer. The logical node list (``--worker-nodes n0,n1,n2``) plus
+  the store manifest determine the HRW placement deterministically, so
+  every process computes the same shard->node map without coordination;
+  ``--worker-port`` picks the bind port (0 = OS-assigned) and
+  ``--port-file PATH`` atomically publishes "host port" once bound —
+  the launcher/tests discover OS-assigned ports from it.
+  ``--straggle-ms`` injects a per-dispatch straggler tail (cancellation-
+  aware) for hedging demos/benches.
+* ``--workers n0=host:port,n1=@portfile,...`` — run this process as the
+  frontend: dial every worker through the reconnecting channel pool
+  (``repro.serve.rpc.WorkerPool``) and scatter every shard dispatch as a
+  real RPC with wall-clock hedging and CANCEL-on-win. Combine with
+  ``--listen`` for the TCP front door, or without it to drive the
+  generated load through the RPC plane.
+
+    # terminal 1..3: three workers on localhost (OS-assigned ports)
+    python -m repro.launch.serve --store-format v2 --index-dir /tmp/store \\
+        --worker host0 --worker-nodes host0,host1,host2 \\
+        --port-file /tmp/w0.port          # likewise host1, host2
+    # terminal 4: the frontend, dialing the port files
+    python -m repro.launch.serve --store-format v2 --index-dir /tmp/store \\
+        --workers host0=@/tmp/w0.port,host1=@/tmp/w1.port,host2=@/tmp/w2.port \\
+        --listen 7070
+
 Results are validated against the ground-truth origin labels of the
 synthetic query set, and the report includes the planner's kernel mix and
 cache hit rate alongside p50/p99 (plus per-worker latency, hedge-fire
@@ -192,6 +220,138 @@ def make_multihost_frontend(store_dir, *, hosts: int, replication: int,
     if not placement.is_covered():
         raise SystemExit("placement lost coverage: too many failed hosts "
                          "for the replication factor")
+    return frontend
+
+
+def run_worker(args) -> None:
+    """Process role: serve ONE placement node's shard replicas over the
+    v4 wire protocol until interrupted (see module docstring). The node
+    list + store manifest pin the HRW placement, so this process opens
+    exactly the shards the frontend will route to it — no coordination
+    beyond agreeing on ``--worker-nodes`` and ``--replication``."""
+    from ..index import ShardPlacement
+    from ..serve.net import PROTO_VERSION
+    from ..serve.rpc import WorkerServer
+
+    if not os.path.exists(os.path.join(args.index_dir, "manifest.json")):
+        raise SystemExit(
+            f"--worker needs an existing v2 store at {args.index_dir}; "
+            "build it first (any non-worker run with --store-format v2 "
+            "--index-dir builds one)")
+    nodes = (args.worker_nodes.split(",") if args.worker_nodes
+             else [f"host{i}" for i in range(args.hosts)])
+    if args.worker not in nodes:
+        raise SystemExit(f"--worker {args.worker} is not in the node list "
+                         f"{nodes} (pass --worker-nodes, identically on "
+                         "every process)")
+    placement = ShardPlacement.for_store(
+        args.index_dir, nodes, replication=min(args.replication, len(nodes)))
+    held = placement.replica_assignment()[args.worker]
+    if not held:
+        raise SystemExit(f"node {args.worker} holds no shards under this "
+                         f"placement ({len(nodes)} nodes x "
+                         f"{placement.n_shards} shards); nothing to serve")
+    tile_bytes = (None if args.tile_cache_mib is None
+                  else int(args.tile_cache_mib * 2**20))
+    worker = ShardWorker(args.worker, args.index_dir, held,
+                         tile_cache_bytes=tile_bytes,
+                         word_block=args.word_block, pruned=args.prune,
+                         prune_chunk=args.prune_chunk,
+                         prune_min_rate=args.prune_min_rate)
+    srv = WorkerServer(worker, host=args.listen_host,
+                       port=args.worker_port,
+                       straggle_s=args.straggle_ms / 1e3).start()
+    host, port = srv.address
+    if args.port_file:
+        # atomic publish so a waiter never reads a torn file
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"{host} {port}\n")
+        os.replace(tmp, args.port_file)
+    print(f"worker {args.worker}: {len(held)} shard(s) {sorted(held)} "
+          f"on {host}:{port} (wire v{PROTO_VERSION})", flush=True)
+    try:
+        while True:
+            time.sleep(1.0)
+    except KeyboardInterrupt:
+        pass
+    srv.close()
+
+
+def _read_port_file(path: str, timeout_s: float) -> tuple[str, int]:
+    """Wait for a worker's --port-file and return (host, port)."""
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        try:
+            with open(path) as f:
+                parts = f.read().split()
+            if len(parts) == 2:
+                return parts[0], int(parts[1])
+        except (FileNotFoundError, ValueError):
+            pass
+        time.sleep(0.05)
+    raise SystemExit(f"timed out after {timeout_s:.0f}s waiting for "
+                     f"worker port file {path}")
+
+
+def parse_worker_spec(spec: str, timeout_s: float = 30.0
+                      ) -> dict[str, tuple[str, int]]:
+    """--workers value -> {node: (host, port)}. Entries are comma-
+    separated ``node=host:port``, or ``node=@portfile`` to read (and wait
+    for) the --port-file a worker process publishes."""
+    out: dict[str, tuple[str, int]] = {}
+    for part in spec.split(","):
+        name, eq, addr = part.strip().partition("=")
+        if not (eq and name and addr):
+            raise SystemExit(f"--workers entry {part!r}: expected "
+                             "node=host:port or node=@portfile")
+        if addr.startswith("@"):
+            out[name] = _read_port_file(addr[1:], timeout_s)
+        else:
+            host, _, port = addr.rpartition(":")
+            try:
+                out[name] = (host or "127.0.0.1", int(port))
+            except ValueError:
+                raise SystemExit(
+                    f"--workers entry {part!r}: bad port") from None
+    return out
+
+
+def make_rpc_frontend(store_dir, worker_addrs, *, replication: int,
+                      max_batch: int, max_wait_s: float,
+                      hedge_after_s: float, hedge_auto: bool = False,
+                      scatter_threads: int = 4, tracing: bool = True,
+                      trace_slow_ms: float = 0.0, trace_log=None,
+                      pruned: bool = False, prune_chunk: int = 32,
+                      adaptive_buckets: bool = False,
+                      connect_timeout_s: float = 15.0):
+    """Networked data plane: dial every worker process through the
+    reconnecting channel pool and scatter per-shard dispatches as real
+    RPCs — wall-clock hedged backups, CANCEL-on-win, replica failover."""
+    from ..index import ShardPlacement
+    from ..serve.rpc import RpcFrontend, WorkerPool
+
+    nodes = list(worker_addrs)
+    placement = ShardPlacement.for_store(
+        store_dir, nodes, replication=min(replication, len(nodes)))
+    pool = WorkerPool(worker_addrs)
+    try:
+        pool.wait_connected(timeout_s=connect_timeout_s)
+    except TimeoutError as e:
+        pool.close()
+        raise SystemExit(str(e)) from None
+    frontend = RpcFrontend(pool, placement, FrontendConfig(
+        max_batch=max_batch, max_wait_s=max_wait_s,
+        hedge_after_s=hedge_after_s, hedge_auto=hedge_auto,
+        scatter_threads=scatter_threads, tracing=tracing,
+        trace_slow_ms=trace_slow_ms, trace_log=trace_log,
+        pruned=pruned, prune_chunk=prune_chunk,
+        adaptive_buckets=adaptive_buckets))
+    gaps = frontend.verify_placement()
+    if gaps:
+        print(f"warning: workers missing placement shards: {gaps} "
+              "(check --worker-nodes / --replication match on every "
+              "process)")
     return frontend
 
 
@@ -341,6 +501,38 @@ def main() -> None:
     ap.add_argument("--scatter-threads", type=int, default=4,
                     help="multi-host concurrent scatter pool size "
                          "(<= 1 = sequential per-shard dispatch)")
+    ap.add_argument("--worker", default=None, metavar="NAME",
+                    help="process role: serve placement node NAME's shard "
+                         "replicas over the v4 wire protocol "
+                         "(WorkerServer) instead of generating load. "
+                         "Needs an existing v2 store; pair with "
+                         "--worker-nodes / --worker-port / --port-file")
+    ap.add_argument("--worker-nodes", default=None, metavar="N0,N1,...",
+                    help="full logical node list for the HRW placement; "
+                         "must be identical on every worker and the "
+                         "frontend (default: host0..host{--hosts-1})")
+    ap.add_argument("--worker-port", type=int, default=0, metavar="PORT",
+                    help="bind port for --worker (0 = OS-assigned; "
+                         "published via --port-file)")
+    ap.add_argument("--port-file", default=None, metavar="PATH",
+                    help="--worker writes 'host port' here (atomically) "
+                         "once bound — launchers/tests read it to "
+                         "discover OS-assigned ports")
+    ap.add_argument("--straggle-ms", type=float, default=0.0,
+                    help="--worker only: sleep this long before every "
+                         "dispatch (cancellation-aware) — an injected "
+                         "straggler for hedging demos and benches")
+    ap.add_argument("--workers", default=None,
+                    metavar="N0=HOST:PORT,N1=@PORTFILE,...",
+                    help="process role: frontend over the RPC data plane "
+                         "— dial these worker processes through the "
+                         "reconnecting channel pool and scatter every "
+                         "shard dispatch as a real hedged RPC. "
+                         "@portfile entries wait for a --port-file. "
+                         "Combine with --listen for the TCP front door")
+    ap.add_argument("--connect-timeout", type=float, default=15.0,
+                    help="seconds to wait for --workers port files and "
+                         "first connections")
     ap.add_argument("--listen", type=int, default=None, metavar="PORT",
                     help="serve over TCP instead of generating load: "
                          "active ServingLoop + wire protocol on this "
@@ -387,6 +579,16 @@ def main() -> None:
     if args.hosts > 1 and not (args.store_format == "v2" and args.index_dir):
         ap.error("--hosts > 1 requires --store-format v2 --index-dir (the "
                  "shard files are the placement unit)")
+    if args.worker and args.workers:
+        ap.error("--worker and --workers are mutually exclusive process "
+                 "roles")
+    if (args.worker or args.workers) and not (args.store_format == "v2"
+                                              and args.index_dir):
+        ap.error("--worker/--workers require --store-format v2 "
+                 "--index-dir (the shard files are the placement unit)")
+    if args.worker:
+        run_worker(args)
+        return
 
     corpus, index = build_or_load(args)
     tile_bytes = (None if args.tile_cache_mib is None
@@ -395,7 +597,25 @@ def main() -> None:
     if tuning_cache is None and args.store_format == "v2" and args.index_dir:
         from ..core.store import tuning_path
         tuning_cache = str(tuning_path(args.index_dir))
-    if args.hosts > 1:
+    if args.workers:
+        server = make_rpc_frontend(
+            args.index_dir,
+            parse_worker_spec(args.workers, args.connect_timeout),
+            replication=args.replication, max_batch=args.max_batch,
+            max_wait_s=args.max_wait_ms / 1e3,
+            hedge_after_s=hedge_after_ms / 1e3, hedge_auto=hedge_auto,
+            scatter_threads=args.scatter_threads,
+            tracing=not args.no_trace, trace_slow_ms=args.trace_slow_ms,
+            trace_log=args.trace_log, pruned=args.prune,
+            prune_chunk=args.prune_chunk,
+            adaptive_buckets=args.adaptive_buckets,
+            connect_timeout_s=args.connect_timeout)
+        print(f"rpc frontend: {len(server.placement.nodes)} worker "
+              f"process(es), replication "
+              f"{min(args.replication, len(server.placement.nodes))}, "
+              f"{server.placement.n_shards} shards, hedge_after="
+              f"{hedge_after_ms}ms")
+    elif args.hosts > 1:
         if args.autotune or args.tuning_cache or args.dedup_min_rate != 0.5:
             print("note: --autotune/--tuning-cache/--dedup-min-rate apply "
                   "to the single-host QueryServer only; the multi-host "
@@ -480,6 +700,8 @@ def main() -> None:
             print("draining in-flight batches ...")
         net.close(drain=True)
         print(server.metrics.snapshot().report())
+        if args.workers:
+            server.close()           # drop the worker channel pool
         return
 
     queries, origin = make_workload(corpus, args.queries)
@@ -525,6 +747,9 @@ def main() -> None:
         job = submit_bulk_file(lane, args)
         lane.drain()
         report_bulk(job)
+
+    if args.workers:
+        server.close()               # drop the worker channel pool
 
 
 if __name__ == "__main__":

@@ -14,6 +14,11 @@ Two serving surfaces live here:
   an active dispatcher + scoring workers, and `NetServer`/`NetClient`
   (`net`) speak the length-prefixed binary wire protocol over TCP —
   pipelined sessions, 429-style backpressure replies, graceful drain.
+* the RPC shard data plane (`rpc`): each ShardWorker behind its own
+  `WorkerServer` (SHARD_QUERY/SHARD_RESULT/CANCEL frames), the frontend
+  dials a reconnecting `WorkerPool` of `WorkerChannel`s, and
+  `RpcFrontend` scatters every shard dispatch as a real hedged RPC —
+  duplicate backups on the wall clock, losers cancelled on the wire.
 * the offline bulk lane (`bulk`): `BulkLane` sweeps whole query sets
   shard-major (each tile staged into HBM once, amortized over every
   query) in the interactive lane's idle time, with per-shard
@@ -38,9 +43,11 @@ from .metrics import MetricsSnapshot, ServingMetrics
 from .net import NetClient, NetResult, NetServer
 from .planner import QueryPlan, QueryPlanner
 from .request import QueryRequest, QueryResponse, Status
+from .rpc import (ChannelDown, RpcError, RpcFrontend, WorkerChannel,
+                  WorkerPool, WorkerServer)
 from .server import QueryServer, ServerConfig
 from .step import make_prefill_step, make_decode_step, greedy_generate
-from .worker import ShardWorker
+from .worker import DispatchCancelled, ShardWorker
 
 __all__ = [
     "MicroBatch", "MicroBatcher", "fit_bucket_edges",
@@ -48,8 +55,10 @@ __all__ = [
     "LRUCache", "result_key", "term_key",
     "MetricsSnapshot", "ServingMetrics", "QueryPlan", "QueryPlanner",
     "QueryRequest", "QueryResponse", "Status", "QueryServer", "ServerConfig",
-    "Frontend", "FrontendConfig", "ShardWorker",
+    "Frontend", "FrontendConfig", "ShardWorker", "DispatchCancelled",
     "LoopClosed", "ServingLoop", "NetClient", "NetResult", "NetServer",
+    "ChannelDown", "RpcError", "RpcFrontend", "WorkerChannel",
+    "WorkerPool", "WorkerServer",
     "EventLog", "KernelProfiler", "MetricsRegistry", "Span", "Trace",
     "Tracer", "render_prometheus",
     "make_prefill_step", "make_decode_step", "greedy_generate",

@@ -149,7 +149,9 @@ class Frontend(ServingBackend):
         self._responses: dict[int, QueryResponse] = {}
         self._next_id = 0
         self._dispatch_seq = 0
-        self.n_docs = next(iter(workers.values())).layout.n_docs
+        first = next(iter(workers.values()))
+        self.params = first.params
+        self.n_docs = first.layout.n_docs
         # Concurrent scatter pool (wall-clock mode only: simulated runs
         # share one deterministic event clock, so their dispatches stay
         # sequential and bit-reproducible).
@@ -202,8 +204,7 @@ class Frontend(ServingBackend):
         if (pattern is None) == (terms is None):
             raise ValueError("pass exactly one of pattern / terms")
         if terms is None:
-            terms = compile_pattern(pattern,
-                                    next(iter(self.workers.values())).params)
+            terms = compile_pattern(pattern, self.params)
         threshold = (self.config.default_threshold if threshold is None
                      else threshold)
         now = self.clock()
@@ -340,6 +341,19 @@ class Frontend(ServingBackend):
             raise failed
         return out
 
+    def _scatter(self, staged, buf, n_valid, cutoffs, topks, Q: int):
+        """Dispatch hook: scatter one staged batch across every shard and
+        return ([(node, latency, (cands, method))] in shard order,
+        max completion latency). Subclasses with a different transport
+        (repro.serve.rpc.RpcFrontend) override just this seam."""
+        if self._pool is not None and self.placement.n_shards > 1:
+            results = self._scatter_concurrent(staged, buf, n_valid,
+                                               cutoffs, topks, Q)
+            max_done = max((lat for _, lat, _ in results), default=0.0)
+            return results, max_done
+        return self._scatter_sequential(staged, buf, n_valid, cutoffs,
+                                        topks, Q)
+
     def score_batch(self, batch: MicroBatch) -> None:
         """Scatter/score/gather one flushed micro-batch. Public so an
         active serving loop (repro.serve.loop) can pull batches off
@@ -364,19 +378,15 @@ class Frontend(ServingBackend):
             [[] for _ in range(Q)]
         ex = self.executor
         fired0, won0, fo0 = ex.hedges_fired, ex.hedges_won, ex.failovers
+        canc0, skip0 = ex.hedges_cancelled, ex.skipped_dead
         tiles0 = self._tile_counters()
         prune0 = self._prune_counters()
         traced = any(r.trace is not None for r in batch.requests)
         method = ""
         t_sc0 = self.clock()
         try:
-            if self._pool is not None and self.placement.n_shards > 1:
-                results = self._scatter_concurrent(staged, buf, n_valid,
-                                                   cutoffs, topks, Q)
-                max_done = max((lat for _, lat, _ in results), default=0.0)
-            else:
-                results, max_done = self._scatter_sequential(
-                    staged, buf, n_valid, cutoffs, topks, Q)
+            results, max_done = self._scatter(staged, buf, n_valid,
+                                              cutoffs, topks, Q)
         except AllReplicasFailed:
             # a shard lost every replica mid-flight: the batch is already
             # out of the batcher, so answer every request FAILED instead of
@@ -405,8 +415,10 @@ class Frontend(ServingBackend):
         service = max_done if self._simulated else self.clock() - t0
 
         self.metrics.record_hedges(fired=ex.hedges_fired - fired0,
-                                   won=ex.hedges_won - won0)
+                                   won=ex.hedges_won - won0,
+                                   cancelled=ex.hedges_cancelled - canc0)
         self.metrics.record_failovers(ex.failovers - fo0)
+        self.metrics.record_skipped_dead(ex.skipped_dead - skip0)
         if self.config.hedge_auto:
             self._adapt_hedge_after()
         self.metrics.record_batch(Q, self.batcher.occupancy(batch), method)
@@ -537,4 +549,6 @@ class Frontend(ServingBackend):
         self.executor.completions.clear()
         self.executor.hedges_fired = 0
         self.executor.hedges_won = 0
+        self.executor.hedges_cancelled = 0
         self.executor.failovers = 0
+        self.executor.skipped_dead = 0

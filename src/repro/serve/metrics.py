@@ -67,6 +67,18 @@ class MetricsSnapshot:
     hedges_won: int = 0
     hedge_fire_rate: float = 0.0
     failovers: int = 0
+    # real-RPC hedging (0 for in-process dispatch): duplicate requests
+    # whose loser was cancelled, and dispatches that skipped a replica
+    # already known dead (NOT failovers — no attempt was made)
+    hedges_cancelled: int = 0
+    skipped_dead: int = 0
+    # replies undeliverable at session close/kick — counted, never silent
+    dropped_replies: int = 0
+    # networked data plane (0 when dispatch is in-process)
+    channels_up: int = 0          # worker channels currently connected
+    channel_reconnects: int = 0   # successful redials across the pool
+    rpcs_sent: int = 0            # SHARD_QUERY frames sent
+    rpcs_failed: int = 0          # dispatches failed by channel death
     worker_p99_ms: dict[str, float] = dataclasses.field(default_factory=dict)
     # per-shard tile-cache activity (empty when paging is off)
     shard_faults: dict[str, int] = dataclasses.field(default_factory=dict)
@@ -115,8 +127,18 @@ class MetricsSnapshot:
             s += (f" shard_rpcs[n={self.dispatches} "
                   f"hedge_rate={self.hedge_fire_rate:.3f} "
                   f"hedges_won={self.hedges_won} "
-                  f"failovers={self.failovers} failed={self.failed}] "
+                  f"hedges_cancelled={self.hedges_cancelled} "
+                  f"failovers={self.failovers} "
+                  f"skipped_dead={self.skipped_dead} "
+                  f"failed={self.failed}] "
                   f"workers_p99[{workers}]")
+        if self.rpcs_sent or self.channel_reconnects:
+            s += (f" rpc[sent={self.rpcs_sent} "
+                  f"failed={self.rpcs_failed} "
+                  f"channels_up={self.channels_up} "
+                  f"reconnects={self.channel_reconnects}]")
+        if self.dropped_replies:
+            s += f" dropped_replies={self.dropped_replies}"
         if self.traces_finished:
             s += (f" traces[done={self.traces_finished} "
                   f"slow={self.slow_queries}]")
@@ -204,6 +226,26 @@ class ServingMetrics:
         self._failovers = r.counter(
             "serve_failovers_total",
             "dispatches served by a non-primary replica")
+        self._hedges_cancelled = r.counter(
+            "serve_hedges_cancelled_total",
+            "duplicate shard RPCs cancelled after losing the race")
+        self._skipped_dead = r.counter(
+            "serve_skipped_dead_total",
+            "replicas skipped up front because already known dead")
+        self._dropped_replies = r.counter(
+            "serve_dropped_replies_total",
+            "replies undeliverable at session close or kick")
+        # networked data plane: per-node channel state + RPC outcomes
+        # (repro.serve.rpc feeds these; all zero for in-process dispatch)
+        self._channel_up = r.gauge(
+            "serve_channel_up", "worker channel connected (1) or down (0)",
+            labels=("node",))
+        self._channel_reconnects = r.counter(
+            "serve_channel_reconnects_total",
+            "successful worker-channel redials", labels=("node",))
+        self._rpcs = r.counter(
+            "serve_rpc_total", "worker RPCs by node and outcome",
+            labels=("node", "outcome"))
         self._worker_lat = r.histogram(
             "serve_worker_latency_seconds",
             "per-worker shard dispatch latency", labels=("worker",),
@@ -369,15 +411,42 @@ class ServingMetrics:
         self._dispatches.inc()
         self._worker_lat.labels(worker).observe(latency_s)
 
-    def record_hedges(self, *, fired: int, won: int) -> None:
+    def record_hedges(self, *, fired: int, won: int,
+                      cancelled: int = 0) -> None:
         if fired:
             self._hedges_fired.inc(fired)
         if won:
             self._hedges_won.inc(won)
+        if cancelled:
+            self._hedges_cancelled.inc(cancelled)
 
     def record_failovers(self, n: int) -> None:
         if n:
             self._failovers.inc(n)
+
+    def record_skipped_dead(self, n: int) -> None:
+        """Replicas filtered before dispatch because already known dead
+        — distinct from failovers, which are at-call-time failures."""
+        if n:
+            self._skipped_dead.inc(n)
+
+    def record_reply_dropped(self, n: int = 1) -> None:
+        """A reply that could not be delivered (outbox full at kick, or
+        queued behind a dead socket at drain)."""
+        if n:
+            self._dropped_replies.inc(n)
+
+    def record_channel(self, node: str, *, up: bool,
+                       reconnect: bool = False) -> None:
+        """Worker-channel state transition (the reconnecting pool)."""
+        self._channel_up.labels(node).set(1 if up else 0)
+        if reconnect:
+            self._channel_reconnects.labels(node).inc()
+
+    def record_rpc(self, node: str, outcome: str, n: int = 1) -> None:
+        """One worker RPC outcome: "sent", "ok", "failed", "cancelled"."""
+        if n:
+            self._rpcs.labels(node, outcome).inc(n)
 
     # -- legacy attribute surface ------------------------------------------
     @property
@@ -514,6 +583,32 @@ class ServingMetrics:
         return self._failovers.value
 
     @property
+    def hedges_cancelled(self) -> int:
+        return self._hedges_cancelled.value
+
+    @property
+    def skipped_dead(self) -> int:
+        return self._skipped_dead.value
+
+    @property
+    def dropped_replies(self) -> int:
+        return self._dropped_replies.value
+
+    @property
+    def channels_up(self) -> int:
+        return sum(int(child.value)
+                   for _, child in self._channel_up.children())
+
+    @property
+    def channel_reconnects(self) -> int:
+        return sum(child.value
+                   for _, child in self._channel_reconnects.children())
+
+    def rpc_count(self, outcome: str) -> int:
+        return sum(child.value for vals, child in self._rpcs.children()
+                   if vals[1] == outcome)
+
+    @property
     def worker_recent_s(self) -> dict[str, np.ndarray]:
         """Recent-window dispatch latencies per worker (consistent
         copies — adaptive hedging derives its p95 from these)."""
@@ -561,6 +656,13 @@ class ServingMetrics:
             hedge_fire_rate=(hedges_fired / dispatches
                              if dispatches else 0.0),
             failovers=self.failovers,
+            hedges_cancelled=self.hedges_cancelled,
+            skipped_dead=self.skipped_dead,
+            dropped_replies=self.dropped_replies,
+            channels_up=self.channels_up,
+            channel_reconnects=self.channel_reconnects,
+            rpcs_sent=self.rpc_count("sent"),
+            rpcs_failed=self.rpc_count("failed"),
             worker_p99_ms={
                 vals[0]: child.percentile(99) * 1e3
                 for vals, child in self._worker_lat.children()

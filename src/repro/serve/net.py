@@ -59,6 +59,24 @@ Protocol version 3 (PR 9) adds the offline bulk lane:
   lanes with one reader. A server without a bulk lane answers every
   query REJECTED immediately.
 
+Protocol version 4 (PR 10) adds the worker data plane — the frames the
+sharded frontend uses to scatter real RPCs at ShardWorker processes
+(see repro.serve.rpc):
+
+* ``SHARD_QUERY`` (frontend -> worker): one shard dispatch of one
+  micro-batch — request id (u64), global shard id, padded query count,
+  bucket width, live query count, then the per-query n_valid / cutoff /
+  top-k arrays and the padded packed term buffer.
+* ``SHARD_RESULT`` (worker -> frontend): echoed rid, status byte
+  (OK / CANCELLED / FAILED), the scoring method (or the error text on
+  FAILED), this dispatch's PruneStats delta, then per-query candidate
+  (doc, score) arrays.
+* ``CANCEL`` (frontend -> worker): echoed rid — fired when a hedged
+  duplicate of the dispatch already won. The worker checks the rid's
+  cancellation flag between shard tiles and answers CANCELLED without
+  scoring the rest.
+* ``PING``/``PONG``: liveness probe for the reconnecting channel pool.
+
 A server pinned to ``proto_version=1`` (constructor knob) speaks the old
 protocol bit-for-bit — the mixed-version interop tests hold both
 directions: old client against a new server (pinned v1) and raw v1
@@ -81,8 +99,9 @@ import queue
 import socket
 import struct
 import threading
+import time
 from concurrent.futures import Future
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -92,7 +111,7 @@ from ..obs.export import render_prometheus
 from .loop import LoopClosed, ServingLoop
 from .request import QueryResponse, Status
 
-PROTO_VERSION = 3        # v3: BULK query sets (v2: trace / STATS)
+PROTO_VERSION = 4        # v4: worker data plane (v3: BULK, v2: trace)
 MIN_PROTO_VERSION = 1    # oldest version a client will still talk to
 
 MSG_HELLO = 1
@@ -100,6 +119,11 @@ MSG_QUERY = 2
 MSG_RESULT = 3
 MSG_STATS = 4
 MSG_BULK = 5
+MSG_SHARD_QUERY = 6
+MSG_SHARD_RESULT = 7
+MSG_CANCEL = 8
+MSG_PING = 9
+MSG_PONG = 10
 
 STATS_SNAPSHOT = 0       # JSON-encoded MetricsSnapshot
 STATS_PROMETHEUS = 1     # Prometheus text exposition of the registry
@@ -122,6 +146,23 @@ _TRACE_ID = struct.Struct("!Q")
 # name length + name bytes + f64 total seconds
 _TRACE_HEAD = struct.Struct("!QB")
 _STAGE_SECONDS = struct.Struct("!d")
+
+# v4 worker data plane
+# type, rid, gshard, q_pad, bucket, n_live
+_SHARD_QUERY = struct.Struct("!BQIIII")
+# type, rid, status, method_len (method doubles as the error text on
+# SHARD_FAILED), then the PruneStats delta and per-query candidates
+_SHARD_RESULT = struct.Struct("!BQBB")
+# blocks_total, blocks_pruned, shard_visits_skipped, bytes_read,
+# baseline_bytes — this dispatch's pruning delta
+_SHARD_PRUNE = struct.Struct("!5Q")
+_SHARD_NQ = struct.Struct("!I")
+# type, rid (CANCEL) / nonce (PING, PONG)
+_RID_ONLY = struct.Struct("!BQ")
+
+SHARD_OK = 0
+SHARD_CANCELLED = 1
+SHARD_FAILED = 2
 
 # wire status byte <-> Status (order is the protocol, do not reorder)
 _STATUS_CODES = (Status.OK, Status.REJECTED, Status.DROPPED, Status.FAILED)
@@ -335,13 +376,120 @@ def decode_bulk(payload: bytes
     return rid_base, term_sets, None if math.isnan(th) else th, top_k
 
 
+# -- v4 worker data plane ------------------------------------------------------
+
+def encode_shard_query(rid: int, gshard: int, buf: np.ndarray,
+                       n_valid: np.ndarray, cutoffs: np.ndarray,
+                       topks: np.ndarray, n_live: int) -> bytes:
+    """One shard dispatch of one micro-batch: the exact arrays
+    Frontend.score_batch hands a local ShardWorker, so the remote path
+    scores bit-identically to the in-process one."""
+    q_pad, bucket, _ = buf.shape
+    return b"".join((
+        _SHARD_QUERY.pack(MSG_SHARD_QUERY, rid, gshard, q_pad, bucket,
+                          int(n_live)),
+        np.ascontiguousarray(n_valid, dtype="<i4").tobytes(),
+        np.ascontiguousarray(cutoffs, dtype="<i4").tobytes(),
+        np.ascontiguousarray(topks, dtype="<i4").tobytes(),
+        np.ascontiguousarray(buf, dtype="<u4").tobytes(),
+    ))
+
+
+def decode_shard_query(payload: bytes
+                       ) -> tuple[int, int, np.ndarray, np.ndarray,
+                                  np.ndarray, np.ndarray, int]:
+    (_, rid, gshard, q_pad, bucket, n_live) = _SHARD_QUERY.unpack_from(
+        payload)
+    off = _SHARD_QUERY.size
+    want = off + 3 * 4 * q_pad + 8 * q_pad * bucket
+    if len(payload) != want:
+        raise ConnectionError(
+            f"SHARD_QUERY rid={rid}: {len(payload)} bytes != {want}")
+
+    def i32(n):
+        nonlocal off
+        a = np.frombuffer(payload, dtype="<i4", count=n, offset=off)
+        off += 4 * n
+        return a.astype(np.int32)
+
+    n_valid, cutoffs, topks = i32(q_pad), i32(q_pad), i32(q_pad)
+    buf = np.frombuffer(payload, dtype="<u4", count=q_pad * bucket * 2,
+                        offset=off).reshape(q_pad, bucket, 2)
+    return (rid, gshard, buf.astype(np.uint32), n_valid, cutoffs, topks,
+            n_live)
+
+
+def encode_shard_result(rid: int, status: int, method: str,
+                        cands: Optional[list] = None,
+                        prune: tuple = (0, 0, 0, 0, 0)) -> bytes:
+    """status SHARD_OK carries per-query candidate (doc, score) arrays
+    plus this dispatch's PruneStats delta; on SHARD_FAILED the method
+    field carries the error text instead."""
+    m = method.encode()[:255]
+    out = [_SHARD_RESULT.pack(MSG_SHARD_RESULT, rid, status, len(m)), m,
+           _SHARD_PRUNE.pack(*(int(x) for x in prune)),
+           _SHARD_NQ.pack(len(cands or []))]
+    for docs, scores in (cands or []):
+        docs = np.ascontiguousarray(docs, dtype="<i4")
+        out.append(_SHARD_NQ.pack(docs.shape[0]) + docs.tobytes()
+                   + np.ascontiguousarray(scores, dtype="<i4").tobytes())
+    return b"".join(out)
+
+
+def decode_shard_result(payload: bytes
+                        ) -> tuple[int, int, str, list, tuple]:
+    (_, rid, status, mlen) = _SHARD_RESULT.unpack_from(payload)
+    off = _SHARD_RESULT.size
+    method = payload[off: off + mlen].decode()
+    off += mlen
+    prune = _SHARD_PRUNE.unpack_from(payload, off)
+    off += _SHARD_PRUNE.size
+    (n_queries,) = _SHARD_NQ.unpack_from(payload, off)
+    off += _SHARD_NQ.size
+    cands = []
+    for i in range(n_queries):
+        if off + _SHARD_NQ.size > len(payload):
+            raise ConnectionError(f"SHARD_RESULT truncated at query {i}")
+        (n,) = _SHARD_NQ.unpack_from(payload, off)
+        off += _SHARD_NQ.size
+        if off + 8 * n > len(payload):
+            raise ConnectionError(f"SHARD_RESULT truncated at query {i}")
+        docs = np.frombuffer(payload, dtype="<i4", count=n,
+                             offset=off).astype(np.int32)
+        scores = np.frombuffer(payload, dtype="<i4", count=n,
+                               offset=off + 4 * n).astype(np.int32)
+        cands.append((docs, scores))
+        off += 8 * n
+    if off != len(payload):
+        raise ConnectionError("SHARD_RESULT frame has trailing bytes")
+    return rid, status, method, cands, prune
+
+
+def encode_cancel(rid: int) -> bytes:
+    return _RID_ONLY.pack(MSG_CANCEL, rid)
+
+
+def encode_ping(nonce: int, *, pong: bool = False) -> bytes:
+    return _RID_ONLY.pack(MSG_PONG if pong else MSG_PING, nonce)
+
+
+def decode_rid(payload: bytes) -> int:
+    """rid of a CANCEL / nonce of a PING or PONG."""
+    return _RID_ONLY.unpack_from(payload)[1]
+
+
 # -- server -------------------------------------------------------------------
 
 def _backend_info(backend) -> tuple[IndexParams, int]:
-    """(index params, n_docs) of either serving backend."""
+    """(index params, n_docs) of any serving backend."""
     index = getattr(backend, "index", None)
     if index is not None:
         return index.params, index.n_docs
+    # Frontend / RpcFrontend expose params + n_docs directly (an
+    # RpcFrontend has no local workers at all — they live behind RPC)
+    params = getattr(backend, "params", None)
+    if params is not None:
+        return params, backend.n_docs
     worker = next(iter(backend.workers.values()))
     return worker.params, backend.n_docs
 
@@ -359,29 +507,48 @@ class _Session:
     own outbox and gets kicked, instead of wedging a scoring worker in a
     blocking sendall and stalling every other client."""
 
-    def __init__(self, sock: socket.socket):
+    def __init__(self, sock: socket.socket,
+                 on_drop: Optional[Callable[[int], None]] = None):
         self.sock = sock
         self.outbox: "queue.Queue[Optional[bytes]]" = queue.Queue(
             maxsize=OUTBOX_FRAMES)
+        self.dropped_replies = 0
+        self._on_drop = on_drop
         self.writer = threading.Thread(target=self._write_loop,
                                        name="serve-write", daemon=True)
         self.writer.start()
+
+    def _drop(self, n: int = 1) -> None:
+        """Account an undelivered reply — a drop is NEVER silent: it is
+        counted here and surfaced through the server's metrics."""
+        self.dropped_replies += n
+        if self._on_drop is not None:
+            try:
+                self._on_drop(n)
+            except Exception:
+                pass
 
     def send(self, payload: bytes) -> None:
         try:
             self.outbox.put_nowait(payload)
         except queue.Full:
+            self._drop()
             self.kick()                       # slow reader: drop the session
 
     def _write_loop(self) -> None:
+        dead = False
         while True:
             p = self.outbox.get()
             if p is None:
                 return
+            if dead:
+                self._drop()                  # drain, counting every loss
+                continue
             try:
                 write_frame(self.sock, p)
             except OSError:
-                return                        # client went away
+                dead = True                   # client went away
+                self._drop()
 
     def kick(self) -> None:
         """Force both directions down (unblocks reader AND writer)."""
@@ -391,11 +558,28 @@ class _Session:
             pass
 
     def finish(self, timeout_s: float = 5.0) -> None:
-        """Flush queued replies, stop the writer, close the socket."""
+        """Flush queued replies, stop the writer, close the socket.
+
+        Drain-aware: wait (bounded by the deadline) for the writer to
+        empty the outbox BEFORE enqueueing the shutdown sentinel — the
+        old code put() the sentinel with a timeout, so a full outbox at
+        close silently orphaned every queued reply. A peer that stalls
+        past the deadline is kicked and the writer's counting drain
+        accounts each undelivered frame in ``dropped_replies``."""
+        deadline = time.monotonic() + timeout_s
+        while not self.outbox.empty() and time.monotonic() < deadline:
+            time.sleep(0.005)
         try:
-            self.outbox.put(None, timeout=timeout_s)
+            self.outbox.put(
+                None, timeout=max(0.01, deadline - time.monotonic()))
         except queue.Full:
-            pass
+            # writer wedged on a stalled peer: sever the socket so the
+            # write loop falls into its counting drain, then sentinel
+            self.kick()
+            try:
+                self.outbox.put(None, timeout=timeout_s)
+            except queue.Full:
+                pass
         self.writer.join(timeout=timeout_s)
         self.kick()
         self.sock.close()
@@ -433,6 +617,11 @@ class NetServer:
     @property
     def metrics(self):
         return self.loop.backend.metrics
+
+    def _record_drop(self, n: int) -> None:
+        rec = getattr(self.metrics, "record_reply_dropped", None)
+        if rec is not None:
+            rec(n)
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "NetServer":
@@ -475,7 +664,7 @@ class NetServer:
                 if self._closing:
                     conn.close()
                     continue
-                session = _Session(conn)
+                session = _Session(conn, on_drop=self._record_drop)
                 self._conns.add(session)
             threading.Thread(target=self._serve_conn, args=(session,),
                              name="serve-conn", daemon=True).start()

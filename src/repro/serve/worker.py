@@ -76,6 +76,12 @@ def _shared_comp_score_fn(n_hashes: int, method: str,
     return fn
 
 
+class DispatchCancelled(Exception):
+    """A dispatch's cancellation flag fired (a hedged duplicate of the
+    request already won elsewhere) — the worker stops scoring and the
+    RPC plane answers SHARD_CANCELLED instead of a candidate set."""
+
+
 class ShardWorker:
     """One fake/real host serving a subset of a v2 store's shards."""
 
@@ -165,6 +171,10 @@ class ShardWorker:
                        self._dev(p.block_width)) for p in self.plans]
         self.failed = False
         self.dispatches = 0
+        # dispatches abandoned mid-tile because their cancellation flag
+        # fired (a hedged duplicate won) — the RPC plane's headline
+        # "the loser was observably cancelled" counter
+        self.cancelled_tiles = 0
         # Optional KernelProfiler (repro.obs.profile): the frontend wires
         # its own in so per-shard kernel timings land in the shared
         # metrics registry tagged with this worker's dispatches.
@@ -294,9 +304,15 @@ class ShardWorker:
                 shard=gshard)
         return slots, plan, method
 
+    def _check_cancel(self, cancelled) -> None:
+        if cancelled is not None and cancelled():
+            self.cancelled_tiles += 1
+            raise DispatchCancelled(f"worker {self.name}: dispatch "
+                                    f"cancelled between tiles")
+
     def score_candidates(self, gshard: int, terms_dev, n_valid_dev,
                          cutoffs: np.ndarray, topks: np.ndarray,
-                         n_live: int
+                         n_live: int, *, cancelled=None
                          ) -> tuple[list[tuple[np.ndarray, np.ndarray]], str]:
         """Score + select: per live query, the (doc_ids, scores) candidate
         arrays of this shard's documents — hits >= cutoffs[i] when
@@ -310,6 +326,12 @@ class ShardWorker:
         further gathers and kernel work, a fully-pruned shard never
         stages its tile, and candidates stay bit-identical (pruned
         partial sums are provably below every cutoff)."""
+        # ``cancelled`` (optional zero-arg callable) is the RPC plane's
+        # cancellation flag: checked before the tile is scored and again
+        # before candidate extraction, so a dispatch whose hedged
+        # duplicate already won abandons the remaining work and raises
+        # DispatchCancelled instead of staging/scanning further.
+        self._check_cancel(cancelled)
         with self._lock:
             pr = (self._score_pruned(gshard, terms_dev, n_valid_dev,
                                      cutoffs, topks, n_live)
@@ -319,6 +341,7 @@ class ShardWorker:
             else:
                 slots, plan, method = self.score_shard(gshard, terms_dev,
                                                        n_valid_dev)
+        self._check_cancel(cancelled)
         slot0 = plan.block_start * self.layout.block_docs
         docs = self._slot_doc[slot0: slot0 + slots.shape[1]]
         real = docs >= 0

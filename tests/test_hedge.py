@@ -70,3 +70,183 @@ def test_clock_monotone():
     t0 = ex.clock.now
     ex.run_query(0, ["s0"])
     assert ex.clock.now >= t0
+
+
+# -- hedge budget walk (wrap-around regression) -------------------------------
+
+def test_second_hedge_lands_on_third_replica():
+    """Regression: with 3 replicas and a straggling primary, hedge budget
+    2 must walk DISTINCT untried replicas — the old modulo indexing could
+    wrap the walk back onto an already-issued attempt, burning the budget
+    on a duplicate of the straggler instead of reaching replica 3."""
+    ex = _mk(hedge_after=2.0, max_hedges=2)
+    ex.shards["s0"].straggle_until = 1e9   # primary stuck at 10x
+    ex.shards["s1"].straggle_until = 1e9   # first backup stuck too
+    shard, lat = ex.run_query(0, ["s0", "s1", "s2"])
+    assert shard == "s2"                   # second hedge, third replica
+    assert ex.hedges_fired == 2
+    assert ex.hedges_won == 1
+    # hedge 1 at t=2 (s1), hedge 2 at t=4 (s2) + 1.0 base latency
+    assert lat == 4.0 + 1.0
+
+
+def test_hedge_budget_never_reissues_with_two_live():
+    """With only 2 live replicas and budget 2, the walk exhausts after
+    one backup: no wrap back onto the primary, and the single effective
+    hedge still wins."""
+    ex = _mk(n=2, hedge_after=2.0, max_hedges=2)
+    ex.shards["s0"].straggle_until = 1e9
+    shard, lat = ex.run_query(0, ["s0", "s1"])
+    assert shard == "s1" and lat == 3.0
+    assert ex.hedges_fired == 1            # budget wasn't burned twice
+
+
+# -- failover vs skipped_dead split -------------------------------------------
+
+def test_known_dead_primary_counts_skip_not_failover():
+    """A replica already known dead (failed latency model) is filtered
+    before dispatch: it must count as skipped_dead, NOT inflate the
+    failover rate (the old counter lumped both together)."""
+    ex = _mk()
+    ex.shards["s0"].failed = True
+    shard, _ = ex.run_query(0, ["s0", "s1"])
+    assert shard == "s1"
+    assert ex.failovers == 0
+    assert ex.skipped_dead == 1
+
+
+def test_at_call_time_death_counts_failover():
+    from repro.index.hedge import AttemptFailed
+
+    ex = _mk()
+
+    def call(node):
+        if node == "s0":
+            raise AttemptFailed(node)      # dies under the attempt
+        return f"res-{node}"
+
+    node, _, res = ex.run(0, ["s0", "s1"], call)
+    assert node == "s1" and res == "res-s1"
+    assert ex.failovers == 1
+    assert ex.skipped_dead == 0
+
+
+# -- run_async: wall-clock hedging over futures -------------------------------
+
+def _resolved(value):
+    from concurrent.futures import Future
+    f = Future()
+    f.set_result(value)
+    return f
+
+
+def test_run_async_primary_wins():
+    ex = _mk(n=0)
+    issued = []
+
+    def begin(node):
+        issued.append(node)
+        return _resolved(f"res-{node}")
+
+    node, lat, res = ex.run_async(0, ["a", "b"], begin)
+    assert node == "a" and res == "res-a"
+    assert issued == ["a"]                 # backup never launched
+    assert ex.hedges_fired == 0 and ex.hedges_cancelled == 0
+
+
+def test_run_async_hedge_fires_and_cancels_loser():
+    """A dawdling primary future triggers a REAL duplicate request after
+    hedge_after; the backup wins and the primary is cancelled through the
+    cancel callback."""
+    from concurrent.futures import Future
+
+    ex = _mk(n=0, hedge_after=0.02, max_hedges=1)
+    primary = Future()                     # never resolves: the straggler
+    cancelled = []
+
+    def begin(node):
+        return primary if node == "a" else _resolved(f"res-{node}")
+
+    node, lat, res = ex.run_async(0, ["a", "b"], begin,
+                                  cancel=lambda n, f: cancelled.append(n))
+    assert node == "b" and res == "res-b"
+    assert ex.hedges_fired == 1 and ex.hedges_won == 1
+    assert ex.hedges_cancelled == 1
+    assert cancelled == ["a"]
+    assert lat >= 0.02                     # waited out the hedge deadline
+
+
+def test_run_async_failover_on_refused_begin():
+    from repro.index.hedge import AttemptFailed
+
+    ex = _mk(n=0)
+
+    def begin(node):
+        if node == "a":
+            raise AttemptFailed(node)      # channel down at submit time
+        return _resolved(f"res-{node}")
+
+    node, _, res = ex.run_async(0, ["a", "b"], begin)
+    assert node == "b" and res == "res-b"
+    assert ex.failovers == 1 and ex.skipped_dead == 0
+
+
+def test_run_async_failover_on_failed_future():
+    from concurrent.futures import Future
+
+    from repro.index.hedge import AttemptFailed
+
+    ex = _mk(n=0)
+    dead = Future()
+    dead.set_exception(AttemptFailed("a"))
+
+    def begin(node):
+        return dead if node == "a" else _resolved(f"res-{node}")
+
+    node, _, res = ex.run_async(0, ["a", "b"], begin)
+    assert node == "b" and res == "res-b"
+    assert ex.failovers == 1
+
+
+def test_run_async_all_failed_raises():
+    from repro.index.hedge import AllReplicasFailed, AttemptFailed
+
+    ex = _mk(n=0)
+
+    def begin(node):
+        raise AttemptFailed(node)
+
+    try:
+        ex.run_async(0, ["a", "b"], begin)
+        assert False
+    except AllReplicasFailed:
+        pass
+    assert ex.failovers == 2
+
+
+def test_run_async_skips_known_dead():
+    ex = _mk(n=2)
+    ex.shards["s0"].failed = True
+    node, _, res = ex.run_async(0, ["s0", "s1"],
+                                lambda n: _resolved(f"res-{n}"))
+    assert node == "s1"
+    assert ex.skipped_dead == 1 and ex.failovers == 0
+
+
+def test_run_async_non_attempt_error_propagates():
+    """A future failing with anything but AttemptFailed is the caller's
+    bug domain — it must propagate, not silently fail over."""
+    from concurrent.futures import Future
+
+    ex = _mk(n=0)
+    broken = Future()
+    broken.set_exception(ValueError("kernel crash"))
+
+    def begin(node):
+        return broken if node == "a" else _resolved(f"res-{node}")
+
+    try:
+        ex.run_async(0, ["a", "b"], begin)
+        assert False
+    except ValueError:
+        pass

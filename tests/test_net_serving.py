@@ -621,3 +621,90 @@ def test_tuning_cache_stale_geometry_never_served(tmp_path, built):
     server = QueryServer(index, ServerConfig(tuning_cache=str(path)))
     plan = server.planner.plan(64, 4)
     assert plan.word_block is None and plan.grid_order == "wq"
+
+# --------------------------------------------------------------------------
+# Session drain: replies to a slow reader are delivered or counted, never
+# silently orphaned (PR 10 regression — finish() used to enqueue the
+# shutdown sentinel with a timeout, so a full outbox at close dropped
+# every queued reply with no accounting)
+# --------------------------------------------------------------------------
+
+def _session_pair(on_drop=None):
+    import socket as sk
+
+    from repro.serve.net import _Session
+    a, b = sk.socketpair()
+    return _Session(a, on_drop=on_drop), b
+
+
+def test_session_drain_delivers_to_slow_reader():
+    """A client that reads slowly (but reads) at close(drain) receives
+    EVERY accepted reply — finish() waits out the outbox before the
+    shutdown sentinel."""
+    from repro.serve.net import read_frame
+
+    session, peer = _session_pair()
+    n, got, errs = 40, [], []
+
+    def reader():
+        try:
+            while True:
+                frame = read_frame(peer)
+                if frame is None:             # clean EOF
+                    return
+                got.append(frame)
+                time.sleep(0.002)             # slow, not stopped
+        except (OSError, ConnectionError, EOFError):
+            pass
+        except Exception as e:                # torn frame at EOF etc.
+            errs.append(e)
+
+    t = threading.Thread(target=reader, daemon=True)
+    t.start()
+    for i in range(n):
+        session.send(bytes([i % 256]) * 4096)
+    session.finish(timeout_s=30.0)
+    t.join(10.0)
+    assert len(got) == n
+    assert session.dropped_replies == 0
+    assert not errs
+
+
+def test_session_drain_wedged_reader_counts_every_drop():
+    """A peer that STOPS reading can wedge the writer in sendall; the
+    bounded drain must still terminate, and every undelivered reply must
+    be counted — received + dropped == accepted, nothing silent."""
+    from repro.serve.net import read_frame
+
+    drops = []
+    session, peer = _session_pair(on_drop=lambda k: drops.append(k))
+    n, payload = 120, b"x" * 65536            # >> any socket buffer
+    for _ in range(n):
+        session.send(payload)
+    t0 = time.monotonic()
+    session.finish(timeout_s=0.5)
+    assert time.monotonic() - t0 < 10.0       # bounded, no hang
+    assert not session.writer.is_alive()
+    assert session.dropped_replies > 0        # the peer really was wedged
+    received = 0
+    try:
+        while read_frame(peer) is not None:   # drain what did arrive
+            received += 1
+    except Exception:                         # torn trailing frame
+        pass
+    assert received + session.dropped_replies == n
+    assert sum(drops) == session.dropped_replies
+    peer.close()
+
+
+def test_net_drop_accounting_reaches_metrics(built):
+    """Session drops surface in the server's metrics snapshot/report —
+    the 'never silent' half of the drain contract at the NetServer
+    level."""
+    _, index, _ = built
+    server, net = _serve(index, max_batch=4)
+    net._record_drop(3)
+    snap = server.metrics.snapshot()
+    assert snap.dropped_replies == 3
+    assert "dropped_replies=3" in snap.report()
+    net.close(drain=False)

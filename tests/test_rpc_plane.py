@@ -1,0 +1,506 @@
+"""The networked shard data plane (repro.serve.rpc): real RPC fan-out
+with cancellable hedges.
+
+Load-bearing invariants, mirroring the rest of the serving stack:
+
+* anything that crosses the SHARD_QUERY/SHARD_RESULT wire must gather
+  BIT-IDENTICALLY to a synchronous QueryEngine run — threshold and
+  top-k alike;
+* failure is loud and bounded: a worker killed mid-SHARD_RESULT fails
+  every pending future with a distinct RpcError (never a hang), the
+  channel goes unhealthy, backoff-redials after a restart, and in-flight
+  queries fail over to replicas with ZERO lost queries;
+* hedged backups are REAL duplicate requests on the wall clock, and the
+  loser is observably cancelled: the straggling worker's
+  ``cancelled_tiles`` counter moves.
+
+The multi-process test at the bottom drives actual ``--worker``
+subprocesses through launch.cluster (OS-assigned ports via --port-file)
+and SIGKILLs one mid-load.
+"""
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import IndexParams, QueryEngine, build_compact
+from repro.data import make_corpus, make_queries
+from repro.index import ShardPlacement, build_compact_streaming
+from repro.serve import (FrontendConfig, NetClient, NetServer, RpcFrontend,
+                         ServingLoop, ShardWorker, Status, WorkerChannel,
+                         WorkerPool, WorkerServer)
+from repro.serve.net import (MSG_PING, MSG_SHARD_QUERY, PROTO_VERSION,
+                             SHARD_FAILED, SHARD_OK, decode_rid,
+                             decode_shard_query, decode_shard_result,
+                             encode_cancel, encode_hello, encode_ping,
+                             encode_shard_query, encode_shard_result,
+                             read_frame, write_frame)
+from repro.serve.rpc import ChannelDown, RpcError
+
+PARAMS = IndexParams(n_hashes=1, fpr=0.3, kmer=15)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    c = make_corpus(96, k=15, mean_length=400, sigma=1.0, seed=11)
+    index = build_compact(c.doc_terms, PARAMS, block_docs=32, row_align=64)
+    store = tmp_path_factory.mktemp("rpc-store") / "v2"
+    mapped, _ = build_compact_streaming(c.doc_terms, store, PARAMS,
+                                        block_docs=32, row_align=64)
+    assert mapped.storage.n_shards >= 3
+    return c, index, store
+
+
+@pytest.fixture(scope="module")
+def oracle(built):
+    return QueryEngine(built[1])
+
+
+def _assert_identical(got, want):
+    assert np.array_equal(got.doc_ids, want.doc_ids)
+    assert np.array_equal(got.scores, want.scores)
+
+
+# --------------------------------------------------------------------------
+# v4 wire frames: pure encode/decode round trips
+# --------------------------------------------------------------------------
+
+def test_shard_query_round_trip():
+    rng = np.random.default_rng(0)
+    buf = rng.integers(0, 2**32, size=(4, 64, 2), dtype=np.uint32)
+    n_valid = np.array([40, 7, 0, 0], np.int32)
+    cutoffs = np.array([30, 5, 0, 0], np.int32)
+    topks = np.array([0, 10, 0, 0], np.int32)
+    p = encode_shard_query(7, 2, buf, n_valid, cutoffs, topks, n_live=2)
+    rid, gshard, b, nv, co, tk, n_live = decode_shard_query(p)
+    assert (rid, gshard, n_live) == (7, 2, 2)
+    assert np.array_equal(b, buf)
+    assert np.array_equal(nv, n_valid)
+    assert np.array_equal(co, cutoffs)
+    assert np.array_equal(tk, topks)
+
+
+def test_shard_query_rejects_torn_payload():
+    buf = np.zeros((2, 8, 2), np.uint32)
+    z = np.zeros(2, np.int32)
+    p = encode_shard_query(1, 0, buf, z, z, z, 2)
+    with pytest.raises(ConnectionError):
+        decode_shard_query(p[:-4])
+
+
+def test_shard_result_round_trip():
+    cands = [(np.array([3, 1], np.int32), np.array([9, 5], np.int32)),
+             (np.zeros(0, np.int32), np.zeros(0, np.int32))]
+    prune = (10, 4, 2, 1000, 5000)
+    p = encode_shard_result(42, SHARD_OK, "fused", cands, prune)
+    rid, status, method, got, pr = decode_shard_result(p)
+    assert (rid, status, method, pr) == (42, SHARD_OK, "fused", prune)
+    assert len(got) == 2
+    assert np.array_equal(got[0][0], cands[0][0])
+    assert np.array_equal(got[0][1], cands[0][1])
+    assert got[1][0].size == 0
+
+
+def test_shard_result_failed_carries_error_text():
+    p = encode_shard_result(5, SHARD_FAILED, "worker w1: shard gone")
+    rid, status, method, cands, _ = decode_shard_result(p)
+    assert (rid, status) == (5, SHARD_FAILED)
+    assert method == "worker w1: shard gone"
+    assert cands == []
+
+
+def test_cancel_and_ping_round_trip():
+    assert decode_rid(encode_cancel(99)) == 99
+    assert decode_rid(encode_ping(7)) == 7
+    assert decode_rid(encode_ping(7, pong=True)) == 7
+
+
+# --------------------------------------------------------------------------
+# In-process fleet: WorkerServer + WorkerPool + RpcFrontend
+# --------------------------------------------------------------------------
+
+def _fleet(store, nodes, *, replication=2, straggle=None, **cfg):
+    """(frontend, servers) over in-process WorkerServers on ephemeral
+    localhost ports."""
+    placement = ShardPlacement.for_store(
+        store, nodes, replication=min(replication, len(nodes)))
+    held = placement.replica_assignment()
+    straggle = straggle or {}
+    servers = {n: WorkerServer(ShardWorker(n, store, held[n]),
+                               straggle_s=straggle.get(n, 0.0)).start()
+               for n in nodes if held[n]}
+    pool = WorkerPool({n: s.address for n, s in servers.items()})
+    pool.wait_connected()
+    fe = RpcFrontend(pool, placement,
+                     FrontendConfig(max_wait_s=0.0, **cfg))
+    return fe, servers
+
+
+def _shutdown(fe, servers):
+    fe.close()
+    for s in servers.values():
+        s.close()
+
+
+def test_rpc_bit_identical_threshold_and_topk(built, oracle):
+    """Every result gathered over the wire matches the single-host
+    engine bit for bit — threshold coverage-cutoff AND top-k."""
+    c, _, store = built
+    fe, servers = _fleet(store, ["w0", "w1", "w2"], hedge_after_s=30.0)
+    try:
+        assert fe.verify_placement() == {}
+        qs, _ = make_queries(c, n_pos=8, n_neg=4, length=120, seed=3)
+        ids = [fe.submit(q, threshold=0.75) for q in qs]
+        ids += [fe.submit(q, top_k=5) for q in qs]
+        fe.drain()
+        resp = fe.pop_responses()
+        for rid, q in zip(ids, qs + qs):
+            r = resp[rid]
+            assert r.status == Status.OK
+        for rid, q in zip(ids[:len(qs)], qs):
+            _assert_identical(resp[rid].result,
+                              oracle.search(q, threshold=0.75))
+        for rid, q in zip(ids[len(qs):], qs):
+            _assert_identical(resp[rid].result, oracle.top_k(q, k=5))
+        snap = fe.metrics.snapshot()
+        assert snap.rpcs_sent >= fe.placement.n_shards
+        assert snap.channels_up == len(servers)
+    finally:
+        _shutdown(fe, servers)
+
+
+def test_hedge_fires_real_duplicate_and_cancels_loser(built, oracle):
+    """An injected straggler makes the primary dawdle past hedge_after:
+    a REAL duplicate RPC fires at the backup, wins, and the loser is
+    observably cancelled — the straggling worker's cancelled_tiles
+    counter moves (it did NOT silently complete the dispatch)."""
+    c, _, store = built
+    placement = ShardPlacement.for_store(store, ["w0", "w1"],
+                                         replication=2)
+    straggler = placement.owner(0)        # primary for shard 0
+    fe, servers = _fleet(store, ["w0", "w1"],
+                         straggle={straggler: 0.4},
+                         hedge_after_s=0.05)
+    try:
+        qs, _ = make_queries(c, n_pos=4, n_neg=2, length=120, seed=5)
+        # warmup: compile every kernel shape so the measured pass's
+        # timing is dominated by the injected straggle, not jit
+        for q in qs:
+            fe.submit(q, threshold=0.75)
+        fe.drain()
+        fe.pop_responses()
+        fe.reset_metrics()
+
+        ids = [fe.submit(q, threshold=0.75) for q in qs]
+        fe.drain()
+        resp = fe.pop_responses()
+        for rid, q in zip(ids, qs):
+            assert resp[rid].status == Status.OK
+            _assert_identical(resp[rid].result,
+                              oracle.search(q, threshold=0.75))
+        ex = fe.executor
+        assert ex.hedges_fired > 0        # real duplicates went out
+        assert ex.hedges_won > 0          # ... and won the race
+        assert ex.hedges_cancelled > 0    # ... and the loser was told
+        stats = fe.pool.channel(straggler).stats()
+        assert stats["cancelled_tiles"] > 0
+        snap = fe.metrics.snapshot()
+        assert snap.hedges_cancelled == ex.hedges_cancelled
+        # CANCEL frames actually went out on the wire
+        assert fe.metrics.rpc_count("cancelled") > 0
+    finally:
+        _shutdown(fe, servers)
+
+
+def test_worker_server_killed_mid_load_zero_lost(built, oracle):
+    """Close a WorkerServer abruptly while queries flow: in-flight
+    dispatches fail over to the replica, zero queries are lost, results
+    stay bit-identical."""
+    c, _, store = built
+    fe, servers = _fleet(store, ["w0", "w1", "w2"], hedge_after_s=30.0)
+    try:
+        qs, _ = make_queries(c, n_pos=6, n_neg=2, length=120, seed=6)
+        ids = [fe.submit(q, threshold=0.75) for q in qs]
+        fe.drain()
+        fe.pop_responses()                # warm: every shape compiled
+
+        victim = fe.placement.owner(0)
+        stop = threading.Event()
+
+        def killer():
+            time.sleep(0.02)              # land mid-load
+            servers[victim].close(abort=True)
+            stop.set()
+
+        t = threading.Thread(target=killer)
+        t.start()
+        ids = []
+        for rep in range(4):
+            ids += [fe.submit(q, threshold=0.75) for q in qs]
+            fe.drain()
+        t.join()
+        resp = fe.pop_responses()
+        assert len(resp) == len(ids)
+        for rid in ids:
+            assert resp[rid].status == Status.OK, resp[rid]
+        for rid, q in zip(ids, qs * 4):
+            _assert_identical(resp[rid].result,
+                              oracle.search(q, threshold=0.75))
+        assert not fe.pool.channel(victim).healthy
+    finally:
+        _shutdown(fe, servers)
+
+
+# --------------------------------------------------------------------------
+# Channel failure modes against a scripted fake worker (no jax, no index)
+# --------------------------------------------------------------------------
+
+class _FakeWorker:
+    """A scripted peer: HELLOs like a worker, then follows ``script`` on
+    the first SHARD_QUERY — 'torn' dies mid-SHARD_RESULT, 'mute' never
+    answers, 'ok' replies an empty result."""
+
+    def __init__(self, script="ok", port=0):
+        self.script = script
+        self.dead = False
+        self._live: set = set()
+        self.listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.listener.bind(("127.0.0.1", port))
+        self.listener.listen(8)
+        self.address = self.listener.getsockname()
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self):
+        while True:
+            try:
+                conn, _ = self.listener.accept()
+            except OSError:
+                return
+            if self.dead:                 # a corpse accepts no one
+                conn.close()
+                continue
+            self._live.add(conn)
+            threading.Thread(target=self._conn, args=(conn,),
+                             daemon=True).start()
+
+    def _conn(self, conn):
+        try:
+            write_frame(conn, encode_hello(PARAMS, 96, PROTO_VERSION))
+            while True:
+                payload = read_frame(conn)
+                if payload is None or self.dead:
+                    return
+                if payload[0] == MSG_PING:
+                    write_frame(conn, encode_ping(decode_rid(payload),
+                                                  pong=True))
+                    continue
+                if payload[0] != MSG_SHARD_QUERY:
+                    continue              # e.g. a late CANCEL
+                rid, _, _, nv, _, _, n_live = decode_shard_query(payload)
+                if self.script == "torn":
+                    # half a SHARD_RESULT: length prefix promises 4096
+                    # bytes, the peer dies after 10 — the torn-frame
+                    # case. The whole fake dies with it (listener too),
+                    # like a killed process, so the redialer is refused.
+                    self.dead = True
+                    conn.sendall(struct.pack("!I", 4096) + b"\x01" * 10)
+                    conn.close()
+                    self.close()
+                    return
+                if self.script == "mute":
+                    continue
+                empty = [(np.zeros(0, np.int32), np.zeros(0, np.int32))
+                         for _ in range(n_live)]
+                write_frame(conn, encode_shard_result(
+                    rid, SHARD_OK, "fake", empty))
+        except (OSError, ConnectionError):
+            pass
+        finally:
+            self._live.discard(conn)
+
+    def close(self):
+        """Die like a killed process: listener AND live connections."""
+        self.dead = True
+        try:
+            self.listener.close()
+        except OSError:
+            pass
+        for conn in list(self._live):
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+
+def _submit_dummy(ch):
+    buf = np.zeros((1, 8, 2), np.uint32)
+    z = np.zeros(1, np.int32)
+    return ch.submit_shard(0, buf, z, z, z, 1)
+
+
+def test_torn_frame_fails_pending_fast_no_hang():
+    """A peer dying mid-SHARD_RESULT fails every pending future with a
+    distinct RpcError — promptly, never a hang — and marks the channel
+    unhealthy so the next dispatch refuses with ChannelDown."""
+    fake = _FakeWorker(script="torn")
+    ch = WorkerChannel("t0", *fake.address)
+    try:
+        deadline = time.monotonic() + 5
+        while not ch.healthy and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert ch.healthy
+        fut = _submit_dummy(ch)
+        with pytest.raises(RpcError, match="t0"):
+            fut.result(timeout=5.0)       # bounded: fails, no hang
+        assert not ch.healthy
+        time.sleep(0.1)                   # redial is being refused
+        with pytest.raises(ChannelDown):
+            _submit_dummy(ch)
+    finally:
+        ch.close()
+        fake.close()
+
+
+def test_channel_backoff_reconnects_after_restart():
+    """Kill the peer entirely, then restart it on the SAME port: the
+    background redialer recovers the channel (exponential backoff) and
+    RPCs flow again — connection reuse, no caller intervention."""
+    fake = _FakeWorker(script="ok")
+    host, port = fake.address
+    ch = WorkerChannel("r0", host, port)
+    try:
+        deadline = time.monotonic() + 5
+        while not ch.healthy and time.monotonic() < deadline:
+            time.sleep(0.01)
+        cands, method = _submit_dummy(ch).result(5.0)
+        assert method == "fake"
+
+        fake.close()                      # peer gone
+        with pytest.raises((RpcError, ChannelDown)):
+            _submit_dummy(ch).result(5.0)
+        assert not ch.healthy
+
+        deadline = time.monotonic() + 10
+        while True:                       # old conn may linger in
+            try:                          # FIN_WAIT a moment
+                fake = _FakeWorker(script="ok", port=port)   # same port
+                break
+            except OSError:
+                assert time.monotonic() < deadline
+                time.sleep(0.1)
+        while not ch.healthy and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert ch.healthy                 # backoff redial found it
+        assert ch.reconnects >= 1
+        cands, method = _submit_dummy(ch).result(5.0)
+        assert method == "fake"
+        assert ch.ping()
+    finally:
+        ch.close()
+        fake.close()
+
+
+def test_cancel_frame_reaches_the_wire():
+    """cancel(rid) drops the pending future and sends a CANCEL frame the
+    worker side can observe (the _FakeWorker 'mute' script never replies,
+    so the only traffic after the query IS the cancel)."""
+    fake = _FakeWorker(script="mute")
+    ch = WorkerChannel("c0", *fake.address)
+    try:
+        deadline = time.monotonic() + 5
+        while not ch.healthy and time.monotonic() < deadline:
+            time.sleep(0.01)
+        fut = _submit_dummy(ch)
+        ch.cancel(fut.rid)
+        # the future is forgotten: a late SHARD_RESULT for it would be
+        # dropped, and the channel stays healthy for the next dispatch
+        assert ch.healthy
+        fut2 = _submit_dummy(ch)
+        assert fut2.rid > fut.rid
+    finally:
+        ch.close()
+        fake.close()
+
+
+# --------------------------------------------------------------------------
+# Multi-process: real --worker subprocesses, SIGKILL mid-load, restart
+# --------------------------------------------------------------------------
+
+def test_multiprocess_cluster_kill_and_reconnect(built, oracle):
+    """The full acceptance path: 3 worker PROCESSES behind OS-assigned
+    ports (discovered via --port-file), a frontend dialing the
+    reconnecting pool behind a TCP front door, concurrent socket
+    clients; one worker SIGKILLed mid-load -> zero FAILED queries, all
+    results bit-identical; the killed worker restarts on the same port
+    and its channel backoff-reconnects."""
+    from repro.launch.cluster import WorkerCluster
+
+    c, _, store = built
+    qs, _ = make_queries(c, n_pos=6, n_neg=2, length=120, seed=21)
+    with WorkerCluster(str(store), ["p0", "p1", "p2"],
+                       replication=2) as cluster:
+        placement = ShardPlacement.for_store(str(store),
+                                             ["p0", "p1", "p2"],
+                                             replication=2)
+        pool = WorkerPool(cluster.addresses)
+        pool.wait_connected(timeout_s=30.0)
+        fe = RpcFrontend(pool, placement,
+                         FrontendConfig(max_wait_s=0.0,
+                                        hedge_after_s=30.0))
+        net = NetServer(ServingLoop(fe, workers=2)).start()
+        try:
+            victim = placement.owner(0)
+
+            def client(ci, out):
+                cl = NetClient(*net.address, timeout_s=120.0)
+                try:
+                    for rep in range(3):
+                        futs = [(q, cl.submit(q, threshold=0.75))
+                                for q in qs]
+                        for q, f in futs:
+                            out.append((q, f.result(120.0)))
+                finally:
+                    cl.close()
+
+            outs = [[] for _ in range(3)]
+            threads = [threading.Thread(target=client, args=(i, outs[i]))
+                       for i in range(3)]
+            for t in threads:
+                t.start()
+            time.sleep(0.3)               # queries in flight
+            cluster.kill(victim)          # SIGKILL, no drain
+            for t in threads:
+                t.join(timeout=180.0)
+                assert not t.is_alive()
+
+            n = 0
+            for out in outs:
+                for q, r in out:
+                    assert r.status == Status.OK, (q, r.status)
+                    _assert_identical(r.result,
+                                      oracle.search(q, threshold=0.75))
+                    n += 1
+            assert n == 3 * 3 * len(qs)   # zero lost queries
+
+            # restart on the SAME port: the channel must come back
+            cluster.restart(victim)
+            deadline = time.monotonic() + 30
+            while (not pool.channel(victim).healthy
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
+            assert pool.channel(victim).healthy
+            assert pool.channel(victim).reconnects >= 1
+            snap = fe.metrics.snapshot()
+            assert snap.channel_reconnects >= 1
+        finally:
+            net.close(drain=False)
+            fe.close()
